@@ -1,0 +1,71 @@
+//! Quickstart: the paper's Listing 3 — a hybrid "MPI+OpenMP" one-to-one
+//! pattern using MPIX stream communicators.
+//!
+//! Each of NT threads per rank gets a unique MPIX stream and a dedicated
+//! stream communicator; thread i of rank 0 exchanges messages only with
+//! thread i of rank 1. Because each stream guarantees a serial execution
+//! context bound to its own network endpoint, the runtime takes **zero
+//! locks** on the communication path (verify with the printed lock-op
+//! tally).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mpix::prelude::*;
+use mpix::vci::lock::take_lock_ops;
+
+const NT: usize = 4;
+const ROUNDS: usize = 100;
+
+fn main() -> Result<()> {
+    let config = Config { explicit_pool: NT, ..Default::default() };
+    let world = World::builder().ranks(2).config(config).build()?;
+
+    world.run(|p| {
+        // -- setup: one stream + one stream comm per thread (Listing 3) --
+        let mut streams = Vec::with_capacity(NT);
+        let mut comms = Vec::with_capacity(NT);
+        for _ in 0..NT {
+            let s = p.stream_create(&Info::null())?;
+            comms.push(p.stream_comm_create(p.world_comm(), Some(&s))?);
+            streams.push(s);
+        }
+
+        // -- the "omp parallel" region --
+        std::thread::scope(|scope| {
+            for (id, comm) in comms.iter().enumerate() {
+                let p = p.clone();
+                scope.spawn(move || {
+                    let _ = take_lock_ops();
+                    let mut buf = [0u8; 100];
+                    for round in 0..ROUNDS {
+                        let tag = round as i32;
+                        if p.rank() == 0 {
+                            buf[0] = id as u8;
+                            p.send(&buf, 1, tag, comm).expect("send");
+                        } else {
+                            let st = p.recv(&mut buf, 0, tag, comm).expect("recv");
+                            assert_eq!(st.count, 100);
+                            assert_eq!(buf[0], id as u8, "thread pairing violated");
+                        }
+                    }
+                    let locks = take_lock_ops();
+                    println!(
+                        "rank {} thread {id}: {ROUNDS} x 100B messages, {locks} lock acquisitions on the comm path",
+                        p.rank()
+                    );
+                    assert_eq!(locks, 0, "stream path must be lock-free");
+                });
+            }
+        });
+
+        // -- teardown: free communicators before their streams --
+        drop(comms);
+        for s in streams {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })?;
+
+    println!("quickstart OK: {NT} thread pairs, {ROUNDS} rounds, zero locks on the stream path");
+    Ok(())
+}

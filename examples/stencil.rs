@@ -1,0 +1,227 @@
+//! End-to-end driver: the paper's Figure-2 workload — a 2-D Jacobi
+//! stencil partitioned per thread, halo-exchanged over per-thread MPIX
+//! stream communicators, with the interior relaxation running as the
+//! AOT-compiled Pallas stencil kernel through PJRT.
+//!
+//! Topology (Fig. 2): 2 ranks side by side (west | east), NT = 4 thread
+//! partitions stacked per rank; each partition owns a 256 x 256 tile, so
+//! the global domain is 1024 x 512.
+//!
+//! * **Cross-process** halos (the east/west columns between rank 0 and
+//!   rank 1) travel over MPI, thread-paired stream communicators as in
+//!   Listing 3, using a *derived vector datatype* to gather the strided
+//!   boundary column directly from the tile.
+//! * **Intra-process** halos (north/south rows between thread partitions
+//!   of one rank) go through shared memory — the paper's §4.2 point that
+//!   "between threads the memory is shared, and thus there is no need for
+//!   explicit data exchange".
+//!
+//! The driver runs STEPS Jacobi iterations of the Laplace problem (hot
+//! western boundary), logs the residual curve, and checks convergence —
+//! the paper-style end-to-end validation recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example stencil`
+
+use std::sync::{Barrier, RwLock};
+
+use mpix::mpi::datatype::{as_bytes, as_bytes_mut};
+use mpix::prelude::*;
+use mpix::runtime::XlaRuntime;
+
+const NT: usize = 4; // thread partitions per rank
+const T: usize = 256; // tile edge (must match artifacts: STENCIL_HW)
+const P: usize = T + 2; // padded edge
+const STEPS: usize = 60;
+const LOG_EVERY: usize = 10;
+
+/// Padded tile, row-major P x P. Interior is [1..=T][1..=T].
+struct Tile(Vec<f32>);
+
+impl Tile {
+    fn new() -> Tile {
+        Tile(vec![0.0; P * P])
+    }
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.0[r * P + c]
+    }
+    fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.0[r * P + c] = v;
+    }
+}
+
+fn main() -> Result<()> {
+    let exe = XlaRuntime::global().load("artifacts/stencil.hlo.txt")?;
+    let config = Config { explicit_pool: NT, ..Default::default() };
+    let world = World::builder().ranks(2).config(config).build()?;
+
+    world.run(|p| {
+        let west_rank = p.rank() == 0;
+        // -- per-thread streams + stream comms (Listing-3 pattern) --
+        let mut streams = Vec::new();
+        let mut comms = Vec::new();
+        for _ in 0..NT {
+            let s = p.stream_create(&Info::null())?;
+            comms.push(p.stream_comm_create(p.world_comm(), Some(&s))?);
+            streams.push(s);
+        }
+
+        // -- shared domain state: one tile per thread partition --
+        let tiles: Vec<RwLock<Tile>> = (0..NT).map(|_| RwLock::new(Tile::new())).collect();
+        // Dirichlet boundary: the global west edge is held at 1.0.
+        if west_rank {
+            for t in &tiles {
+                let mut t = t.write().unwrap();
+                for r in 0..P {
+                    t.set(r, 0, 1.0);
+                }
+            }
+        }
+        let barrier = Barrier::new(NT);
+        let residuals: Vec<RwLock<f32>> = (0..NT).map(|_| RwLock::new(0.0)).collect();
+        // The strided boundary column as a derived datatype: 256 f32
+        // elements, stride = one padded row.
+        let col_dt = Datatype::vector(T, 1, P, Datatype::F32)?;
+
+        std::thread::scope(|scope| {
+            for tid in 0..NT {
+                let p = p.clone();
+                let comm = &comms[tid];
+                let tiles = &tiles;
+                let barrier = &barrier;
+                let residuals = &residuals;
+                let exe = exe.clone();
+                let col_dt = col_dt.clone();
+                scope.spawn(move || {
+                    let peer = 1 - p.rank();
+                    for step in 0..STEPS {
+                        // ---- phase 1: intra-rank halos via shared memory ----
+                        {
+                            let north: Option<Vec<f32>> = (tid > 0).then(|| {
+                                let nb = tiles[tid - 1].read().unwrap();
+                                (1..=T).map(|c| nb.at(T, c)).collect()
+                            });
+                            let south: Option<Vec<f32>> = (tid + 1 < NT).then(|| {
+                                let nb = tiles[tid + 1].read().unwrap();
+                                (1..=T).map(|c| nb.at(1, c)).collect()
+                            });
+                            let mut me = tiles[tid].write().unwrap();
+                            if let Some(row) = north {
+                                for (c, v) in row.into_iter().enumerate() {
+                                    me.set(0, c + 1, v);
+                                }
+                            }
+                            if let Some(row) = south {
+                                for (c, v) in row.into_iter().enumerate() {
+                                    me.set(T + 1, c + 1, v);
+                                }
+                            }
+                        }
+
+                        // ---- phase 2: cross-rank halo via MPI (vector dt) ----
+                        // Never hold a tile lock across a blocking MPI
+                        // wait: a thread parked in wait() while owning the
+                        // write lock can deadlock against a neighbour
+                        // reading our tile in its phase 1.
+                        {
+                            let (send_c, halo_c) = if west_rank { (T, T + 1) } else { (1, 0) };
+                            let tag = step as i32;
+                            // Gather the strided boundary column straight
+                            // from the tile with the vector datatype (the
+                            // payload is packed and owned at post time, so
+                            // the read lock is released immediately).
+                            let sreq = {
+                                let me = tiles[tid].read().unwrap();
+                                let base = P + send_c;
+                                p.isend_dt(as_bytes(&me.0[base..]), &col_dt, 1, peer, tag, comm)
+                                    .expect("halo isend")
+                            };
+                            let mut halo = vec![0f32; T];
+                            let rreq = p
+                                .irecv(as_bytes_mut(&mut halo), peer as i32, tag, comm)
+                                .expect("halo irecv");
+                            p.wait(sreq).expect("halo send");
+                            p.wait(rreq).expect("halo recv");
+                            let mut me = tiles[tid].write().unwrap();
+                            for (r, v) in halo.into_iter().enumerate() {
+                                me.set(r + 1, halo_c, v);
+                            }
+                        }
+
+                        // BSP step boundary: every partition must finish
+                        // filling halos (and reading our boundary) before
+                        // anyone overwrites an interior.
+                        barrier.wait();
+
+                        // ---- phase 3: interior relaxation via the Pallas artifact ----
+                        {
+                            let mut me = tiles[tid].write().unwrap();
+                            let out = exe.run_f32(&[(&me.0, &[P, P])]).expect("stencil kernel");
+                            let mut local_res = 0f32;
+                            for r in 0..T {
+                                for c in 0..T {
+                                    let new = out[r * T + c];
+                                    let old = me.at(r + 1, c + 1);
+                                    local_res = local_res.max((new - old).abs());
+                                    me.set(r + 1, c + 1, new);
+                                }
+                            }
+                            *residuals[tid].write().unwrap() = local_res;
+                        }
+
+                        // ---- phase 4: step barrier + residual logging ----
+                        barrier.wait();
+                        if tid == 0 && (step + 1) % LOG_EVERY == 0 {
+                            let local_max =
+                                residuals.iter().map(|r| *r.read().unwrap()).fold(0f32, f32::max);
+                            let mut buf = Vec::from(as_bytes(&[local_max as f64]));
+                            p.allreduce(
+                                &mut buf,
+                                &Datatype::F64,
+                                mpix::mpi::datatype::Op::Max,
+                                p.world_comm(),
+                            )
+                            .expect("residual allreduce");
+                            let global = f64::from_le_bytes(buf[..8].try_into().unwrap());
+                            if p.rank() == 0 {
+                                println!("step {:>4}: residual = {global:.6e}", step + 1);
+                            }
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+
+        // -- validation: monotone field in [0,1], hot edge preserved --
+        let mut global_max: f32 = 0.0;
+        let mut global_min: f32 = 1.0;
+        for t in &tiles {
+            let t = t.read().unwrap();
+            for r in 1..=T {
+                for c in 1..=T {
+                    global_max = global_max.max(t.at(r, c));
+                    global_min = global_min.min(t.at(r, c));
+                }
+            }
+        }
+        assert!(
+            (0.0..=1.0).contains(&global_max) && (0.0..=1.0).contains(&global_min),
+            "Laplace solution must stay within boundary bounds [{global_min}, {global_max}]"
+        );
+        if west_rank {
+            let t0 = tiles[0].read().unwrap();
+            assert!(t0.at(T / 2, 1) > 0.0, "heat must have diffused off the hot edge");
+        }
+        p.barrier(p.world_comm())?;
+        println!(
+            "rank {}: stencil OK — {STEPS} steps x {NT} partitions of {T}x{T}, field in [{global_min:.4}, {global_max:.4}]",
+            p.rank()
+        );
+
+        drop(comms);
+        for s in streams {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })
+}

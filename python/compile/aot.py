@@ -1,0 +1,52 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the rust PJRT loader.
+
+HLO text (not ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile.model import lower_all
+
+#: AOT shapes baked into the artifacts (mirrored by the rust examples).
+SAXPY_N = 1 << 20
+STENCIL_HW = 256
+AXPBY_N = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--saxpy-n", type=int, default=SAXPY_N)
+    ap.add_argument("--stencil-hw", type=int, default=STENCIL_HW)
+    ap.add_argument("--axpby-n", type=int, default=AXPBY_N)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lowered in lower_all(args.saxpy_n, args.stencil_hw, args.axpby_n):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

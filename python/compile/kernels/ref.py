@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package must match its oracle bit-for-bit (up
+to float associativity) under pytest + hypothesis; see python/tests/.
+"""
+
+import jax.numpy as jnp
+
+#: The SAXPY scale baked into Listing 4 of the paper (`a_val = 2.0`).
+A_VAL = 2.0
+
+
+def saxpy_ref(x, y):
+    """y <- A_VAL * x + y (the paper's Listing-4 kernel)."""
+    return A_VAL * x + y
+
+
+def axpby_ref(alpha, beta, x, y):
+    """alpha * x + beta * y with alpha/beta as shape-(1,) arrays."""
+    return alpha[0] * x + beta[0] * y
+
+
+def stencil_ref(padded):
+    """5-point Jacobi step over a halo-padded tile.
+
+    ``padded`` is (H+2, W+2); the result is the (H, W) interior:
+    ``out[i, j] = 0.25 * (up + down + left + right)``.
+    """
+    return 0.25 * (
+        padded[:-2, 1:-1] + padded[2:, 1:-1] + padded[1:-1, :-2] + padded[1:-1, 2:]
+    )
+
+
+def jacobi_residual_ref(padded):
+    """Max |new - old| over the interior — the convergence metric the
+    stencil example reports."""
+    new = stencil_ref(padded)
+    return jnp.max(jnp.abs(new - padded[1:-1, 1:-1]))

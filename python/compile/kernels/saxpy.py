@@ -1,0 +1,81 @@
+"""L1: the Listing-4 SAXPY as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernel maps one thread per element over a 1-D grid of threadblocks. On
+TPU-style Pallas the same computation is a VPU elementwise op tiled into
+VMEM-sized blocks: ``BlockSpec((BLOCK,), lambda i: (i,))`` expresses the
+HBM->VMEM schedule that threadblocks expressed in CUDA. SAXPY is purely
+memory-bound (1 FMA per 12 bytes), so the block size only needs to keep
+the three streams (x, y, out) inside VMEM with double-buffer headroom:
+3 streams * 2 buffers * BLOCK * 4 B = 192 KiB at BLOCK = 8192 -- far under
+the ~16 MiB VMEM budget; see DESIGN.md §Perf for the roofline estimate.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the rust
+runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import A_VAL
+
+#: Elements per VMEM block (f32).
+BLOCK = 8192
+
+
+def _saxpy_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = A_VAL * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def saxpy(x, y):
+    """A_VAL * x + y over 1-D f32 arrays.
+
+    Arrays shorter than one block run as a single block; longer arrays
+    must be a multiple of BLOCK (the AOT shapes are).
+    """
+    n = x.shape[0]
+    if n <= BLOCK:
+        return pl.pallas_call(
+            _saxpy_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True,
+        )(x, y)
+    if n % BLOCK != 0:
+        raise ValueError(f"saxpy length {n} not a multiple of BLOCK={BLOCK}")
+    grid = n // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _saxpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(x, y)
+
+
+def axpby(alpha, beta, x, y):
+    """alpha * x + beta * y; alpha/beta travel as shape-(1,) arrays so the
+    same compiled artifact serves any coefficients (the rust coordinator
+    feeds them per call)."""
+
+    def kernel(a_ref, b_ref, x_ref, y_ref, o_ref):
+        o_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(alpha, beta, x, y)
+
+
+def saxpy_unfused_ref_for_cost(x, y):
+    """Deliberately unfused jnp version used by the perf notes to compare
+    HLO op counts against the fused kernel."""
+    t = jnp.multiply(A_VAL, x)
+    return jnp.add(t, y)

@@ -1,0 +1,36 @@
+"""L1: 5-point Jacobi stencil step as a Pallas kernel.
+
+This is the compute half of the paper's Figure-2 workload: a 2-D domain
+partitioned per thread, each partition exchanging a 1-cell halo with its
+neighbours over MPI (the rust L3 does the exchange over per-thread MPIX
+stream communicators), then relaxing its interior.
+
+Hardware adaptation: the CUDA version would tile the plane over
+threadblocks with shared-memory halos. On TPU-style Pallas the natural
+unit is a VMEM-resident tile: at the 256x256 partition size of the
+example, the whole padded tile is (258, 258) f32 = 266 KiB -- it fits in
+VMEM outright, so the kernel is a single pallas_call block and the
+HBM<->VMEM schedule is trivial (the *domain* decomposition lives one level
+up, in L3, exactly where Fig. 2 puts it). Larger partitions would tile
+rows with a (TH+2, W+2) overlap window; we keep the single-block version
+because interpret-mode correctness is the deliverable on this CPU-only
+testbed (DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(p_ref, o_ref):
+    p = p_ref[...]
+    o_ref[...] = 0.25 * (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:])
+
+
+def stencil_step(padded):
+    """One Jacobi relaxation over a halo-padded (H+2, W+2) tile -> (H, W)."""
+    h, w = padded.shape[0] - 2, padded.shape[1] - 2
+    return pl.pallas_call(
+        _stencil_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), padded.dtype),
+        interpret=True,
+    )(padded)

@@ -1,0 +1,40 @@
+"""L2: the jax compute graphs that get AOT-lowered for the rust runtime.
+
+Each function is a thin jitted graph over the L1 Pallas kernels; every
+function returns a tuple (aot.py lowers with return_tuple=True, and the
+rust loader unwraps tuples).
+"""
+
+import jax
+
+from compile.kernels.saxpy import axpby, saxpy
+from compile.kernels.stencil import stencil_step
+
+
+def saxpy_model(x, y):
+    """Listing-4 SAXPY: out = A_VAL * x + y."""
+    return (saxpy(x, y),)
+
+
+def axpby_model(alpha, beta, x, y):
+    """Generalized axpby with runtime coefficients."""
+    return (axpby(alpha, beta, x, y),)
+
+
+def stencil_model(padded):
+    """One 5-point Jacobi step over a halo-padded tile."""
+    return (stencil_step(padded),)
+
+
+def lower_all(n_saxpy: int, stencil_hw: int, n_axpby: int):
+    """Lower every model to (name, jax.stages.Lowered) pairs."""
+    f32 = jax.numpy.float32
+    vec = jax.ShapeDtypeStruct((n_saxpy,), f32)
+    pad = jax.ShapeDtypeStruct((stencil_hw + 2, stencil_hw + 2), f32)
+    coeff = jax.ShapeDtypeStruct((1,), f32)
+    avec = jax.ShapeDtypeStruct((n_axpby,), f32)
+    return [
+        ("saxpy", jax.jit(saxpy_model).lower(vec, vec)),
+        ("stencil", jax.jit(stencil_model).lower(pad)),
+        ("axpby", jax.jit(axpby_model).lower(coeff, coeff, avec, avec)),
+    ]

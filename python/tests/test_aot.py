@@ -1,0 +1,51 @@
+"""AOT pipeline: HLO text emission that the rust loader consumes."""
+
+import os
+import subprocess
+import sys
+
+from compile.aot import to_hlo_text
+from compile.model import lower_all
+
+
+def test_hlo_text_roundtrippable_format():
+    for name, lowered in lower_all(256, 8, 32):
+        text = to_hlo_text(lowered)
+        # The rust loader requires parseable HLO text: module header plus
+        # an entry computation with a tuple root.
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        assert "tuple" in text, f"{name}: return_tuple lowering missing"
+
+
+def test_aot_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "arts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--saxpy-n",
+            "256",
+            "--stencil-hw",
+            "8",
+            "--axpby-n",
+            "32",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    for name in ["saxpy", "stencil", "axpby"]:
+        p = out / f"{name}.hlo.txt"
+        assert p.exists(), f"missing {p}"
+        assert p.read_text().startswith("HloModule")
+
+
+def test_artifact_shapes_match_design_defaults():
+    from compile.aot import AXPBY_N, SAXPY_N, STENCIL_HW
+
+    assert SAXPY_N == 1 << 20
+    assert STENCIL_HW == 256
+    assert AXPBY_N == 4096

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer: the kernels
+here are exactly what gets AOT-lowered into the artifacts the rust
+runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import A_VAL, axpby_ref, saxpy_ref, stencil_ref
+from compile.kernels.saxpy import BLOCK, axpby, saxpy
+from compile.kernels.stencil import stencil_step
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, dtype=dtype)
+
+
+# ----------------------------------------------------------------------
+# SAXPY
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 128, BLOCK, 2 * BLOCK, 4 * BLOCK])
+def test_saxpy_matches_ref(n):
+    x = rand((n,), 1)
+    y = rand((n,), 2)
+    np.testing.assert_allclose(saxpy(x, y), saxpy_ref(x, y), rtol=1e-6)
+
+
+def test_saxpy_known_values():
+    # Listing 4: x = 1.0, y = 2.0, a = 2.0 -> 4.0 everywhere.
+    n = 1024
+    x = jnp.full((n,), 1.0, jnp.float32)
+    y = jnp.full((n,), 2.0, jnp.float32)
+    out = saxpy(x, y)
+    np.testing.assert_array_equal(out, jnp.full((n,), A_VAL * 1.0 + 2.0))
+
+
+def test_saxpy_rejects_non_multiple_of_block():
+    n = BLOCK + 3
+    with pytest.raises(ValueError, match="multiple of BLOCK"):
+        saxpy(rand((n,)), rand((n,)))
+
+
+def test_saxpy_special_values():
+    x = jnp.array([0.0, -0.0, jnp.inf, -jnp.inf, 1e-38, 1e38], jnp.float32)
+    y = jnp.array([1.0, 2.0, 0.0, 0.0, -1e-38, -1e38], jnp.float32)
+    np.testing.assert_array_equal(saxpy(x, y), saxpy_ref(x, y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_saxpy_hypothesis_sweep(n, seed):
+    x = rand((n,), seed)
+    y = rand((n,), seed + 1)
+    np.testing.assert_allclose(saxpy(x, y), saxpy_ref(x, y), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# AXPBY
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=256),
+    a=st.floats(min_value=-10, max_value=10, allow_nan=False, width=32),
+    b=st.floats(min_value=-10, max_value=10, allow_nan=False, width=32),
+)
+def test_axpby_hypothesis_sweep(n, a, b):
+    alpha = jnp.array([a], jnp.float32)
+    beta = jnp.array([b], jnp.float32)
+    x = rand((n,), 3)
+    y = rand((n,), 4)
+    np.testing.assert_allclose(
+        axpby(alpha, beta, x, y), axpby_ref(alpha, beta, x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_axpby_zero_coefficients():
+    n = 64
+    x, y = rand((n,), 5), rand((n,), 6)
+    zero = jnp.zeros((1,), jnp.float32)
+    one = jnp.ones((1,), jnp.float32)
+    np.testing.assert_allclose(axpby(zero, one, x, y), y, rtol=1e-7)
+    np.testing.assert_allclose(axpby(one, zero, x, y), x, rtol=1e-7)
+
+
+# ----------------------------------------------------------------------
+# Stencil
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw", [(1, 1), (4, 4), (16, 8), (64, 64)])
+def test_stencil_matches_ref(hw):
+    h, w = hw
+    padded = rand((h + 2, w + 2), 7)
+    np.testing.assert_allclose(stencil_step(padded), stencil_ref(padded), rtol=1e-6)
+
+
+def test_stencil_constant_field_is_fixed_point():
+    padded = jnp.full((18, 18), 3.5, jnp.float32)
+    out = stencil_step(padded)
+    np.testing.assert_allclose(out, jnp.full((16, 16), 3.5), rtol=1e-7)
+
+
+def test_stencil_laplace_boundary_pull():
+    # Zero interior with a hot (=1) top boundary: after one step only the
+    # first interior row is heated, to exactly 0.25.
+    padded = jnp.zeros((10, 10), jnp.float32).at[0, :].set(1.0)
+    out = stencil_step(padded)
+    np.testing.assert_allclose(out[0, :], jnp.full((8,), 0.25))
+    np.testing.assert_allclose(out[1:, :], jnp.zeros((7, 8)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(min_value=1, max_value=32),
+    w=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stencil_hypothesis_sweep(h, w, seed):
+    padded = rand((h + 2, w + 2), seed)
+    np.testing.assert_allclose(stencil_step(padded), stencil_ref(padded), rtol=1e-6, atol=1e-7)

@@ -1,0 +1,41 @@
+//! Figure 3 regeneration: multithread message rate on 8-byte messages,
+//! three critical-section regimes.
+//!
+//! Two sources, both printed:
+//!  1. live single-thread calibration of the real runtime (per-mode
+//!     ns/message + lock/atomic micro-costs);
+//!  2. the calibrated virtual-time replay sweeping 1..20 threads (see
+//!     DESIGN.md §5 for why thread scaling must be replayed on a 1-core
+//!     host).
+//!
+//! Run: `cargo bench --bench fig3_msgrate` (env FIG3_MSGS to resize).
+
+use mpix::coordinator::driver::{msgrate_live, MsgrateMode};
+use mpix::coordinator::report;
+use mpix::sim::calibrate::calibrate;
+use mpix::sim::msgrate::fig3_series;
+
+fn main() {
+    let msgs: u64 = std::env::var("FIG3_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(30_000);
+    println!("== fig3_msgrate: calibrating from live runs ({msgs} msgs/mode) ==");
+    let cal = calibrate(msgs).expect("calibration");
+    println!(
+        "calibration: stream={:.0}ns  per-vci={:.0}ns  global={:.0}ns  lock={:.1}ns  atomic={:.1}ns  handover={:.0}ns",
+        cal.t_stream_ns, cal.t_pervci_ns, cal.t_global_ns, cal.lock_ns, cal.atomic_ns, cal.handover_ns
+    );
+    for v in cal.shape_violations() {
+        println!("  [shape warning] {v}");
+    }
+
+    // Live multi-thread smoke points (functional; scaling is replayed).
+    for threads in [1usize, 2, 4] {
+        for mode in MsgrateMode::all() {
+            let r = msgrate_live(mode, threads, msgs / threads as u64, 64, 8).expect("live run");
+            report::print_msgrate_live(&r);
+        }
+    }
+
+    let threads = [1usize, 2, 4, 8, 12, 16, 20];
+    let rows = fig3_series(&cal, &threads, msgs);
+    report::print_fig3(&rows, "calibrated virtual-time replay");
+}

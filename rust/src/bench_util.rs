@@ -1,0 +1,127 @@
+//! Minimal benchmark statistics harness (criterion is unavailable in the
+//! offline crate set; benches use `harness = false` and this module).
+
+use std::time::{Duration, Instant};
+
+/// Result of a measured run.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds, sorted ascending.
+    pub iters_ns: Vec<f64>,
+}
+
+impl Sample {
+    pub fn mean_ns(&self) -> f64 {
+        if self.iters_ns.is_empty() {
+            return 0.0;
+        }
+        self.iters_ns.iter().sum::<f64>() / self.iters_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.iters_ns.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.iters_ns.len() - 1) as f64 * p / 100.0).round() as usize;
+        self.iters_ns[idx]
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.iters_ns.first().copied().unwrap_or(0.0)
+    }
+
+    /// Std-dev of per-iteration times.
+    pub fn stddev_ns(&self) -> f64 {
+        if self.iters_ns.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean_ns();
+        let var = self.iters_ns.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.iters_ns.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Run `f` `samples` times (after `warmup` unmeasured runs); each call of
+/// `f` must perform `batch` iterations of the operation under test.
+pub fn bench(name: &str, warmup: usize, samples: usize, batch: u64, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut iters = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        iters.push(dt.as_nanos() as f64 / batch as f64);
+    }
+    iters.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample { name: name.to_string(), iters_ns: iters }
+}
+
+/// Measure a single run's wall time.
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+/// Pretty-print a rate (ops/sec) with engineering units.
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e6 {
+        format!("{:.2} Mops/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2} Kops/s", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.1} ops/s")
+    }
+}
+
+/// Pretty-print nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Sample { name: "t".into(), iters_ns: vec![1.0, 2.0, 3.0, 4.0, 5.0] };
+        assert!((s.mean_ns() - 3.0).abs() < 1e-9);
+        assert_eq!(s.min_ns(), 1.0);
+        assert_eq!(s.percentile_ns(50.0), 3.0);
+        assert_eq!(s.percentile_ns(100.0), 5.0);
+        assert!(s.stddev_ns() > 0.0);
+    }
+
+    #[test]
+    fn bench_counts_batches() {
+        let mut count = 0u64;
+        let s = bench("x", 1, 3, 10, || {
+            for _ in 0..10 {
+                count += 1;
+            }
+        });
+        assert_eq!(count, 40, "1 warmup + 3 samples, 10 iters each");
+        assert_eq!(s.iters_ns.len(), 3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_rate(2_500_000.0).contains("Mops"));
+        assert!(fmt_rate(2_500.0).contains("Kops"));
+        assert!(fmt_ns(1_500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+    }
+}

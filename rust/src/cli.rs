@@ -1,0 +1,112 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+
+use std::collections::HashMap;
+
+use crate::error::{MpiErr, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--flag` pairs.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(MpiErr::Arg(format!("unexpected positional argument '{arg}'")));
+            };
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| MpiErr::Arg(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    /// Parse a comma-separated usize list.
+    pub fn get_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| MpiErr::Arg(format!("--{key}: bad entry '{s}'"))))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = parse("fig3 --threads 1,2,4 --msgs 1000 --live").unwrap();
+        assert_eq!(a.command, "fig3");
+        assert_eq!(a.get("threads"), Some("1,2,4"));
+        assert_eq!(a.get_u64("msgs", 0).unwrap(), 1000);
+        assert!(a.get_bool("live"));
+        assert!(!a.get_bool("sim"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("fig3").unwrap();
+        assert_eq!(a.get_u64("msgs", 42).unwrap(), 42);
+        assert_eq!(a.get_list("threads", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn list_parse() {
+        let b = parse("x --threads 1,2,8").unwrap();
+        assert_eq!(b.get_list("threads", &[]).unwrap(), vec![1, 2, 8]);
+        // Spaces inside the list value are tolerated when quoted.
+        let c = Args::parse(["x", "--threads", "1, 2 ,8"].map(String::from)).unwrap();
+        assert_eq!(c.get_list("threads", &[]).unwrap(), vec![1, 2, 8]);
+    }
+
+    #[test]
+    fn bad_input_rejected() {
+        assert!(parse("x positional").is_err());
+        let a = parse("x --msgs abc").unwrap();
+        assert!(a.get_u64("msgs", 0).is_err());
+        let b = parse("x --threads 1,x").unwrap();
+        assert!(b.get_list("threads", &[]).is_err());
+    }
+
+    #[test]
+    fn empty_argv_gives_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,270 @@
+//! Runtime configuration — the analogue of MPICH's MPI-T control variables.
+//!
+//! §5.1 of the paper: the VCI pool is split into an *implicit* pool (used by
+//! traditional communicators through implicit hashing) and an *explicit* /
+//! reserved pool (used by `MPIX_Stream_create`). Both sizes are control
+//! variables; the defaults follow the paper's advice (implicit = 1,
+//! explicit sized by expected stream count).
+
+use crate::error::{MpiErr, Result};
+
+/// Critical-section model for the communication path (§2.1, §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CsMode {
+    /// One process-global critical section around every MPI call — the
+    /// naive `MPI_THREAD_MULTIPLE` implementation (red curve in Fig. 3).
+    Global,
+    /// Fine-grained per-VCI critical sections — MPICH's per-VCI model with
+    /// implicit hashing (green curve in Fig. 3). Multiple lock
+    /// acquisitions per message along the send/receive/progress path.
+    PerVci,
+    /// Lock-free: the VCI is owned by a strictly serial MPIX stream
+    /// context, so the implementation "may safely skip critical sections
+    /// in the communication path" (blue curve in Fig. 3).
+    LockFree,
+}
+
+impl CsMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CsMode::Global => "global-cs",
+            CsMode::PerVci => "per-vci",
+            CsMode::LockFree => "stream",
+        }
+    }
+}
+
+impl std::str::FromStr for CsMode {
+    type Err = MpiErr;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "global" | "global-cs" => Ok(CsMode::Global),
+            "pervci" | "per-vci" | "vci" => Ok(CsMode::PerVci),
+            "stream" | "lockfree" | "lock-free" => Ok(CsMode::LockFree),
+            _ => Err(MpiErr::Arg(format!("unknown cs mode '{s}'"))),
+        }
+    }
+}
+
+/// Implicit VCI hashing policy for traditional (non-stream) communicators
+/// (§2.3): how the implementation picks network endpoints when the user
+/// does not say.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HashPolicy {
+    /// Constant default endpoint on both sides: all traffic serializes on
+    /// VCI 0 (the pre-VCI behaviour; pairs with [`CsMode::Global`]).
+    Constant,
+    /// Per-communicator hashing with a one-to-one endpoint mapping: VCI =
+    /// context_id % implicit_pool on both sender and receiver. This is the
+    /// "perfect implicit hashing" configuration of the Fig. 3 benchmark.
+    PerComm,
+    /// Sender hashes freely (round-robin over the implicit pool); receiver
+    /// always uses VCI 0 — the N-to-1 policy of §2.3.
+    SenderAnyRecvZero,
+}
+
+impl HashPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HashPolicy::Constant => "constant",
+            HashPolicy::PerComm => "per-comm",
+            HashPolicy::SenderAnyRecvZero => "sender-any",
+        }
+    }
+}
+
+impl std::str::FromStr for HashPolicy {
+    type Err = MpiErr;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "constant" => Ok(HashPolicy::Constant),
+            "percomm" | "per-comm" => Ok(HashPolicy::PerComm),
+            "senderany" | "sender-any" => Ok(HashPolicy::SenderAnyRecvZero),
+            _ => Err(MpiErr::Arg(format!("unknown hash policy '{s}'"))),
+        }
+    }
+}
+
+/// How `MPIX_*_enqueue` operations are driven (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnqueueMode {
+    /// Enqueue the whole MPI operation as a host function on the GPU
+    /// stream (the `cudaLaunchHostFunc` prototype — "not optimal", heavy
+    /// switching cost).
+    HostFunc,
+    /// A dedicated host progress thread drives the MPI operations; only
+    /// lightweight event triggers are enqueued on the GPU stream (the
+    /// paper's "better implementation").
+    ProgressThread,
+}
+
+impl std::str::FromStr for EnqueueMode {
+    type Err = MpiErr;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hostfunc" | "host-func" => Ok(EnqueueMode::HostFunc),
+            "progress" | "progress-thread" => Ok(EnqueueMode::ProgressThread),
+            _ => Err(MpiErr::Arg(format!("unknown enqueue mode '{s}'"))),
+        }
+    }
+}
+
+/// Full runtime configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of VCIs in the implicit pool (control variable; default 1 —
+    /// the paper: "leave the implicit VCI pool size at the default, 1"
+    /// when using streams).
+    pub implicit_pool: usize,
+    /// Number of VCIs in the explicit/reserved pool, consumed by
+    /// `MPIX_Stream_create` (default 0 when streams are unused).
+    pub explicit_pool: usize,
+    /// Hard cap on total endpoints per rank — "network endpoints are a
+    /// finite resource"; a limit "matching the number of cores in a node"
+    /// is common. Creation fails beyond this.
+    pub max_endpoints: usize,
+    /// Critical-section model for non-stream VCIs.
+    pub cs_mode: CsMode,
+    /// Implicit hashing policy for traditional communicators.
+    pub hash_policy: HashPolicy,
+    /// Eager/rendezvous protocol switch-over (bytes).
+    pub eager_threshold: usize,
+    /// Capacity (packets) of each endpoint's inbound ring.
+    pub ep_ring_capacity: usize,
+    /// Whether streams may share endpoints round-robin once the explicit
+    /// pool is exhausted, instead of failing (§3.1 alternative).
+    pub stream_share_endpoints: bool,
+    /// GPU enqueue implementation (§5.2).
+    pub enqueue_mode: EnqueueMode,
+    /// Modeled host-function launch cost in nanoseconds (the
+    /// `cudaLaunchHostFunc` "heavy switching cost"); busy-waited on the
+    /// dispatcher thread so benches can expose it. 0 = off.
+    pub hostfunc_switch_ns: u64,
+    /// Simulated wire latency per packet in nanoseconds (0 = off). Used by
+    /// shape experiments; the Fig. 3 calibration leaves it 0.
+    pub wire_latency_ns: u64,
+    /// Spin-yield threshold for progress loops (iterations before
+    /// `thread::yield_now`). Single-core hosts need frequent yields.
+    pub spin_before_yield: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            implicit_pool: 1,
+            explicit_pool: 0,
+            max_endpoints: 64,
+            cs_mode: CsMode::PerVci,
+            hash_policy: HashPolicy::PerComm,
+            eager_threshold: 64 * 1024,
+            ep_ring_capacity: 4096,
+            stream_share_endpoints: false,
+            enqueue_mode: EnqueueMode::HostFunc,
+            hostfunc_switch_ns: 0,
+            wire_latency_ns: 0,
+            spin_before_yield: 64,
+        }
+    }
+}
+
+impl Config {
+    /// Validate invariants between control variables.
+    pub fn validate(&self) -> Result<()> {
+        if self.implicit_pool == 0 {
+            return Err(MpiErr::Arg("implicit_pool must be >= 1".into()));
+        }
+        if self.implicit_pool + self.explicit_pool > self.max_endpoints {
+            return Err(MpiErr::NoEndpoints(format!(
+                "implicit({}) + explicit({}) exceeds max_endpoints({})",
+                self.implicit_pool, self.explicit_pool, self.max_endpoints
+            )));
+        }
+        if self.ep_ring_capacity < 2 || !self.ep_ring_capacity.is_power_of_two() {
+            return Err(MpiErr::Arg("ep_ring_capacity must be a power of two >= 2".into()));
+        }
+        Ok(())
+    }
+
+    /// Paper configuration for the red Fig. 3 curve: global critical
+    /// section, single endpoint.
+    pub fn fig3_global() -> Self {
+        Config { implicit_pool: 1, cs_mode: CsMode::Global, hash_policy: HashPolicy::Constant, ..Default::default() }
+    }
+
+    /// Paper configuration for the green Fig. 3 curve: per-VCI critical
+    /// sections with perfect per-communicator implicit hashing.
+    pub fn fig3_pervci(nthreads: usize) -> Self {
+        Config {
+            implicit_pool: nthreads.max(1),
+            cs_mode: CsMode::PerVci,
+            hash_policy: HashPolicy::PerComm,
+            ..Default::default()
+        }
+    }
+
+    /// Paper configuration for the blue Fig. 3 curve: explicit MPIX
+    /// streams over the reserved pool, lock-free.
+    pub fn fig3_stream(nthreads: usize) -> Self {
+        Config {
+            implicit_pool: 1,
+            explicit_pool: nthreads,
+            cs_mode: CsMode::LockFree,
+            hash_policy: HashPolicy::PerComm,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn pool_overflow_rejected() {
+        let c = Config { implicit_pool: 40, explicit_pool: 40, max_endpoints: 64, ..Default::default() };
+        assert!(matches!(c.validate(), Err(MpiErr::NoEndpoints(_))));
+    }
+
+    #[test]
+    fn zero_implicit_pool_rejected() {
+        let c = Config { implicit_pool: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ring_capacity_must_be_pow2() {
+        let c = Config { ep_ring_capacity: 1000, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fig3_presets_match_paper() {
+        let g = Config::fig3_global();
+        assert_eq!(g.cs_mode, CsMode::Global);
+        assert_eq!(g.implicit_pool, 1);
+        let v = Config::fig3_pervci(20);
+        assert_eq!(v.implicit_pool, 20);
+        assert_eq!(v.cs_mode, CsMode::PerVci);
+        let s = Config::fig3_stream(20);
+        assert_eq!(s.explicit_pool, 20);
+        assert_eq!(s.cs_mode, CsMode::LockFree);
+        for c in [g, v, s] {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn mode_parsing_roundtrip() {
+        use std::str::FromStr;
+        assert_eq!(CsMode::from_str("global-cs").unwrap(), CsMode::Global);
+        assert_eq!(CsMode::from_str("stream").unwrap(), CsMode::LockFree);
+        assert!(CsMode::from_str("bogus").is_err());
+        assert_eq!(HashPolicy::from_str("per-comm").unwrap(), HashPolicy::PerComm);
+        assert!(HashPolicy::from_str("??").is_err());
+    }
+}

@@ -1,0 +1,539 @@
+//! Live workload drivers: the benchmark workloads of the paper, run on
+//! real threads against the real runtime.
+//!
+//! * [`msgrate_live`] — the Figure-3 microbenchmark: "The microbenchmark
+//!   launches a number of threads, and each thread then sends 8-byte
+//!   messages to a corresponding thread on another process. Each thread
+//!   communicates using a per-thread communicator."
+//! * [`n_to_1_live`] — the Figure-1(b) pattern: N sender threads, one
+//!   polling receiver, with and without a multiplex stream communicator.
+//! * [`enqueue_pipeline`] — the §5.2 GPU pipeline: K compute+send stages,
+//!   either fully synchronized per stage (GPU-aware MPI baseline) or
+//!   enqueued end-to-end with the MPIX enqueue APIs.
+//!
+//! On a multi-core host `msgrate_live` reproduces Fig. 3 directly; on this
+//! 1-core testbed it provides the *calibration constants* the virtual-time
+//! replay in [`crate::sim`] uses (see DESIGN.md §5).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::{Config, EnqueueMode};
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::Comm;
+use crate::mpi::info::Info;
+use crate::mpi::world::{Proc, World};
+use crate::stream::ANY_INDEX;
+
+/// Which Fig.-3 configuration to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgrateMode {
+    /// Red curve: global critical section, single endpoint.
+    GlobalCs,
+    /// Green curve: per-VCI critical sections, perfect implicit hashing.
+    PerVci,
+    /// Blue curve: explicit MPIX streams, lock-free.
+    Stream,
+}
+
+impl MsgrateMode {
+    pub fn all() -> [MsgrateMode; 3] {
+        [MsgrateMode::GlobalCs, MsgrateMode::PerVci, MsgrateMode::Stream]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MsgrateMode::GlobalCs => "global-cs",
+            MsgrateMode::PerVci => "per-vci",
+            MsgrateMode::Stream => "stream",
+        }
+    }
+
+    pub fn config(&self, threads: usize) -> Config {
+        match self {
+            MsgrateMode::GlobalCs => Config::fig3_global(),
+            MsgrateMode::PerVci => Config::fig3_pervci(threads),
+            MsgrateMode::Stream => Config::fig3_stream(threads),
+        }
+    }
+}
+
+/// Result of a message-rate run.
+#[derive(Debug, Clone)]
+pub struct MsgrateResult {
+    pub mode: &'static str,
+    pub threads: usize,
+    pub total_msgs: u64,
+    pub elapsed: Duration,
+    /// Total messages per second across all threads.
+    pub rate: f64,
+    /// Mean nanoseconds per message per thread (the DES calibration
+    /// constant).
+    pub ns_per_msg: f64,
+}
+
+/// Run the Figure-3 microbenchmark live: `threads` thread pairs exchange
+/// `msgs` messages of `size` bytes each, windowed `window` deep
+/// (MPI_Isend/MPI_Irecv + waitall, as in the paper's figure caption).
+pub fn msgrate_live(
+    mode: MsgrateMode,
+    threads: usize,
+    msgs: u64,
+    window: usize,
+    size: usize,
+) -> Result<MsgrateResult> {
+    let cfg = mode.config(threads);
+    let world = World::builder().ranks(2).config(cfg).build()?;
+    let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+
+    world.run(|p| {
+        // --- setup: one communicator per thread (outside the timing) ---
+        let mut comms: Vec<Comm> = Vec::with_capacity(threads);
+        let mut streams = Vec::new();
+        match mode {
+            MsgrateMode::GlobalCs | MsgrateMode::PerVci => {
+                for _ in 0..threads {
+                    comms.push(p.comm_dup(p.world_comm())?);
+                }
+            }
+            MsgrateMode::Stream => {
+                for _ in 0..threads {
+                    let s = p.stream_create(&Info::null())?;
+                    comms.push(p.stream_comm_create(p.world_comm(), Some(&s))?);
+                    streams.push(s);
+                }
+            }
+        }
+        p.barrier(p.world_comm())?;
+
+        // --- timed phase ---
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for (i, c) in comms.iter().enumerate() {
+                let p = p.clone();
+                s.spawn(move || thread_body(&p, c, i as i32, msgs, window, size));
+            }
+        });
+        // Local threads done; sync both sides so the clock covers full
+        // delivery.
+        p.barrier(p.world_comm())?;
+        let dt = t0.elapsed();
+        if p.rank() == 0 {
+            *elapsed_slot.lock().unwrap() = Some(dt);
+        }
+
+        // --- teardown ---
+        drop(comms);
+        for s in streams {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })?;
+
+    let elapsed = elapsed_slot
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
+    let total = threads as u64 * msgs;
+    let rate = total as f64 / elapsed.as_secs_f64();
+    Ok(MsgrateResult {
+        mode: mode.as_str(),
+        threads,
+        total_msgs: total,
+        elapsed,
+        rate,
+        ns_per_msg: elapsed.as_nanos() as f64 / msgs as f64,
+    })
+}
+
+fn thread_body(p: &Proc, c: &Comm, tag: i32, msgs: u64, window: usize, size: usize) {
+    if p.rank() == 0 {
+        let buf = vec![0u8; size];
+        let mut reqs = Vec::with_capacity(window);
+        let mut sent = 0u64;
+        while sent < msgs {
+            let batch = window.min((msgs - sent) as usize);
+            for _ in 0..batch {
+                reqs.push(p.isend(&buf, 1, tag, c).expect("isend"));
+            }
+            for r in reqs.drain(..) {
+                p.wait(r).expect("wait send");
+            }
+            sent += batch as u64;
+        }
+    } else {
+        let mut bufs = vec![vec![0u8; size]; window];
+        let mut done = 0u64;
+        while done < msgs {
+            let batch = window.min((msgs - done) as usize);
+            let mut reqs = Vec::with_capacity(batch);
+            for b in bufs.iter_mut().take(batch) {
+                reqs.push(p.irecv(b, 0, tag, c).expect("irecv"));
+            }
+            for r in reqs {
+                p.wait(r).expect("wait recv");
+            }
+            done += batch as u64;
+        }
+    }
+}
+
+/// N-to-1 result (Figure 1b).
+#[derive(Debug, Clone)]
+pub struct Nto1Result {
+    pub senders: usize,
+    pub multiplex: bool,
+    pub total_msgs: u64,
+    pub elapsed: Duration,
+    pub rate: f64,
+}
+
+/// N sender threads on rank 0, one polling receiver thread on rank 1.
+///
+/// `multiplex = true`: one multiplex stream communicator, receiver polls a
+/// single comm with `MPIX_ANY_INDEX`. `multiplex = false`: N single-stream
+/// communicators (receiver attaches `MPIX_STREAM_NULL`), receiver must
+/// poll each in turn — the usability + performance gap §3.5 describes.
+pub fn n_to_1_live(senders: usize, msgs: u64, multiplex: bool) -> Result<Nto1Result> {
+    let cfg = Config {
+        implicit_pool: 1,
+        explicit_pool: senders.max(1),
+        cs_mode: crate::config::CsMode::PerVci,
+        ..Default::default()
+    };
+    let world = World::builder().ranks(2).config(cfg).build()?;
+    let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+
+    world.run(|p| {
+        if multiplex {
+            let n_local = if p.rank() == 0 { senders } else { 1 };
+            let streams: Vec<_> =
+                (0..n_local).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+            let comm = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+            p.barrier(p.world_comm())?;
+            let t0 = Instant::now();
+            if p.rank() == 0 {
+                std::thread::scope(|s| {
+                    for i in 0..senders {
+                        let p = p.clone();
+                        let c = &comm;
+                        s.spawn(move || {
+                            let buf = [0u8; 8];
+                            for _ in 0..msgs {
+                                p.stream_send(&buf, 1, 0, c, i as i32, 0).expect("stream_send");
+                            }
+                        });
+                    }
+                });
+            } else {
+                let mut buf = [0u8; 8];
+                for _ in 0..senders as u64 * msgs {
+                    p.stream_recv(&mut buf, 0, 0, &comm, ANY_INDEX, 0).expect("stream_recv");
+                }
+            }
+            p.barrier(p.world_comm())?;
+            if p.rank() == 1 {
+                *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+            }
+            drop(comm);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+        } else {
+            // Baseline: one single-stream comm per sender; the receiver
+            // attaches STREAM_NULL everywhere and polls comm by comm.
+            let mut comms = Vec::with_capacity(senders);
+            let mut streams = Vec::new();
+            for _ in 0..senders {
+                let local = if p.rank() == 0 {
+                    let s = p.stream_create(&Info::null())?;
+                    streams.push(s);
+                    Some(streams.last().unwrap().clone())
+                } else {
+                    None
+                };
+                comms.push(p.stream_comm_create(p.world_comm(), local.as_ref())?);
+            }
+            p.barrier(p.world_comm())?;
+            let t0 = Instant::now();
+            if p.rank() == 0 {
+                std::thread::scope(|s| {
+                    for (i, c) in comms.iter().enumerate() {
+                        let p = p.clone();
+                        let _ = i;
+                        s.spawn(move || {
+                            let buf = [0u8; 8];
+                            for _ in 0..msgs {
+                                p.send(&buf, 1, 0, c).expect("send");
+                            }
+                        });
+                    }
+                });
+            } else {
+                // Poll each communicator in turn.
+                let mut remaining: Vec<u64> = vec![msgs; senders];
+                let mut total = senders as u64 * msgs;
+                let mut bufs = vec![[0u8; 8]; senders];
+                let mut pending: Vec<Option<crate::mpi::request::Request>> =
+                    (0..senders).map(|_| None).collect();
+                while total > 0 {
+                    for i in 0..senders {
+                        if remaining[i] == 0 {
+                            continue;
+                        }
+                        if pending[i].is_none() {
+                            pending[i] = Some(p.irecv(&mut bufs[i], 0, 0, &comms[i]).expect("irecv"));
+                        }
+                        let done = {
+                            let r = pending[i].as_ref().unwrap();
+                            p.test(r).expect("test").is_some()
+                        };
+                        if done {
+                            let r = pending[i].take().unwrap();
+                            r.into_result().expect("recv result");
+                            remaining[i] -= 1;
+                            total -= 1;
+                        }
+                    }
+                }
+            }
+            p.barrier(p.world_comm())?;
+            if p.rank() == 1 {
+                *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+            }
+            drop(comms);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+        }
+        Ok(())
+    })?;
+
+    let elapsed = elapsed_slot
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
+    let total = senders as u64 * msgs;
+    Ok(Nto1Result {
+        senders,
+        multiplex,
+        total_msgs: total,
+        elapsed,
+        rate: total as f64 / elapsed.as_secs_f64(),
+    })
+}
+
+/// GPU pipeline result (§5.2 / §2.4).
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub variant: String,
+    pub stages: u64,
+    pub elapsed: Duration,
+    pub per_stage_ns: f64,
+}
+
+/// A K-stage GPU pipeline: each stage runs a modeled device compute of
+/// `compute_ns`, then moves an 8-byte result from rank 0 to rank 1.
+///
+/// * `mode = None` — the **full-sync baseline** (GPU-aware MPI without
+///   enqueue): every stage costs a `cudaStreamSynchronize` before MPI.
+/// * `mode = Some(HostFunc | ProgressThread)` — the MPIX enqueue path:
+///   everything is enqueued; one synchronize at the end.
+///
+/// `sync_cost_ns` models the driver round-trip of a real
+/// `cudaStreamSynchronize` (tens of microseconds on real systems; our
+/// simulated synchronize is otherwise a cheap condvar). It is charged per
+/// synchronize call, so the baseline pays it per stage and the enqueue
+/// paths once.
+pub fn enqueue_pipeline(
+    mode: Option<EnqueueMode>,
+    stages: u64,
+    compute_ns: u64,
+    hostfunc_switch_ns: u64,
+    sync_cost_ns: u64,
+) -> Result<PipelineResult> {
+    let cfg = Config {
+        explicit_pool: 1,
+        enqueue_mode: mode.unwrap_or(EnqueueMode::HostFunc),
+        hostfunc_switch_ns,
+        ..Default::default()
+    };
+    let variant = match mode {
+        None => "full-sync".to_string(),
+        Some(EnqueueMode::HostFunc) => format!("enqueue/hostfunc({hostfunc_switch_ns}ns)"),
+        Some(EnqueueMode::ProgressThread) => "enqueue/progress-thread".to_string(),
+    };
+    let world = World::builder().ranks(2).config(cfg).build()?;
+    let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+
+    world.run(|p| {
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "gpuStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info)?;
+        let comm = p.stream_comm_create(p.world_comm(), Some(&s))?;
+        let dbuf = dev.alloc(8);
+        p.barrier(p.world_comm())?;
+
+        let t0 = Instant::now();
+        match mode {
+            None => {
+                // Full synchronization per stage.
+                for i in 0..stages {
+                    gs.launch_host_func(compute_ns, || ())?;
+                    gs.synchronize()?;
+                    crate::gpu::stream::busy_wait_ns(sync_cost_ns);
+                    if p.rank() == 0 {
+                        p.send(&i.to_le_bytes(), 1, 0, &comm)?;
+                    } else {
+                        let mut b = [0u8; 8];
+                        p.recv(&mut b, 0, 0, &comm)?;
+                        dev.write_sync(dbuf, &b)?;
+                    }
+                }
+            }
+            Some(_) => {
+                for i in 0..stages {
+                    gs.launch_host_func(compute_ns, || ())?;
+                    if p.rank() == 0 {
+                        p.send_enqueue(&i.to_le_bytes(), 1, 0, &comm)?;
+                    } else {
+                        p.recv_enqueue_dev(dbuf, 0, 0, &comm)?;
+                    }
+                }
+                gs.synchronize()?;
+                crate::gpu::stream::busy_wait_ns(sync_cost_ns);
+            }
+        }
+        p.barrier(p.world_comm())?;
+        if p.rank() == 0 {
+            *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+        }
+
+        dev.free(dbuf)?;
+        drop(comm);
+        p.stream_free(s)?;
+        dev.destroy_stream(&gs)?;
+        Ok(())
+    })?;
+
+    let elapsed = elapsed_slot
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
+    Ok(PipelineResult {
+        variant,
+        stages,
+        elapsed,
+        per_stage_ns: elapsed.as_nanos() as f64 / stages as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msgrate_all_modes_complete() {
+        for mode in MsgrateMode::all() {
+            let r = msgrate_live(mode, 2, 200, 16, 8).unwrap();
+            assert_eq!(r.total_msgs, 400);
+            assert!(r.rate > 0.0, "{}: rate must be positive", r.mode);
+        }
+    }
+
+    #[test]
+    fn n_to_1_both_variants_complete() {
+        for multiplex in [true, false] {
+            let r = n_to_1_live(3, 50, multiplex).unwrap();
+            assert_eq!(r.total_msgs, 150);
+            assert!(r.rate > 0.0);
+        }
+    }
+
+    #[test]
+    fn pipeline_variants_complete() {
+        for mode in [None, Some(EnqueueMode::HostFunc), Some(EnqueueMode::ProgressThread)] {
+            let r = enqueue_pipeline(mode, 20, 1_000, 0, 500).unwrap();
+            assert_eq!(r.stages, 20);
+            assert!(r.per_stage_ns > 0.0);
+        }
+    }
+}
+
+/// End-to-end Listing 4: SAXPY over the enqueue APIs with a real
+/// AOT-compiled Pallas kernel.
+///
+/// Rank 0 fills `x` and `MPIX_Send_enqueue`s it; rank 1 enqueues
+/// `cudaMemcpyAsync(d_y, ...)`, `MPIX_Recv_enqueue(d_x, ...)`, the SAXPY
+/// kernel, and the result copy-back onto one GPU stream — no host-side
+/// synchronization between communication and compute.
+pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
+    const A_VAL: f32 = 2.0;
+    const X_VAL: f32 = 1.0;
+    const Y_VAL: f32 = 2.0;
+
+    let exe = crate::runtime::XlaRuntime::global().load(format!("{artifacts_dir}/saxpy.hlo.txt"))?;
+    let world = World::builder()
+        .ranks(2)
+        .config(Config { explicit_pool: 1, eager_threshold: 1 << 16, ..Default::default() })
+        .build()?;
+    world.run(|p| {
+        let dev = p.gpu();
+        let stream = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", stream.id());
+        let mpi_stream = p.stream_create(&info)?;
+        let stream_comm = p.stream_comm_create(p.world_comm(), Some(&mpi_stream))?;
+
+        if p.rank() == 0 {
+            let x = vec![X_VAL; n];
+            let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let t0 = Instant::now();
+            p.send_enqueue(&bytes, 1, 0, &stream_comm)?;
+            stream.synchronize()?;
+            println!("rank 0: sent {n} floats via MPIX_Send_enqueue in {:?}", t0.elapsed());
+        } else {
+            let d_x = dev.alloc(n * 4);
+            let d_y = dev.alloc(n * 4);
+            let y: Vec<u8> = std::iter::repeat(Y_VAL.to_le_bytes()).take(n).flatten().collect();
+            let t0 = Instant::now();
+            dev.memcpy_h2d_async(&stream, d_y, &y)?;
+            p.recv_enqueue_dev(d_x, 0, 0, &stream_comm)?;
+            dev.launch_kernel_f32(
+                &stream,
+                exe.clone(),
+                vec![(d_x, vec![n]), (d_y, vec![n])],
+                d_y,
+            )?;
+            let mut out = vec![0u8; n * 4];
+            unsafe { dev.memcpy_d2h_async(&stream, out.as_mut_ptr(), out.len(), d_y)? };
+            // One synchronize covers memcpys + MPI + kernel — the point of
+            // the enqueue APIs.
+            stream.synchronize()?;
+            let dt = t0.elapsed();
+            let expect = A_VAL * X_VAL + Y_VAL;
+            let mut max_err = 0f32;
+            for c in out.chunks_exact(4) {
+                let v = f32::from_le_bytes(c.try_into().unwrap());
+                max_err = max_err.max((v - expect).abs());
+            }
+            println!(
+                "rank 1: recv+saxpy+copyback for {n} floats in {dt:?}; max |err| = {max_err:e} (expect {expect})"
+            );
+            if max_err > 1e-6 {
+                return Err(MpiErr::Internal(format!("SAXPY verification failed: max err {max_err}")));
+            }
+            dev.free(d_x)?;
+            dev.free(d_y)?;
+        }
+        p.barrier(p.world_comm())?;
+        drop(stream_comm);
+        p.stream_free(mpi_stream)?;
+        dev.destroy_stream(&stream)?;
+        Ok(())
+    })
+}

@@ -1,0 +1,142 @@
+//! Lightweight metrics: rate counters and log-scale latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing operation counter with a start time.
+pub struct RateCounter {
+    count: AtomicU64,
+    start: Instant,
+}
+
+impl RateCounter {
+    pub fn new() -> Self {
+        RateCounter { count: AtomicU64::new(0), start: Instant::now() }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Operations per second since construction.
+    pub fn rate(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / dt
+        }
+    }
+}
+
+impl Default for RateCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Log2-bucketed latency histogram, 1 ns .. ~1.2 s (31 buckets), lock-free
+/// recording.
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const NBUCKETS: usize = 31;
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        let bucket = (64 - ns.max(1).leading_zeros() as usize - 1).min(NBUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile: upper bound of the bucket containing it.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * p / 100.0).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << NBUCKETS
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_counter_counts() {
+        let c = RateCounter::new();
+        c.add(10);
+        c.add(5);
+        assert_eq!(c.count(), 15);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(c.rate() > 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let h = LatencyHist::new();
+        for _ in 0..90 {
+            h.record(Duration::from_nanos(100));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(100));
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.mean_ns() > 100.0 && h.mean_ns() < 100_000.0);
+        assert!(h.percentile_ns(50.0) <= 256, "p50 in the 100ns bucket");
+        assert!(h.percentile_ns(99.0) >= 65_536, "p99 in the 100µs bucket");
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let h = LatencyHist::new();
+        h.record(Duration::from_nanos(0));
+        h.record(Duration::from_secs(100));
+        assert_eq!(h.count(), 2);
+    }
+}

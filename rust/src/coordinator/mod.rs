@@ -1,0 +1,6 @@
+//! Workload drivers, metrics and figure reports (the L3 orchestration
+//! layer).
+
+pub mod driver;
+pub mod metrics;
+pub mod report;

@@ -1,0 +1,109 @@
+//! Report printers: regenerate the paper's figures as terminal tables.
+
+use crate::coordinator::driver::{MsgrateResult, Nto1Result, PipelineResult};
+use crate::sim::msgrate::SimPoint;
+
+/// Print the Figure-3 table: message rate (Mmsg/s) vs thread count for
+/// the three configurations, plus the paper-shape summary.
+pub fn print_fig3(rows: &[[SimPoint; 3]], source: &str) {
+    println!("\n=== Figure 3: multithread message rate, 8-byte messages ({source}) ===");
+    println!("{:>8} {:>14} {:>14} {:>14} {:>12}", "threads", "global-cs", "per-vci", "stream", "stream/vci");
+    for row in rows {
+        let [g, v, s] = row;
+        println!(
+            "{:>8} {:>11.3} M/s {:>11.3} M/s {:>11.3} M/s {:>11.2}x",
+            g.threads,
+            g.rate / 1e6,
+            v.rate / 1e6,
+            s.rate / 1e6,
+            s.rate / v.rate
+        );
+    }
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        println!("--- shape checks (paper: §5.3 / Fig. 3) ---");
+        let g1 = first[0].rate;
+        let v1 = first[1].rate;
+        let gn = last[0].rate;
+        let vn = last[1].rate;
+        let sn = last[2].rate;
+        check("per-VCI single-thread below global-CS single-thread", v1 < g1);
+        check(
+            &format!("global-CS does not scale ({:.2}x at {} threads)", gn / g1, last[0].threads),
+            gn < 2.0 * g1,
+        );
+        check(
+            &format!("per-VCI scales ({:.1}x at {} threads)", vn / v1, last[1].threads),
+            vn > 0.5 * last[1].threads as f64 * v1,
+        );
+        check(
+            &format!(
+                "stream gains over per-VCI ({:.2}x; paper ~1.2x — magnitude diluted by 1-core scheduler overhead in the calibrated base path, see EXPERIMENTS.md)",
+                sn / vn
+            ),
+            sn / vn > 1.02,
+        );
+    }
+}
+
+/// Print a live msgrate result row.
+pub fn print_msgrate_live(r: &MsgrateResult) {
+    println!(
+        "live {:>10} threads={:<3} msgs={:<8} elapsed={:>10.3?} rate={:>10.3} Mmsg/s  ({:.0} ns/msg/thread)",
+        r.mode,
+        r.threads,
+        r.total_msgs,
+        r.elapsed,
+        r.rate / 1e6,
+        r.ns_per_msg
+    );
+}
+
+/// Print the Figure-1(b) N-to-1 comparison.
+pub fn print_n_to_1(rows: &[Nto1Result]) {
+    println!("\n=== Figure 1(b): N-to-1 pattern — multiplex stream comm vs comm-per-sender ===");
+    println!("{:>8} {:>12} {:>14} {:>12}", "senders", "variant", "rate", "elapsed");
+    for r in rows {
+        println!(
+            "{:>8} {:>12} {:>10.3} M/s {:>12.3?}",
+            r.senders,
+            if r.multiplex { "multiplex" } else { "multi-comm" },
+            r.rate / 1e6,
+            r.elapsed
+        );
+    }
+}
+
+/// Print the §5.2 enqueue pipeline comparison.
+pub fn print_pipeline(rows: &[PipelineResult]) {
+    println!("\n=== §5.2: GPU pipeline — full-sync baseline vs MPIX enqueue ===");
+    println!("{:>28} {:>8} {:>14} {:>14}", "variant", "stages", "per-stage", "total");
+    for r in rows {
+        println!(
+            "{:>28} {:>8} {:>11.1} µs {:>12.3?}",
+            r.variant,
+            r.stages,
+            r.per_stage_ns / 1e3,
+            r.elapsed
+        );
+    }
+}
+
+fn check(label: &str, ok: bool) {
+    println!("  [{}] {label}", if ok { "ok" } else { "MISS" });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::calibrate::Calibration;
+    use crate::sim::msgrate::fig3_series;
+
+    #[test]
+    fn printers_do_not_panic() {
+        let c = Calibration::synthetic();
+        let rows = fig3_series(&c, &[1, 2], 10);
+        print_fig3(&rows, "synthetic");
+        print_n_to_1(&[]);
+        print_pipeline(&[]);
+    }
+}

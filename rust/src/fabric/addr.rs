@@ -1,0 +1,90 @@
+//! Endpoint addressing: the fabric-global address vector.
+//!
+//! `(rank, ep)` pairs are the wire addresses of network endpoints. The
+//! address vector is the simulated analogue of the libfabric AV / UCX
+//! worker-address exchange performed at init time: every rank can resolve
+//! any `(rank, ep)` pair to the peer endpoint object.
+
+use std::sync::Arc;
+
+use super::endpoint::Endpoint;
+
+/// Wire address of a network endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EpAddr {
+    /// World rank owning the endpoint.
+    pub rank: u32,
+    /// Endpoint index within that rank (== VCI index in this runtime).
+    pub ep: u16,
+}
+
+impl std::fmt::Display for EpAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.rank, self.ep)
+    }
+}
+
+/// Fabric-global endpoint table, `[rank][ep] -> Endpoint`.
+///
+/// Immutable after fabric construction (address exchange happens "at
+/// init"); growing a rank's endpoint set dynamically is modeled by
+/// pre-provisioning `max_endpoints` slots and gating them by the VCI pool.
+pub struct AddressVector {
+    table: Vec<Vec<Arc<Endpoint>>>,
+}
+
+impl AddressVector {
+    pub fn new(table: Vec<Vec<Arc<Endpoint>>>) -> Self {
+        AddressVector { table }
+    }
+
+    /// Resolve an endpoint address. Panics on out-of-range addresses —
+    /// addresses are runtime-generated, never user input, so a miss is an
+    /// internal bug.
+    pub fn resolve(&self, addr: EpAddr) -> &Arc<Endpoint> {
+        &self.table[addr.rank as usize][addr.ep as usize]
+    }
+
+    /// Checked resolve, for failure-injection tests.
+    pub fn try_resolve(&self, addr: EpAddr) -> Option<&Arc<Endpoint>> {
+        self.table.get(addr.rank as usize)?.get(addr.ep as usize)
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn eps_per_rank(&self) -> usize {
+        self.table.first().map(|v| v.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Fabric;
+
+    #[test]
+    fn resolve_roundtrip() {
+        let fabric = Fabric::new(3, 4, 1024);
+        for rank in 0..3u32 {
+            for ep in 0..4u16 {
+                let addr = EpAddr { rank, ep };
+                let e = fabric.av().resolve(addr);
+                assert_eq!(e.addr(), addr);
+            }
+        }
+    }
+
+    #[test]
+    fn try_resolve_out_of_range() {
+        let fabric = Fabric::new(2, 2, 1024);
+        assert!(fabric.av().try_resolve(EpAddr { rank: 9, ep: 0 }).is_none());
+        assert!(fabric.av().try_resolve(EpAddr { rank: 0, ep: 9 }).is_none());
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(EpAddr { rank: 2, ep: 5 }.to_string(), "2:5");
+    }
+}

@@ -1,0 +1,224 @@
+//! Lock-free multi-producer / single-consumer queue — the inbound ring of a
+//! simulated network endpoint.
+//!
+//! This is the piece of the stack that is lock-free in *every*
+//! critical-section mode: it models the NIC hardware queue pair. The
+//! critical-section models of [`crate::vci`] protect the *matching state*
+//! above this queue, never the queue itself — exactly as in MPICH, where
+//! the fabric provider owns thread-safe (or serialized) hardware queues and
+//! the library locks its own VCI state.
+//!
+//! The algorithm is Vyukov's non-intrusive MPSC queue. `push` is wait-free
+//! (one `swap` + one `store`); `pop` is single-consumer only, which the
+//! endpoint owner guarantees (enforced in debug builds by
+//! [`crate::fabric::endpoint::Endpoint`]).
+
+use std::cell::UnsafeCell;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+struct Node<T> {
+    next: AtomicPtr<Node<T>>,
+    value: Option<T>,
+}
+
+/// Unbounded lock-free MPSC queue with an approximate length counter used
+/// for backpressure (see [`MpscQueue::push_bounded`]).
+pub struct MpscQueue<T> {
+    /// Producers swap themselves in here.
+    head: AtomicPtr<Node<T>>,
+    /// Consumer-private cursor (single consumer invariant).
+    tail: UnsafeCell<*mut Node<T>>,
+    /// Approximate occupancy, maintained with relaxed ops.
+    len: AtomicUsize,
+}
+
+unsafe impl<T: Send> Send for MpscQueue<T> {}
+unsafe impl<T: Send> Sync for MpscQueue<T> {}
+
+/// Result of a `pop` attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// A value was dequeued.
+    Data(T),
+    /// The queue was observed empty.
+    Empty,
+    /// A producer is mid-push (swapped the head but has not yet linked its
+    /// node); retry shortly. Treated as Empty by pollers.
+    Inconsistent,
+}
+
+impl<T> MpscQueue<T> {
+    pub fn new() -> Self {
+        let stub = Box::into_raw(Box::new(Node { next: AtomicPtr::new(ptr::null_mut()), value: None }));
+        MpscQueue { head: AtomicPtr::new(stub), tail: UnsafeCell::new(stub), len: AtomicUsize::new(0) }
+    }
+
+    /// Wait-free multi-producer push.
+    pub fn push(&self, value: T) {
+        let node = Box::into_raw(Box::new(Node { next: AtomicPtr::new(ptr::null_mut()), value: Some(value) }));
+        // swap in the new head, then link the previous head to us.
+        let prev = self.head.swap(node, Ordering::AcqRel);
+        unsafe { (*prev).next.store(node, Ordering::Release) };
+        self.len.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Push with a soft capacity bound: refuses when the approximate
+    /// occupancy reaches `cap`. Models NIC ring backpressure; the caller
+    /// (the send path) must poll progress and retry.
+    pub fn push_bounded(&self, value: T, cap: usize) -> std::result::Result<(), T> {
+        if self.len.load(Ordering::Relaxed) >= cap {
+            return Err(value);
+        }
+        self.push(value);
+        Ok(())
+    }
+
+    /// Single-consumer pop.
+    ///
+    /// # Safety contract (checked by the caller)
+    /// Only the endpoint owner thread may call this; concurrent `pop`s are
+    /// undefined. [`crate::fabric::endpoint::Endpoint`] enforces this in
+    /// debug builds.
+    pub fn pop(&self) -> Pop<T> {
+        unsafe {
+            let tail = *self.tail.get();
+            let next = (*tail).next.load(Ordering::Acquire);
+            if !next.is_null() {
+                *self.tail.get() = next;
+                let value = (*next).value.take().expect("mpsc node already consumed");
+                drop(Box::from_raw(tail));
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return Pop::Data(value);
+            }
+            if self.head.load(Ordering::Acquire) == tail {
+                Pop::Empty
+            } else {
+                // A producer swapped head but has not linked yet.
+                Pop::Inconsistent
+            }
+        }
+    }
+
+    /// Approximate occupancy (relaxed).
+    pub fn len_approx(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    /// True if the queue was observed empty (approximate).
+    pub fn is_empty_approx(&self) -> bool {
+        self.len_approx() == 0
+    }
+}
+
+impl<T> Default for MpscQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Drop for MpscQueue<T> {
+    fn drop(&mut self) {
+        // Drain remaining nodes, then free the stub.
+        unsafe {
+            let mut tail = *self.tail.get();
+            loop {
+                let next = (*tail).next.load(Ordering::Acquire);
+                drop(Box::from_raw(tail));
+                if next.is_null() {
+                    break;
+                }
+                tail = next;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_producer() {
+        let q = MpscQueue::new();
+        for i in 0..100 {
+            q.push(i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Pop::Data(i));
+        }
+        assert_eq!(q.pop(), Pop::Empty);
+    }
+
+    #[test]
+    fn bounded_push_backpressures() {
+        let q = MpscQueue::new();
+        assert!(q.push_bounded(1, 2).is_ok());
+        assert!(q.push_bounded(2, 2).is_ok());
+        assert_eq!(q.push_bounded(3, 2), Err(3));
+        assert_eq!(q.pop(), Pop::Data(1));
+        assert!(q.push_bounded(3, 2).is_ok());
+    }
+
+    #[test]
+    fn len_tracks_occupancy() {
+        let q = MpscQueue::new();
+        assert!(q.is_empty_approx());
+        q.push(7u64);
+        q.push(8u64);
+        assert_eq!(q.len_approx(), 2);
+        let _ = q.pop();
+        assert_eq!(q.len_approx(), 1);
+    }
+
+    #[test]
+    fn multi_producer_no_loss() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 2_000;
+        let q = Arc::new(MpscQueue::new());
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..PER {
+                    q.push((p, i));
+                }
+            }));
+        }
+        let mut seen = vec![0usize; PRODUCERS];
+        let mut last = vec![None::<usize>; PRODUCERS];
+        let mut total = 0;
+        while total < PRODUCERS * PER {
+            match q.pop() {
+                Pop::Data((p, i)) => {
+                    // per-producer FIFO must hold
+                    if let Some(prev) = last[p] {
+                        assert!(i > prev, "producer {p} reordered: {prev} then {i}");
+                    }
+                    last[p] = Some(i);
+                    seen[p] += 1;
+                    total += 1;
+                }
+                _ => thread::yield_now(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(seen.iter().all(|&c| c == PER));
+        assert_eq!(q.pop(), Pop::Empty);
+    }
+
+    #[test]
+    fn drop_releases_pending_nodes() {
+        // Doesn't assert, but runs under the test allocator / miri-style
+        // sanity: drop a queue with queued boxed values.
+        let q = MpscQueue::new();
+        for i in 0..16 {
+            q.push(vec![i; 32]);
+        }
+        drop(q);
+    }
+}

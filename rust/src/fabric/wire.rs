@@ -1,0 +1,120 @@
+//! Wire format of the simulated fabric: envelopes and packets.
+//!
+//! A packet is what travels between two network endpoints. The envelope
+//! carries everything the receiver-side matching engine needs: the
+//! communicator context id, source rank, tag, and — for multiplex stream
+//! communicators (§3.5) — the source/destination stream indices.
+
+use super::addr::EpAddr;
+
+/// Matching envelope. `src_idx`/`dst_idx` are [`NO_INDEX`] for ordinary
+/// (non-multiplex) traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Envelope {
+    /// Communicator context id (agreed collectively at comm creation).
+    pub ctx_id: u32,
+    /// Source rank *in the communicator*.
+    pub src_rank: u32,
+    /// User tag.
+    pub tag: i32,
+    /// Source stream index for multiplex stream comms, else [`NO_INDEX`].
+    pub src_idx: i32,
+    /// Destination stream index for multiplex stream comms, else
+    /// [`NO_INDEX`].
+    pub dst_idx: i32,
+}
+
+/// Sentinel for "not multiplex traffic".
+pub const NO_INDEX: i32 = -1;
+
+/// Payload / protocol discriminator.
+#[derive(Debug)]
+pub enum PacketKind {
+    /// Eager: full payload inline. Sender completes locally on push.
+    Eager { data: Vec<u8> },
+    /// Rendezvous request-to-send: only the size travels; the payload
+    /// waits on the sender until the receiver has matched and replied.
+    Rts { rdv_id: u64, size: usize },
+    /// Clear-to-send: receiver matched the RTS; sender may ship data.
+    /// Routed back to the *sender's* endpoint (`Packet::reply_ep` of the
+    /// RTS).
+    Cts { rdv_id: u64 },
+    /// Rendezvous payload, sent only after CTS.
+    RdvData { rdv_id: u64, data: Vec<u8> },
+}
+
+impl PacketKind {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            PacketKind::Eager { .. } => "eager",
+            PacketKind::Rts { .. } => "rts",
+            PacketKind::Cts { .. } => "cts",
+            PacketKind::RdvData { .. } => "rdv-data",
+        }
+    }
+
+    /// Payload bytes carried by this packet (header excluded).
+    pub fn payload_len(&self) -> usize {
+        match self {
+            PacketKind::Eager { data } | PacketKind::RdvData { data, .. } => data.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// The unit of transfer between endpoints.
+#[derive(Debug)]
+pub struct Packet {
+    pub env: Envelope,
+    pub kind: PacketKind,
+    /// Endpoint to which protocol replies (CTS) must be routed — the
+    /// sender-side endpoint of the originating VCI. Nonlocality (§2.3):
+    /// a communication involves a *pair* of endpoints; the receiver must
+    /// know the peer endpoint explicitly.
+    pub reply_ep: EpAddr,
+}
+
+impl Packet {
+    pub fn eager(env: Envelope, reply_ep: EpAddr, data: Vec<u8>) -> Self {
+        Packet { env, kind: PacketKind::Eager { data }, reply_ep }
+    }
+
+    pub fn rts(env: Envelope, reply_ep: EpAddr, rdv_id: u64, size: usize) -> Self {
+        Packet { env, kind: PacketKind::Rts { rdv_id, size }, reply_ep }
+    }
+
+    pub fn cts(env: Envelope, reply_ep: EpAddr, rdv_id: u64) -> Self {
+        Packet { env, kind: PacketKind::Cts { rdv_id }, reply_ep }
+    }
+
+    pub fn rdv_data(env: Envelope, reply_ep: EpAddr, rdv_id: u64, data: Vec<u8>) -> Self {
+        Packet { env, kind: PacketKind::RdvData { rdv_id, data }, reply_ep }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> Envelope {
+        Envelope { ctx_id: 3, src_rank: 1, tag: 42, src_idx: NO_INDEX, dst_idx: NO_INDEX }
+    }
+
+    #[test]
+    fn payload_len_per_kind() {
+        let e = env();
+        let a = EpAddr { rank: 0, ep: 0 };
+        assert_eq!(Packet::eager(e, a, vec![0; 8]).kind.payload_len(), 8);
+        assert_eq!(Packet::rts(e, a, 1, 1 << 20).kind.payload_len(), 0);
+        assert_eq!(Packet::cts(e, a, 1).kind.payload_len(), 0);
+        assert_eq!(Packet::rdv_data(e, a, 1, vec![0; 100]).kind.payload_len(), 100);
+    }
+
+    #[test]
+    fn kind_names() {
+        let e = env();
+        let a = EpAddr { rank: 0, ep: 0 };
+        assert_eq!(Packet::eager(e, a, vec![]).kind.kind_name(), "eager");
+        assert_eq!(Packet::rts(e, a, 0, 0).kind.kind_name(), "rts");
+    }
+}

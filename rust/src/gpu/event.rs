@@ -1,0 +1,89 @@
+//! GPU events (`cudaEvent_t` analogue): recorded on a stream, waitable
+//! from the host or from another stream.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Default)]
+struct EventState {
+    recorded: bool,
+    /// Generation counter: events may be re-recorded (CUDA semantics).
+    generation: u64,
+}
+
+/// A shareable event handle.
+#[derive(Clone)]
+pub struct GpuEvent {
+    inner: Arc<(Mutex<EventState>, Condvar)>,
+}
+
+impl GpuEvent {
+    pub fn new() -> Self {
+        GpuEvent { inner: Arc::new((Mutex::new(EventState::default()), Condvar::new())) }
+    }
+
+    /// Mark the event recorded (called by the stream dispatcher when the
+    /// record-op executes).
+    pub(crate) fn fire(&self) {
+        let (m, cv) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        st.recorded = true;
+        st.generation += 1;
+        cv.notify_all();
+    }
+
+    /// Reset before re-recording.
+    pub(crate) fn reset(&self) {
+        let (m, _) = &*self.inner;
+        m.lock().unwrap().recorded = false;
+    }
+
+    /// `cudaEventQuery`: has the event fired?
+    pub fn query(&self) -> bool {
+        self.inner.0.lock().unwrap().recorded
+    }
+
+    /// `cudaEventSynchronize`: block the host until the event fires.
+    pub fn synchronize(&self) {
+        let (m, cv) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        while !st.recorded {
+            st = cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Default for GpuEvent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn query_and_fire() {
+        let e = GpuEvent::new();
+        assert!(!e.query());
+        e.fire();
+        assert!(e.query());
+        e.reset();
+        assert!(!e.query());
+    }
+
+    #[test]
+    fn synchronize_blocks_until_fire() {
+        let e = GpuEvent::new();
+        let e2 = e.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            e2.fire();
+        });
+        e.synchronize();
+        assert!(e.query());
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! Simulated device memory: a handle-addressed heap separate from host
+//! memory.
+//!
+//! Host code cannot dereference a [`DevicePtr`]; all traffic goes through
+//! explicit copies (the memcpy ops of [`crate::gpu::stream`]) or through
+//! the GPU-aware paths of the MPI enqueue layer — mirroring the discipline
+//! a real discrete GPU imposes, which is exactly what makes the paper's
+//! CPU/GPU synchronization problem exist.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{MpiErr, Result};
+
+/// An opaque device pointer: heap handle + byte offset + length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DevicePtr {
+    pub(crate) handle: u64,
+    pub(crate) offset: usize,
+    pub(crate) len: usize,
+}
+
+impl DevicePtr {
+    /// Length in bytes of the region this pointer spans.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Sub-range view (like pointer arithmetic on a device pointer).
+    pub fn slice(&self, offset: usize, len: usize) -> Result<DevicePtr> {
+        if offset + len > self.len {
+            return Err(MpiErr::Gpu(format!(
+                "device slice [{offset}, {}) out of bounds (allocation is {} bytes)",
+                offset + len,
+                self.len
+            )));
+        }
+        Ok(DevicePtr { handle: self.handle, offset: self.offset + offset, len })
+    }
+}
+
+/// The device heap.
+pub struct DeviceHeap {
+    allocs: Mutex<HashMap<u64, Box<[u8]>>>,
+    next: AtomicU64,
+    bytes_in_use: AtomicU64,
+}
+
+impl DeviceHeap {
+    pub fn new() -> Self {
+        DeviceHeap { allocs: Mutex::new(HashMap::new()), next: AtomicU64::new(1), bytes_in_use: AtomicU64::new(0) }
+    }
+
+    /// `cudaMalloc` analogue.
+    pub fn alloc(&self, len: usize) -> DevicePtr {
+        let handle = self.next.fetch_add(1, Ordering::Relaxed);
+        self.allocs.lock().unwrap().insert(handle, vec![0u8; len].into_boxed_slice());
+        self.bytes_in_use.fetch_add(len as u64, Ordering::Relaxed);
+        DevicePtr { handle, offset: 0, len }
+    }
+
+    /// `cudaFree` analogue. Fails on unknown handles (double free).
+    pub fn free(&self, ptr: DevicePtr) -> Result<()> {
+        match self.allocs.lock().unwrap().remove(&ptr.handle) {
+            Some(b) => {
+                self.bytes_in_use.fetch_sub(b.len() as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            None => Err(MpiErr::Gpu(format!("free of unknown device handle {}", ptr.handle))),
+        }
+    }
+
+    /// Copy device → host. Used by the stream's D2H op and the GPU-aware
+    /// MPI send path.
+    pub fn read(&self, ptr: DevicePtr, out: &mut [u8]) -> Result<()> {
+        if out.len() > ptr.len {
+            return Err(MpiErr::Gpu(format!("device read {} bytes > region {}", out.len(), ptr.len)));
+        }
+        let allocs = self.allocs.lock().unwrap();
+        let buf = allocs
+            .get(&ptr.handle)
+            .ok_or_else(|| MpiErr::Gpu(format!("read from dangling device handle {}", ptr.handle)))?;
+        out.copy_from_slice(&buf[ptr.offset..ptr.offset + out.len()]);
+        Ok(())
+    }
+
+    /// Copy host → device.
+    pub fn write(&self, ptr: DevicePtr, data: &[u8]) -> Result<()> {
+        if data.len() > ptr.len {
+            return Err(MpiErr::Gpu(format!("device write {} bytes > region {}", data.len(), ptr.len)));
+        }
+        let mut allocs = self.allocs.lock().unwrap();
+        let buf = allocs
+            .get_mut(&ptr.handle)
+            .ok_or_else(|| MpiErr::Gpu(format!("write to dangling device handle {}", ptr.handle)))?;
+        buf[ptr.offset..ptr.offset + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Device → device copy.
+    pub fn copy(&self, dst: DevicePtr, src: DevicePtr, len: usize) -> Result<()> {
+        let mut tmp = vec![0u8; len];
+        self.read(src.slice(0, len)?, &mut tmp)?;
+        self.write(dst.slice(0, len)?, &tmp)
+    }
+
+    pub fn bytes_in_use(&self) -> u64 {
+        self.bytes_in_use.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for DeviceHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_write_read_free() {
+        let h = DeviceHeap::new();
+        let p = h.alloc(16);
+        assert_eq!(p.len(), 16);
+        h.write(p, &[7u8; 16]).unwrap();
+        let mut out = [0u8; 16];
+        h.read(p, &mut out).unwrap();
+        assert_eq!(out, [7u8; 16]);
+        assert_eq!(h.bytes_in_use(), 16);
+        h.free(p).unwrap();
+        assert_eq!(h.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn double_free_and_dangling_detected() {
+        let h = DeviceHeap::new();
+        let p = h.alloc(4);
+        h.free(p).unwrap();
+        assert!(h.free(p).is_err());
+        let mut out = [0u8; 4];
+        assert!(h.read(p, &mut out).is_err());
+        assert!(h.write(p, &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn slice_bounds() {
+        let h = DeviceHeap::new();
+        let p = h.alloc(10);
+        let s = p.slice(4, 4).unwrap();
+        h.write(s, &[1u8; 4]).unwrap();
+        let mut all = [0u8; 10];
+        h.read(p, &mut all).unwrap();
+        assert_eq!(all, [0, 0, 0, 0, 1, 1, 1, 1, 0, 0]);
+        assert!(p.slice(8, 4).is_err());
+    }
+
+    #[test]
+    fn oversized_transfers_rejected() {
+        let h = DeviceHeap::new();
+        let p = h.alloc(4);
+        assert!(h.write(p, &[0u8; 8]).is_err());
+        let mut out = [0u8; 8];
+        assert!(h.read(p, &mut out).is_err());
+    }
+
+    #[test]
+    fn d2d_copy() {
+        let h = DeviceHeap::new();
+        let a = h.alloc(8);
+        let b = h.alloc(8);
+        h.write(a, &[9u8; 8]).unwrap();
+        h.copy(b, a, 8).unwrap();
+        let mut out = [0u8; 8];
+        h.read(b, &mut out).unwrap();
+        assert_eq!(out, [9u8; 8]);
+    }
+}

@@ -1,0 +1,77 @@
+//! # `mpix` — MPIX Stream reproduction
+//!
+//! A from-scratch reproduction of *"MPIX Stream: An Explicit Solution to
+//! Hybrid MPI+X Programming"* (Zhou, Raffenetti, Guo, Thakur — EuroMPI/USA
+//! 2022). The crate contains:
+//!
+//! * [`fabric`] — a simulated high-speed interconnect: network endpoints
+//!   with lock-free inbound rings, address vectors and a packet wire format
+//!   (the stand-in for Mellanox IB EDR + libfabric/UCX endpoints).
+//! * [`mpi`] — an MPI-like message-passing runtime: communicators with
+//!   context ids, datatypes, tag matching with MPI matching-order
+//!   semantics, eager + rendezvous point-to-point, requests, collectives,
+//!   info objects and a progress engine (the stand-in for MPICH).
+//! * [`vci`] — virtual communication interfaces: the implicit/explicit VCI
+//!   pools of MPICH 4.1a1 and the three critical-section models the paper
+//!   evaluates (global CS, per-VCI CS, lock-free stream-exclusive).
+//! * [`stream`] — **the paper's contribution**: `MPIX_Stream`, stream
+//!   communicators, multiplex stream communicators, indexed stream
+//!   point-to-point, and the GPU enqueue APIs.
+//! * [`gpu`] — a simulated GPU runtime (in-order streams, events, device
+//!   memory, host-function launch) whose kernels are AOT-compiled XLA
+//!   executables loaded through [`runtime`] (PJRT CPU client).
+//! * [`sim`] — a calibrated discrete-event virtual-time simulator used to
+//!   regenerate the paper's thread-scaling results (Figure 3) on hosts
+//!   with fewer cores than the paper's testbed.
+//! * [`coordinator`] — workload drivers, metrics, and report printers that
+//!   regenerate the paper's figures.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mpix::prelude::*;
+//!
+//! let config = Config { explicit_pool: 1, ..Default::default() };
+//! let world = World::builder().ranks(2).config(config).build().unwrap();
+//! world.run(|proc| {
+//!     let stream = proc.stream_create(&Info::null())?;
+//!     let comm = proc.stream_comm_create(proc.world_comm(), Some(&stream))?;
+//!     if proc.rank() == 0 {
+//!         proc.send(&[1u8, 2, 3], 1, 7, &comm)?;
+//!     } else {
+//!         let mut buf = [0u8; 3];
+//!         proc.recv(&mut buf, 0, 7, &comm)?;
+//!         assert_eq!(buf, [1, 2, 3]);
+//!     }
+//!     drop(comm);
+//!     proc.stream_free(stream)
+//! }).unwrap();
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod fabric;
+pub mod gpu;
+pub mod mpi;
+pub mod runtime;
+pub mod sim;
+pub mod stream;
+pub mod vci;
+
+/// Convenient re-exports for examples and applications.
+pub mod prelude {
+    pub use crate::config::{Config, CsMode, HashPolicy};
+    pub use crate::error::{MpiErr, Result};
+    pub use crate::gpu::{DevicePtr, GpuDevice, GpuStream};
+    pub use crate::mpi::comm::Comm;
+    pub use crate::mpi::datatype::Datatype;
+    pub use crate::mpi::info::Info;
+    pub use crate::mpi::request::Request;
+    pub use crate::mpi::status::Status;
+    pub use crate::mpi::world::{Proc, World};
+    pub use crate::mpi::{ANY_SOURCE, ANY_TAG};
+    pub use crate::stream::{MpixStream, ANY_INDEX};
+}

@@ -1,0 +1,150 @@
+//! `mpix` — the leader CLI for the MPIX-stream reproduction.
+//!
+//! Subcommands regenerate the paper's evaluation artifacts:
+//!
+//! ```text
+//! mpix fig3      [--threads 1,2,4,8,12,16,20] [--msgs 20000] [--live-points N]
+//! mpix patterns  [--senders 1,2,4,8] [--msgs 2000]
+//! mpix enqueue   [--stages 200] [--compute-ns 20000] [--switch-ns 30000]
+//! mpix calibrate [--msgs 20000]
+//! mpix saxpy     [--n 1048576] [--artifacts artifacts]
+//! mpix help
+//! ```
+
+use mpix::cli::Args;
+use mpix::coordinator::driver::{enqueue_pipeline, msgrate_live, n_to_1_live, MsgrateMode};
+use mpix::coordinator::report;
+use mpix::config::EnqueueMode;
+use mpix::error::Result;
+use mpix::sim::calibrate::{calibrate, Calibration};
+use mpix::sim::msgrate::fig3_series;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "fig3" => cmd_fig3(args),
+        "patterns" => cmd_patterns(args),
+        "enqueue" => cmd_enqueue(args),
+        "calibrate" => cmd_calibrate(args),
+        "saxpy" => cmd_saxpy(args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "mpix — reproduction of 'MPIX Stream: An Explicit Solution to Hybrid MPI+X Programming'\n\
+         \n\
+         commands:\n\
+         \x20 fig3       regenerate Figure 3 (message rate vs threads, 3 lock modes)\n\
+         \x20 patterns   regenerate Figure 1(b): N-to-1, multiplex vs multi-comm\n\
+         \x20 enqueue    §5.2 GPU pipeline: full-sync baseline vs MPIX enqueue\n\
+         \x20 calibrate  measure per-message path costs feeding the fig3 replay\n\
+         \x20 saxpy      run the Listing-4 SAXPY end-to-end (needs `make artifacts`)\n\
+         \n\
+         fig3 options:    --threads 1,2,4,8,12,16,20  --msgs 20000  --live-points 2\n\
+         patterns:        --senders 1,2,4,8           --msgs 2000\n\
+         enqueue:         --stages 200 --compute-ns 20000 --switch-ns 30000\n\
+         calibrate/saxpy: --msgs 20000 | --n 1048576 --artifacts artifacts"
+    );
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let threads = args.get_list("threads", &[1, 2, 4, 8, 12, 16, 20])?;
+    let msgs = args.get_u64("msgs", 20_000)?;
+    let live_points = args.get_usize("live-points", 2)?;
+
+    println!("calibrating path costs from live single-thread runs ({msgs} msgs/mode)...");
+    let cal = calibrate(msgs)?;
+    print_calibration(&cal);
+
+    // A few live multi-thread points for functional validation (their
+    // absolute scaling is hardware-bound; on a 1-core host they
+    // interleave rather than parallelize — see DESIGN.md §5).
+    for &n in threads.iter().take(live_points) {
+        for mode in MsgrateMode::all() {
+            let r = msgrate_live(mode, n, msgs / n as u64, 64, 8)?;
+            report::print_msgrate_live(&r);
+        }
+    }
+
+    let rows = fig3_series(&cal, &threads, msgs);
+    report::print_fig3(&rows, "calibrated virtual-time replay");
+    Ok(())
+}
+
+fn cmd_patterns(args: &Args) -> Result<()> {
+    let senders = args.get_list("senders", &[1, 2, 4, 8])?;
+    let msgs = args.get_u64("msgs", 2_000)?;
+    let mut rows = Vec::new();
+    for &n in &senders {
+        rows.push(n_to_1_live(n, msgs, true)?);
+        rows.push(n_to_1_live(n, msgs, false)?);
+    }
+    report::print_n_to_1(&rows);
+    Ok(())
+}
+
+fn cmd_enqueue(args: &Args) -> Result<()> {
+    let stages = args.get_u64("stages", 200)?;
+    let compute = args.get_u64("compute-ns", 20_000)?;
+    let switch = args.get_u64("switch-ns", 30_000)?;
+    let sync = args.get_u64("sync-ns", 15_000)?;
+    let rows = vec![
+        enqueue_pipeline(None, stages, compute, 0, sync)?,
+        enqueue_pipeline(Some(EnqueueMode::HostFunc), stages, compute, switch, sync)?,
+        enqueue_pipeline(Some(EnqueueMode::HostFunc), stages, compute, 0, sync)?,
+        enqueue_pipeline(Some(EnqueueMode::ProgressThread), stages, compute, 0, sync)?,
+    ];
+    report::print_pipeline(&rows);
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let msgs = args.get_u64("msgs", 20_000)?;
+    let cal = calibrate(msgs)?;
+    print_calibration(&cal);
+    Ok(())
+}
+
+fn print_calibration(c: &Calibration) {
+    println!(
+        "calibration: stream={:.0}ns/msg  per-vci={:.0}ns/msg  global={:.0}ns/msg  lock={:.1}ns  atomic={:.1}ns  handover(model)={:.0}ns",
+        c.t_stream_ns, c.t_pervci_ns, c.t_global_ns, c.lock_ns, c.atomic_ns, c.handover_ns
+    );
+    for v in c.shape_violations() {
+        println!("  [shape warning] {v}");
+    }
+}
+
+fn cmd_saxpy(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 1 << 20)?;
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    // The SAXPY example is the end-to-end Listing-4 driver; reuse it here.
+    mpix::coordinator::driver::run_saxpy_listing4(n, &dir)
+}

@@ -1,0 +1,320 @@
+//! Collective operations, built over the point-to-point engine.
+//!
+//! Collective traffic runs on a separate context (the communicator's
+//! `ctx_id` with [`COLL_CTX_BIT`] set) so it can never match user
+//! point-to-point messages on the same communicator. On stream
+//! communicators the routing inherits the attached streams, making every
+//! collective stream-aware — §5.1: "Point-to-point functions and
+//! collective functions ... are fully stream-aware."
+//!
+//! Algorithms are the textbook ones (dissemination barrier, binomial
+//! bcast/reduce, ring allgather, pairwise alltoall); the point here is
+//! semantics and endpoint routing, not collective-algorithm research.
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::{Comm, CommKind, COLL_CTX_BIT};
+use crate::mpi::datatype::{Datatype, Op};
+use crate::mpi::group::Group;
+use crate::mpi::matching::RecvDest;
+use crate::mpi::request::Request;
+use crate::mpi::world::Proc;
+
+/// Tag layout for collective fragments: `seq * STEP_SPAN + step`.
+const STEP_SPAN: i32 = 1024;
+
+fn coll_tag(seq: u32, step: u32) -> i32 {
+    (((seq % (1 << 20)) as i32) * STEP_SPAN + (step as i32 % STEP_SPAN)).abs()
+}
+
+impl Proc {
+    // ------------------------------------------------------------------
+    // Internal pt2pt on the collective context
+    // ------------------------------------------------------------------
+
+    fn coll_isend(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<Request> {
+        let route = self.route_tx(comm, dst, tag, comm.ctx_id() | COLL_CTX_BIT, None)?;
+        self.isend_wire(buf.to_vec(), route)
+    }
+
+    fn coll_irecv(&self, buf: &mut [u8], src: u32, tag: i32, comm: &Comm) -> Result<Request> {
+        let dest = RecvDest::new(buf, Datatype::U8, buf.len())?;
+        let route = self.route_rx(comm, src as i32, tag, comm.ctx_id() | COLL_CTX_BIT, None)?;
+        self.irecv_dest(dest, route)
+    }
+
+    fn coll_send(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let r = self.coll_isend(buf, dst, tag, comm)?;
+        self.wait(r)?;
+        Ok(())
+    }
+
+    fn coll_recv(&self, buf: &mut [u8], src: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let r = self.coll_irecv(buf, src, tag, comm)?;
+        self.wait(r)?;
+        Ok(())
+    }
+
+    fn coll_sendrecv(
+        &self,
+        sbuf: &[u8],
+        dst: u32,
+        rbuf: &mut [u8],
+        src: u32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<()> {
+        let rr = self.coll_irecv(rbuf, src, tag, comm)?;
+        let sr = self.coll_isend(sbuf, dst, tag, comm)?;
+        self.wait(sr)?;
+        self.wait(rr)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Collectives
+    // ------------------------------------------------------------------
+
+    /// `MPI_Barrier` (dissemination algorithm).
+    pub fn barrier(&self, comm: &Comm) -> Result<()> {
+        let seq = comm.next_coll_seq();
+        let n = comm.size();
+        if n <= 1 {
+            return Ok(());
+        }
+        let me = comm.rank();
+        let mut k = 1u32;
+        let mut step = 0u32;
+        while k < n {
+            let dst = (me + k) % n;
+            let src = (me + n - (k % n)) % n;
+            let mut sink = [];
+            self.coll_sendrecv(&[], dst, &mut sink, src, coll_tag(seq, step), comm)?;
+            k <<= 1;
+            step += 1;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Bcast` over raw bytes (binomial tree).
+    pub fn bcast(&self, buf: &mut [u8], root: u32, comm: &Comm) -> Result<()> {
+        comm.check_rank(root)?;
+        let seq = comm.next_coll_seq();
+        let n = comm.size();
+        if n <= 1 {
+            return Ok(());
+        }
+        let me = comm.rank();
+        let vr = (me + n - root) % n; // virtual rank, root = 0
+        let mut mask = 1u32;
+        // Receive from the parent (lowest set bit of vr).
+        while mask < n {
+            if vr & mask != 0 {
+                let parent = (vr - mask + root) % n;
+                self.coll_recv(buf, parent, coll_tag(seq, 0), comm)?;
+                break;
+            }
+            mask <<= 1;
+        }
+        // Forward to children.
+        mask >>= 1;
+        while mask > 0 {
+            if vr & mask == 0 && vr + mask < n {
+                let child = (vr + mask + root) % n;
+                self.coll_send(buf, child, coll_tag(seq, 0), comm)?;
+            }
+            mask >>= 1;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Allgather` over raw bytes (ring algorithm). `send.len()` bytes
+    /// per rank; `recv.len() == n * send.len()`.
+    pub fn allgather(&self, send: &[u8], recv: &mut [u8], comm: &Comm) -> Result<()> {
+        let n = comm.size() as usize;
+        let m = send.len();
+        if recv.len() != n * m {
+            return Err(MpiErr::Arg(format!(
+                "allgather recv buffer {} bytes != {} ranks x {} bytes",
+                recv.len(),
+                n,
+                m
+            )));
+        }
+        let seq = comm.next_coll_seq();
+        let me = comm.rank() as usize;
+        recv[me * m..(me + 1) * m].copy_from_slice(send);
+        if n == 1 {
+            return Ok(());
+        }
+        let right = ((me + 1) % n) as u32;
+        let left = ((me + n - 1) % n) as u32;
+        for step in 0..n - 1 {
+            let send_chunk = (me + n - step) % n;
+            let recv_chunk = (me + n - step - 1) % n;
+            let sbuf = recv[send_chunk * m..(send_chunk + 1) * m].to_vec();
+            let mut rbuf = vec![0u8; m];
+            self.coll_sendrecv(&sbuf, right, &mut rbuf, left, coll_tag(seq, step as u32), comm)?;
+            recv[recv_chunk * m..(recv_chunk + 1) * m].copy_from_slice(&rbuf);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Gather` (linear) over fixed-size byte blocks. On non-root
+    /// ranks `recv` may be empty.
+    pub fn gather(&self, send: &[u8], recv: &mut [u8], root: u32, comm: &Comm) -> Result<()> {
+        comm.check_rank(root)?;
+        let n = comm.size() as usize;
+        let m = send.len();
+        let seq = comm.next_coll_seq();
+        let me = comm.rank();
+        if me == root {
+            if recv.len() != n * m {
+                return Err(MpiErr::Arg(format!(
+                    "gather recv buffer {} bytes != {} ranks x {} bytes",
+                    recv.len(),
+                    n,
+                    m
+                )));
+            }
+            recv[me as usize * m..(me as usize + 1) * m].copy_from_slice(send);
+            // Post all receives, then wait: avoids serializing senders.
+            let mut reqs = Vec::new();
+            for r in 0..n as u32 {
+                if r == root {
+                    continue;
+                }
+                // SAFETY of split borrows: chunks are disjoint.
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(recv.as_mut_ptr().add(r as usize * m), m) };
+                reqs.push(self.coll_irecv(chunk, r, coll_tag(seq, 0), comm)?);
+            }
+            self.waitall(reqs)?;
+        } else {
+            self.coll_send(send, root, coll_tag(seq, 0), comm)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Reduce` (binomial, commutative ops). `buf` holds the local
+    /// contribution on entry and — on the root — the result on exit.
+    pub fn reduce(&self, buf: &mut [u8], dt: &Datatype, op: Op, root: u32, comm: &Comm) -> Result<()> {
+        comm.check_rank(root)?;
+        let seq = comm.next_coll_seq();
+        let n = comm.size();
+        if n <= 1 {
+            return Ok(());
+        }
+        let me = comm.rank();
+        let vr = (me + n - root) % n;
+        let mut mask = 1u32;
+        let mut tmp = vec![0u8; buf.len()];
+        while mask < n {
+            if vr & mask != 0 {
+                let parent = (vr - mask + root) % n;
+                self.coll_send(buf, parent, coll_tag(seq, mask), comm)?;
+                break;
+            }
+            let child_vr = vr | mask;
+            if child_vr < n {
+                let child = (child_vr + root) % n;
+                self.coll_recv(&mut tmp, child, coll_tag(seq, mask), comm)?;
+                op.apply(dt, buf, &tmp)?;
+            }
+            mask <<= 1;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Allreduce` = reduce to rank 0 + bcast.
+    pub fn allreduce(&self, buf: &mut [u8], dt: &Datatype, op: Op, comm: &Comm) -> Result<()> {
+        self.reduce(buf, dt, op, 0, comm)?;
+        self.bcast(buf, 0, comm)
+    }
+
+    /// `MPI_Alltoall` over fixed-size byte blocks: `send.len() == recv.len()
+    /// == n * m`. Pairwise-exchange schedule.
+    pub fn alltoall(&self, send: &[u8], recv: &mut [u8], comm: &Comm) -> Result<()> {
+        let n = comm.size() as usize;
+        if send.len() != recv.len() || send.len() % n != 0 {
+            return Err(MpiErr::Arg("alltoall buffers must be n equal blocks".into()));
+        }
+        let m = send.len() / n;
+        let seq = comm.next_coll_seq();
+        let me = comm.rank() as usize;
+        recv[me * m..(me + 1) * m].copy_from_slice(&send[me * m..(me + 1) * m]);
+        for shift in 1..n {
+            let dst = ((me + shift) % n) as u32;
+            let src = ((me + n - shift) % n) as u32;
+            let sbuf = &send[dst as usize * m..(dst as usize + 1) * m];
+            let mut rbuf = vec![0u8; m];
+            self.coll_sendrecv(sbuf, dst, &mut rbuf, src, coll_tag(seq, shift as u32), comm)?;
+            recv[src as usize * m..(src as usize + 1) * m].copy_from_slice(&rbuf);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Communicator management (collective)
+    // ------------------------------------------------------------------
+
+    /// Agree on a fresh context id over `comm` (rank 0 allocates).
+    pub(crate) fn agree_ctx_block(&self, comm: &Comm, n: u32) -> Result<u32> {
+        let mut base = if comm.rank() == 0 { self.world().alloc_ctx_block(n) } else { 0u32 };
+        let mut bytes = base.to_le_bytes();
+        self.bcast(&mut bytes, 0, comm)?;
+        base = u32::from_le_bytes(bytes);
+        Ok(base)
+    }
+
+    /// `MPI_Comm_dup`: duplicate with a fresh context. Stream attachments
+    /// are *not* inherited (the paper: a stream parent comm "is treated as
+    /// a normal communicator").
+    pub fn comm_dup(&self, comm: &Comm) -> Result<Comm> {
+        let ctx = self.agree_ctx_block(comm, 1)?;
+        Ok(Comm::new(ctx, comm.rank(), comm.group().clone(), CommKind::Regular))
+    }
+
+    /// `MPI_Comm_split`. `color < 0` (`MPI_UNDEFINED`) opts out and
+    /// returns `None`.
+    pub fn comm_split(&self, comm: &Comm, color: i32, key: i32) -> Result<Option<Comm>> {
+        let n = comm.size() as usize;
+        let mut mine = [0u8; 8];
+        mine[..4].copy_from_slice(&color.to_le_bytes());
+        mine[4..].copy_from_slice(&key.to_le_bytes());
+        let mut all = vec![0u8; 8 * n];
+        self.allgather(&mine, &mut all, comm)?;
+        let entries: Vec<(i32, i32)> = (0..n)
+            .map(|i| {
+                (
+                    i32::from_le_bytes(all[i * 8..i * 8 + 4].try_into().unwrap()),
+                    i32::from_le_bytes(all[i * 8 + 4..i * 8 + 8].try_into().unwrap()),
+                )
+            })
+            .collect();
+        // Deterministic color -> index mapping shared by all ranks.
+        let mut colors: Vec<i32> = entries.iter().map(|e| e.0).filter(|&c| c >= 0).collect();
+        colors.sort_unstable();
+        colors.dedup();
+        let base = self.agree_ctx_block(comm, colors.len().max(1) as u32)?;
+        if color < 0 {
+            return Ok(None);
+        }
+        let color_idx = colors.binary_search(&color).expect("own color present") as u32;
+        let ctx = base + color_idx;
+        // Members of my color, ordered by (key, parent rank).
+        let mut members: Vec<(i32, u32)> = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.0 == color)
+            .map(|(i, e)| (e.1, i as u32))
+            .collect();
+        members.sort_unstable();
+        let my_pos = members
+            .iter()
+            .position(|&(_, r)| r == comm.rank())
+            .expect("self in own color") as u32;
+        let world_ranks: Result<Vec<u32>> = members.iter().map(|&(_, r)| comm.world_rank(r)).collect();
+        let group = Group::new(world_ranks?)?;
+        Ok(Some(Comm::new(ctx, my_pos, group, CommKind::Regular)))
+    }
+}

@@ -1,0 +1,237 @@
+//! Communicators, including the paper's stream communicators (§3.3) and
+//! multiplex stream communicators (§3.5).
+//!
+//! A stream communicator binds one local MPIX stream per process; "stream
+//! information from all processes or its network endpoint address can be
+//! Allgathered and stored locally. All conventional MPI operations can be
+//! issued to a stream communicator without additional parameter changes."
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::group::Group;
+use crate::stream::stream::StreamInner;
+
+/// Context-id bit reserved for internal collective traffic, so user
+/// point-to-point can never match a collective fragment on the same
+/// communicator (MPICH does the same with a separate context id).
+pub const COLL_CTX_BIT: u32 = 1 << 31;
+
+/// What kind of routing a communicator performs.
+pub enum CommKind {
+    /// Traditional communicator: endpoints picked by the implicit hashing
+    /// policy.
+    Regular,
+    /// Stream communicator (§3.3): the local stream (None =
+    /// `MPIX_STREAM_NULL`) plus every remote rank's registered VCI.
+    Stream { local: Option<Arc<StreamInner>>, remote_vcis: Vec<u16> },
+    /// Multiplex stream communicator (§3.5): several local streams, and
+    /// per-rank tables of remote VCIs indexed by stream index.
+    Multiplex { locals: Vec<Arc<StreamInner>>, remote_vcis: Vec<Vec<u16>> },
+}
+
+pub struct CommInner {
+    ctx_id: u32,
+    my_rank: u32,
+    group: Group,
+    kind: CommKind,
+    /// Per-communicator collective sequence number; identical across ranks
+    /// because collectives are called in the same order on every rank.
+    coll_seq: AtomicU32,
+}
+
+/// A communicator handle (cheaply clonable).
+#[derive(Clone)]
+pub struct Comm {
+    inner: Arc<CommInner>,
+}
+
+impl Comm {
+    pub(crate) fn new(ctx_id: u32, my_rank: u32, group: Group, kind: CommKind) -> Comm {
+        Comm { inner: Arc::new(CommInner { ctx_id, my_rank, group, kind, coll_seq: AtomicU32::new(0) }) }
+    }
+
+    /// This process's rank in the communicator.
+    pub fn rank(&self) -> u32 {
+        self.inner.my_rank
+    }
+
+    /// Number of processes in the communicator.
+    pub fn size(&self) -> u32 {
+        self.inner.group.size() as u32
+    }
+
+    /// The communicator's context id (unique world-wide).
+    pub fn ctx_id(&self) -> u32 {
+        self.inner.ctx_id
+    }
+
+    pub fn group(&self) -> &Group {
+        &self.inner.group
+    }
+
+    /// Translate a communicator rank to a world rank.
+    pub fn world_rank(&self, comm_rank: u32) -> Result<u32> {
+        self.inner.group.world_rank(comm_rank)
+    }
+
+    pub fn kind(&self) -> &CommKind {
+        &self.inner.kind
+    }
+
+    /// True if this is a (single-)stream communicator.
+    pub fn is_stream_comm(&self) -> bool {
+        matches!(self.inner.kind, CommKind::Stream { .. })
+    }
+
+    /// True if this is a multiplex stream communicator.
+    pub fn is_multiplex(&self) -> bool {
+        matches!(self.inner.kind, CommKind::Multiplex { .. })
+    }
+
+    /// The local stream attached to this communicator, if any.
+    pub fn local_stream(&self) -> Option<&Arc<StreamInner>> {
+        match &self.inner.kind {
+            CommKind::Stream { local, .. } => local.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Local stream by multiplex index.
+    pub fn local_stream_at(&self, idx: usize) -> Result<&Arc<StreamInner>> {
+        match &self.inner.kind {
+            CommKind::Multiplex { locals, .. } => locals.get(idx).ok_or_else(|| {
+                MpiErr::Arg(format!("stream index {idx} out of range ({} local streams)", locals.len()))
+            }),
+            _ => Err(MpiErr::Comm("not a multiplex stream communicator".into())),
+        }
+    }
+
+    /// Number of local streams (1 for single-stream comms).
+    pub fn local_stream_count(&self) -> usize {
+        match &self.inner.kind {
+            CommKind::Multiplex { locals, .. } => locals.len(),
+            CommKind::Stream { .. } => 1,
+            CommKind::Regular => 0,
+        }
+    }
+
+    /// Remote VCI registered by `comm_rank` (single-stream comms).
+    pub fn remote_vci(&self, comm_rank: u32) -> Option<u16> {
+        match &self.inner.kind {
+            CommKind::Stream { remote_vcis, .. } => remote_vcis.get(comm_rank as usize).copied(),
+            _ => None,
+        }
+    }
+
+    /// Remote VCI registered by `comm_rank` for multiplex index `idx`.
+    pub fn remote_vci_at(&self, comm_rank: u32, idx: usize) -> Result<u16> {
+        match &self.inner.kind {
+            CommKind::Multiplex { remote_vcis, .. } => {
+                let row = remote_vcis.get(comm_rank as usize).ok_or(MpiErr::Rank {
+                    rank: comm_rank as i32,
+                    size: self.size(),
+                })?;
+                row.get(idx).copied().ok_or_else(|| {
+                    MpiErr::Arg(format!(
+                        "dst stream index {idx} out of range (rank {comm_rank} registered {} streams)",
+                        row.len()
+                    ))
+                })
+            }
+            _ => Err(MpiErr::Comm("not a multiplex stream communicator".into())),
+        }
+    }
+
+    /// Next collective sequence number (same on every rank).
+    pub(crate) fn next_coll_seq(&self) -> u32 {
+        self.inner.coll_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Validate a destination/source rank.
+    pub fn check_rank(&self, rank: u32) -> Result<()> {
+        if rank < self.size() {
+            Ok(())
+        } else {
+            Err(MpiErr::Rank { rank: rank as i32, size: self.size() })
+        }
+    }
+}
+
+impl std::fmt::Debug for Comm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match &self.inner.kind {
+            CommKind::Regular => "regular",
+            CommKind::Stream { .. } => "stream",
+            CommKind::Multiplex { .. } => "multiplex",
+        };
+        f.debug_struct("Comm")
+            .field("ctx", &self.inner.ctx_id)
+            .field("rank", &self.inner.my_rank)
+            .field("size", &self.size())
+            .field("kind", &kind)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(n: u32) -> Group {
+        Group::new((0..n).collect()).unwrap()
+    }
+
+    #[test]
+    fn regular_comm_basics() {
+        let c = Comm::new(5, 1, group(4), CommKind::Regular);
+        assert_eq!(c.rank(), 1);
+        assert_eq!(c.size(), 4);
+        assert_eq!(c.ctx_id(), 5);
+        assert!(!c.is_stream_comm());
+        assert!(c.check_rank(3).is_ok());
+        assert!(c.check_rank(4).is_err());
+        assert_eq!(c.local_stream_count(), 0);
+        assert!(c.remote_vci(0).is_none());
+    }
+
+    #[test]
+    fn stream_comm_routing_table() {
+        let c = Comm::new(7, 0, group(3), CommKind::Stream { local: None, remote_vcis: vec![2, 3, 4] });
+        assert!(c.is_stream_comm());
+        assert_eq!(c.remote_vci(1), Some(3));
+        assert!(c.local_stream().is_none(), "MPIX_STREAM_NULL attachment");
+    }
+
+    #[test]
+    fn multiplex_table_bounds() {
+        let c = Comm::new(
+            9,
+            0,
+            group(2),
+            CommKind::Multiplex { locals: vec![], remote_vcis: vec![vec![1, 2], vec![3]] },
+        );
+        assert!(c.is_multiplex());
+        assert_eq!(c.remote_vci_at(0, 1).unwrap(), 2);
+        assert_eq!(c.remote_vci_at(1, 0).unwrap(), 3);
+        assert!(c.remote_vci_at(1, 1).is_err(), "rank 1 registered only one stream");
+        assert!(c.remote_vci_at(2, 0).is_err());
+        assert!(c.local_stream_at(0).is_err(), "no local streams registered");
+    }
+
+    #[test]
+    fn coll_seq_monotonic() {
+        let c = Comm::new(1, 0, group(2), CommKind::Regular);
+        assert_eq!(c.next_coll_seq(), 0);
+        assert_eq!(c.next_coll_seq(), 1);
+    }
+
+    #[test]
+    fn world_rank_translation() {
+        let g = Group::new(vec![10, 20, 30]).unwrap();
+        let c = Comm::new(1, 2, g, CommKind::Regular);
+        assert_eq!(c.world_rank(1).unwrap(), 20);
+        assert!(c.world_rank(3).is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! MPI datatypes: intrinsic types plus derived (contiguous / vector)
+//! constructors, with pack/unpack into wire byte buffers.
+//!
+//! The paper contrasts the proposed enqueue APIs with NCCL, which "only
+//! supports contiguous buffers with intrinsic datatypes" — the MPIX
+//! proposal "work[s] for MPI datatypes". So derived datatypes must flow
+//! through every path, including the enqueue path.
+
+use crate::error::{MpiErr, Result};
+
+/// An MPI datatype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Datatype {
+    U8,
+    I32,
+    U32,
+    I64,
+    U64,
+    F32,
+    F64,
+    /// `MPI_Type_contiguous(count, inner)`.
+    Contiguous { count: usize, inner: Box<Datatype> },
+    /// `MPI_Type_vector(count, blocklen, stride, inner)`; `stride` is in
+    /// units of the inner extent, as in MPI.
+    Vector { count: usize, blocklen: usize, stride: usize, inner: Box<Datatype> },
+}
+
+impl Datatype {
+    /// Number of *significant* bytes per element (the type's "size").
+    pub fn size(&self) -> usize {
+        match self {
+            Datatype::U8 => 1,
+            Datatype::I32 | Datatype::U32 | Datatype::F32 => 4,
+            Datatype::I64 | Datatype::U64 | Datatype::F64 => 8,
+            Datatype::Contiguous { count, inner } => count * inner.size(),
+            Datatype::Vector { count, blocklen, inner, .. } => count * blocklen * inner.size(),
+        }
+    }
+
+    /// Memory footprint per element in the user buffer (the "extent").
+    pub fn extent(&self) -> usize {
+        match self {
+            Datatype::Contiguous { count, inner } => count * inner.extent(),
+            Datatype::Vector { count, blocklen, stride, inner } => {
+                if *count == 0 {
+                    0
+                } else {
+                    // (count-1) full strides plus the last block.
+                    (count - 1) * stride * inner.extent() + blocklen * inner.extent()
+                }
+            }
+            _ => self.size(),
+        }
+    }
+
+    /// True for types whose in-memory layout equals their packed layout.
+    pub fn is_contiguous(&self) -> bool {
+        match self {
+            Datatype::Vector { blocklen, stride, .. } => blocklen == stride,
+            Datatype::Contiguous { inner, .. } => inner.is_contiguous(),
+            _ => true,
+        }
+    }
+
+    /// Derived-type constructor: contiguous.
+    pub fn contiguous(count: usize, inner: Datatype) -> Datatype {
+        Datatype::Contiguous { count, inner: Box::new(inner) }
+    }
+
+    /// Derived-type constructor: vector. Requires `blocklen <= stride`.
+    pub fn vector(count: usize, blocklen: usize, stride: usize, inner: Datatype) -> Result<Datatype> {
+        if blocklen > stride {
+            return Err(MpiErr::Datatype(format!("vector blocklen {blocklen} > stride {stride}")));
+        }
+        Ok(Datatype::Vector { count, blocklen, stride, inner: Box::new(inner) })
+    }
+
+    /// Pack `count` elements from `buf` into a contiguous wire buffer.
+    /// `buf` must hold at least `count * extent` bytes.
+    pub fn pack(&self, buf: &[u8], count: usize) -> Result<Vec<u8>> {
+        // The final element may omit trailing stride padding, as in MPI.
+        if buf.len() < self.min_buffer_len(count) {
+            return Err(MpiErr::Datatype(format!(
+                "pack: buffer {} bytes < required {}",
+                buf.len(),
+                self.min_buffer_len(count)
+            )));
+        }
+        let mut out = Vec::with_capacity(self.size() * count);
+        for i in 0..count {
+            self.pack_one(&buf[i * self.extent()..], &mut out);
+        }
+        Ok(out)
+    }
+
+    /// Unpack a contiguous wire buffer into `count` elements in `buf`.
+    pub fn unpack(&self, wire: &[u8], buf: &mut [u8], count: usize) -> Result<()> {
+        if wire.len() != self.size() * count {
+            return Err(MpiErr::Datatype(format!(
+                "unpack: wire {} bytes != expected {}",
+                wire.len(),
+                self.size() * count
+            )));
+        }
+        if buf.len() < self.min_buffer_len(count) {
+            return Err(MpiErr::Datatype(format!(
+                "unpack: buffer {} bytes < required {}",
+                buf.len(),
+                self.min_buffer_len(count)
+            )));
+        }
+        let mut off = 0;
+        for i in 0..count {
+            self.unpack_one(&wire[i * self.size()..(i + 1) * self.size()], &mut buf[off..]);
+            off += self.extent();
+        }
+        Ok(())
+    }
+
+    /// Minimum user-buffer length for `count` elements. The MPI vector
+    /// extent already ends at the last significant byte (no trailing
+    /// stride gap), so this is simply `count * extent`.
+    pub fn min_buffer_len(&self, count: usize) -> usize {
+        count * self.extent()
+    }
+
+    fn pack_one(&self, elem: &[u8], out: &mut Vec<u8>) {
+        match self {
+            Datatype::Vector { count, blocklen, stride, inner } => {
+                let ie = inner.extent();
+                for b in 0..*count {
+                    let start = b * stride * ie;
+                    for j in 0..*blocklen {
+                        inner.pack_one(&elem[start + j * ie..], out);
+                    }
+                }
+            }
+            Datatype::Contiguous { count, inner } => {
+                let ie = inner.extent();
+                for j in 0..*count {
+                    inner.pack_one(&elem[j * ie..], out);
+                }
+            }
+            _ => out.extend_from_slice(&elem[..self.size()]),
+        }
+    }
+
+    fn unpack_one(&self, wire: &[u8], buf: &mut [u8]) {
+        match self {
+            Datatype::Vector { count, blocklen, stride, inner } => {
+                let ie = inner.extent();
+                let isz = inner.size();
+                let mut w = 0;
+                for b in 0..*count {
+                    let start = b * stride * ie;
+                    for j in 0..*blocklen {
+                        inner.unpack_one(&wire[w..w + isz], &mut buf[start + j * ie..]);
+                        w += isz;
+                    }
+                }
+            }
+            Datatype::Contiguous { count, inner } => {
+                let ie = inner.extent();
+                let isz = inner.size();
+                for j in 0..*count {
+                    inner.unpack_one(&wire[j * isz..(j + 1) * isz], &mut buf[j * ie..]);
+                }
+            }
+            _ => buf[..self.size()].copy_from_slice(wire),
+        }
+    }
+}
+
+/// Reduction operators for collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Sum,
+    Max,
+    Min,
+}
+
+impl Op {
+    /// Apply `acc = acc op rhs` elementwise over byte buffers typed by
+    /// `dt`. Only intrinsic numeric datatypes participate in reductions.
+    pub fn apply(&self, dt: &Datatype, acc: &mut [u8], rhs: &[u8]) -> Result<()> {
+        macro_rules! reduce {
+            ($t:ty) => {{
+                let n = acc.len() / std::mem::size_of::<$t>();
+                for i in 0..n {
+                    let o = i * std::mem::size_of::<$t>();
+                    let a = <$t>::from_le_bytes(acc[o..o + std::mem::size_of::<$t>()].try_into().unwrap());
+                    let b = <$t>::from_le_bytes(rhs[o..o + std::mem::size_of::<$t>()].try_into().unwrap());
+                    let r: $t = match self {
+                        Op::Sum => a + b,
+                        Op::Max => {
+                            if a >= b {
+                                a
+                            } else {
+                                b
+                            }
+                        }
+                        Op::Min => {
+                            if a <= b {
+                                a
+                            } else {
+                                b
+                            }
+                        }
+                    };
+                    acc[o..o + std::mem::size_of::<$t>()].copy_from_slice(&r.to_le_bytes());
+                }
+                Ok(())
+            }};
+        }
+        if acc.len() != rhs.len() {
+            return Err(MpiErr::Datatype("reduce: buffer length mismatch".into()));
+        }
+        match dt {
+            Datatype::U8 => reduce!(u8),
+            Datatype::I32 => reduce!(i32),
+            Datatype::U32 => reduce!(u32),
+            Datatype::I64 => reduce!(i64),
+            Datatype::U64 => reduce!(u64),
+            Datatype::F32 => reduce!(f32),
+            Datatype::F64 => reduce!(f64),
+            _ => Err(MpiErr::Datatype("reduction over derived datatypes unsupported".into())),
+        }
+    }
+}
+
+/// Reinterpret a typed slice as bytes (little-endian host layout).
+pub fn as_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Reinterpret a typed mutable slice as bytes.
+pub fn as_bytes_mut<T: Copy>(v: &mut [T]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intrinsic_sizes() {
+        assert_eq!(Datatype::U8.size(), 1);
+        assert_eq!(Datatype::F32.size(), 4);
+        assert_eq!(Datatype::F64.size(), 8);
+        assert_eq!(Datatype::F64.extent(), 8);
+        assert!(Datatype::F32.is_contiguous());
+    }
+
+    #[test]
+    fn contiguous_roundtrip() {
+        let dt = Datatype::contiguous(3, Datatype::F32);
+        assert_eq!(dt.size(), 12);
+        let data: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let wire = dt.pack(as_bytes(&data), 2).unwrap();
+        assert_eq!(wire.len(), 24);
+        let mut out = vec![0f32; 6];
+        dt.unpack(&wire, as_bytes_mut(&mut out), 2).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn vector_packs_strided_columns() {
+        // A 3x4 row-major f32 matrix; a column = vector(count=3, blocklen=1,
+        // stride=4).
+        let dt = Datatype::vector(3, 1, 4, Datatype::F32).unwrap();
+        assert_eq!(dt.size(), 12);
+        assert_eq!(dt.extent(), (2 * 4 + 1) * 4);
+        #[rustfmt::skip]
+        let m: Vec<f32> = vec![
+            0.0, 1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0, 7.0,
+            8.0, 9.0, 10.0, 11.0,
+        ];
+        // Column 0 starts at element 0.
+        let wire = dt.pack(as_bytes(&m), 1).unwrap();
+        let col: Vec<f32> = wire.chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(col, vec![0.0, 4.0, 8.0]);
+        // Unpack into a zeroed matrix reproduces just the column.
+        let mut out = vec![0f32; 12];
+        dt.unpack(&wire, as_bytes_mut(&mut out), 1).unwrap();
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[4], 4.0);
+        assert_eq!(out[8], 8.0);
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn vector_rejects_blocklen_gt_stride() {
+        assert!(Datatype::vector(2, 5, 4, Datatype::U8).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_short_buffer() {
+        let dt = Datatype::contiguous(4, Datatype::F64);
+        let data = vec![0u8; 16];
+        assert!(dt.pack(&data, 1).is_err());
+    }
+
+    #[test]
+    fn unpack_rejects_wire_mismatch() {
+        let dt = Datatype::F32;
+        let mut out = vec![0u8; 4];
+        assert!(dt.unpack(&[0u8; 5], &mut out, 1).is_err());
+    }
+
+    #[test]
+    fn op_sum_f64() {
+        let dt = Datatype::F64;
+        let mut a = Vec::from(as_bytes(&[1.0f64, 2.0]));
+        let b = Vec::from(as_bytes(&[10.0f64, 20.0]));
+        Op::Sum.apply(&dt, &mut a, &b).unwrap();
+        let out: Vec<f64> =
+            a.chunks(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(out, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn op_max_min_i32() {
+        let dt = Datatype::I32;
+        let mut a = Vec::from(as_bytes(&[5i32, -3]));
+        let b = Vec::from(as_bytes(&[2i32, 7]));
+        Op::Max.apply(&dt, &mut a, &b).unwrap();
+        let out: Vec<i32> = a.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(out, vec![5, 7]);
+        let mut a = Vec::from(as_bytes(&[5i32, -3]));
+        Op::Min.apply(&dt, &mut a, &b).unwrap();
+        let out: Vec<i32> = a.chunks(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(out, vec![2, -3]);
+    }
+
+    #[test]
+    fn op_rejects_derived() {
+        let dt = Datatype::contiguous(2, Datatype::F32);
+        let mut a = vec![0u8; 8];
+        let b = vec![0u8; 8];
+        assert!(Op::Sum.apply(&dt, &mut a, &b).is_err());
+    }
+
+    #[test]
+    fn nested_contiguous_vector() {
+        // contiguous(2, vector(2,1,2,u8)): picks bytes 0,2 then 4,6 per elem
+        let inner = Datatype::vector(2, 1, 2, Datatype::U8).unwrap();
+        assert_eq!(inner.extent(), 3);
+        let dt = Datatype::contiguous(2, inner);
+        // extent = 2*3 = 6... element i occupies 6 bytes; significant 4.
+        assert_eq!(dt.size(), 4);
+        let data: Vec<u8> = vec![10, 11, 12, 13, 14, 15];
+        let wire = dt.pack(&data, 1).unwrap();
+        assert_eq!(wire, vec![10, 12, 13, 15]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Process groups (`MPI_Group` analogue): ordered sets of world ranks.
+
+use crate::error::{MpiErr, Result};
+
+/// An ordered set of world ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    ranks: Vec<u32>,
+}
+
+impl Group {
+    pub fn new(ranks: Vec<u32>) -> Result<Group> {
+        let mut seen = std::collections::HashSet::new();
+        for &r in &ranks {
+            if !seen.insert(r) {
+                return Err(MpiErr::Arg(format!("duplicate rank {r} in group")));
+            }
+        }
+        Ok(Group { ranks })
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn ranks(&self) -> &[u32] {
+        &self.ranks
+    }
+
+    /// Position of a world rank in the group (`MPI_Group_rank`).
+    pub fn rank_of(&self, world_rank: u32) -> Option<u32> {
+        self.ranks.iter().position(|&r| r == world_rank).map(|p| p as u32)
+    }
+
+    /// World rank at a group position.
+    pub fn world_rank(&self, group_rank: u32) -> Result<u32> {
+        self.ranks
+            .get(group_rank as usize)
+            .copied()
+            .ok_or(MpiErr::Rank { rank: group_rank as i32, size: self.ranks.len() as u32 })
+    }
+
+    /// `MPI_Group_incl`: sub-group by positions.
+    pub fn incl(&self, positions: &[u32]) -> Result<Group> {
+        let mut out = Vec::with_capacity(positions.len());
+        for &p in positions {
+            out.push(self.world_rank(p)?);
+        }
+        Group::new(out)
+    }
+
+    /// `MPI_Group_excl`: remove positions.
+    pub fn excl(&self, positions: &[u32]) -> Result<Group> {
+        for &p in positions {
+            if p as usize >= self.ranks.len() {
+                return Err(MpiErr::Rank { rank: p as i32, size: self.ranks.len() as u32 });
+            }
+        }
+        let drop: std::collections::HashSet<u32> = positions.iter().copied().collect();
+        Ok(Group {
+            ranks: self
+                .ranks
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !drop.contains(&(*i as u32)))
+                .map(|(_, &r)| r)
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_translation() {
+        let g = Group::new(vec![4, 2, 7]).unwrap();
+        assert_eq!(g.size(), 3);
+        assert_eq!(g.rank_of(2), Some(1));
+        assert_eq!(g.rank_of(5), None);
+        assert_eq!(g.world_rank(2).unwrap(), 7);
+        assert!(g.world_rank(3).is_err());
+    }
+
+    #[test]
+    fn incl_excl() {
+        let g = Group::new(vec![0, 1, 2, 3]).unwrap();
+        assert_eq!(g.incl(&[3, 1]).unwrap().ranks(), &[3, 1]);
+        assert_eq!(g.excl(&[0, 2]).unwrap().ranks(), &[1, 3]);
+        assert!(g.incl(&[9]).is_err());
+        assert!(g.excl(&[9]).is_err());
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        assert!(Group::new(vec![1, 1]).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! `MPI_Info` analogue, plus the paper's `MPIX_Info_set_hex` /
+//! `MPIX_Info_get_hex` (§3.2): passing *opaque binary* values (such as a
+//! GPU queuing object) through the string-valued info interface.
+//!
+//! The encoding is plain lowercase hex, one byte = two ASCII chars — any
+//! "binary to ASCII encoding" is allowed as long as set/get are consistent.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MpiErr, Result};
+
+/// A key/value info object. String values only, per MPI; binary values
+/// travel hex-encoded via [`Info::set_hex`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Info {
+    kv: BTreeMap<String, String>,
+}
+
+impl Info {
+    /// `MPI_Info_create`.
+    pub fn new() -> Self {
+        Info::default()
+    }
+
+    /// `MPI_INFO_NULL`: an empty info (this runtime treats null and empty
+    /// identically).
+    pub fn null() -> Self {
+        Info::default()
+    }
+
+    /// `MPI_Info_set`.
+    pub fn set(&mut self, key: &str, value: &str) -> &mut Self {
+        self.kv.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// `MPI_Info_get`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// `MPIX_Info_set_hex` (§3.2): store an opaque binary value.
+    pub fn set_hex(&mut self, key: &str, value: &[u8]) -> &mut Self {
+        let mut s = String::with_capacity(value.len() * 2);
+        for b in value {
+            s.push_str(&format!("{b:02x}"));
+        }
+        self.kv.insert(key.to_string(), s);
+        self
+    }
+
+    /// `MPIX_Info_get_hex`: decode an opaque binary value. Errors on
+    /// malformed hex (odd length or non-hex characters).
+    pub fn get_hex(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let Some(s) = self.kv.get(key) else { return Ok(None) };
+        if s.len() % 2 != 0 {
+            return Err(MpiErr::Info(format!("hex value for '{key}' has odd length {}", s.len())));
+        }
+        let mut out = Vec::with_capacity(s.len() / 2);
+        let bytes = s.as_bytes();
+        for i in (0..bytes.len()).step_by(2) {
+            let hi = hex_digit(bytes[i]).ok_or_else(|| MpiErr::Info(format!("bad hex char in '{key}'")))?;
+            let lo = hex_digit(bytes[i + 1]).ok_or_else(|| MpiErr::Info(format!("bad hex char in '{key}'")))?;
+            out.push(hi << 4 | lo);
+        }
+        Ok(Some(out))
+    }
+
+    /// Convenience: store a `u64` handle (e.g. a GPU stream id) as the
+    /// paper's Listing-4 pattern `MPIX_Info_set_hex(info, "value", &stream,
+    /// sizeof(stream))`.
+    pub fn set_hex_u64(&mut self, key: &str, v: u64) -> &mut Self {
+        self.set_hex(key, &v.to_le_bytes())
+    }
+
+    /// Convenience: decode a `u64` handle.
+    pub fn get_hex_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.get_hex(key)? {
+            None => Ok(None),
+            Some(v) => {
+                let arr: [u8; 8] = v
+                    .try_into()
+                    .map_err(|v: Vec<u8>| MpiErr::Info(format!("hex value for '{key}' is {} bytes, expected 8", v.len())))?;
+                Ok(Some(u64::from_le_bytes(arr)))
+            }
+        }
+    }
+
+    /// `MPI_Info_get_nkeys`.
+    pub fn nkeys(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// Iterate keys in deterministic order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.kv.keys().map(|s| s.as_str())
+    }
+}
+
+fn hex_digit(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        b'A'..=b'F' => Some(c - b'A' + 10),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut i = Info::new();
+        i.set("type", "gpuStream_t");
+        assert_eq!(i.get("type"), Some("gpuStream_t"));
+        assert_eq!(i.get("missing"), None);
+        assert_eq!(i.nkeys(), 1);
+    }
+
+    #[test]
+    fn hex_roundtrip_arbitrary_bytes() {
+        let mut i = Info::new();
+        let blob: Vec<u8> = (0..=255).collect();
+        i.set_hex("value", &blob);
+        assert_eq!(i.get_hex("value").unwrap().unwrap(), blob);
+    }
+
+    #[test]
+    fn hex_u64_roundtrip() {
+        let mut i = Info::new();
+        i.set_hex_u64("value", 0xdead_beef_cafe_f00d);
+        assert_eq!(i.get_hex_u64("value").unwrap(), Some(0xdead_beef_cafe_f00d));
+    }
+
+    #[test]
+    fn hex_rejects_odd_length() {
+        let mut i = Info::new();
+        i.set("value", "abc");
+        assert!(i.get_hex("value").is_err());
+    }
+
+    #[test]
+    fn hex_rejects_non_hex() {
+        let mut i = Info::new();
+        i.set("value", "zz");
+        assert!(i.get_hex("value").is_err());
+    }
+
+    #[test]
+    fn hex_u64_rejects_wrong_width() {
+        let mut i = Info::new();
+        i.set_hex("value", &[1, 2, 3]);
+        assert!(i.get_hex_u64("value").is_err());
+    }
+
+    #[test]
+    fn missing_key_is_none_not_error() {
+        let i = Info::new();
+        assert_eq!(i.get_hex("value").unwrap(), None);
+        assert_eq!(i.get_hex_u64("value").unwrap(), None);
+    }
+
+    #[test]
+    fn uppercase_hex_accepted() {
+        let mut i = Info::new();
+        i.set("value", "DEADBEEF");
+        assert_eq!(i.get_hex("value").unwrap().unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+    }
+}

@@ -1,0 +1,421 @@
+//! The tag-matching engine: posted-receive and unexpected-message queues
+//! with MPI matching-order semantics.
+//!
+//! §2.1 of the paper: "a message matching order is an MPI-defined outcome.
+//! Two sequentially issued sends that both match the same receive are
+//! guaranteed to match the first one before the second one." Both queues
+//! are strict FIFO and scans always take the *first* match, which yields
+//! exactly that outcome. Messages from different communicators (context
+//! ids) never match each other.
+//!
+//! One `MatchState` lives per VCI: traffic on different VCIs is matched
+//! independently — that is precisely what lets stream communicators
+//! proceed fully in parallel.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::error::MpiErr;
+use crate::fabric::addr::EpAddr;
+use crate::fabric::wire::Envelope;
+use crate::mpi::datatype::Datatype;
+use crate::mpi::request::{ReqInner, CANCELLED};
+use crate::mpi::status::Status;
+use std::sync::Arc;
+
+/// Wildcard source rank (`MPI_ANY_SOURCE`).
+pub const ANY_SOURCE: i32 = -1;
+/// Wildcard tag (`MPI_ANY_TAG`).
+pub const ANY_TAG: i32 = -1;
+/// Wildcard stream index (`MPIX_ANY_INDEX`, §3.5). Distinct from
+/// [`crate::fabric::wire::NO_INDEX`] (-1), which marks non-multiplex
+/// traffic and matches exactly.
+pub const ANY_INDEX: i32 = -2;
+
+/// Receive-side matching pattern.
+#[derive(Debug, Clone, Copy)]
+pub struct MatchPattern {
+    pub ctx_id: u32,
+    /// Source rank in the communicator, or [`ANY_SOURCE`].
+    pub src: i32,
+    /// Tag, or [`ANY_TAG`].
+    pub tag: i32,
+    /// Source stream index, [`ANY_INDEX`], or `NO_INDEX` for
+    /// non-multiplex traffic.
+    pub src_idx: i32,
+    /// Destination stream index; always exact.
+    pub dst_idx: i32,
+}
+
+impl MatchPattern {
+    pub fn matches(&self, env: &Envelope) -> bool {
+        self.ctx_id == env.ctx_id
+            && (self.src == ANY_SOURCE || self.src == env.src_rank as i32)
+            && (self.tag == ANY_TAG || self.tag == env.tag)
+            && (self.src_idx == ANY_INDEX || self.src_idx == env.src_idx)
+            && self.dst_idx == env.dst_idx
+    }
+}
+
+/// Where a matched message lands: the posted user buffer.
+///
+/// Holds a raw pointer captured from the user's `&mut [u8]`; soundness is
+/// provided by the [`crate::mpi::request::Request`] drop-cancel protocol
+/// (a dropped pending request is cancelled before its buffer can dangle,
+/// and in-flight matches are waited out).
+pub struct RecvDest {
+    ptr: *mut u8,
+    buf_len: usize,
+    dt: Datatype,
+    max_count: usize,
+}
+
+unsafe impl Send for RecvDest {}
+
+impl RecvDest {
+    /// Capture a destination from a user buffer. `buf` must hold at least
+    /// `dt.min_buffer_len(max_count)` bytes (checked).
+    pub fn new(buf: &mut [u8], dt: Datatype, max_count: usize) -> Result<RecvDest, MpiErr> {
+        let need = dt.min_buffer_len(max_count);
+        if buf.len() < need {
+            return Err(MpiErr::Arg(format!(
+                "receive buffer {} bytes < {} required for count {}",
+                buf.len(),
+                need,
+                max_count
+            )));
+        }
+        Ok(RecvDest { ptr: buf.as_mut_ptr(), buf_len: buf.len(), dt, max_count })
+    }
+
+    /// Deliver wire payload into the buffer. Returns the byte count for
+    /// the Status, or a truncation/datatype error.
+    ///
+    /// # Safety
+    /// Caller must hold the claim on the owning request (buffer alive).
+    pub fn deliver(&self, env: &Envelope, data: &[u8]) -> Result<Status, MpiErr> {
+        let max_bytes = self.dt.size() * self.max_count;
+        if data.len() > max_bytes {
+            return Err(MpiErr::Truncate { incoming: data.len(), buffer: max_bytes });
+        }
+        let buf = unsafe { std::slice::from_raw_parts_mut(self.ptr, self.buf_len) };
+        if self.dt.is_contiguous() {
+            buf[..data.len()].copy_from_slice(data);
+        } else {
+            let esz = self.dt.size();
+            if esz == 0 || data.len() % esz != 0 {
+                return Err(MpiErr::Datatype(format!(
+                    "incoming {} bytes is not a whole number of {}-byte elements",
+                    data.len(),
+                    esz
+                )));
+            }
+            self.dt.unpack(data, buf, data.len() / esz)?;
+        }
+        Ok(Status::new(env.src_rank, env.tag, data.len(), env.src_idx))
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.dt.size() * self.max_count
+    }
+}
+
+/// A posted (pending) receive.
+pub struct PostedRecv {
+    pub pattern: MatchPattern,
+    pub dest: RecvDest,
+    pub req: Arc<ReqInner>,
+}
+
+/// An arrived-but-unmatched message.
+pub enum UnexpectedKind {
+    /// Eager payload held in the unexpected buffer.
+    Eager(Vec<u8>),
+    /// Rendezvous announcement; payload still on the sender.
+    Rts { rdv_id: u64, size: usize },
+}
+
+pub struct UnexpectedMsg {
+    pub env: Envelope,
+    pub reply_ep: EpAddr,
+    pub kind: UnexpectedKind,
+}
+
+/// A rendezvous send parked until CTS.
+pub struct RdvSend {
+    pub data: Vec<u8>,
+    pub req: Arc<ReqInner>,
+    pub env: Envelope,
+    pub dst_ep: EpAddr,
+}
+
+/// A matched-RTS receive parked until the payload arrives.
+pub struct RdvRecv {
+    pub dest: RecvDest,
+    pub req: Arc<ReqInner>,
+}
+
+/// Per-VCI matching state. All mutation happens under the VCI's
+/// critical-section discipline (or the stream serial context).
+#[derive(Default)]
+pub struct MatchState {
+    posted: VecDeque<PostedRecv>,
+    unexpected: VecDeque<UnexpectedMsg>,
+    rdv_sends: HashMap<u64, RdvSend>,
+    /// Keyed by (sender endpoint, sender-local rdv id): rdv ids are only
+    /// unique per sender, so the peer address disambiguates.
+    rdv_recvs: HashMap<(EpAddr, u64), RdvRecv>,
+    next_rdv_id: u64,
+}
+
+impl MatchState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Receive path: look for the first unexpected message matching
+    /// `pattern` (FIFO). The caller delivers/handles it.
+    pub fn take_unexpected(&mut self, pattern: &MatchPattern) -> Option<UnexpectedMsg> {
+        let idx = self.unexpected.iter().position(|m| pattern.matches(&m.env))?;
+        self.unexpected.remove(idx)
+    }
+
+    /// Receive path: no unexpected match — park the posted receive.
+    pub fn push_posted(&mut self, recv: PostedRecv) {
+        self.posted.push_back(recv);
+    }
+
+    /// Incoming path: find the first posted receive matching `env`,
+    /// *claiming* its request. Cancelled entries are purged lazily.
+    pub fn match_posted(&mut self, env: &Envelope) -> Option<PostedRecv> {
+        let mut i = 0;
+        while i < self.posted.len() {
+            let entry = &self.posted[i];
+            if entry.req.state() == CANCELLED {
+                self.posted.remove(i);
+                continue;
+            }
+            if entry.pattern.matches(env) {
+                if entry.req.try_claim() {
+                    return self.posted.remove(i);
+                }
+                // Lost the claim to a concurrent cancel; purge and go on.
+                self.posted.remove(i);
+                continue;
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// Incoming path: no posted match — park as unexpected.
+    pub fn push_unexpected(&mut self, msg: UnexpectedMsg) {
+        self.unexpected.push_back(msg);
+    }
+
+    /// Probe path: report the first matching unexpected message without
+    /// consuming it (`MPI_Iprobe`).
+    pub fn peek_unexpected(&self, pattern: &MatchPattern) -> Option<crate::mpi::status::Status> {
+        self.unexpected.iter().find(|m| pattern.matches(&m.env)).map(|m| {
+            let count = match &m.kind {
+                UnexpectedKind::Eager(d) => d.len(),
+                UnexpectedKind::Rts { size, .. } => *size,
+            };
+            crate::mpi::status::Status::new(m.env.src_rank, m.env.tag, count, m.env.src_idx)
+        })
+    }
+
+    /// Sender path: park a rendezvous send; returns its id.
+    pub fn park_rdv_send(&mut self, send: RdvSend) -> u64 {
+        let id = self.next_rdv_id;
+        self.next_rdv_id += 1;
+        self.rdv_sends.insert(id, send);
+        id
+    }
+
+    /// CTS arrived: release the parked rendezvous send.
+    pub fn take_rdv_send(&mut self, rdv_id: u64) -> Option<RdvSend> {
+        self.rdv_sends.remove(&rdv_id)
+    }
+
+    /// Receiver matched an RTS: park the destination until the payload.
+    pub fn park_rdv_recv(&mut self, sender: EpAddr, rdv_id: u64, recv: RdvRecv) {
+        self.rdv_recvs.insert((sender, rdv_id), recv);
+    }
+
+    /// Rendezvous payload arrived: release the parked destination.
+    pub fn take_rdv_recv(&mut self, sender: EpAddr, rdv_id: u64) -> Option<RdvRecv> {
+        self.rdv_recvs.remove(&(sender, rdv_id))
+    }
+
+    pub fn posted_len(&self) -> usize {
+        self.posted.len()
+    }
+
+    pub fn unexpected_len(&self) -> usize {
+        self.unexpected.len()
+    }
+
+    /// True if no operations are parked anywhere — used by
+    /// `MPIX_Stream_free` to decide whether deallocation may proceed.
+    pub fn is_quiescent(&self) -> bool {
+        self.posted.is_empty()
+            && self.unexpected.is_empty()
+            && self.rdv_sends.is_empty()
+            && self.rdv_recvs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::wire::NO_INDEX;
+    use crate::mpi::request::{ReqKind, Request};
+
+    fn env(ctx: u32, src: u32, tag: i32) -> Envelope {
+        Envelope { ctx_id: ctx, src_rank: src, tag, src_idx: NO_INDEX, dst_idx: NO_INDEX }
+    }
+
+    fn pat(ctx: u32, src: i32, tag: i32) -> MatchPattern {
+        MatchPattern { ctx_id: ctx, src, tag, src_idx: NO_INDEX, dst_idx: NO_INDEX }
+    }
+
+    fn posted(pattern: MatchPattern, buf: &mut [u8]) -> (PostedRecv, Request) {
+        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+        let dest = RecvDest::new(buf, Datatype::U8, buf.len()).unwrap();
+        (PostedRecv { pattern, dest, req: req.inner().clone() }, req)
+    }
+
+    #[test]
+    fn exact_match_rules() {
+        let p = pat(1, 2, 7);
+        assert!(p.matches(&env(1, 2, 7)));
+        assert!(!p.matches(&env(2, 2, 7)), "different context must not match");
+        assert!(!p.matches(&env(1, 3, 7)));
+        assert!(!p.matches(&env(1, 2, 8)));
+    }
+
+    #[test]
+    fn wildcard_match_rules() {
+        let p = pat(1, ANY_SOURCE, ANY_TAG);
+        assert!(p.matches(&env(1, 9, 123)));
+        assert!(!p.matches(&env(2, 9, 123)), "context is never wildcarded");
+        let p_idx = MatchPattern { ctx_id: 1, src: ANY_SOURCE, tag: 0, src_idx: ANY_INDEX, dst_idx: 2 };
+        let mut e = env(1, 0, 0);
+        e.src_idx = 5;
+        e.dst_idx = 2;
+        assert!(p_idx.matches(&e));
+        e.dst_idx = 3;
+        assert!(!p_idx.matches(&e), "dst_idx is always exact");
+    }
+
+    #[test]
+    fn matching_order_first_posted_wins() {
+        let mut st = MatchState::new();
+        let mut b1 = [0u8; 4];
+        let mut b2 = [0u8; 4];
+        let (p1, r1) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b1);
+        let (p2, r2) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b2);
+        st.push_posted(p1);
+        st.push_posted(p2);
+        let m = st.match_posted(&env(0, 0, 1)).expect("must match");
+        // First posted receive must be matched first.
+        assert!(Arc::ptr_eq(&m.req, r1.inner()));
+        let m2 = st.match_posted(&env(0, 0, 2)).unwrap();
+        assert!(Arc::ptr_eq(&m2.req, r2.inner()));
+        // Claimed requests must reach a terminal state before drop.
+        m.req.complete_ok(crate::mpi::status::Status::new(0, 1, 0, -1));
+        m2.req.complete_ok(crate::mpi::status::Status::new(0, 2, 0, -1));
+    }
+
+    #[test]
+    fn unexpected_fifo_order() {
+        let mut st = MatchState::new();
+        st.push_unexpected(UnexpectedMsg {
+            env: env(0, 1, 5),
+            reply_ep: EpAddr { rank: 1, ep: 0 },
+            kind: UnexpectedKind::Eager(vec![1]),
+        });
+        st.push_unexpected(UnexpectedMsg {
+            env: env(0, 1, 5),
+            reply_ep: EpAddr { rank: 1, ep: 0 },
+            kind: UnexpectedKind::Eager(vec![2]),
+        });
+        let p = pat(0, 1, 5);
+        let first = st.take_unexpected(&p).unwrap();
+        match first.kind {
+            UnexpectedKind::Eager(d) => assert_eq!(d, vec![1], "matching order violated"),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn cancelled_posted_entries_are_skipped() {
+        let mut st = MatchState::new();
+        let mut b1 = [0u8; 4];
+        let mut b2 = [0u8; 4];
+        let (p1, r1) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b1);
+        let (p2, r2) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b2);
+        st.push_posted(p1);
+        st.push_posted(p2);
+        assert!(r1.cancel());
+        let m = st.match_posted(&env(0, 0, 1)).unwrap();
+        assert!(Arc::ptr_eq(&m.req, r2.inner()), "cancelled entry must be skipped");
+        assert_eq!(st.posted_len(), 0, "cancelled entry must be purged");
+        m.req.complete_ok(crate::mpi::status::Status::new(0, 1, 0, -1));
+    }
+
+    #[test]
+    fn deliver_truncation_error() {
+        let mut buf = [0u8; 4];
+        let dest = RecvDest::new(&mut buf, Datatype::U8, 4).unwrap();
+        let e = env(0, 0, 0);
+        assert!(matches!(dest.deliver(&e, &[0u8; 8]), Err(MpiErr::Truncate { .. })));
+        // Shorter-than-posted is fine (MPI allows it).
+        let st = dest.deliver(&e, &[7u8, 8]).unwrap();
+        assert_eq!(st.count, 2);
+        assert_eq!(buf[0], 7);
+    }
+
+    #[test]
+    fn deliver_strided_unpack() {
+        let dt = Datatype::vector(2, 1, 2, Datatype::U8).unwrap();
+        let mut buf = [0u8; 3];
+        let dest = RecvDest::new(&mut buf, dt, 1).unwrap();
+        let st = dest.deliver(&env(0, 0, 0), &[0xAA, 0xBB]).unwrap();
+        assert_eq!(st.count, 2);
+        assert_eq!(buf, [0xAA, 0x00, 0xBB]);
+    }
+
+    #[test]
+    fn rdv_tables_roundtrip() {
+        let mut st = MatchState::new();
+        let req = Request::pending(ReqKind::Send, 0, u32::MAX, None);
+        let id = st.park_rdv_send(RdvSend {
+            data: vec![1, 2, 3],
+            req: req.inner().clone(),
+            env: env(0, 0, 0),
+            dst_ep: EpAddr { rank: 1, ep: 0 },
+        });
+        assert!(!st.is_quiescent());
+        let s = st.take_rdv_send(id).unwrap();
+        assert_eq!(s.data, vec![1, 2, 3]);
+        assert!(st.take_rdv_send(id).is_none());
+        assert!(st.is_quiescent());
+        // keep `req` alive until the end so cancel-on-drop doesn't matter
+        drop(req);
+    }
+
+    #[test]
+    fn quiescence_tracks_all_tables() {
+        let mut st = MatchState::new();
+        assert!(st.is_quiescent());
+        st.push_unexpected(UnexpectedMsg {
+            env: env(0, 0, 0),
+            reply_ep: EpAddr { rank: 0, ep: 0 },
+            kind: UnexpectedKind::Eager(vec![]),
+        });
+        assert!(!st.is_quiescent());
+        let _ = st.take_unexpected(&pat(0, ANY_SOURCE, ANY_TAG));
+        assert!(st.is_quiescent());
+    }
+}

@@ -1,0 +1,25 @@
+//! The MPI-like runtime substrate (the stand-in for MPICH).
+//!
+//! Submodules: [`datatype`] (types + pack/unpack + reduction ops),
+//! [`info`] (info objects + `MPIX_Info_set_hex`), [`matching`] (the tag
+//! matching engine), [`request`] (completion state machine), [`comm`]
+//! (communicators incl. stream comms), [`group`], [`world`] (the logical
+//! process launcher), [`pt2pt`] (eager/rendezvous send/recv + progress),
+//! [`collectives`], [`status`].
+
+pub mod collectives;
+pub mod comm;
+pub mod partitioned;
+pub mod persistent;
+pub mod probe;
+pub mod rma;
+pub mod datatype;
+pub mod group;
+pub mod info;
+pub mod matching;
+pub mod pt2pt;
+pub mod request;
+pub mod status;
+pub mod world;
+
+pub use matching::{ANY_SOURCE, ANY_TAG};

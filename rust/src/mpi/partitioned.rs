@@ -1,0 +1,341 @@
+//! MPI-4 partitioned communication (`MPI_Psend_init` / `MPI_Precv_init` /
+//! `MPI_Pready` / `MPI_Parrived`) — the §4.3 comparison baseline.
+//!
+//! "Partitioned communication has an explicit init stage where
+//! implementations can set up strategy and decide network endpoints
+//! mapping to partitions. The actual communications can be triggered by
+//! MPI_Pready calls, which can occur concurrently or out of order."
+//!
+//! Here the init stage maps partition `i` to implicit-pool VCI
+//! `i % implicit_pool` on both sides (the "better mapping than implicit
+//! static mapping" the paper concedes the init stage enables), and
+//! `MPI_Pready` is thread-safe — multiple worker threads may trigger
+//! their partitions concurrently, which is exactly the scenario the
+//! ablation bench compares against explicit MPIX streams.
+//!
+//! Partition traffic is disambiguated from plain point-to-point on the
+//! same communicator by carrying the partition number in the envelope's
+//! index fields (plain traffic uses `NO_INDEX`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{MpiErr, Result};
+use crate::fabric::addr::EpAddr;
+use crate::fabric::wire::Envelope;
+use crate::mpi::comm::Comm;
+use crate::mpi::datatype::Datatype;
+use crate::mpi::matching::{MatchPattern, RecvDest};
+use crate::mpi::pt2pt::{RxRoute, TxRoute};
+use crate::mpi::request::Request;
+use crate::mpi::world::Proc;
+
+struct PsendInner {
+    comm: Comm,
+    dst: u32,
+    tag: i32,
+    parts: usize,
+    part_len: usize,
+    ptr: *const u8,
+    ready: Vec<AtomicBool>,
+    reqs: Vec<Mutex<Option<Request>>>,
+}
+
+unsafe impl Send for PsendInner {}
+unsafe impl Sync for PsendInner {}
+
+/// A partitioned send. `pready` may be called concurrently from many
+/// threads; `pwait_send` completes the whole operation and re-arms it.
+#[derive(Clone)]
+pub struct PartitionedSend {
+    inner: Arc<PsendInner>,
+}
+
+/// A partitioned receive.
+pub struct PartitionedRecv {
+    parts: usize,
+    reqs: Vec<Option<Request>>,
+}
+
+impl PartitionedSend {
+    pub fn partitions(&self) -> usize {
+        self.inner.parts
+    }
+}
+
+impl PartitionedRecv {
+    pub fn partitions(&self) -> usize {
+        self.parts
+    }
+}
+
+impl Proc {
+    fn partition_route_tx(&self, comm: &Comm, dst: u32, tag: i32, part: usize) -> Result<TxRoute<'static>> {
+        comm.check_rank(dst)?;
+        let pool = self.config().implicit_pool;
+        let vci = (part % pool) as u16;
+        Ok(TxRoute {
+            src_vci: vci,
+            dst_ep: EpAddr { rank: comm.world_rank(dst)?, ep: vci },
+            env: Envelope {
+                ctx_id: comm.ctx_id(),
+                src_rank: comm.rank(),
+                tag,
+                src_idx: part as i32,
+                dst_idx: part as i32,
+            },
+            stream: None,
+        })
+    }
+
+    /// `MPI_Psend_init` (+ implicit `MPI_Start`): an armed partitioned
+    /// send over `buf`, split into `parts` equal partitions.
+    pub fn psend_init(
+        &self,
+        buf: &[u8],
+        parts: usize,
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<PartitionedSend> {
+        if parts == 0 || buf.len() % parts != 0 {
+            return Err(MpiErr::Arg(format!(
+                "buffer of {} bytes does not split into {parts} equal partitions",
+                buf.len()
+            )));
+        }
+        comm.check_rank(dst)?;
+        if tag < 0 {
+            return Err(MpiErr::Tag(tag));
+        }
+        Ok(PartitionedSend {
+            inner: Arc::new(PsendInner {
+                comm: comm.clone(),
+                dst,
+                tag,
+                parts,
+                part_len: buf.len() / parts,
+                ptr: buf.as_ptr(),
+                ready: (0..parts).map(|_| AtomicBool::new(false)).collect(),
+                reqs: (0..parts).map(|_| Mutex::new(None)).collect(),
+            }),
+        })
+    }
+
+    /// `MPI_Pready`: trigger partition `part`. Thread-safe; partitions may
+    /// be triggered out of order.
+    pub fn pready(&self, ps: &PartitionedSend, part: usize) -> Result<()> {
+        let inner = &ps.inner;
+        if part >= inner.parts {
+            return Err(MpiErr::Arg(format!("partition {part} out of range ({})", inner.parts)));
+        }
+        if inner.ready[part].swap(true, Ordering::AcqRel) {
+            return Err(MpiErr::Request(format!("partition {part} already marked ready")));
+        }
+        let data = unsafe {
+            std::slice::from_raw_parts(inner.ptr.add(part * inner.part_len), inner.part_len)
+        };
+        let route = self.partition_route_tx(&inner.comm, inner.dst, inner.tag, part)?;
+        let req = self.isend_wire(data.to_vec(), route)?;
+        *inner.reqs[part].lock().unwrap() = Some(req);
+        Ok(())
+    }
+
+    /// Complete all partitions (errors if some were never `pready`ed) and
+    /// re-arm the request for the next round.
+    pub fn pwait_send(&self, ps: &PartitionedSend) -> Result<()> {
+        let inner = &ps.inner;
+        for part in 0..inner.parts {
+            if !inner.ready[part].load(Ordering::Acquire) {
+                return Err(MpiErr::Request(format!(
+                    "pwait_send: partition {part} was never marked ready"
+                )));
+            }
+        }
+        for part in 0..inner.parts {
+            let req = inner.reqs[part].lock().unwrap().take();
+            if let Some(r) = req {
+                self.wait(r)?;
+            }
+            inner.ready[part].store(false, Ordering::Release);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Precv_init` (+ implicit start): posts one receive per
+    /// partition into equal slices of `buf`.
+    pub fn precv_init(
+        &self,
+        buf: &mut [u8],
+        parts: usize,
+        src: u32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<PartitionedRecv> {
+        if parts == 0 || buf.len() % parts != 0 {
+            return Err(MpiErr::Arg(format!(
+                "buffer of {} bytes does not split into {parts} equal partitions",
+                buf.len()
+            )));
+        }
+        comm.check_rank(src)?;
+        let part_len = buf.len() / parts;
+        let pool = self.config().implicit_pool;
+        let mut reqs = Vec::with_capacity(parts);
+        for part in 0..parts {
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut(buf.as_mut_ptr().add(part * part_len), part_len)
+            };
+            let dest = RecvDest::new(slice, Datatype::U8, part_len)?;
+            let route = RxRoute {
+                dst_vci: (part % pool) as u16,
+                pattern: MatchPattern {
+                    ctx_id: comm.ctx_id(),
+                    src: src as i32,
+                    tag,
+                    src_idx: part as i32,
+                    dst_idx: part as i32,
+                },
+                stream: None,
+            };
+            reqs.push(Some(self.irecv_dest(dest, route)?));
+        }
+        Ok(PartitionedRecv { parts, reqs })
+    }
+
+    /// `MPI_Parrived`: has partition `part` landed?
+    pub fn parrived(&self, pr: &PartitionedRecv, part: usize) -> Result<bool> {
+        let req = pr
+            .reqs
+            .get(part)
+            .ok_or_else(|| MpiErr::Arg(format!("partition {part} out of range")))?
+            .as_ref()
+            .ok_or_else(|| MpiErr::Request("partition already waited".into()))?;
+        Ok(self.test(req)?.is_some())
+    }
+
+    /// Complete every partition of the receive.
+    pub fn pwait_recv(&self, pr: &mut PartitionedRecv) -> Result<()> {
+        for slot in pr.reqs.iter_mut() {
+            if let Some(r) = slot.take() {
+                self.wait(r)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn partitioned_roundtrip_out_of_order_pready() {
+        let cfg = Config { implicit_pool: 4, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            const PARTS: usize = 8;
+            const PLEN: usize = 64;
+            if p.rank() == 0 {
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i / PLEN) as u8).collect();
+                let ps = p.psend_init(&buf, PARTS, 1, 2, p.world_comm())?;
+                // Trigger out of order (the §4.3 semantics).
+                for part in [5, 0, 7, 2, 1, 6, 3, 4] {
+                    p.pready(&ps, part)?;
+                }
+                p.pwait_send(&ps)?;
+            } else {
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 2, p.world_comm())?;
+                p.pwait_recv(&mut pr)?;
+                for part in 0..PARTS {
+                    assert!(buf[part * PLEN..(part + 1) * PLEN].iter().all(|&b| b == part as u8));
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn concurrent_pready_from_threads() {
+        // The Finepoints pattern: N compute threads each trigger their own
+        // partition of one message.
+        let cfg = Config { implicit_pool: 4, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            const PARTS: usize = 4;
+            const PLEN: usize = 128;
+            if p.rank() == 0 {
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i % 251) as u8).collect();
+                let ps = p.psend_init(&buf, PARTS, 1, 0, p.world_comm())?;
+                std::thread::scope(|s| {
+                    for part in 0..PARTS {
+                        let p = p.clone();
+                        let ps = ps.clone();
+                        s.spawn(move || p.pready(&ps, part).unwrap());
+                    }
+                });
+                p.pwait_send(&ps)?;
+            } else {
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 0, p.world_comm())?;
+                // parrived polling until everything lands.
+                let mut all = false;
+                while !all {
+                    all = (0..PARTS).all(|i| p.parrived(&pr, i).unwrap_or(false));
+                }
+                p.pwait_recv(&mut pr)?;
+                assert!(buf.iter().enumerate().all(|(i, &b)| b == (i % 251) as u8));
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn partitioned_restartable_and_validated() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            const PARTS: usize = 2;
+            if p.rank() == 0 {
+                let buf = vec![0u8; 16];
+                let ps = p.psend_init(&buf, PARTS, 1, 1, p.world_comm())?;
+                // double pready is an error
+                p.pready(&ps, 0)?;
+                assert!(matches!(p.pready(&ps, 0), Err(MpiErr::Request(_))));
+                // waiting before all partitions ready is an error
+                assert!(matches!(p.pwait_send(&ps), Err(MpiErr::Request(_))));
+                p.pready(&ps, 1)?;
+                p.pwait_send(&ps)?;
+                // restart for a second round
+                p.pready(&ps, 1)?;
+                p.pready(&ps, 0)?;
+                p.pwait_send(&ps)?;
+                // out-of-range partition
+                assert!(p.pready(&ps, 9).is_err());
+            } else {
+                for _round in 0..2 {
+                    let mut buf = vec![0u8; 16];
+                    let mut pr = p.precv_init(&mut buf, PARTS, 0, 1, p.world_comm())?;
+                    p.pwait_recv(&mut pr)?;
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn init_validation() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let buf = [0u8; 10];
+        assert!(p.psend_init(&buf, 3, 0, 0, p.world_comm()).is_err(), "uneven split");
+        assert!(p.psend_init(&buf, 0, 0, 0, p.world_comm()).is_err(), "zero partitions");
+        let mut rbuf = [0u8; 10];
+        assert!(p.precv_init(&mut rbuf, 4, 0, 0, p.world_comm()).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Persistent point-to-point requests (`MPI_Send_init` / `MPI_Recv_init` /
+//! `MPI_Start`).
+//!
+//! §5.1 of the paper: "Point-to-point functions and collective functions,
+//! including nonblocking and persistent variations, are fully
+//! stream-aware" — a persistent request created on a stream communicator
+//! routes through the stream's endpoint on every restart.
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::Comm;
+use crate::mpi::datatype::Datatype;
+use crate::mpi::matching::RecvDest;
+use crate::mpi::request::{ReqKind, Request};
+use crate::mpi::status::Status;
+use crate::mpi::world::Proc;
+
+/// A persistent operation: captured arguments plus the currently active
+/// incarnation.
+pub struct Persistent {
+    kind: ReqKind,
+    /// Captured user buffer. For sends the bytes are *read* at each
+    /// `start`; for receives they are *written* at each completion. The
+    /// buffer must outlive the persistent request (enforced by the
+    /// lifetime-erased pointer contract, same as `irecv`).
+    ptr: *mut u8,
+    len: usize,
+    dt: Datatype,
+    count: usize,
+    peer: i32,
+    tag: i32,
+    comm: Comm,
+    active: Option<Request>,
+}
+
+unsafe impl Send for Persistent {}
+
+impl Persistent {
+    pub fn is_active(&self) -> bool {
+        self.active.is_some()
+    }
+
+    pub fn kind(&self) -> ReqKind {
+        self.kind
+    }
+}
+
+impl Proc {
+    /// `MPI_Send_init`: create an inactive persistent send.
+    pub fn send_init(
+        &self,
+        buf: &[u8],
+        dt: &Datatype,
+        count: usize,
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<Persistent> {
+        comm.check_rank(dst)?;
+        if tag < 0 {
+            return Err(MpiErr::Tag(tag));
+        }
+        if buf.len() < dt.min_buffer_len(count) {
+            return Err(MpiErr::Arg("send_init buffer too small for datatype/count".into()));
+        }
+        Ok(Persistent {
+            kind: ReqKind::Send,
+            ptr: buf.as_ptr() as *mut u8,
+            len: buf.len(),
+            dt: dt.clone(),
+            count,
+            peer: dst as i32,
+            tag,
+            comm: comm.clone(),
+            active: None,
+        })
+    }
+
+    /// `MPI_Recv_init`: create an inactive persistent receive.
+    pub fn recv_init(
+        &self,
+        buf: &mut [u8],
+        dt: &Datatype,
+        count: usize,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<Persistent> {
+        if buf.len() < dt.min_buffer_len(count) {
+            return Err(MpiErr::Arg("recv_init buffer too small for datatype/count".into()));
+        }
+        Ok(Persistent {
+            kind: ReqKind::Recv,
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+            dt: dt.clone(),
+            count,
+            peer: src,
+            tag,
+            comm: comm.clone(),
+            active: None,
+        })
+    }
+
+    /// `MPI_Start`: activate a persistent request. Errors if already
+    /// active.
+    pub fn start(&self, pr: &mut Persistent) -> Result<()> {
+        if pr.active.is_some() {
+            return Err(MpiErr::Request("MPI_Start on an already-active persistent request".into()));
+        }
+        let req = match pr.kind {
+            ReqKind::Send => {
+                let buf = unsafe { std::slice::from_raw_parts(pr.ptr, pr.len) };
+                self.isend_dt(buf, &pr.dt, pr.count, pr.peer as u32, pr.tag, &pr.comm)?
+            }
+            ReqKind::Recv => {
+                let buf = unsafe { std::slice::from_raw_parts_mut(pr.ptr, pr.len) };
+                let dest = RecvDest::new(buf, pr.dt.clone(), pr.count)?;
+                let route = self.route_rx(&pr.comm, pr.peer, pr.tag, pr.comm.ctx_id(), None)?;
+                self.irecv_dest(dest, route)?
+            }
+        };
+        pr.active = Some(req);
+        Ok(())
+    }
+
+    /// Wait for the active incarnation; the request returns to the
+    /// inactive state and can be `start`ed again.
+    pub fn wait_persistent(&self, pr: &mut Persistent) -> Result<Status> {
+        let req = pr
+            .active
+            .take()
+            .ok_or_else(|| MpiErr::Request("wait on an inactive persistent request".into()))?;
+        self.wait(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn persistent_roundtrips_restartable() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            const ROUNDS: u32 = 10;
+            if p.rank() == 0 {
+                let mut buf = [0u8; 4];
+                let mut ps =
+                    p.send_init(&buf, &Datatype::U8, 4, 1, 3, p.world_comm())?;
+                for round in 0..ROUNDS {
+                    buf.copy_from_slice(&round.to_le_bytes());
+                    p.start(&mut ps)?;
+                    p.wait_persistent(&mut ps)?;
+                }
+            } else {
+                let mut buf = [0u8; 4];
+                let mut pr = p.recv_init(&mut buf, &Datatype::U8, 4, 0, 3, p.world_comm())?;
+                for round in 0..ROUNDS {
+                    p.start(&mut pr)?;
+                    let st = p.wait_persistent(&mut pr)?;
+                    assert_eq!(st.count, 4);
+                    assert_eq!(u32::from_le_bytes(buf), round, "stale persistent buffer");
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn persistent_on_stream_comm_is_stream_aware() {
+        let cfg = Config { explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            if p.rank() == 0 {
+                let buf = *b"pp";
+                let mut ps = p.send_init(&buf, &Datatype::U8, 2, 1, 0, &c)?;
+                p.start(&mut ps)?;
+                p.wait_persistent(&mut ps)?;
+            } else {
+                let mut buf = [0u8; 2];
+                let mut pr = p.recv_init(&mut buf, &Datatype::U8, 2, 0, 0, &c)?;
+                p.start(&mut pr)?;
+                p.wait_persistent(&mut pr)?;
+                assert_eq!(&buf, b"pp");
+                // The receive really went through the stream's VCI.
+                assert_eq!(
+                    p.vci(s.vci_idx()).ep().stats().rx_packets.load(std::sync::atomic::Ordering::Relaxed),
+                    1
+                );
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn start_misuse_detected() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let buf = [0u8; 2];
+        let mut ps = p.send_init(&buf, &Datatype::U8, 2, 0, 0, p.world_comm()).unwrap();
+        assert!(!ps.is_active());
+        p.start(&mut ps).unwrap();
+        assert!(matches!(p.start(&mut ps), Err(MpiErr::Request(_))), "double start");
+        // Drain the self message.
+        let mut b = [0u8; 2];
+        p.recv(&mut b, 0, 0, p.world_comm()).unwrap();
+        p.wait_persistent(&mut ps).unwrap();
+        assert!(matches!(p.wait_persistent(&mut ps), Err(MpiErr::Request(_))), "wait inactive");
+    }
+
+    #[test]
+    fn init_validates_arguments() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let buf = [0u8; 2];
+        assert!(p.send_init(&buf, &Datatype::U8, 8, 0, 0, p.world_comm()).is_err());
+        assert!(p.send_init(&buf, &Datatype::U8, 2, 5, 0, p.world_comm()).is_err());
+        assert!(p.send_init(&buf, &Datatype::U8, 2, 0, -1, p.world_comm()).is_err());
+    }
+}

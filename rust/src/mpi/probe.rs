@@ -1,0 +1,105 @@
+//! `MPI_Probe` / `MPI_Iprobe`: peek at the unexpected queue without
+//! consuming the message.
+
+use crate::error::Result;
+use crate::mpi::comm::Comm;
+use crate::mpi::matching::MatchPattern;
+use crate::mpi::status::Status;
+use crate::mpi::world::Proc;
+use crate::fabric::wire::NO_INDEX;
+
+impl Proc {
+    /// `MPI_Iprobe`: progress once, then report the first matching
+    /// unexpected message (if any) without removing it.
+    pub fn iprobe(&self, src: i32, tag: i32, comm: &Comm) -> Result<Option<Status>> {
+        let route = self.route_rx(comm, src, tag, comm.ctx_id(), None)?;
+        let vci = self.vci(route.dst_vci);
+        let cs = self.session_for_vci(route.dst_vci);
+        self.progress_vci(vci, &cs);
+        Ok(vci.with_state(&cs, |st| st.peek_unexpected(&route.pattern)))
+    }
+
+    /// `MPI_Probe`: block until a matching message is available.
+    pub fn probe(&self, src: i32, tag: i32, comm: &Comm) -> Result<Status> {
+        loop {
+            if let Some(st) = self.iprobe(src, tag, comm)? {
+                return Ok(st);
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Peek at a multiplex stream comm (indexed probe) — wildcard
+    /// `src_idx` via [`crate::stream::ANY_INDEX`].
+    pub fn stream_iprobe(
+        &self,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<Option<Status>> {
+        let route = self.route_rx(comm, src, tag, comm.ctx_id(), Some((src_idx, dst_idx)))?;
+        let vci = self.vci(route.dst_vci);
+        let cs = self.session_for_vci(route.dst_vci);
+        self.progress_vci(vci, &cs);
+        Ok(vci.with_state(&cs, |st| st.peek_unexpected(&route.pattern)))
+    }
+
+    /// Internal helper shared with tests: build a probe pattern.
+    #[doc(hidden)]
+    pub fn probe_pattern(&self, comm: &Comm, src: i32, tag: i32) -> MatchPattern {
+        MatchPattern { ctx_id: comm.ctx_id(), src, tag, src_idx: NO_INDEX, dst_idx: NO_INDEX }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::mpi::world::World;
+    use crate::mpi::{ANY_SOURCE, ANY_TAG};
+
+    #[test]
+    fn iprobe_sees_without_consuming() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                p.send(&[1, 2, 3], 1, 9, p.world_comm())?;
+            } else {
+                // Blocking probe until it arrives.
+                let st = p.probe(0, 9, p.world_comm())?;
+                assert_eq!(st.count, 3);
+                assert_eq!(st.source, 0);
+                assert_eq!(st.tag, 9);
+                // Probing again still sees it (not consumed).
+                let again = p.iprobe(ANY_SOURCE, ANY_TAG, p.world_comm())?;
+                assert!(again.is_some());
+                // Size the receive from the probe, as MPI intends.
+                let mut buf = vec![0u8; st.count];
+                p.recv(&mut buf, 0, 9, p.world_comm())?;
+                assert_eq!(buf, vec![1, 2, 3]);
+                // Now gone.
+                assert!(p.iprobe(ANY_SOURCE, ANY_TAG, p.world_comm())?.is_none());
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn iprobe_respects_pattern() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                p.send(&[7], 1, 5, p.world_comm())?;
+            } else {
+                let st = p.probe(0, 5, p.world_comm())?;
+                assert_eq!(st.tag, 5);
+                assert!(p.iprobe(0, 6, p.world_comm())?.is_none(), "wrong tag must not match");
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 5, p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,543 @@
+//! Point-to-point communication and the progress engine.
+//!
+//! The send path implements the classic eager / rendezvous split:
+//! payloads up to `Config::eager_threshold` travel inline (the send
+//! completes locally as soon as the packet is in the peer's ring); larger
+//! payloads announce themselves with an RTS, park on the sender's VCI and
+//! ship only after the receiver matches and replies CTS.
+//!
+//! Every step runs under the critical-section discipline of the VCI it
+//! touches ([`crate::vci::lock::CsSession`]):
+//!
+//! * `Global` — the whole MPI call holds the process mutex (yielding
+//!   inside blocking loops),
+//! * `PerVci` — each sub-step (endpoint tx/drain, matching state) takes
+//!   its own fine-grained lock,
+//! * `LockFree` — no locks; the VCI belongs to one serial MPIX stream.
+//!
+//! The lock-ops anatomy per mode is exactly what
+//! `benches/ablations.rs` measures and what `sim/` replays to regenerate
+//! the paper's Figure 3.
+
+use std::sync::Arc;
+
+use crate::error::{MpiErr, Result};
+use crate::fabric::addr::EpAddr;
+use crate::fabric::wire::{Envelope, Packet, PacketKind, NO_INDEX};
+use crate::mpi::comm::{Comm, CommKind};
+use crate::mpi::datatype::Datatype;
+use crate::mpi::matching::{
+    MatchPattern, PostedRecv, RdvRecv, RdvSend, RecvDest, UnexpectedKind, UnexpectedMsg, ANY_SOURCE,
+};
+use crate::mpi::request::{ReqKind, Request};
+use crate::mpi::status::Status;
+use crate::mpi::world::Proc;
+use crate::vci::hashing::{pick_vci, Side};
+use crate::vci::lock::CsSession;
+use crate::vci::Vci;
+
+/// Resolved send route. Borrows the communicator's stream attachment —
+/// the hot path must not touch Arc refcounts (§5.3: "even uncontended
+/// atomics hurt performance in these microbenchmarks").
+pub(crate) struct TxRoute<'c> {
+    pub src_vci: u16,
+    pub dst_ep: EpAddr,
+    pub env: Envelope,
+    /// Stream context (pending-op accounting), if the comm has one.
+    pub stream: Option<&'c crate::stream::stream::StreamInner>,
+}
+
+/// Resolved receive route.
+pub(crate) struct RxRoute<'c> {
+    pub dst_vci: u16,
+    pub pattern: MatchPattern,
+    pub stream: Option<&'c crate::stream::stream::StreamInner>,
+}
+
+impl Proc {
+    // ------------------------------------------------------------------
+    // Routing
+    // ------------------------------------------------------------------
+
+    pub(crate) fn route_tx<'c>(
+        &self,
+        comm: &'c Comm,
+        dst: u32,
+        tag: i32,
+        ctx: u32,
+        idx: Option<(i32, i32)>,
+    ) -> Result<TxRoute<'c>> {
+        comm.check_rank(dst)?;
+        if tag < 0 {
+            return Err(MpiErr::Tag(tag));
+        }
+        let pool = self.config().implicit_pool;
+        let policy = self.config().hash_policy;
+        let (src_vci, dst_vci, stream, (src_idx, dst_idx)) = match comm.kind() {
+            CommKind::Regular => {
+                let s = pick_vci(policy, comm.ctx_id(), pool, Side::Tx, self.rr());
+                let d = pick_vci(policy, comm.ctx_id(), pool, Side::Rx, self.rr());
+                (s, d, None, (NO_INDEX, NO_INDEX))
+            }
+            CommKind::Stream { local, remote_vcis } => {
+                let s = match local {
+                    Some(st) => st.vci_idx(),
+                    None => pick_vci(policy, comm.ctx_id(), pool, Side::Tx, self.rr()),
+                };
+                let d = remote_vcis[dst as usize];
+                (s, d, local.as_deref(), (NO_INDEX, NO_INDEX))
+            }
+            CommKind::Multiplex { locals, .. } => {
+                let (si, di) = idx.ok_or_else(|| {
+                    MpiErr::Comm(
+                        "multiplex stream communicator requires MPIX_Stream_send/recv (indexed APIs)".into(),
+                    )
+                })?;
+                let local = locals.get(si as usize).ok_or_else(|| {
+                    MpiErr::Arg(format!("src_idx {si} out of range ({} local streams)", locals.len()))
+                })?;
+                let d = comm.remote_vci_at(dst, di as usize)?;
+                (local.vci_idx(), d, Some(&**local), (si, di))
+            }
+        };
+        let world_dst = comm.world_rank(dst)?;
+        Ok(TxRoute {
+            src_vci,
+            dst_ep: EpAddr { rank: world_dst, ep: dst_vci },
+            env: Envelope { ctx_id: ctx, src_rank: comm.rank(), tag, src_idx, dst_idx },
+            stream,
+        })
+    }
+
+    pub(crate) fn route_rx<'c>(
+        &self,
+        comm: &'c Comm,
+        src: i32,
+        tag: i32,
+        ctx: u32,
+        idx: Option<(i32, i32)>,
+    ) -> Result<RxRoute<'c>> {
+        if src != ANY_SOURCE {
+            comm.check_rank(src as u32)?;
+        }
+        let pool = self.config().implicit_pool;
+        let policy = self.config().hash_policy;
+        let (dst_vci, stream, (src_idx, dst_idx)) = match comm.kind() {
+            CommKind::Regular => {
+                (pick_vci(policy, comm.ctx_id(), pool, Side::Rx, self.rr()), None, (NO_INDEX, NO_INDEX))
+            }
+            CommKind::Stream { local, .. } => {
+                let d = match local {
+                    Some(st) => st.vci_idx(),
+                    None => pick_vci(policy, comm.ctx_id(), pool, Side::Rx, self.rr()),
+                };
+                (d, local.as_deref(), (NO_INDEX, NO_INDEX))
+            }
+            CommKind::Multiplex { locals, .. } => {
+                let (si, di) = idx.ok_or_else(|| {
+                    MpiErr::Comm(
+                        "multiplex stream communicator requires MPIX_Stream_send/recv (indexed APIs)".into(),
+                    )
+                })?;
+                let local = locals.get(di as usize).ok_or_else(|| {
+                    MpiErr::Arg(format!("dst_idx {di} out of range ({} local streams)", locals.len()))
+                })?;
+                (local.vci_idx(), Some(&**local), (si, di))
+            }
+        };
+        Ok(RxRoute {
+            dst_vci,
+            pattern: MatchPattern { ctx_id: ctx, src, tag, src_idx, dst_idx },
+            stream,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Send
+    // ------------------------------------------------------------------
+
+    /// Nonblocking byte send (`MPI_Isend` with `MPI_BYTE`).
+    pub fn isend(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<Request> {
+        self.isend_dt(buf, &Datatype::U8, buf.len(), dst, tag, comm)
+    }
+
+    /// Nonblocking typed send. The payload is packed (derived datatypes
+    /// gather strided data) and owned by the runtime, so the request does
+    /// not borrow `buf`.
+    pub fn isend_dt(
+        &self,
+        buf: &[u8],
+        dt: &Datatype,
+        count: usize,
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<Request> {
+        let wire = dt.pack(buf, count)?;
+        let route = self.route_tx(comm, dst, tag, comm.ctx_id(), None)?;
+        self.isend_wire(wire, route)
+    }
+
+    /// Blocking byte send.
+    pub fn send(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let r = self.isend(buf, dst, tag, comm)?;
+        self.wait(r)?;
+        Ok(())
+    }
+
+    /// Blocking typed send.
+    pub fn send_dt(&self, buf: &[u8], dt: &Datatype, count: usize, dst: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let r = self.isend_dt(buf, dt, count, dst, tag, comm)?;
+        self.wait(r)?;
+        Ok(())
+    }
+
+    /// Core send over a resolved route (also used by the stream and
+    /// enqueue layers).
+    pub(crate) fn isend_wire(&self, wire: Vec<u8>, route: TxRoute<'_>) -> Result<Request> {
+        let vci = self.vci(route.src_vci);
+        let cs = self.session_for_vci(route.src_vci);
+        let len = wire.len();
+        let stream_id = route.stream.map_or(u32::MAX, |s| s.id());
+        if len <= self.config().eager_threshold {
+            let packet = Packet::eager(route.env, vci.addr(), wire);
+            self.transmit_retry(vci, &cs, route.dst_ep, packet)?;
+            // Eager sends complete locally; `source` holds the peer rank.
+            Ok(Request::completed_on_stream(
+                ReqKind::Send,
+                route.src_vci,
+                stream_id,
+                Status::new(route.env.src_rank, route.env.tag, len, route.env.src_idx),
+            ))
+        } else {
+            let ctr = route.stream.map(|s| s.pending_ctr().clone());
+            let req = Request::pending(ReqKind::Send, route.src_vci, stream_id, ctr);
+            let rdv_id = vci.with_state(&cs, |st| {
+                st.park_rdv_send(RdvSend {
+                    data: wire,
+                    req: req.inner().clone(),
+                    env: route.env,
+                    dst_ep: route.dst_ep,
+                })
+            });
+            let rts = Packet::rts(route.env, vci.addr(), rdv_id, len);
+            self.transmit_retry(vci, &cs, route.dst_ep, rts)?;
+            Ok(req)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Receive
+    // ------------------------------------------------------------------
+
+    /// Nonblocking byte receive. `src` may be [`ANY_SOURCE`], `tag` may be
+    /// [`crate::mpi::matching::ANY_TAG`].
+    pub fn irecv(&self, buf: &mut [u8], src: i32, tag: i32, comm: &Comm) -> Result<Request> {
+        let dest = RecvDest::new(buf, Datatype::U8, buf.len())?;
+        let route = self.route_rx(comm, src, tag, comm.ctx_id(), None)?;
+        self.irecv_dest(dest, route)
+    }
+
+    /// Nonblocking typed receive.
+    pub fn irecv_dt(
+        &self,
+        buf: &mut [u8],
+        dt: &Datatype,
+        count: usize,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<Request> {
+        let dest = RecvDest::new(buf, dt.clone(), count)?;
+        let route = self.route_rx(comm, src, tag, comm.ctx_id(), None)?;
+        self.irecv_dest(dest, route)
+    }
+
+    /// Blocking byte receive.
+    pub fn recv(&self, buf: &mut [u8], src: i32, tag: i32, comm: &Comm) -> Result<Status> {
+        let r = self.irecv(buf, src, tag, comm)?;
+        self.wait(r)
+    }
+
+    /// `MPI_Sendrecv`: simultaneous send and receive (deadlock-free —
+    /// the receive is posted before the send).
+    pub fn sendrecv(
+        &self,
+        sbuf: &[u8],
+        dst: u32,
+        stag: i32,
+        rbuf: &mut [u8],
+        src: i32,
+        rtag: i32,
+        comm: &Comm,
+    ) -> Result<Status> {
+        let rreq = self.irecv(rbuf, src, rtag, comm)?;
+        let sreq = self.isend(sbuf, dst, stag, comm)?;
+        self.wait(sreq)?;
+        self.wait(rreq)
+    }
+
+    /// Blocking typed receive.
+    pub fn recv_dt(
+        &self,
+        buf: &mut [u8],
+        dt: &Datatype,
+        count: usize,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<Status> {
+        let r = self.irecv_dt(buf, dt, count, src, tag, comm)?;
+        self.wait(r)
+    }
+
+    /// Core receive over a resolved route.
+    pub(crate) fn irecv_dest(&self, dest: RecvDest, route: RxRoute<'_>) -> Result<Request> {
+        let vci = self.vci(route.dst_vci);
+        let cs = self.session_for_vci(route.dst_vci);
+        let (stream_id, ctr) = match route.stream {
+            Some(s) => (s.id(), Some(s.pending_ctr().clone())),
+            None => (u32::MAX, None),
+        };
+        let req = Request::pending(ReqKind::Recv, route.dst_vci, stream_id, ctr);
+
+        // MPI requires checking the unexpected queue before posting.
+        let unexpected = vci.with_state(&cs, |st| st.take_unexpected(&route.pattern));
+        match unexpected {
+            Some(UnexpectedMsg { env, kind: UnexpectedKind::Eager(data), .. }) => {
+                let claimed = req.inner().try_claim();
+                debug_assert!(claimed);
+                match dest.deliver(&env, &data) {
+                    Ok(st) => req.inner().complete_ok(st),
+                    Err(e) => req.inner().complete_err(e),
+                }
+            }
+            Some(UnexpectedMsg { env, reply_ep, kind: UnexpectedKind::Rts { rdv_id, .. } }) => {
+                let claimed = req.inner().try_claim();
+                debug_assert!(claimed);
+                vci.with_state(&cs, |st| {
+                    st.park_rdv_recv(reply_ep, rdv_id, RdvRecv { dest, req: req.inner().clone() })
+                });
+                let cts = Packet::cts(env, vci.addr(), rdv_id);
+                self.transmit_retry(vci, &cs, reply_ep, cts)?;
+            }
+            None => {
+                vci.with_state(&cs, |st| {
+                    st.push_posted(PostedRecv { pattern: route.pattern, dest, req: req.inner().clone() })
+                });
+            }
+        }
+        Ok(req)
+    }
+
+    // ------------------------------------------------------------------
+    // Completion
+    // ------------------------------------------------------------------
+
+    /// Wait for a request, driving the progress of its VCI.
+    ///
+    /// Blocking waits also run *global progress* over the implicit pool
+    /// once per spin-budget exhaustion (as MPICH's progress engine does):
+    /// traffic that nobody is explicitly waiting on — RMA targets,
+    /// unexpected floods on other VCIs — must still drain, or two ranks
+    /// blocked in unrelated calls can deadlock. Stream (explicit-pool)
+    /// VCIs are *never* poked from here, preserving their serial-context
+    /// lock elision.
+    pub fn wait(&self, req: Request) -> Result<Status> {
+        if req.is_complete() {
+            return req.into_result();
+        }
+        let vci = self.vci(req.vci());
+        let cs = self.session_for_vci(req.vci());
+        let spin_budget = self.config().spin_before_yield;
+        let waiting_implicit = (req.vci() as usize) < self.config().implicit_pool;
+        let mut spins = 0u32;
+        while !req.is_complete() {
+            self.progress_vci(vci, &cs);
+            if req.is_complete() {
+                break;
+            }
+            spins += 1;
+            if spins >= spin_budget {
+                spins = 0;
+                if waiting_implicit {
+                    // Same lock domain: reuse the session.
+                    self.progress_implicit_pool(&cs);
+                } else {
+                    // Stream wait: open a separate implicit-pool session
+                    // (the stream session holds no locks, so no
+                    // re-entrancy).
+                    let cs2 = self.session_for_implicit();
+                    self.progress_implicit_pool(&cs2);
+                }
+                cs.yield_cs();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        req.into_result()
+    }
+
+    /// Progress every implicit-pool VCI under `cs` (which must cover the
+    /// implicit pool's lock domain).
+    pub(crate) fn progress_implicit_pool(&self, cs: &CsSession<'_>) {
+        for i in 0..self.config().implicit_pool {
+            self.progress_vci(self.vci(i as u16), cs);
+        }
+    }
+
+    /// Wait for all requests (in order; each wait progresses the VCI that
+    /// will complete it).
+    pub fn waitall(&self, reqs: Vec<Request>) -> Result<Vec<Status>> {
+        reqs.into_iter().map(|r| self.wait(r)).collect()
+    }
+
+    /// Nonblocking completion test: progresses once, then checks.
+    pub fn test(&self, req: &Request) -> Result<Option<Status>> {
+        if !req.is_complete() {
+            let vci = self.vci(req.vci());
+            let cs = self.session_for_vci(req.vci());
+            self.progress_vci(vci, &cs);
+        }
+        if req.is_complete() {
+            req.inner().take_result().map(Some)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Drive progress on every VCI once (useful for polling loops and
+    /// shutdown drains).
+    pub fn poke(&self) {
+        for idx in 0..self.vci_count() {
+            let vci = self.vci(idx as u16);
+            let cs = self.session_for_vci(idx as u16);
+            self.progress_vci(vci, &cs);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Progress engine
+    // ------------------------------------------------------------------
+
+    /// Drain up to a batch of packets from the VCI's endpoint and run the
+    /// matching protocol for each.
+    pub(crate) fn progress_vci(&self, vci: &Arc<Vci>, cs: &CsSession<'_>) {
+        const BATCH: usize = 64;
+        for _ in 0..BATCH {
+            let pkt = {
+                let _ep = vci.ep_access(cs);
+                vci.ep().poll()
+            };
+            let Some(pkt) = pkt else { break };
+            self.dispatch(vci, cs, pkt);
+        }
+    }
+
+    fn dispatch(&self, vci: &Arc<Vci>, cs: &CsSession<'_>, pkt: Packet) {
+        // RMA traffic bypasses the matching engine (§5.1 one-sided path).
+        if pkt.env.ctx_id & crate::mpi::rma::RMA_CTX_BIT != 0 {
+            crate::mpi::rma::handle_rma_packet(self, vci, cs, pkt);
+            return;
+        }
+        let Packet { env, kind, reply_ep } = pkt;
+        match kind {
+            PacketKind::Eager { data } => {
+                vci.with_state(cs, |st| match st.match_posted(&env) {
+                    Some(posted) => match posted.dest.deliver(&env, &data) {
+                        Ok(status) => posted.req.complete_ok(status),
+                        Err(e) => posted.req.complete_err(e),
+                    },
+                    None => st.push_unexpected(UnexpectedMsg {
+                        env,
+                        reply_ep,
+                        kind: UnexpectedKind::Eager(data),
+                    }),
+                });
+            }
+            PacketKind::Rts { rdv_id, size } => {
+                // Match inside the state lock; send CTS outside it.
+                let cts_needed = vci.with_state(cs, |st| match st.match_posted(&env) {
+                    Some(posted) => {
+                        st.park_rdv_recv(reply_ep, rdv_id, RdvRecv { dest: posted.dest, req: posted.req });
+                        true
+                    }
+                    None => {
+                        st.push_unexpected(UnexpectedMsg {
+                            env,
+                            reply_ep,
+                            kind: UnexpectedKind::Rts { rdv_id, size },
+                        });
+                        false
+                    }
+                });
+                if cts_needed {
+                    let cts = Packet::cts(env, vci.addr(), rdv_id);
+                    // Infallible in practice; drop the message on a
+                    // persistently full peer ring (failure injection).
+                    let _ = self.transmit_retry(vci, cs, reply_ep, cts);
+                }
+            }
+            PacketKind::Cts { rdv_id } => {
+                let parked = vci.with_state(cs, |st| st.take_rdv_send(rdv_id));
+                if let Some(send) = parked {
+                    let status = Status::new(send.env.src_rank, send.env.tag, send.data.len(), send.env.src_idx);
+                    let data_pkt = Packet::rdv_data(send.env, vci.addr(), rdv_id, send.data);
+                    let _ = self.transmit_retry(vci, cs, send.dst_ep, data_pkt);
+                    // Complete even if the user cancelled meanwhile: a
+                    // matched rendezvous send is past the point of
+                    // cancellation (as in MPI).
+                    if send.req.try_claim() {
+                        send.req.complete_ok(status);
+                    }
+                }
+            }
+            PacketKind::RdvData { rdv_id, data } => {
+                vci.with_state(cs, |st| {
+                    if let Some(recv) = st.take_rdv_recv(reply_ep, rdv_id) {
+                        match recv.dest.deliver(&env, &data) {
+                            Ok(status) => recv.req.complete_ok(status),
+                            Err(e) => recv.req.complete_err(e),
+                        }
+                    }
+                    // else: receive side vanished (cancelled + freed) —
+                    // drop the payload.
+                });
+            }
+        }
+    }
+
+    /// Transmit with bounded backpressure handling: on a full peer ring,
+    /// progress our own VCI (draining CTS/data that may unblock the peer)
+    /// and retry.
+    pub(crate) fn transmit_retry(
+        &self,
+        vci: &Arc<Vci>,
+        cs: &CsSession<'_>,
+        dst: EpAddr,
+        packet: Packet,
+    ) -> Result<()> {
+        let mut packet = packet;
+        let mut attempts = 0u64;
+        loop {
+            let res = {
+                let _ep = vci.ep_access(cs);
+                self.fabric().transmit(vci.addr(), dst, packet)
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(p) => {
+                    packet = p;
+                    attempts += 1;
+                    if attempts > 10_000_000 {
+                        return Err(MpiErr::Internal(format!(
+                            "persistent backpressure transmitting to {dst} — peer not progressing"
+                        )));
+                    }
+                    self.progress_vci(vci, cs);
+                    cs.yield_cs();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Request objects and their completion state machine.
+//!
+//! Completion uses atomics (as MPICH does — §5.3 notes that "atomic
+//! variables and atomic operations are still used to reference count
+//! request objects and completion flags" and that even uncontended atomics
+//! cost; the ablation bench measures exactly that).
+//!
+//! State machine:
+//!
+//! ```text
+//! PENDING ──(progress matches, copies)──▶ MATCHING ──▶ COMPLETE | ERROR
+//!    │
+//!    └──(drop without wait)──▶ CANCELLED   (entry lazily purged)
+//! ```
+//!
+//! `MATCHING` is a transient state held by the progress engine while it
+//! writes the receive buffer; it makes drop-cancellation sound: a dropped
+//! pending request is CAS-ed to `CANCELLED`, and if the CAS loses to a
+//! concurrent match, drop spins until the terminal state — the buffer is
+//! still alive for the duration of `Drop`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+use crate::error::MpiErr;
+use crate::mpi::status::Status;
+
+pub const PENDING: u8 = 0;
+pub const MATCHING: u8 = 1;
+pub const COMPLETE: u8 = 2;
+pub const ERROR: u8 = 3;
+pub const CANCELLED: u8 = 4;
+
+/// What the request represents (used for diagnostics and enqueue checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    Send,
+    Recv,
+}
+
+pub struct ReqInner {
+    state: AtomicU8,
+    kind: ReqKind,
+    /// Local VCI whose progress completes this request.
+    vci: u16,
+    /// Stream id this operation was issued on (for `MPIX_Waitall_enqueue`
+    /// same-stream validation and stream pending-op tracking), or
+    /// `u32::MAX`.
+    stream_id: u32,
+    /// Pending-op counter of the owning stream, decremented exactly once
+    /// on reaching a terminal state. Gives `MPIX_Stream_free` its "only
+    /// when all operations have completed" semantics.
+    pending_ctr: Option<Arc<AtomicU64>>,
+    /// Written by the completing thread *before* the Release store of
+    /// `state`; read after an Acquire load observes a terminal state.
+    status: UnsafeCell<Option<Status>>,
+    err: UnsafeCell<Option<MpiErr>>,
+}
+
+unsafe impl Send for ReqInner {}
+unsafe impl Sync for ReqInner {}
+
+/// A nonblocking-operation handle. Dropping a pending request *cancels*
+/// it (sound, unlike MPI's undefined behaviour); call
+/// [`crate::mpi::world::Proc::wait`] to complete it.
+pub struct Request {
+    inner: Arc<ReqInner>,
+}
+
+impl ReqInner {
+    pub fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    pub fn kind(&self) -> ReqKind {
+        self.kind
+    }
+
+    pub fn vci(&self) -> u16 {
+        self.vci
+    }
+
+    pub fn stream_id(&self) -> u32 {
+        self.stream_id
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.state() >= COMPLETE
+    }
+
+    /// Progress side: claim the request for matching. Fails if the request
+    /// was cancelled (or already claimed) — the caller must skip the entry.
+    pub fn try_claim(&self) -> bool {
+        self.state
+            .compare_exchange(PENDING, MATCHING, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Progress side: complete a claimed (or freshly created) request.
+    pub fn complete_ok(&self, status: Status) {
+        unsafe { *self.status.get() = Some(status) };
+        self.finish(COMPLETE);
+    }
+
+    /// Progress side: fail a claimed request.
+    pub fn complete_err(&self, err: MpiErr) {
+        unsafe { *self.err.get() = Some(err) };
+        self.finish(ERROR);
+    }
+
+    fn finish(&self, terminal: u8) {
+        if let Some(ctr) = &self.pending_ctr {
+            ctr.fetch_sub(1, Ordering::AcqRel);
+        }
+        self.state.store(terminal, Ordering::Release);
+    }
+
+    /// Reader side: status after observing a terminal state.
+    pub fn take_result(&self) -> Result<Status, MpiErr> {
+        match self.state() {
+            COMPLETE => Ok(unsafe { (*self.status.get()).expect("complete without status") }),
+            ERROR => Err(unsafe { (*self.err.get()).clone().expect("error without err") }),
+            CANCELLED => Err(MpiErr::Request("request was cancelled".into())),
+            s => Err(MpiErr::Internal(format!("take_result on non-terminal state {s}"))),
+        }
+    }
+}
+
+impl Request {
+    /// Create a pending request bound to a VCI.
+    pub fn pending(kind: ReqKind, vci: u16, stream_id: u32, pending_ctr: Option<Arc<AtomicU64>>) -> Request {
+        if let Some(c) = &pending_ctr {
+            c.fetch_add(1, Ordering::AcqRel);
+        }
+        Request {
+            inner: Arc::new(ReqInner {
+                state: AtomicU8::new(PENDING),
+                kind,
+                vci,
+                stream_id,
+                pending_ctr,
+                status: UnsafeCell::new(None),
+                err: UnsafeCell::new(None),
+            }),
+        }
+    }
+
+    /// Create an already-complete request (eager send fast path).
+    pub fn completed(kind: ReqKind, vci: u16, status: Status) -> Request {
+        Request::completed_on_stream(kind, vci, u32::MAX, status)
+    }
+
+    /// Already-complete request carrying a stream id (so
+    /// `MPIX_Waitall_enqueue` can still validate same-stream usage for
+    /// eager sends).
+    pub fn completed_on_stream(kind: ReqKind, vci: u16, stream_id: u32, status: Status) -> Request {
+        let r = Request::pending(kind, vci, stream_id, None);
+        r.inner.complete_ok(status);
+        r
+    }
+
+    pub fn inner(&self) -> &Arc<ReqInner> {
+        &self.inner
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.inner.is_terminal()
+    }
+
+    pub fn kind(&self) -> ReqKind {
+        self.inner.kind()
+    }
+
+    pub fn vci(&self) -> u16 {
+        self.inner.vci()
+    }
+
+    pub fn stream_id(&self) -> u32 {
+        self.inner.stream_id()
+    }
+
+    /// Consume a *terminal* request, returning its status. Panics if still
+    /// pending (use `Proc::wait`, which progresses the runtime).
+    pub fn into_result(self) -> Result<Status, MpiErr> {
+        assert!(self.inner.is_terminal(), "into_result on pending request — call Proc::wait");
+        let out = self.inner.take_result();
+        std::mem::forget(self); // skip drop-cancel
+        out
+    }
+
+    /// Cancel if still pending. Returns true if the cancellation won.
+    pub fn cancel(&self) -> bool {
+        loop {
+            match self.inner.state.compare_exchange(
+                PENDING,
+                CANCELLED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if let Some(c) = &self.inner.pending_ctr {
+                        c.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    return true;
+                }
+                Err(MATCHING) => {
+                    // A progress thread is mid-copy; wait for it to finish.
+                    std::hint::spin_loop();
+                    continue;
+                }
+                Err(_) => return false, // already terminal
+            }
+        }
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // Sound drop-of-pending: cancel so the matching engine will never
+        // write through our (about to dangle) receive pointer.
+        self.cancel();
+    }
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Request")
+            .field("kind", &self.inner.kind)
+            .field("vci", &self.inner.vci)
+            .field("state", &self.inner.state())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_completed_request() {
+        let r = Request::completed(ReqKind::Send, 0, Status::new(0, 5, 8, -1));
+        assert!(r.is_complete());
+        let st = r.into_result().unwrap();
+        assert_eq!(st.tag, 5);
+        assert_eq!(st.count, 8);
+    }
+
+    #[test]
+    fn claim_then_complete() {
+        let r = Request::pending(ReqKind::Recv, 3, u32::MAX, None);
+        assert!(!r.is_complete());
+        assert!(r.inner().try_claim());
+        assert!(!r.inner().try_claim(), "double claim must fail");
+        r.inner().complete_ok(Status::new(1, 2, 4, -1));
+        assert!(r.is_complete());
+        assert_eq!(r.vci(), 3);
+        assert_eq!(r.into_result().unwrap().source, 1);
+    }
+
+    #[test]
+    fn error_completion_propagates() {
+        let r = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+        assert!(r.inner().try_claim());
+        r.inner().complete_err(MpiErr::Truncate { incoming: 9, buffer: 4 });
+        assert!(matches!(r.into_result(), Err(MpiErr::Truncate { .. })));
+    }
+
+    #[test]
+    fn drop_cancels_pending() {
+        let r = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+        let inner = r.inner().clone();
+        drop(r);
+        assert_eq!(inner.state(), CANCELLED);
+        assert!(!inner.try_claim(), "cancelled entry must not be claimable");
+    }
+
+    #[test]
+    fn cancel_loses_to_completion() {
+        let r = Request::pending(ReqKind::Send, 0, u32::MAX, None);
+        assert!(r.inner().try_claim());
+        r.inner().complete_ok(Status::new(0, 0, 0, -1));
+        assert!(!r.cancel());
+        assert!(r.into_result().is_ok());
+    }
+
+    #[test]
+    fn pending_counter_tracks_lifecycle() {
+        let ctr = Arc::new(AtomicU64::new(0));
+        let r = Request::pending(ReqKind::Send, 0, 7, Some(ctr.clone()));
+        assert_eq!(ctr.load(Ordering::SeqCst), 1);
+        assert_eq!(r.stream_id(), 7);
+        assert!(r.inner().try_claim());
+        r.inner().complete_ok(Status::new(0, 0, 0, -1));
+        assert_eq!(ctr.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn pending_counter_released_on_cancel() {
+        let ctr = Arc::new(AtomicU64::new(0));
+        let r = Request::pending(ReqKind::Recv, 0, 7, Some(ctr.clone()));
+        assert_eq!(ctr.load(Ordering::SeqCst), 1);
+        drop(r);
+        assert_eq!(ctr.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,55 @@
+//! `MPI_Status` analogue.
+
+/// Completion status of a receive (or probe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Status {
+    /// Source rank in the communicator.
+    pub source: u32,
+    /// Message tag.
+    pub tag: i32,
+    /// Received payload size in bytes (`MPI_Get_count` with `MPI_BYTE`).
+    pub count: usize,
+    /// Source stream index for multiplex stream communicators
+    /// (`MPIX_Stream_recv`); [`crate::fabric::wire::NO_INDEX`] otherwise.
+    pub src_idx: i32,
+}
+
+impl Status {
+    pub fn new(source: u32, tag: i32, count: usize, src_idx: i32) -> Self {
+        Status { source, tag, count, src_idx }
+    }
+
+    /// Element count for a datatype (`MPI_Get_count`). `None` if the byte
+    /// count is not a multiple of the datatype size (MPI_UNDEFINED).
+    pub fn get_count(&self, dt: &crate::mpi::datatype::Datatype) -> Option<usize> {
+        let sz = dt.size();
+        if sz == 0 {
+            return Some(0);
+        }
+        if self.count % sz == 0 {
+            Some(self.count / sz)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::datatype::Datatype;
+
+    #[test]
+    fn get_count_exact() {
+        let s = Status::new(0, 1, 16, -1);
+        assert_eq!(s.get_count(&Datatype::F32), Some(4));
+        assert_eq!(s.get_count(&Datatype::F64), Some(2));
+        assert_eq!(s.get_count(&Datatype::U8), Some(16));
+    }
+
+    #[test]
+    fn get_count_undefined_on_partial_element() {
+        let s = Status::new(0, 1, 10, -1);
+        assert_eq!(s.get_count(&Datatype::F64), None);
+    }
+}

@@ -1,0 +1,392 @@
+//! The simulated multi-process world.
+//!
+//! The paper's testbed runs MPI ranks as OS processes on a cluster; here
+//! each rank is a *logical process* inside one OS process, with its own
+//! VCI pool, communicator table and GPU device. Ranks only communicate
+//! through the fabric (bytes are copied through endpoint rings — there is
+//! no shared-memory shortcut on the message path), so the concurrency
+//! behaviour under test is preserved.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use crate::config::{Config, CsMode};
+use crate::error::{MpiErr, Result};
+use crate::fabric::addr::EpAddr;
+use crate::fabric::Fabric;
+use crate::gpu::GpuDevice;
+use crate::mpi::comm::{Comm, CommKind};
+use crate::mpi::group::Group;
+use crate::vci::lock::CsSession;
+use crate::vci::pool::VciPool;
+use crate::vci::{PoolKind, Vci};
+
+pub struct WorldShared {
+    fabric: Fabric,
+    config: Config,
+    nranks: usize,
+    /// World-unique context-id allocator (ids < 2^31; the top bit is the
+    /// collective-context bit).
+    ctx_alloc: AtomicU32,
+}
+
+impl WorldShared {
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    /// Allocate a block of `n` consecutive context ids.
+    pub fn alloc_ctx_block(&self, n: u32) -> u32 {
+        let base = self.ctx_alloc.fetch_add(n, Ordering::Relaxed);
+        assert!(base.checked_add(n).map(|e| e < 1 << 31).unwrap_or(false), "context-id space exhausted");
+        base
+    }
+}
+
+pub struct ProcShared {
+    rank: u32,
+    world: Arc<WorldShared>,
+    vcis: Vec<Arc<Vci>>,
+    /// The process-global critical section (CsMode::Global).
+    global_cs: Mutex<()>,
+    /// Round-robin counter for the sender-any hashing policy.
+    rr: AtomicU32,
+    /// Explicit-pool allocator.
+    pool: VciPool,
+    /// Per-explicit-slot shared flag: a shared VCI demotes its streams to
+    /// PerVci locking (paper §3.1: "a per-endpoint critical section is
+    /// necessary" when endpoints are shared between streams).
+    shared_flags: Vec<AtomicBool>,
+    /// Stream-id allocator (per process).
+    next_stream_id: AtomicU32,
+    gpu: OnceCell<Arc<GpuDevice>>,
+    world_comm: OnceCell<Comm>,
+    pub(crate) enqueue_engine: OnceCell<Arc<crate::stream::enqueue::EnqueueEngine>>,
+    /// RMA window registry (target side): win id -> exposed memory.
+    windows: Mutex<std::collections::HashMap<u32, Arc<crate::mpi::rma::WinTarget>>>,
+    /// RMA origin-side in-flight op results.
+    rma_results: crate::mpi::rma::RmaResults,
+}
+
+/// Handle to a logical MPI process. Cheap to clone; all threads of a rank
+/// share one `Proc`.
+#[derive(Clone)]
+pub struct Proc {
+    pub(crate) shared: Arc<ProcShared>,
+}
+
+/// The world: all logical processes plus the fabric joining them.
+pub struct World {
+    shared: Arc<WorldShared>,
+    procs: Vec<Proc>,
+}
+
+/// Builder for [`World`].
+pub struct WorldBuilder {
+    ranks: usize,
+    config: Config,
+}
+
+impl World {
+    pub fn builder() -> WorldBuilder {
+        WorldBuilder { ranks: 2, config: Config::default() }
+    }
+
+    /// Shorthand: `ranks` processes with the default config.
+    pub fn with_ranks(ranks: usize) -> Result<World> {
+        World::builder().ranks(ranks).build()
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.shared.nranks
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.shared.config
+    }
+
+    /// Handle to rank `r`'s process.
+    pub fn proc(&self, r: usize) -> &Proc {
+        &self.procs[r]
+    }
+
+    /// Run `f` once per rank, each on its own OS thread; joins all and
+    /// propagates the first error (panics re-raise).
+    pub fn run<F>(&self, f: F) -> Result<()>
+    where
+        F: Fn(&Proc) -> Result<()> + Send + Sync,
+    {
+        let results: Vec<std::thread::Result<Result<()>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .procs
+                .iter()
+                .map(|p| {
+                    let f = &f;
+                    s.spawn(move || f(p))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        for r in results {
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl WorldBuilder {
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.ranks = n;
+        self
+    }
+
+    pub fn config(mut self, c: Config) -> Self {
+        self.config = c;
+        self
+    }
+
+    pub fn build(self) -> Result<World> {
+        self.config.validate()?;
+        if self.ranks == 0 {
+            return Err(MpiErr::Arg("world needs at least one rank".into()));
+        }
+        let eps = self.config.implicit_pool + self.config.explicit_pool;
+        let fabric = Fabric::new(self.ranks, eps, self.config.ep_ring_capacity);
+        let shared = Arc::new(WorldShared {
+            fabric,
+            nranks: self.ranks,
+            ctx_alloc: AtomicU32::new(1), // ctx 0 = world comm
+            config: self.config,
+        });
+        let procs: Vec<Proc> = (0..self.ranks)
+            .map(|r| {
+                let cfg = &shared.config;
+                let vcis: Vec<Arc<Vci>> = (0..eps)
+                    .map(|e| {
+                        let kind = if e < cfg.implicit_pool { PoolKind::Implicit } else { PoolKind::Explicit };
+                        Arc::new(Vci::new(
+                            e as u16,
+                            shared.fabric.endpoint(EpAddr { rank: r as u32, ep: e as u16 }),
+                            kind,
+                        ))
+                    })
+                    .collect();
+                let ps = Arc::new(ProcShared {
+                    rank: r as u32,
+                    world: shared.clone(),
+                    vcis,
+                    global_cs: Mutex::new(()),
+                    rr: AtomicU32::new(0),
+                    pool: VciPool::new(cfg.implicit_pool, cfg.explicit_pool, cfg.stream_share_endpoints),
+                    shared_flags: (0..cfg.explicit_pool).map(|_| AtomicBool::new(false)).collect(),
+                    next_stream_id: AtomicU32::new(1),
+                    gpu: OnceCell::new(),
+                    world_comm: OnceCell::new(),
+                    enqueue_engine: OnceCell::new(),
+                    windows: Mutex::new(std::collections::HashMap::new()),
+                    rma_results: crate::mpi::rma::RmaResults::default(),
+                });
+                let group = Group::new((0..self.ranks as u32).collect()).expect("identity group");
+                let wc = Comm::new(0, r as u32, group, CommKind::Regular);
+                ps.world_comm.set(wc).ok().expect("fresh once-cell");
+                Proc { shared: ps }
+            })
+            .collect();
+        Ok(World { shared, procs })
+    }
+}
+
+impl Proc {
+    /// This process's world rank.
+    pub fn rank(&self) -> u32 {
+        self.shared.rank
+    }
+
+    /// World size.
+    pub fn nranks(&self) -> u32 {
+        self.shared.world.nranks as u32
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.shared.world.config
+    }
+
+    /// `MPI_COMM_WORLD`.
+    pub fn world_comm(&self) -> &Comm {
+        self.shared.world_comm.get().expect("world comm initialized at build")
+    }
+
+    pub(crate) fn world(&self) -> &Arc<WorldShared> {
+        &self.shared.world
+    }
+
+    pub(crate) fn fabric(&self) -> &Fabric {
+        &self.shared.world.fabric
+    }
+
+    pub(crate) fn vci(&self, idx: u16) -> &Arc<Vci> {
+        &self.shared.vcis[idx as usize]
+    }
+
+    pub(crate) fn vci_count(&self) -> usize {
+        self.shared.vcis.len()
+    }
+
+    pub(crate) fn pool(&self) -> &VciPool {
+        &self.shared.pool
+    }
+
+    pub(crate) fn rr(&self) -> &AtomicU32 {
+        &self.shared.rr
+    }
+
+    pub(crate) fn next_stream_id(&self) -> u32 {
+        self.shared.next_stream_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn mark_vci_shared(&self, idx: u16, shared: bool) {
+        let slot = idx as usize - self.config().implicit_pool;
+        self.shared.shared_flags[slot].store(shared, Ordering::Release);
+    }
+
+    /// Critical-section mode governing operations on `vci`.
+    pub(crate) fn mode_for_vci(&self, idx: u16) -> CsMode {
+        let cfg = self.config();
+        if (idx as usize) < cfg.implicit_pool {
+            cfg.cs_mode
+        } else {
+            let slot = idx as usize - cfg.implicit_pool;
+            if self.shared.shared_flags[slot].load(Ordering::Acquire) {
+                CsMode::PerVci
+            } else {
+                CsMode::LockFree
+            }
+        }
+    }
+
+    /// Open a critical-section session for an operation on `vci`.
+    pub(crate) fn session_for_vci(&self, idx: u16) -> CsSession<'_> {
+        CsSession::enter(self.mode_for_vci(idx), &self.shared.global_cs)
+    }
+
+    /// Session covering the implicit pool (used by the periodic global
+    /// progress of blocking waits; see `Proc::wait`).
+    pub(crate) fn session_for_implicit(&self) -> CsSession<'_> {
+        CsSession::enter(self.config().cs_mode, &self.shared.global_cs)
+    }
+
+    pub(crate) fn windows(
+        &self,
+    ) -> &Mutex<std::collections::HashMap<u32, Arc<crate::mpi::rma::WinTarget>>> {
+        &self.shared.windows
+    }
+
+    pub(crate) fn rma_results(&self) -> &crate::mpi::rma::RmaResults {
+        &self.shared.rma_results
+    }
+
+    /// The simulated GPU device attached to this process (created lazily).
+    pub fn gpu(&self) -> Arc<GpuDevice> {
+        self.shared.gpu.get_or_init(|| Arc::new(GpuDevice::new(self.shared.rank))).clone()
+    }
+}
+
+impl std::fmt::Debug for Proc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Proc").field("rank", &self.shared.rank).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_world_with_defaults() {
+        let w = World::with_ranks(3).unwrap();
+        assert_eq!(w.nranks(), 3);
+        for r in 0..3 {
+            let p = w.proc(r);
+            assert_eq!(p.rank(), r as u32);
+            assert_eq!(p.nranks(), 3);
+            assert_eq!(p.world_comm().size(), 3);
+            assert_eq!(p.world_comm().ctx_id(), 0);
+            assert_eq!(p.world_comm().rank(), r as u32);
+        }
+    }
+
+    #[test]
+    fn zero_ranks_rejected() {
+        assert!(World::builder().ranks(0).build().is_err());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let c = Config { implicit_pool: 0, ..Default::default() };
+        assert!(World::builder().ranks(1).config(c).build().is_err());
+    }
+
+    #[test]
+    fn vci_pools_provisioned() {
+        let c = Config { implicit_pool: 2, explicit_pool: 3, ..Default::default() };
+        let w = World::builder().ranks(2).config(c).build().unwrap();
+        let p = w.proc(0);
+        assert_eq!(p.vci_count(), 5);
+        assert_eq!(p.vci(0).pool(), PoolKind::Implicit);
+        assert_eq!(p.vci(4).pool(), PoolKind::Explicit);
+    }
+
+    #[test]
+    fn mode_for_vci_pools() {
+        let c = Config { implicit_pool: 1, explicit_pool: 1, cs_mode: CsMode::Global, ..Default::default() };
+        let w = World::builder().ranks(1).config(c).build().unwrap();
+        let p = w.proc(0);
+        assert_eq!(p.mode_for_vci(0), CsMode::Global);
+        assert_eq!(p.mode_for_vci(1), CsMode::LockFree, "explicit pool is lock-free by default");
+        p.mark_vci_shared(1, true);
+        assert_eq!(p.mode_for_vci(1), CsMode::PerVci, "shared endpoints need per-endpoint CS");
+    }
+
+    #[test]
+    fn run_executes_every_rank() {
+        let w = World::with_ranks(4).unwrap();
+        let counter = AtomicU32::new(0);
+        w.run(|p| {
+            counter.fetch_add(1 + p.rank(), Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 4 + 0 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn run_propagates_errors() {
+        let w = World::with_ranks(2).unwrap();
+        let out = w.run(|p| {
+            if p.rank() == 1 {
+                Err(MpiErr::Arg("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(matches!(out, Err(MpiErr::Arg(_))));
+    }
+
+    #[test]
+    fn ctx_block_allocation_unique() {
+        let w = World::with_ranks(1).unwrap();
+        let a = w.shared.alloc_ctx_block(3);
+        let b = w.shared.alloc_ctx_block(1);
+        assert!(b >= a + 3);
+    }
+}

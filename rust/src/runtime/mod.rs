@@ -1,0 +1,249 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! The interchange format is **HLO text** (not a serialized
+//! `HloModuleProto`): jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `python/compile/aot.py`).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and not `Send`, so the
+//! runtime owns a dedicated **executor thread** that holds the client and
+//! every compiled executable; [`Executable`] handles are `Send + Sync` ids
+//! that submit jobs over a channel. GPU-stream dispatcher threads block on
+//! the reply — which also mirrors how a real deployment funnels kernel
+//! launches through a driver thread.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::error::{MpiErr, Result};
+
+enum Job {
+    Load { path: PathBuf, reply: mpsc::Sender<Result<usize>> },
+    Run { id: usize, inputs: Vec<(Vec<f32>, Vec<usize>)>, reply: mpsc::Sender<Result<Vec<Vec<f32>>>> },
+}
+
+struct RuntimeInner {
+    tx: Mutex<mpsc::Sender<Job>>,
+    names: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+/// The PJRT runtime (one executor thread + artifact registry).
+pub struct XlaRuntime {
+    inner: Arc<RuntimeInner>,
+}
+
+/// A compiled artifact handle (`Send + Sync`).
+pub struct Executable {
+    rt: Arc<RuntimeInner>,
+    id: usize,
+    name: String,
+}
+
+impl XlaRuntime {
+    /// Create a runtime with its executor thread. Prefer
+    /// [`XlaRuntime::global`] so the (expensive) PJRT client is built once
+    /// per process.
+    pub fn new() -> Result<XlaRuntime> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || executor_loop(rx))
+            .map_err(|e| MpiErr::Xla(format!("spawn executor: {e}")))?;
+        Ok(XlaRuntime { inner: Arc::new(RuntimeInner { tx: Mutex::new(tx), names: Mutex::new(HashMap::new()) }) })
+    }
+
+    /// The process-wide runtime.
+    pub fn global() -> &'static XlaRuntime {
+        static RT: once_cell::sync::Lazy<XlaRuntime> =
+            once_cell::sync::Lazy::new(|| XlaRuntime::new().expect("init XLA runtime"));
+        &RT
+    }
+
+    /// Load + compile one HLO-text artifact; the registry key is the file
+    /// stem (e.g. `artifacts/saxpy.hlo.txt` → `"saxpy"`).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref();
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .map(|s| s.trim_end_matches(".hlo.txt").to_string())
+            .ok_or_else(|| MpiErr::Xla(format!("bad artifact path {}", path.display())))?;
+        if let Some(e) = self.inner.names.lock().unwrap().get(&name) {
+            return Ok(e.clone());
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.inner
+            .tx
+            .lock()
+            .unwrap()
+            .send(Job::Load { path: path.to_path_buf(), reply: reply_tx })
+            .map_err(|_| MpiErr::Xla("executor thread died".into()))?;
+        let id = reply_rx.recv().map_err(|_| MpiErr::Xla("executor thread died".into()))??;
+        let exe = Arc::new(Executable { rt: self.inner.clone(), id, name: name.clone() });
+        self.inner.names.lock().unwrap().insert(name, exe.clone());
+        Ok(exe)
+    }
+
+    /// Load every `*.hlo.txt` in a directory.
+    pub fn load_dir(&self, dir: impl AsRef<Path>) -> Result<Vec<Arc<Executable>>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(dir.as_ref())
+            .map_err(|e| MpiErr::Xla(format!("read artifacts dir {}: {e}", dir.as_ref().display())))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.to_str().map(|s| s.ends_with(".hlo.txt")).unwrap_or(false))
+            .collect();
+        paths.sort();
+        for p in paths {
+            out.push(self.load(&p)?);
+        }
+        Ok(out)
+    }
+
+    /// Fetch a previously loaded artifact by name.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        self.inner
+            .names
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| MpiErr::Xla(format!("artifact '{name}' not loaded (run `make artifacts`?)")))
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs `(data, shape)`, returning every tuple
+    /// output flattened.
+    pub fn run_f32_multi(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let owned: Vec<(Vec<f32>, Vec<usize>)> =
+            inputs.iter().map(|(d, s)| (d.to_vec(), s.to_vec())).collect();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.rt
+            .tx
+            .lock()
+            .unwrap()
+            .send(Job::Run { id: self.id, inputs: owned, reply: reply_tx })
+            .map_err(|_| MpiErr::Xla("executor thread died".into()))?;
+        reply_rx.recv().map_err(|_| MpiErr::Xla("executor thread died".into()))?
+    }
+
+    /// Execute and return the single output (errors if the computation
+    /// returns more than one).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut outs = self.run_f32_multi(inputs)?;
+        if outs.len() != 1 {
+            return Err(MpiErr::Xla(format!("{}: expected 1 output, got {}", self.name, outs.len())));
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+fn executor_loop(rx: mpsc::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every job with a clear message.
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Load { reply, .. } => {
+                        let _ = reply.send(Err(MpiErr::Xla(format!("PJRT CPU client failed: {e}"))));
+                    }
+                    Job::Run { reply, .. } => {
+                        let _ = reply.send(Err(MpiErr::Xla(format!("PJRT CPU client failed: {e}"))));
+                    }
+                }
+            }
+            return;
+        }
+    };
+    let mut exes: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Load { path, reply } => {
+                let _ = reply.send(load_one(&client, &path, &mut exes));
+            }
+            Job::Run { id, inputs, reply } => {
+                let _ = reply.send(run_one(&exes, id, inputs));
+            }
+        }
+    }
+}
+
+fn load_one(
+    client: &xla::PjRtClient,
+    path: &Path,
+    exes: &mut Vec<xla::PjRtLoadedExecutable>,
+) -> Result<usize> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| MpiErr::Xla(format!("non-utf8 artifact path {}", path.display())))?;
+    if !path.exists() {
+        return Err(MpiErr::Xla(format!(
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| MpiErr::Xla(format!("parse {}: {e}", path.display())))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| MpiErr::Xla(format!("compile {}: {e}", path.display())))?;
+    exes.push(exe);
+    Ok(exes.len() - 1)
+}
+
+fn run_one(
+    exes: &[xla::PjRtLoadedExecutable],
+    id: usize,
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+) -> Result<Vec<Vec<f32>>> {
+    let exe = exes.get(id).ok_or_else(|| MpiErr::Xla(format!("unknown executable id {id}")))?;
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (data, shape) in &inputs {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| MpiErr::Xla(format!("reshape input to {dims:?}: {e}")))?;
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| MpiErr::Xla(format!("execute: {e}")))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| MpiErr::Xla(format!("fetch result: {e}")))?;
+    // aot.py lowers with return_tuple=True, so outputs are a tuple.
+    let parts = lit.to_tuple().map_err(|e| MpiErr::Xla(format!("untuple result: {e}")))?;
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().map_err(|e| MpiErr::Xla(format!("read output: {e}"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_unloaded_artifact_errors() {
+        let rt = XlaRuntime::new().unwrap();
+        assert!(rt.get("nope").is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let rt = XlaRuntime::new().unwrap();
+        let e = rt.load("/nonexistent/foo.hlo.txt");
+        assert!(e.is_err());
+        let msg = format!("{}", e.err().unwrap());
+        assert!(msg.contains("make artifacts"), "actionable message: {msg}");
+    }
+
+    // Execution against real artifacts is covered by
+    // rust/tests/runtime_artifacts.rs (requires `make artifacts`).
+}

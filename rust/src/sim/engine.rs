@@ -1,0 +1,273 @@
+//! A discrete-event virtual-time engine with contention-faithful mutexes.
+//!
+//! Used to regenerate the paper's thread-scaling curves (Figure 3) on a
+//! host with fewer cores than the paper's testbed: actors execute scripts
+//! of `Work` / `Acquire` / `Release` steps whose durations are *measured*
+//! from the real runtime (see [`crate::sim::calibrate`]); the engine
+//! computes the wall-clock each configuration would take with every actor
+//! on its own core, serialization arising only from the mutexes — i.e.
+//! from the critical-section model under test.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// One step of an actor's per-iteration script.
+#[derive(Debug, Clone, Copy)]
+pub enum Step {
+    /// Compute for `ns` nanoseconds (virtual).
+    Work(u64),
+    /// Acquire mutex `m` (FIFO queueing when contended).
+    Acquire(usize),
+    /// Release mutex `m`.
+    Release(usize),
+}
+
+/// An actor: a script repeated `repeat` times.
+#[derive(Debug, Clone)]
+pub struct ActorSpec {
+    pub script: Vec<Step>,
+    pub repeat: u64,
+}
+
+struct Actor {
+    spec: ActorSpec,
+    step: usize,
+    iter: u64,
+    finished_at: Option<u64>,
+}
+
+struct SimMutex {
+    locked: bool,
+    waiters: VecDeque<usize>,
+    /// Virtual cost of handing a contended lock to the next waiter
+    /// (cache-line transfer + wakeup).
+    handover_ns: u64,
+    /// Total grants (metrics).
+    grants: u64,
+    contended_grants: u64,
+}
+
+/// Engine results.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Virtual time at which the last actor finished.
+    pub makespan_ns: u64,
+    /// Per-actor finish times.
+    pub finish_ns: Vec<u64>,
+    /// Per-mutex (grants, contended grants).
+    pub mutex_stats: Vec<(u64, u64)>,
+}
+
+/// The discrete-event engine.
+pub struct Engine {
+    actors: Vec<Actor>,
+    mutexes: Vec<SimMutex>,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    seq: u64,
+    now: u64,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine { actors: Vec::new(), mutexes: Vec::new(), events: BinaryHeap::new(), seq: 0, now: 0 }
+    }
+
+    /// Add a mutex with the given contended-handover cost; returns its id.
+    pub fn add_mutex(&mut self, handover_ns: u64) -> usize {
+        self.mutexes.push(SimMutex {
+            locked: false,
+            waiters: VecDeque::new(),
+            handover_ns,
+            grants: 0,
+            contended_grants: 0,
+        });
+        self.mutexes.len() - 1
+    }
+
+    /// Add an actor; returns its id.
+    pub fn add_actor(&mut self, spec: ActorSpec) -> usize {
+        self.actors.push(Actor { spec, step: 0, iter: 0, finished_at: None });
+        self.actors.len() - 1
+    }
+
+    fn schedule(&mut self, t: u64, actor: usize) {
+        self.seq += 1;
+        self.events.push(Reverse((t, self.seq, actor)));
+    }
+
+    /// Run to completion and return the result.
+    pub fn run(mut self) -> SimResult {
+        for a in 0..self.actors.len() {
+            self.schedule(0, a);
+        }
+        while let Some(Reverse((t, _, a))) = self.events.pop() {
+            self.now = t;
+            self.step_actor(a);
+        }
+        SimResult {
+            makespan_ns: self.actors.iter().filter_map(|a| a.finished_at).max().unwrap_or(0),
+            finish_ns: self.actors.iter().map(|a| a.finished_at.unwrap_or(0)).collect(),
+            mutex_stats: self.mutexes.iter().map(|m| (m.grants, m.contended_grants)).collect(),
+        }
+    }
+
+    /// Execute actor `a` from its current step until it sleeps (Work),
+    /// blocks (contended Acquire), or finishes.
+    fn step_actor(&mut self, a: usize) {
+        loop {
+            let (step, done) = {
+                let actor = &self.actors[a];
+                if actor.iter >= actor.spec.repeat {
+                    (None, true)
+                } else {
+                    (Some(actor.spec.script[actor.step]), false)
+                }
+            };
+            if done {
+                if self.actors[a].finished_at.is_none() {
+                    self.actors[a].finished_at = Some(self.now);
+                }
+                return;
+            }
+            match step.unwrap() {
+                Step::Work(ns) => {
+                    self.advance(a);
+                    if ns > 0 {
+                        let t = self.now + ns;
+                        self.schedule(t, a);
+                        return;
+                    }
+                }
+                Step::Acquire(m) => {
+                    let mx = &mut self.mutexes[m];
+                    if mx.locked {
+                        mx.waiters.push_back(a);
+                        return; // blocked; resumed by the releaser
+                    }
+                    mx.locked = true;
+                    mx.grants += 1;
+                    self.advance(a);
+                }
+                Step::Release(m) => {
+                    self.advance(a);
+                    let mx = &mut self.mutexes[m];
+                    debug_assert!(mx.locked, "release of unlocked sim mutex");
+                    if let Some(next) = mx.waiters.pop_front() {
+                        // Hand over directly: stays locked, next actor
+                        // resumes after the handover penalty — and its
+                        // Acquire step is already "done".
+                        mx.grants += 1;
+                        mx.contended_grants += 1;
+                        let t = self.now + mx.handover_ns;
+                        self.advance(next);
+                        self.schedule(t, next);
+                    } else {
+                        mx.locked = false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move an actor past its current step (wrapping iterations).
+    fn advance(&mut self, a: usize) {
+        let actor = &mut self.actors[a];
+        actor.step += 1;
+        if actor.step >= actor.spec.script.len() {
+            actor.step = 0;
+            actor.iter += 1;
+        }
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn independent_actors_run_in_parallel() {
+        let mut e = Engine::new();
+        for _ in 0..4 {
+            e.add_actor(ActorSpec { script: vec![Step::Work(100)], repeat: 10 });
+        }
+        let r = e.run();
+        // Virtual parallelism: 4 actors x 10 x 100ns finish together.
+        assert_eq!(r.makespan_ns, 1_000);
+        assert!(r.finish_ns.iter().all(|&f| f == 1_000));
+    }
+
+    #[test]
+    fn shared_mutex_serializes() {
+        let mut e = Engine::new();
+        let m = e.add_mutex(0);
+        for _ in 0..4 {
+            e.add_actor(ActorSpec {
+                script: vec![Step::Acquire(m), Step::Work(100), Step::Release(m)],
+                repeat: 10,
+            });
+        }
+        let r = e.run();
+        // All 40 critical sections serialize: 4000ns.
+        assert_eq!(r.makespan_ns, 4_000);
+        let (grants, contended) = r.mutex_stats[0];
+        assert_eq!(grants, 40);
+        assert!(contended > 0);
+    }
+
+    #[test]
+    fn handover_cost_charged_on_contention_only() {
+        let run = |actors: usize| {
+            let mut e = Engine::new();
+            let m = e.add_mutex(50);
+            for _ in 0..actors {
+                e.add_actor(ActorSpec {
+                    script: vec![Step::Acquire(m), Step::Work(100), Step::Release(m)],
+                    repeat: 10,
+                });
+            }
+            e.run().makespan_ns
+        };
+        let single = run(1);
+        assert_eq!(single, 1_000, "uncontended: no handover cost");
+        let double = run(2);
+        assert!(double > 2_000, "contended: handover cost appears ({double})");
+    }
+
+    #[test]
+    fn disjoint_mutexes_do_not_interact() {
+        let mut e = Engine::new();
+        for _ in 0..3 {
+            let m = e.add_mutex(50);
+            e.add_actor(ActorSpec {
+                script: vec![Step::Acquire(m), Step::Work(100), Step::Release(m)],
+                repeat: 10,
+            });
+        }
+        let r = e.run();
+        assert_eq!(r.makespan_ns, 1_000);
+        assert!(r.mutex_stats.iter().all(|&(_, c)| c == 0));
+    }
+
+    #[test]
+    fn work_between_critical_sections_overlaps() {
+        // 2 actors, 50ns outside + 50ns inside a shared lock: the outside
+        // halves overlap, so makespan < fully-serial 2000ns.
+        let mut e = Engine::new();
+        let m = e.add_mutex(0);
+        for _ in 0..2 {
+            e.add_actor(ActorSpec {
+                script: vec![Step::Work(50), Step::Acquire(m), Step::Work(50), Step::Release(m)],
+                repeat: 10,
+            });
+        }
+        let r = e.run();
+        assert!(r.makespan_ns < 2_000, "outside work must overlap ({})", r.makespan_ns);
+        assert!(r.makespan_ns >= 1_000, "critical sections must serialize ({})", r.makespan_ns);
+    }
+}

@@ -1,0 +1,6 @@
+//! Discrete-event virtual-time simulator (placeholder; filled by the
+//! Fig. 3 replay engine).
+
+pub mod calibrate;
+pub mod engine;
+pub mod msgrate;

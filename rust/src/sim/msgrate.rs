@@ -1,0 +1,195 @@
+//! The Figure-3 virtual-time replay.
+//!
+//! Models the paper's microbenchmark — N thread pairs, 8-byte messages,
+//! per-thread communicators — under the three critical-section regimes,
+//! with per-message path costs taken from [`crate::sim::calibrate`].
+//!
+//! Model per message, per thread pair:
+//!
+//! * **global-cs** — the sender-side path holds rank 0's process mutex,
+//!   the receiver-side path holds rank 1's; a small remainder runs outside
+//!   any lock. All N pairs contend on the same two mutexes: throughput is
+//!   capped near `1 / (hold + handover)` regardless of N — the red curve's
+//!   collapse.
+//! * **per-vci** — perfect implicit hashing gives every pair its own VCI
+//!   pair; the fine-grained lock ops cost time but never contend: rate
+//!   scales as `N / t_pervci`. With `vci_pool < N` (the ablation), pairs
+//!   share VCIs round-robin and contention reappears.
+//! * **stream** — no locks at all: `N / t_stream`, ≈20% above per-VCI.
+
+use crate::sim::calibrate::Calibration;
+use crate::sim::engine::{ActorSpec, Engine, Step};
+
+/// Split of the global-CS path between the sender-side critical section,
+/// the receiver-side critical section, and uncovered time. The split is a
+/// model choice (documented in EXPERIMENTS.md); the total is measured.
+const GLOBAL_SEND_FRAC: f64 = 0.40;
+const GLOBAL_RECV_FRAC: f64 = 0.55;
+
+/// One simulated configuration's outcome.
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    pub mode: &'static str,
+    pub threads: usize,
+    pub msgs_per_thread: u64,
+    pub makespan_ns: u64,
+    /// Total messages/second.
+    pub rate: f64,
+}
+
+/// Simulate the global-critical-section configuration.
+pub fn sim_global(cal: &Calibration, threads: usize, msgs: u64) -> SimPoint {
+    let mut e = Engine::new();
+    let g0 = e.add_mutex(cal.handover_ns as u64); // rank 0 process lock
+    let g1 = e.add_mutex(cal.handover_ns as u64); // rank 1 process lock
+    let send = (cal.t_global_ns * GLOBAL_SEND_FRAC) as u64;
+    let recv = (cal.t_global_ns * GLOBAL_RECV_FRAC) as u64;
+    let outside = (cal.t_global_ns * (1.0 - GLOBAL_SEND_FRAC - GLOBAL_RECV_FRAC)) as u64;
+    for _ in 0..threads {
+        e.add_actor(ActorSpec {
+            script: vec![
+                Step::Acquire(g0),
+                Step::Work(send),
+                Step::Release(g0),
+                Step::Acquire(g1),
+                Step::Work(recv),
+                Step::Release(g1),
+                Step::Work(outside),
+            ],
+            repeat: msgs,
+        });
+    }
+    finish("global-cs", threads, msgs, e)
+}
+
+/// Simulate the per-VCI configuration with `pool` VCIs per rank (perfect
+/// hashing when `pool >= threads`).
+pub fn sim_pervci(cal: &Calibration, threads: usize, msgs: u64, pool: usize) -> SimPoint {
+    let mut e = Engine::new();
+    // Each VCI has a tx lock and an rx/matching lock per rank side; a
+    // thread pair i uses VCI i % pool on both sides.
+    let locks: Vec<(usize, usize)> =
+        (0..pool).map(|_| (e.add_mutex(cal.handover_ns as u64), e.add_mutex(cal.handover_ns as u64))).collect();
+    // The measured per-VCI path cost includes the fine-grained lock ops;
+    // split it across the two locked segments (tx-side, rx-side).
+    let seg = (cal.t_pervci_ns / 2.0) as u64;
+    for i in 0..threads {
+        let (tx, rx) = locks[i % pool];
+        e.add_actor(ActorSpec {
+            script: vec![
+                Step::Acquire(tx),
+                Step::Work(seg),
+                Step::Release(tx),
+                Step::Acquire(rx),
+                Step::Work(seg),
+                Step::Release(rx),
+            ],
+            repeat: msgs,
+        });
+    }
+    finish("per-vci", threads, msgs, e)
+}
+
+/// Simulate the MPIX-stream configuration: no locks.
+pub fn sim_stream(cal: &Calibration, threads: usize, msgs: u64) -> SimPoint {
+    let mut e = Engine::new();
+    for _ in 0..threads {
+        e.add_actor(ActorSpec { script: vec![Step::Work(cal.t_stream_ns as u64)], repeat: msgs });
+    }
+    finish("stream", threads, msgs, e)
+}
+
+fn finish(mode: &'static str, threads: usize, msgs: u64, e: Engine) -> SimPoint {
+    let r = e.run();
+    let total = threads as u64 * msgs;
+    let secs = r.makespan_ns as f64 / 1e9;
+    SimPoint {
+        mode,
+        threads,
+        msgs_per_thread: msgs,
+        makespan_ns: r.makespan_ns,
+        rate: if secs > 0.0 { total as f64 / secs } else { 0.0 },
+    }
+}
+
+/// The full Figure-3 series: all three curves over a thread sweep.
+pub fn fig3_series(cal: &Calibration, threads_list: &[usize], msgs: u64) -> Vec<[SimPoint; 3]> {
+    threads_list
+        .iter()
+        .map(|&n| [sim_global(cal, n, msgs), sim_pervci(cal, n, msgs, n), sim_stream(cal, n, msgs)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> Calibration {
+        Calibration::synthetic()
+    }
+
+    #[test]
+    fn single_thread_rates_match_path_costs() {
+        let c = cal();
+        let s = sim_stream(&c, 1, 1000);
+        let expect = 1e9 / c.t_stream_ns;
+        assert!((s.rate - expect).abs() / expect < 0.01, "{} vs {}", s.rate, expect);
+        // Paper: per-VCI single-thread < global single-thread.
+        let v = sim_pervci(&c, 1, 1000, 1);
+        let g = sim_global(&c, 1, 1000);
+        assert!(v.rate < g.rate, "per-vci {} must be below global {} at 1 thread", v.rate, g.rate);
+    }
+
+    #[test]
+    fn stream_and_pervci_scale_global_collapses() {
+        let c = cal();
+        let s1 = sim_stream(&c, 1, 1000).rate;
+        let s20 = sim_stream(&c, 20, 1000).rate;
+        assert!(s20 > 15.0 * s1, "stream must scale ~linearly ({s20} vs {s1})");
+
+        let v20 = sim_pervci(&c, 20, 1000, 20).rate;
+        let v1 = sim_pervci(&c, 1, 1000, 1).rate;
+        assert!(v20 > 15.0 * v1, "per-vci with perfect hashing must scale");
+
+        let g1 = sim_global(&c, 1, 1000).rate;
+        let g20 = sim_global(&c, 20, 1000).rate;
+        assert!(g20 < 1.5 * g1, "global CS must not scale ({g20} vs {g1})");
+    }
+
+    #[test]
+    fn stream_beats_pervci_by_about_20_percent() {
+        let c = cal();
+        for n in [4, 8, 16, 20] {
+            let s = sim_stream(&c, n, 1000).rate;
+            let v = sim_pervci(&c, n, 1000, n).rate;
+            let gain = s / v;
+            assert!(
+                gain > 1.1 && gain < 1.6,
+                "stream/per-vci gain at {n} threads = {gain:.2}, expected ~1.2-1.3"
+            );
+        }
+    }
+
+    #[test]
+    fn vci_pool_sharing_reintroduces_contention() {
+        let c = cal();
+        let dedicated = sim_pervci(&c, 8, 1000, 8).rate;
+        let shared = sim_pervci(&c, 8, 1000, 2).rate;
+        assert!(
+            shared < dedicated * 0.5,
+            "8 threads over 2 VCIs must contend (shared {shared}, dedicated {dedicated})"
+        );
+    }
+
+    #[test]
+    fn fig3_series_produces_all_curves() {
+        let c = cal();
+        let rows = fig3_series(&c, &[1, 2, 4], 100);
+        assert_eq!(rows.len(), 3);
+        for row in &rows {
+            assert_eq!(row[0].mode, "global-cs");
+            assert_eq!(row[1].mode, "per-vci");
+            assert_eq!(row[2].mode, "stream");
+        }
+    }
+}

@@ -1,0 +1,589 @@
+//! The `MPIX_*_enqueue` APIs (§3.4) and their two implementations (§5.2).
+//!
+//! Semantics: "MPIX_Send_enqueue, as with all enqueuing APIs, returns
+//! immediately after registering the operation. A separate progress
+//! thread, which may be the GPU runtime thread, will initiate and complete
+//! the communication asynchronously. ... with the addition of the enqueue
+//! APIs, GPU synchronization calls, such as cudaStreamSynchronize, are no
+//! longer needed for message data or communication synchronizations."
+//!
+//! Two implementations, selectable via [`crate::config::EnqueueMode`]:
+//!
+//! * **HostFunc** — the MPICH-4.1a1 prototype: the whole MPI operation is
+//!   enqueued as a host function on the GPU stream
+//!   (`cudaLaunchHostFunc`), paying the modeled switching cost per op.
+//! * **ProgressThread** — the paper's "better implementation": a dedicated
+//!   host thread drives the MPI operations; only lightweight event
+//!   triggers/waits are enqueued on the GPU stream.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::EnqueueMode;
+use crate::error::{MpiErr, Result};
+use crate::gpu::{DevicePtr, GpuStream};
+use crate::mpi::comm::Comm;
+use crate::mpi::datatype::Datatype;
+use crate::mpi::matching::{RecvDest, ANY_SOURCE, ANY_TAG};
+use crate::mpi::request::Request;
+use crate::mpi::world::Proc;
+
+/// Handle returned by `MPIX_Isend_enqueue` / `MPIX_Irecv_enqueue`; resolved
+/// by `MPIX_Wait_enqueue` / `MPIX_Waitall_enqueue` *on the same stream*.
+pub struct EnqueuedRequest {
+    slot: Arc<Mutex<SlotState>>,
+    stream_id: u32,
+}
+
+enum SlotState {
+    /// The GPU stream has not reached the initiating op yet.
+    NotStarted,
+    /// Initiated: the real request, plus receive staging (the staging
+    /// buffer and the device destination it must be flushed to).
+    Started { req: Request, staging: Option<(Box<[u8]>, DevicePtr)> },
+    /// Consumed by a wait op.
+    Done,
+}
+
+impl EnqueuedRequest {
+    pub fn stream_id(&self) -> u32 {
+        self.stream_id
+    }
+}
+
+/// The dedicated-progress-thread engine (§5.2's "better implementation").
+/// Operations are queued in enqueue order; the GPU stream only flips a
+/// ready flag and (for synchronizing ops) waits a done gate.
+pub struct EnqueueEngine {
+    queue: Arc<EngineQueue>,
+}
+
+struct EngineQueue {
+    ops: Mutex<VecDeque<EngineOp>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+struct EngineOp {
+    ready: Arc<AtomicBool>,
+    done: Arc<(Mutex<bool>, Condvar)>,
+    func: Box<dyn FnOnce() + Send>,
+}
+
+impl EnqueueEngine {
+    pub fn new() -> Arc<EnqueueEngine> {
+        let queue = Arc::new(EngineQueue {
+            ops: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let q = queue.clone();
+        std::thread::Builder::new()
+            .name("mpix-enqueue-progress".into())
+            .spawn(move || {
+                loop {
+                    let op = {
+                        let mut ops = q.ops.lock().unwrap();
+                        loop {
+                            if q.shutdown.load(Ordering::Acquire) {
+                                return;
+                            }
+                            // Find the first op whose trigger has fired
+                            // (ops from different GPU streams may become
+                            // ready out of queue order).
+                            if let Some(pos) =
+                                ops.iter().position(|o| o.ready.load(Ordering::Acquire))
+                            {
+                                break ops.remove(pos).unwrap();
+                            }
+                            let (guard, _) =
+                                q.cv.wait_timeout(ops, std::time::Duration::from_millis(1)).unwrap();
+                            ops = guard;
+                        }
+                    };
+                    (op.func)();
+                    let (m, cv) = &*op.done;
+                    *m.lock().unwrap() = true;
+                    cv.notify_all();
+                }
+            })
+            .expect("spawn enqueue progress thread");
+        Arc::new(EnqueueEngine { queue })
+    }
+
+    /// Register an operation and wire its trigger/wait onto the GPU
+    /// stream. `sync` decides whether the stream stalls until the MPI op
+    /// completes (blocking-semantics enqueue) or proceeds (i-variants).
+    fn submit(&self, gpu: &GpuStream, sync: bool, func: Box<dyn FnOnce() + Send>) -> Result<()> {
+        let ready = Arc::new(AtomicBool::new(false));
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let mut ops = self.queue.ops.lock().unwrap();
+            ops.push_back(EngineOp { ready: ready.clone(), done: done.clone(), func });
+        }
+        // Trigger op: cheap flag flip in stream order.
+        let q = self.queue.clone();
+        gpu.enqueue(Box::new(move || {
+            ready.store(true, Ordering::Release);
+            q.cv.notify_all();
+        }))?;
+        if sync {
+            // Stall the stream until the MPI op finishes.
+            gpu.enqueue(Box::new(move || {
+                let (m, cv) = &*done;
+                let mut d = m.lock().unwrap();
+                while !*d {
+                    d = cv.wait(d).unwrap();
+                }
+            }))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EnqueueEngine {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::Release);
+        self.queue.cv.notify_all();
+    }
+}
+
+/// Validate an enqueue call and produce the GPU stream to enqueue on.
+fn enqueue_target(comm: &Comm) -> Result<GpuStream> {
+    let stream = comm.local_stream().ok_or_else(|| {
+        MpiErr::Comm(
+            "enqueue APIs require a stream communicator with a local GPU stream attached".into(),
+        )
+    })?;
+    stream
+        .gpu_stream()
+        .cloned()
+        .ok_or_else(|| MpiErr::Comm("the attached MPIX stream is not GPU-backed".into()))
+}
+
+impl Proc {
+    fn engine(&self) -> Arc<EnqueueEngine> {
+        self.shared.enqueue_engine.get_or_init(EnqueueEngine::new).clone()
+    }
+
+    /// Dispatch an enqueue-op per the configured mode. `sync` = stall the
+    /// GPU stream until the MPI op completes.
+    fn enqueue_op(&self, gpu: &GpuStream, sync: bool, func: Box<dyn FnOnce() + Send>) -> Result<()> {
+        match self.config().enqueue_mode {
+            EnqueueMode::HostFunc => {
+                // Prototype path: the op runs inline on the dispatcher
+                // thread, paying the modeled switch cost. `sync` is
+                // implicit (host funcs block the stream).
+                let cost = self.config().hostfunc_switch_ns;
+                gpu.launch_host_func(cost, func)
+            }
+            EnqueueMode::ProgressThread => self.engine().submit(gpu, sync, func),
+        }
+    }
+
+    /// `MPIX_Send_enqueue` from a host buffer (snapshotted at call time).
+    pub fn send_enqueue(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        let data = buf.to_vec();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            p.send(&data, dst, tag, &c).expect("enqueued send failed");
+        }))
+    }
+
+    /// `MPIX_Send_enqueue` from device memory (GPU-aware path: the payload
+    /// is read from the device heap when the stream reaches the op).
+    pub fn send_enqueue_dev(&self, src: DevicePtr, dst: u32, tag: i32, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        let dev = self.gpu();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            let data = dev.read_sync(src).expect("device read for enqueued send");
+            p.send(&data, dst, tag, &c).expect("enqueued send failed");
+        }))
+    }
+
+    /// `MPIX_Recv_enqueue` into device memory (the Listing-4 pattern:
+    /// `MPIX_Recv_enqueue(d_x, ...)`).
+    pub fn recv_enqueue_dev(&self, dst: DevicePtr, src: i32, tag: i32, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        let dev = self.gpu();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            let mut staging = vec![0u8; dst.len()];
+            let st = p.recv(&mut staging, src, tag, &c).expect("enqueued recv failed");
+            dev.write_sync(dst.slice(0, st.count).expect("recv range"), &staging[..st.count])
+                .expect("device write for enqueued recv");
+        }))
+    }
+
+    /// `MPIX_Isend_enqueue`: initiate on the stream, complete with
+    /// [`Proc::wait_enqueue`].
+    pub fn isend_enqueue(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<EnqueuedRequest> {
+        let gpu = enqueue_target(comm)?;
+        let stream_id = comm.local_stream().unwrap().id();
+        let slot = Arc::new(Mutex::new(SlotState::NotStarted));
+        let p = self.clone();
+        let c = comm.clone();
+        let data = buf.to_vec();
+        let s2 = slot.clone();
+        self.enqueue_op(&gpu, false, Box::new(move || {
+            let req = p.isend(&data, dst, tag, &c).expect("enqueued isend failed");
+            *s2.lock().unwrap() = SlotState::Started { req, staging: None };
+        }))?;
+        Ok(EnqueuedRequest { slot, stream_id })
+    }
+
+    /// `MPIX_Irecv_enqueue` into device memory.
+    pub fn irecv_enqueue_dev(
+        &self,
+        dst: DevicePtr,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+    ) -> Result<EnqueuedRequest> {
+        let gpu = enqueue_target(comm)?;
+        let stream_id = comm.local_stream().unwrap().id();
+        if src != ANY_SOURCE {
+            comm.check_rank(src as u32)?;
+        }
+        if tag < 0 && tag != ANY_TAG {
+            return Err(MpiErr::Tag(tag));
+        }
+        let slot = Arc::new(Mutex::new(SlotState::NotStarted));
+        let p = self.clone();
+        let c = comm.clone();
+        let s2 = slot.clone();
+        self.enqueue_op(&gpu, false, Box::new(move || {
+            let mut staging = vec![0u8; dst.len()].into_boxed_slice();
+            let dest = RecvDest::new(&mut staging, Datatype::U8, dst.len()).expect("staging dest");
+            let route = p.route_rx(&c, src, tag, c.ctx_id(), None).expect("recv route");
+            let req = p.irecv_dest(dest, route).expect("enqueued irecv failed");
+            *s2.lock().unwrap() = SlotState::Started { req, staging: Some((staging, dst)) };
+        }))?;
+        Ok(EnqueuedRequest { slot, stream_id })
+    }
+
+    /// `MPIX_Wait_enqueue`: enqueue the completion of an i-enqueue
+    /// operation onto its stream.
+    pub fn wait_enqueue(&self, req: EnqueuedRequest, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let stream = comm.local_stream().unwrap();
+        if req.stream_id != stream.id() {
+            return Err(MpiErr::Request(format!(
+                "MPIX_Wait_enqueue on stream {} for a request issued on stream {}",
+                stream.id(),
+                req.stream_id
+            )));
+        }
+        let p = self.clone();
+        let dev = self.gpu();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            let state = std::mem::replace(&mut *req.slot.lock().unwrap(), SlotState::Done);
+            match state {
+                SlotState::Started { req, staging } => {
+                    let st = p.wait(req).expect("enqueued wait failed");
+                    if let Some((staging, dst)) = staging {
+                        dev.write_sync(dst.slice(0, st.count).expect("recv range"), &staging[..st.count])
+                            .expect("device write for enqueued irecv");
+                    }
+                }
+                SlotState::NotStarted => {
+                    panic!("wait op ran before its initiate op — stream ordering violated")
+                }
+                SlotState::Done => panic!("double MPIX_Wait_enqueue on the same request"),
+            }
+        }))
+    }
+
+    /// `MPIX_Waitall_enqueue`. All requests must have been issued on the
+    /// same local stream — enforced, per the paper.
+    pub fn waitall_enqueue(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
+        let stream = comm
+            .local_stream()
+            .ok_or_else(|| MpiErr::Comm("waitall_enqueue requires a GPU stream communicator".into()))?;
+        for r in &reqs {
+            if r.stream_id != stream.id() {
+                return Err(MpiErr::Request(format!(
+                    "MPIX_Waitall_enqueue requires all requests on stream {}, found one from stream {}",
+                    stream.id(),
+                    r.stream_id
+                )));
+            }
+        }
+        for r in reqs {
+            self.wait_enqueue(r, comm)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+
+    fn gpu_world(mode: EnqueueMode) -> World {
+        World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: 2, enqueue_mode: mode, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    fn run_roundtrip(mode: EnqueueMode) {
+        let w = gpu_world(mode);
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            if p.rank() == 0 {
+                p.send_enqueue(b"payload!", 1, 3, &c)?;
+                gs.synchronize()?;
+            } else {
+                let d = dev.alloc(8);
+                p.recv_enqueue_dev(d, 0, 3, &c)?;
+                gs.synchronize()?;
+                assert_eq!(dev.read_sync(d)?, b"payload!");
+                dev.free(d)?;
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn blocking_enqueue_roundtrip_hostfunc() {
+        run_roundtrip(EnqueueMode::HostFunc);
+    }
+
+    #[test]
+    fn blocking_enqueue_roundtrip_progress_thread() {
+        run_roundtrip(EnqueueMode::ProgressThread);
+    }
+
+    #[test]
+    fn ienqueue_with_wait_enqueue() {
+        let w = gpu_world(EnqueueMode::HostFunc);
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "gpuStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            if p.rank() == 0 {
+                let r1 = p.isend_enqueue(b"aa", 1, 1, &c)?;
+                let r2 = p.isend_enqueue(b"bb", 1, 2, &c)?;
+                p.waitall_enqueue(vec![r1, r2], &c)?;
+                gs.synchronize()?;
+            } else {
+                let d1 = dev.alloc(2);
+                let d2 = dev.alloc(2);
+                let r1 = p.irecv_enqueue_dev(d1, 0, 1, &c)?;
+                let r2 = p.irecv_enqueue_dev(d2, 0, 2, &c)?;
+                p.waitall_enqueue(vec![r1, r2], &c)?;
+                gs.synchronize()?;
+                assert_eq!(dev.read_sync(d1)?, b"aa");
+                assert_eq!(dev.read_sync(d2)?, b"bb");
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn enqueue_requires_gpu_stream_comm() {
+        let w = World::builder()
+            .ranks(1)
+            .config(Config { explicit_pool: 1, ..Default::default() })
+            .build()
+            .unwrap();
+        let p = w.proc(0);
+        // Regular communicator: error ("it is an error to call the enqueue
+        // functions if the communicator is not a stream communicator").
+        assert!(matches!(p.send_enqueue(b"x", 0, 0, p.world_comm()), Err(MpiErr::Comm(_))));
+        // CPU-stream communicator: also an error (no local GPU stream).
+        let s = p.stream_create(&Info::null()).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        assert!(matches!(p.send_enqueue(b"x", 0, 0, &c), Err(MpiErr::Comm(_))));
+        let d = p.gpu().alloc(1);
+        assert!(matches!(p.recv_enqueue_dev(d, 0, 0, &c), Err(MpiErr::Comm(_))));
+        p.gpu().free(d).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+    }
+
+    #[test]
+    fn waitall_enqueue_rejects_mixed_streams() {
+        let w = World::builder()
+            .ranks(1)
+            .config(Config { explicit_pool: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        let p = w.proc(0);
+        let dev = p.gpu();
+        let g1 = dev.create_stream();
+        let g2 = dev.create_stream();
+        let mk = |g: &crate::gpu::GpuStream| {
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", g.id());
+            p.stream_create(&info).unwrap()
+        };
+        let s1 = mk(&g1);
+        let s2 = mk(&g2);
+        let c1 = p.stream_comm_create(p.world_comm(), Some(&s1)).unwrap();
+        let c2 = p.stream_comm_create(p.world_comm(), Some(&s2)).unwrap();
+        // Self-messages on a 1-rank world.
+        let r1 = p.isend_enqueue(b"x", 0, 0, &c1).unwrap();
+        let r2 = p.isend_enqueue(b"y", 0, 0, &c2).unwrap();
+        let err = p.waitall_enqueue(vec![r1, r2], &c1);
+        assert!(matches!(err, Err(MpiErr::Request(_))), "mixed-stream waitall must fail");
+        // Drain the sends so teardown is clean.
+        let mut b = [0u8; 1];
+        p.recv(&mut b, 0, 0, &c1).unwrap();
+        p.recv(&mut b, 0, 0, &c2).unwrap();
+        g1.synchronize().unwrap();
+        g2.synchronize().unwrap();
+        drop(c1);
+        drop(c2);
+        p.stream_free(s1).unwrap();
+        p.stream_free(s2).unwrap();
+        dev.destroy_stream(&g1).unwrap();
+        dev.destroy_stream(&g2).unwrap();
+    }
+}
+
+// ----------------------------------------------------------------------
+// Enqueued collectives (§3.4: "The enqueue APIs can be extended to
+// collectives ... identical function signatures as their conventional
+// counterparts.")
+// ----------------------------------------------------------------------
+
+impl Proc {
+    /// `MPIX_Bcast_enqueue`: enqueue a broadcast on the communicator's GPU
+    /// stream. Ranks without an enqueuing stream call the conventional
+    /// `bcast` — the two interoperate (the enqueued op runs the same
+    /// collective on the dispatcher thread).
+    pub fn bcast_enqueue_dev(&self, buf: DevicePtr, root: u32, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        let dev = self.gpu();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            let mut staging = dev.read_sync(buf).expect("bcast staging read");
+            p.bcast(&mut staging, root, &c).expect("enqueued bcast");
+            dev.write_sync(buf, &staging).expect("bcast staging write");
+        }))
+    }
+
+    /// `MPIX_Allreduce_enqueue` over device memory.
+    pub fn allreduce_enqueue_dev(
+        &self,
+        buf: DevicePtr,
+        dt: Datatype,
+        op: crate::mpi::datatype::Op,
+        comm: &Comm,
+    ) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        let dev = self.gpu();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            let mut staging = dev.read_sync(buf).expect("allreduce staging read");
+            p.allreduce(&mut staging, &dt, op, &c).expect("enqueued allreduce");
+            dev.write_sync(buf, &staging).expect("allreduce staging write");
+        }))
+    }
+
+    /// `MPIX_Barrier_enqueue`.
+    pub fn barrier_enqueue(&self, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        let p = self.clone();
+        let c = comm.clone();
+        self.enqueue_op(&gpu, true, Box::new(move || {
+            p.barrier(&c).expect("enqueued barrier");
+        }))
+    }
+}
+
+#[cfg(test)]
+mod coll_tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mpi::datatype::Op;
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn enqueued_collectives_mix_with_conventional() {
+        let cfg = Config { explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(3).config(cfg).build().unwrap();
+        w.run(|p| {
+            // Ranks 0 and 1 enqueue on GPU streams; rank 2 has no GPU
+            // stream and calls the conventional collectives (the paper's
+            // mixed mode).
+            if p.rank() < 2 {
+                let dev = p.gpu();
+                let gs = dev.create_stream();
+                let mut info = Info::new();
+                info.set("type", "gpuStream_t");
+                info.set_hex_u64("value", gs.id());
+                let s = p.stream_create(&info)?;
+                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                let d = dev.alloc(8);
+                dev.write_sync(d, &(p.rank() as u64 + 1).to_le_bytes())?;
+                p.allreduce_enqueue_dev(d, Datatype::U64, Op::Sum, &c)?;
+                let bytes = if p.rank() == 0 { 0xAAu64.to_le_bytes() } else { [0u8; 8] };
+                let db = dev.alloc(8);
+                dev.write_sync(db, &bytes)?;
+                p.bcast_enqueue_dev(db, 0, &c)?;
+                p.barrier_enqueue(&c)?;
+                gs.synchronize()?;
+                assert_eq!(u64::from_le_bytes(dev.read_sync(d)?.try_into().unwrap()), 1 + 2 + 3);
+                assert_eq!(u64::from_le_bytes(dev.read_sync(db)?.try_into().unwrap()), 0xAA);
+                dev.free(d)?;
+                dev.free(db)?;
+                p.barrier(p.world_comm())?;
+                drop(c);
+                p.stream_free(s)?;
+                dev.destroy_stream(&gs)?;
+            } else {
+                let s = p.stream_create(&Info::null())?;
+                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                let mut v = (p.rank() as u64 + 1).to_le_bytes().to_vec();
+                p.allreduce(&mut v, &Datatype::U64, Op::Sum, &c)?;
+                assert_eq!(u64::from_le_bytes(v[..8].try_into().unwrap()), 6);
+                let mut b = [0u8; 8];
+                p.bcast(&mut b, 0, &c)?;
+                assert_eq!(u64::from_le_bytes(b), 0xAA);
+                p.barrier(&c)?;
+                p.barrier(p.world_comm())?;
+                drop(c);
+                p.stream_free(s)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's contribution: MPIX streams (§3).
+//!
+//! * [`stream`] — `MPIX_Stream_create/free`, CPU and GPU-backed streams.
+//! * [`stream_comm`] — `MPIX_Stream_comm_create` and
+//!   `MPIX_Stream_comm_create_multiple`.
+//! * [`pt2pt`] — the indexed `MPIX_Stream_send/recv/isend/irecv`.
+//! * [`enqueue`] — `MPIX_{Send,Recv,Isend,Irecv,Wait,Waitall}_enqueue`.
+
+pub mod enqueue;
+pub mod pt2pt;
+pub mod stream;
+pub mod stream_comm;
+
+pub use enqueue::{EnqueuedRequest, EnqueueEngine};
+pub use stream::MpixStream;
+
+/// `MPIX_ANY_INDEX` (§3.5): wildcard source stream index for receives on
+/// multiplex stream communicators.
+pub use crate::mpi::matching::ANY_INDEX;

@@ -1,0 +1,196 @@
+//! Indexed point-to-point for multiplex stream communicators (§3.5):
+//! `MPIX_Stream_send/recv/isend/irecv` with explicit `src_idx`/`dst_idx`.
+//!
+//! "These APIs allow users to explicitly address local and remote streams
+//! via an index. This index can be thought of as a rank for threads."
+//! `MPIX_ANY_INDEX` supports wildcard receives — the key to the N-to-1
+//! pattern, where one polling thread receives messages sent by any remote
+//! thread through a single communicator.
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::Comm;
+use crate::mpi::datatype::Datatype;
+use crate::mpi::matching::RecvDest;
+use crate::mpi::request::Request;
+use crate::mpi::status::Status;
+use crate::mpi::world::Proc;
+use crate::stream::ANY_INDEX;
+
+impl Proc {
+    /// `MPIX_Stream_isend`: send from local stream `src_idx` to the remote
+    /// stream `dst_idx` of rank `dst`.
+    pub fn stream_isend(
+        &self,
+        buf: &[u8],
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<Request> {
+        if !comm.is_multiplex() {
+            return Err(MpiErr::Comm("MPIX_Stream_send requires a multiplex stream communicator".into()));
+        }
+        if src_idx < 0 || dst_idx < 0 {
+            return Err(MpiErr::Arg(format!(
+                "send indices must be concrete (src_idx={src_idx}, dst_idx={dst_idx}); wildcards are receive-only"
+            )));
+        }
+        let route = self.route_tx(comm, dst, tag, comm.ctx_id(), Some((src_idx, dst_idx)))?;
+        self.isend_wire(buf.to_vec(), route)
+    }
+
+    /// `MPIX_Stream_send` (blocking).
+    pub fn stream_send(
+        &self,
+        buf: &[u8],
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<()> {
+        let r = self.stream_isend(buf, dst, tag, comm, src_idx, dst_idx)?;
+        self.wait(r)?;
+        Ok(())
+    }
+
+    /// `MPIX_Stream_irecv`: receive on local stream `dst_idx`; `src_idx`
+    /// may be [`ANY_INDEX`]. The matched sender index is reported in
+    /// [`Status::src_idx`].
+    pub fn stream_irecv(
+        &self,
+        buf: &mut [u8],
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<Request> {
+        if !comm.is_multiplex() {
+            return Err(MpiErr::Comm("MPIX_Stream_recv requires a multiplex stream communicator".into()));
+        }
+        if dst_idx < 0 {
+            return Err(MpiErr::Arg(format!("dst_idx must be a concrete local index, got {dst_idx}")));
+        }
+        if src_idx < 0 && src_idx != ANY_INDEX {
+            return Err(MpiErr::Arg(format!("src_idx must be >= 0 or MPIX_ANY_INDEX, got {src_idx}")));
+        }
+        let dest = RecvDest::new(buf, Datatype::U8, buf.len())?;
+        let route = self.route_rx(comm, src, tag, comm.ctx_id(), Some((src_idx, dst_idx)))?;
+        self.irecv_dest(dest, route)
+    }
+
+    /// `MPIX_Stream_recv` (blocking).
+    pub fn stream_recv(
+        &self,
+        buf: &mut [u8],
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<Status> {
+        let r = self.stream_irecv(buf, src, tag, comm, src_idx, dst_idx)?;
+        self.wait(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+    use crate::mpi::ANY_SOURCE;
+    use crate::stream::ANY_INDEX;
+
+    fn multiplex_world(streams_per_rank: usize) -> World {
+        World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: streams_per_rank, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn indexed_send_recv() {
+        let w = multiplex_world(2);
+        w.run(|p| {
+            let streams: Vec<_> = (0..2).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+            let c = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+            if p.rank() == 0 {
+                // stream 0 -> remote stream 1, stream 1 -> remote stream 0
+                p.stream_send(b"from-s0", 1, 7, &c, 0, 1)?;
+                p.stream_send(b"from-s1", 1, 7, &c, 1, 0)?;
+            } else {
+                let mut b0 = [0u8; 7];
+                let mut b1 = [0u8; 7];
+                // dst_idx selects which local stream receives.
+                let st1 = p.stream_recv(&mut b1, 0, 7, &c, 0, 1)?;
+                let st0 = p.stream_recv(&mut b0, 0, 7, &c, 1, 0)?;
+                assert_eq!(&b1, b"from-s0");
+                assert_eq!(&b0, b"from-s1");
+                assert_eq!(st1.src_idx, 0);
+                assert_eq!(st0.src_idx, 1);
+            }
+            drop(c);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn any_index_wildcard_receive() {
+        let w = multiplex_world(3);
+        w.run(|p| {
+            let n = if p.rank() == 0 { 3 } else { 1 };
+            let streams: Vec<_> = (0..n).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+            let c = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+            if p.rank() == 0 {
+                for i in 0..3 {
+                    p.stream_send(&[i as u8], 1, 5, &c, i, 0)?;
+                }
+            } else {
+                let mut seen = [false; 3];
+                for _ in 0..3 {
+                    let mut b = [0u8; 1];
+                    let st = p.stream_recv(&mut b, ANY_SOURCE, 5, &c, ANY_INDEX, 0)?;
+                    assert_eq!(st.src_idx as u8, b[0], "status must report sender index");
+                    seen[b[0] as usize] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "all sender streams received");
+            }
+            drop(c);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn invalid_indices_rejected() {
+        let w = multiplex_world(1);
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create_multiple(p.world_comm(), std::slice::from_ref(&s))?;
+            let mut b = [0u8; 1];
+            assert!(p.stream_send(&[1], 1 - p.rank(), 0, &c, ANY_INDEX, 0).is_err());
+            assert!(p.stream_irecv(&mut b, 0, 0, &c, 0, -1).is_err());
+            assert!(p.stream_irecv(&mut b, 0, 0, &c, -7, 0).is_err());
+            assert!(p.stream_send(&[1], 1 - p.rank(), 0, &c, 5, 0).is_err(), "src_idx out of range");
+            // Plain sends are an error on multiplex comms.
+            assert!(p.send(&[1], 1 - p.rank(), 0, &c).is_err());
+            drop(c);
+            p.stream_free(s)?;
+            // Sync both ranks before teardown.
+            p.barrier(p.world_comm())?;
+            Ok(())
+        })
+        .unwrap();
+    }
+}

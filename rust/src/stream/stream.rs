@@ -1,0 +1,286 @@
+//! The MPIX stream object (§3.1).
+//!
+//! "An MPIX stream represents a local serial execution context. Any
+//! runtime execution contexts outside MPI, as long as the serial semantic
+//! is strictly followed, can be associated to an MPIX stream."
+//!
+//! A CPU stream pins a reserved VCI (network endpoint) to one serial
+//! context, which lets the runtime skip every critical section on the
+//! communication path. A GPU-backed stream additionally wraps a
+//! [`GpuStream`], enabling the `MPIX_*_enqueue` APIs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{MpiErr, Result};
+use crate::gpu::GpuStream;
+use crate::mpi::info::Info;
+use crate::mpi::world::Proc;
+use crate::vci::pool::VciLease;
+
+pub struct StreamInner {
+    id: u32,
+    rank: u32,
+    lease: VciLease,
+    /// Operations in flight on this stream — `MPIX_Stream_free` refuses
+    /// while nonzero ("the network resource can be deallocated only when
+    /// all the operations using the stream have been completed").
+    pending: Arc<AtomicU64>,
+    gpu: Option<GpuStream>,
+}
+
+impl StreamInner {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn vci_idx(&self) -> u16 {
+        self.lease.idx
+    }
+
+    pub fn is_shared(&self) -> bool {
+        self.lease.shared
+    }
+
+    pub fn pending_ctr(&self) -> &Arc<AtomicU64> {
+        &self.pending
+    }
+
+    pub fn pending_ops(&self) -> u64 {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    pub fn gpu_stream(&self) -> Option<&GpuStream> {
+        self.gpu.as_ref()
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.gpu.is_some()
+    }
+}
+
+/// User-facing MPIX stream handle.
+#[derive(Clone)]
+pub struct MpixStream {
+    pub(crate) inner: Arc<StreamInner>,
+}
+
+impl MpixStream {
+    pub fn id(&self) -> u32 {
+        self.inner.id()
+    }
+
+    pub fn vci_idx(&self) -> u16 {
+        self.inner.vci_idx()
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.inner.is_gpu()
+    }
+
+    pub fn gpu_stream(&self) -> Option<&GpuStream> {
+        self.inner.gpu_stream()
+    }
+
+    /// Operations currently in flight on this stream.
+    pub fn pending_ops(&self) -> u64 {
+        self.inner.pending_ops()
+    }
+}
+
+impl std::fmt::Debug for MpixStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MpixStream")
+            .field("id", &self.inner.id)
+            .field("vci", &self.inner.lease.idx)
+            .field("shared", &self.inner.lease.shared)
+            .field("gpu", &self.inner.is_gpu())
+            .finish()
+    }
+}
+
+impl Proc {
+    /// `MPIX_Stream_create` (§3.1).
+    ///
+    /// Info hints select implementation-supported special streams: set
+    /// `type` to `"cudaStream_t"`/`"gpuStream_t"` and `value` to the GPU
+    /// stream handle via [`Info::set_hex_u64`] (the Listing-4 pattern) to
+    /// create a GPU-backed stream. With no hints, a plain CPU stream is
+    /// created over a dedicated reserved endpoint; fails with
+    /// [`MpiErr::NoEndpoints`] when the explicit pool is exhausted (unless
+    /// `Config::stream_share_endpoints` opts into round-robin sharing).
+    pub fn stream_create(&self, info: &Info) -> Result<MpixStream> {
+        let gpu = match info.get("type") {
+            Some("cudaStream_t") | Some("gpuStream_t") => {
+                let id = info
+                    .get_hex_u64("value")?
+                    .ok_or_else(|| MpiErr::Info("GPU stream type set but no 'value' hint".into()))?;
+                Some(self.gpu().lookup_stream(id)?)
+            }
+            Some(other) => {
+                return Err(MpiErr::Info(format!("unsupported stream type hint '{other}'")));
+            }
+            None => None,
+        };
+        let lease = self.pool().alloc()?;
+        self.mark_vci_shared(lease.idx, lease.shared);
+        Ok(MpixStream {
+            inner: Arc::new(StreamInner {
+                id: self.next_stream_id(),
+                rank: self.rank(),
+                lease,
+                pending: Arc::new(AtomicU64::new(0)),
+                gpu,
+            }),
+        })
+    }
+
+    /// `MPIX_Stream_free` (§3.1).
+    ///
+    /// Fails with [`MpiErr::StreamBusy`] if operations are still pending,
+    /// if the VCI has undrained traffic, or if the stream is still
+    /// attached to a communicator — "a failed or delayed deallocation may
+    /// prevent a future MPIX_Stream_create from succeeding", so failure is
+    /// explicit feedback, not a panic.
+    pub fn stream_free(&self, stream: MpixStream) -> Result<()> {
+        if stream.inner.rank() != self.rank() {
+            return Err(MpiErr::Stream(format!(
+                "stream belongs to rank {}, freed on rank {}",
+                stream.inner.rank(),
+                self.rank()
+            )));
+        }
+        if stream.inner.pending_ops() > 0 {
+            return Err(MpiErr::StreamBusy(format!(
+                "{} operations still pending on stream {}",
+                stream.inner.pending_ops(),
+                stream.id()
+            )));
+        }
+        // Attached communicators (or user clones) hold extra Arcs.
+        if Arc::strong_count(&stream.inner) > 1 {
+            return Err(MpiErr::StreamBusy(format!(
+                "stream {} is still attached to a communicator or cloned handle",
+                stream.id()
+            )));
+        }
+        // Drain any straggling protocol traffic, then require quiescence.
+        let idx = stream.vci_idx();
+        let vci = self.vci(idx).clone();
+        let cs = self.session_for_vci(idx);
+        self.progress_vci(&vci, &cs);
+        if !vci.is_quiescent(&cs) {
+            return Err(MpiErr::StreamBusy(format!(
+                "VCI {idx} still has undrained traffic; progress and retry"
+            )));
+        }
+        drop(cs);
+        let freed = self.pool().free(idx)?;
+        if freed {
+            self.mark_vci_shared(idx, false);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mpi::world::World;
+
+    fn world(explicit: usize) -> World {
+        World::builder()
+            .ranks(1)
+            .config(Config { explicit_pool: explicit, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn create_and_free_cpu_stream() {
+        let w = world(2);
+        let p = w.proc(0);
+        let s = p.stream_create(&Info::null()).unwrap();
+        assert!(!s.is_gpu());
+        assert_eq!(s.pending_ops(), 0);
+        assert_eq!(s.vci_idx(), 1, "first reserved VCI after the implicit pool");
+        p.stream_free(s).unwrap();
+    }
+
+    #[test]
+    fn exhaustion_fails_with_noendpoints() {
+        let w = world(1);
+        let p = w.proc(0);
+        let s1 = p.stream_create(&Info::null()).unwrap();
+        assert!(matches!(p.stream_create(&Info::null()), Err(MpiErr::NoEndpoints(_))));
+        p.stream_free(s1).unwrap();
+        // Resource is reusable after free.
+        let s2 = p.stream_create(&Info::null()).unwrap();
+        p.stream_free(s2).unwrap();
+    }
+
+    #[test]
+    fn free_rejects_cloned_handles() {
+        let w = world(1);
+        let p = w.proc(0);
+        let s = p.stream_create(&Info::null()).unwrap();
+        let clone = s.clone();
+        assert!(matches!(p.stream_free(s), Err(MpiErr::StreamBusy(_))));
+        p.stream_free(clone).unwrap();
+    }
+
+    #[test]
+    fn gpu_stream_hint_roundtrip() {
+        let w = world(1);
+        let p = w.proc(0);
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info).unwrap();
+        assert!(s.is_gpu());
+        assert_eq!(s.gpu_stream().unwrap().id(), gs.id());
+        p.stream_free(s).unwrap();
+        dev.destroy_stream(&gs).unwrap();
+    }
+
+    #[test]
+    fn bad_hints_rejected() {
+        let w = world(1);
+        let p = w.proc(0);
+        let mut info = Info::new();
+        info.set("type", "openclQueue_t");
+        assert!(matches!(p.stream_create(&info), Err(MpiErr::Info(_))));
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t"); // no value
+        assert!(matches!(p.stream_create(&info), Err(MpiErr::Info(_))));
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", 999); // unknown stream
+        assert!(matches!(p.stream_create(&info), Err(MpiErr::Stream(_))));
+    }
+
+    #[test]
+    fn shared_streams_when_configured() {
+        let w = World::builder()
+            .ranks(1)
+            .config(Config { explicit_pool: 1, stream_share_endpoints: true, ..Default::default() })
+            .build()
+            .unwrap();
+        let p = w.proc(0);
+        let a = p.stream_create(&Info::null()).unwrap();
+        let b = p.stream_create(&Info::null()).unwrap();
+        assert!(!a.inner.is_shared());
+        assert!(b.inner.is_shared(), "overflow stream shares the endpoint");
+        // A shared endpoint demotes the path to per-VCI locking.
+        assert_eq!(p.mode_for_vci(b.vci_idx()), crate::config::CsMode::PerVci);
+        p.stream_free(b).unwrap();
+        p.stream_free(a).unwrap();
+    }
+}

@@ -1,0 +1,195 @@
+//! Stream communicators (§3.3) and multiplex stream communicators (§3.5).
+//!
+//! Creation is collective over the parent communicator: every process
+//! contributes the network-endpoint (VCI) index of its attached stream(s),
+//! Allgathered and stored locally so the sender side can address the
+//! receiver's endpoint explicitly — resolving the nonlocality problem of
+//! §2.3 without any hashing convention.
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::{Comm, CommKind};
+use crate::mpi::world::Proc;
+use crate::stream::MpixStream;
+use crate::vci::hashing::{pick_vci, Side};
+
+impl Proc {
+    /// `MPIX_Stream_comm_create` (§3.3). `stream = None` is
+    /// `MPIX_STREAM_NULL`: that process participates with its implicit
+    /// endpoint ("any process is allowed to use MPIX_STREAM_NULL in
+    /// constructing the stream communicator").
+    ///
+    /// If the parent is itself a stream communicator, it is treated as a
+    /// normal communicator (its stream attachment is discarded).
+    pub fn stream_comm_create(&self, parent: &Comm, stream: Option<&MpixStream>) -> Result<Comm> {
+        if let Some(s) = stream {
+            if s.inner.rank() != self.rank() {
+                return Err(MpiErr::Stream(format!(
+                    "stream belongs to rank {}, used on rank {}",
+                    s.inner.rank(),
+                    self.rank()
+                )));
+            }
+        }
+        let ctx = self.agree_ctx_block(parent, 1)?;
+        let my_vci = match stream {
+            Some(s) => s.vci_idx(),
+            None => pick_vci(self.config().hash_policy, ctx, self.config().implicit_pool, Side::Rx, self.rr()),
+        };
+        // Allgather each process's endpoint index.
+        let mine = my_vci.to_le_bytes();
+        let mut all = vec![0u8; 2 * parent.size() as usize];
+        self.allgather(&mine, &mut all, parent)?;
+        let remote_vcis: Vec<u16> =
+            all.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(Comm::new(
+            ctx,
+            parent.rank(),
+            parent.group().clone(),
+            CommKind::Stream { local: stream.map(|s| s.inner.clone()), remote_vcis },
+        ))
+    }
+
+    /// `MPIX_Stream_comm_create_multiple` (§3.5): attach several local
+    /// streams; processes may attach different counts. Point-to-point on
+    /// the result goes through the indexed `MPIX_Stream_send/recv` APIs.
+    pub fn stream_comm_create_multiple(&self, parent: &Comm, streams: &[MpixStream]) -> Result<Comm> {
+        if streams.is_empty() {
+            return Err(MpiErr::Arg("multiplex stream comm needs at least one local stream".into()));
+        }
+        for s in streams {
+            if s.inner.rank() != self.rank() {
+                return Err(MpiErr::Stream(format!(
+                    "stream belongs to rank {}, used on rank {}",
+                    s.inner.rank(),
+                    self.rank()
+                )));
+            }
+        }
+        let ctx = self.agree_ctx_block(parent, 1)?;
+        let n = parent.size() as usize;
+
+        // Exchange per-rank stream counts.
+        let count = streams.len() as u32;
+        let mut counts_bytes = vec![0u8; 4 * n];
+        self.allgather(&count.to_le_bytes(), &mut counts_bytes, parent)?;
+        let counts: Vec<usize> = counts_bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let max_count = counts.iter().copied().max().unwrap_or(0);
+
+        // Exchange padded VCI tables.
+        let mut mine = vec![0xFFu8; 2 * max_count];
+        for (i, s) in streams.iter().enumerate() {
+            mine[2 * i..2 * i + 2].copy_from_slice(&s.vci_idx().to_le_bytes());
+        }
+        let mut all = vec![0u8; mine.len() * n];
+        self.allgather(&mine, &mut all, parent)?;
+        let remote_vcis: Vec<Vec<u16>> = (0..n)
+            .map(|r| {
+                (0..counts[r])
+                    .map(|i| {
+                        let o = r * 2 * max_count + 2 * i;
+                        u16::from_le_bytes(all[o..o + 2].try_into().unwrap())
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let locals = streams.iter().map(|s| s.inner.clone()).collect();
+        Ok(Comm::new(
+            ctx,
+            parent.rank(),
+            parent.group().clone(),
+            CommKind::Multiplex { locals, remote_vcis },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn stream_comm_exchanges_endpoints() {
+        let w = World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            assert!(c.is_stream_comm());
+            // Both ranks allocated their first reserved VCI (index 1).
+            assert_eq!(c.remote_vci(0), Some(1));
+            assert_eq!(c.remote_vci(1), Some(1));
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn null_stream_registers_implicit_endpoint() {
+        let w = World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: 1, ..Default::default() })
+            .build()
+            .unwrap();
+        w.run(|p| {
+            // Rank 0 attaches a real stream; rank 1 uses MPIX_STREAM_NULL.
+            if p.rank() == 0 {
+                let s = p.stream_create(&Info::null())?;
+                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                assert_eq!(c.remote_vci(0), Some(1), "rank 0 registered its stream VCI");
+                assert_eq!(c.remote_vci(1), Some(0), "rank 1 registered an implicit VCI");
+                drop(c);
+                p.stream_free(s)?;
+            } else {
+                let c = p.stream_comm_create(p.world_comm(), None)?;
+                assert!(c.local_stream().is_none());
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn multiplex_handles_uneven_counts() {
+        let w = World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: 4, ..Default::default() })
+            .build()
+            .unwrap();
+        w.run(|p| {
+            let nstreams = if p.rank() == 0 { 3 } else { 1 };
+            let streams: Vec<_> =
+                (0..nstreams).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+            let c = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+            assert!(c.is_multiplex());
+            assert_eq!(c.local_stream_count(), nstreams);
+            // Rank 0 registered 3 streams at VCIs 1,2,3; rank 1 just one.
+            assert_eq!(c.remote_vci_at(0, 0)?, 1);
+            assert_eq!(c.remote_vci_at(0, 2)?, 3);
+            assert_eq!(c.remote_vci_at(1, 0)?, 1);
+            assert!(c.remote_vci_at(1, 1).is_err());
+            drop(c);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn empty_multiplex_rejected() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        assert!(p.stream_comm_create_multiple(p.world_comm(), &[]).is_err());
+    }
+}

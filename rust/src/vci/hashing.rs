@@ -1,0 +1,92 @@
+//! Implicit VCI selection policies (§2.3).
+//!
+//! "When one does not specify a network endpoint in a communication ... the
+//! implementation chooses a default network endpoint for both the local
+//! process and remote process. ... The hashing algorithm must be
+//! deterministic and consistent for both the sender side and receiver
+//! side."
+//!
+//! The three policies here are the ones the paper discusses:
+//! * constant default endpoint (serializes everything),
+//! * one-to-one per-communicator mapping (the "perfect implicit hashing"
+//!   of the Fig. 3 benchmark),
+//! * sender-any / receiver-default (the N-to-1 policy).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::HashPolicy;
+
+/// Which side of the transfer is being resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Tx,
+    Rx,
+}
+
+/// Pick the implicit-pool VCI index for one side of a transfer.
+///
+/// `rr` is the per-process round-robin counter used by the sender-any
+/// policy. The function is deterministic in `(policy, ctx_id, side)` for
+/// the policies that require sender/receiver agreement.
+pub fn pick_vci(policy: HashPolicy, ctx_id: u32, implicit_pool: usize, side: Side, rr: &AtomicU32) -> u16 {
+    debug_assert!(implicit_pool >= 1);
+    match policy {
+        HashPolicy::Constant => 0,
+        HashPolicy::PerComm => (ctx_id as usize % implicit_pool) as u16,
+        HashPolicy::SenderAnyRecvZero => match side {
+            // "the sender side can easily achieve concurrent sends by
+            // hashing local information or even by random assignment"
+            Side::Tx => (rr.fetch_add(1, Ordering::Relaxed) as usize % implicit_pool) as u16,
+            // "messages are all received by a single network endpoint"
+            Side::Rx => 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_always_zero() {
+        let rr = AtomicU32::new(0);
+        for ctx in 0..8 {
+            assert_eq!(pick_vci(HashPolicy::Constant, ctx, 4, Side::Tx, &rr), 0);
+            assert_eq!(pick_vci(HashPolicy::Constant, ctx, 4, Side::Rx, &rr), 0);
+        }
+    }
+
+    #[test]
+    fn per_comm_is_symmetric_and_spreads() {
+        let rr = AtomicU32::new(0);
+        let mut seen = std::collections::HashSet::new();
+        for ctx in 0..4 {
+            let tx = pick_vci(HashPolicy::PerComm, ctx, 4, Side::Tx, &rr);
+            let rx = pick_vci(HashPolicy::PerComm, ctx, 4, Side::Rx, &rr);
+            // Sender and receiver must agree (one-to-one mapping).
+            assert_eq!(tx, rx);
+            seen.insert(tx);
+        }
+        // 4 communicators over a pool of 4: perfect spread.
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn per_comm_wraps_pool() {
+        let rr = AtomicU32::new(0);
+        assert_eq!(pick_vci(HashPolicy::PerComm, 5, 4, Side::Tx, &rr), 1);
+    }
+
+    #[test]
+    fn sender_any_recv_zero() {
+        let rr = AtomicU32::new(0);
+        let txs: Vec<u16> =
+            (0..8).map(|_| pick_vci(HashPolicy::SenderAnyRecvZero, 3, 4, Side::Tx, &rr)).collect();
+        // Sender spreads round-robin over the pool...
+        assert_eq!(txs, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        // ...receiver is pinned to the default endpoint.
+        for _ in 0..4 {
+            assert_eq!(pick_vci(HashPolicy::SenderAnyRecvZero, 3, 4, Side::Rx, &rr), 0);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Critical-section disciplines (§2.1, §4.1, §5.3).
+//!
+//! Three models, matching the three curves of Figure 3:
+//!
+//! * **Global** — one process-wide mutex around every MPI call; the wait
+//!   loop periodically yields it (the "naive implementation ... impose[s] a
+//!   global critical section for every MPI call and yield[s] only during
+//!   its progress loop").
+//! * **PerVci** — fine-grained locks *inside* each sub-step: a tx/drain
+//!   lock on the endpoint and a state lock on the matching queues. "It
+//!   often takes multiple critical sections along the communication path —
+//!   in particular, the receive path and progress engine."
+//! * **LockFree** — no locks: the VCI is owned by a strictly serial MPIX
+//!   stream context, so "the implementation may safely skip critical
+//!   sections in the communication path".
+//!
+//! Every acquisition is counted in a thread-local tally so the ablation
+//! bench can report lock-ops/message per mode without perturbing the hot
+//! path with atomics.
+
+use std::cell::Cell;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::config::CsMode;
+
+thread_local! {
+    static LOCK_OPS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Read and reset this thread's lock-acquisition tally.
+pub fn take_lock_ops() -> u64 {
+    LOCK_OPS.with(|c| {
+        let v = c.get();
+        c.set(0);
+        v
+    })
+}
+
+/// Read this thread's lock-acquisition tally without resetting.
+pub fn peek_lock_ops() -> u64 {
+    LOCK_OPS.with(|c| c.get())
+}
+
+#[inline]
+fn count_lock() {
+    LOCK_OPS.with(|c| c.set(c.get() + 1));
+}
+
+/// A per-MPI-call critical-section session.
+///
+/// In `Global` mode the session acquires the process-wide mutex at entry
+/// and holds it for the whole call; [`CsSession::yield_cs`] releases and
+/// re-acquires it so blocking waits stay live. In the other modes the
+/// session is a mode witness; locking happens (or doesn't) inside each
+/// sub-step via [`StepLock`].
+pub struct CsSession<'p> {
+    mode: CsMode,
+    global: &'p Mutex<()>,
+    guard: std::cell::RefCell<Option<MutexGuard<'p, ()>>>,
+}
+
+impl<'p> CsSession<'p> {
+    pub fn enter(mode: CsMode, global: &'p Mutex<()>) -> CsSession<'p> {
+        let guard = if mode == CsMode::Global {
+            count_lock();
+            Some(global.lock().expect("global CS poisoned"))
+        } else {
+            None
+        };
+        CsSession { mode, global, guard: std::cell::RefCell::new(guard) }
+    }
+
+    pub fn mode(&self) -> CsMode {
+        self.mode
+    }
+
+    /// Release the global CS (if held), yield the CPU, re-acquire. The
+    /// fairness point of blocking wait loops.
+    pub fn yield_cs(&self) {
+        if self.mode == CsMode::Global {
+            *self.guard.borrow_mut() = None;
+            std::thread::yield_now();
+            count_lock();
+            *self.guard.borrow_mut() = Some(self.global.lock().expect("global CS poisoned"));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Debug check: does this session confer exclusive access?
+    pub fn holds_global(&self) -> bool {
+        self.guard.borrow().is_some()
+    }
+}
+
+/// A fine-grained sub-step lock (endpoint tx/drain or matching state).
+/// Acquired only in `PerVci` mode; `Global` relies on the session guard,
+/// `LockFree` relies on the stream serial context.
+pub struct StepLock {
+    inner: Mutex<()>,
+}
+
+impl StepLock {
+    pub fn new() -> Self {
+        StepLock { inner: Mutex::new(()) }
+    }
+
+    /// Acquire per the session discipline. The returned guard must be held
+    /// across the protected sub-step.
+    #[inline]
+    pub fn acquire<'a>(&'a self, cs: &CsSession<'_>) -> Option<MutexGuard<'a, ()>> {
+        match cs.mode {
+            CsMode::PerVci => {
+                count_lock();
+                Some(self.inner.lock().expect("step lock poisoned"))
+            }
+            CsMode::Global => {
+                debug_assert!(cs.holds_global(), "Global mode sub-step without the session guard");
+                None
+            }
+            CsMode::LockFree => None,
+        }
+    }
+}
+
+impl Default for StepLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_session_holds_guard() {
+        let m = Mutex::new(());
+        let cs = CsSession::enter(CsMode::Global, &m);
+        assert!(cs.holds_global());
+        assert!(m.try_lock().is_err(), "global CS must be held");
+        drop(cs);
+        assert!(m.try_lock().is_ok());
+    }
+
+    #[test]
+    fn pervci_session_does_not_hold_global() {
+        let m = Mutex::new(());
+        let cs = CsSession::enter(CsMode::PerVci, &m);
+        assert!(!cs.holds_global());
+        assert!(m.try_lock().is_ok());
+        drop(cs);
+    }
+
+    #[test]
+    fn yield_cs_releases_and_reacquires() {
+        let m = Mutex::new(());
+        let cs = CsSession::enter(CsMode::Global, &m);
+        cs.yield_cs();
+        assert!(cs.holds_global(), "must re-acquire after yield");
+    }
+
+    #[test]
+    fn step_lock_only_in_pervci() {
+        let m = Mutex::new(());
+        let step = StepLock::new();
+        let cs = CsSession::enter(CsMode::PerVci, &m);
+        assert!(step.acquire(&cs).is_some());
+        let cs = CsSession::enter(CsMode::LockFree, &m);
+        assert!(step.acquire(&cs).is_none());
+    }
+
+    #[test]
+    fn lock_ops_tally_per_mode() {
+        let m = Mutex::new(());
+        let step = StepLock::new();
+        let _ = take_lock_ops();
+
+        // LockFree: zero lock ops.
+        {
+            let cs = CsSession::enter(CsMode::LockFree, &m);
+            let _g = step.acquire(&cs);
+        }
+        assert_eq!(take_lock_ops(), 0);
+
+        // PerVci: one per sub-step.
+        {
+            let cs = CsSession::enter(CsMode::PerVci, &m);
+            let _g1 = step.acquire(&cs);
+            drop(_g1);
+            let _g2 = step.acquire(&cs);
+        }
+        assert_eq!(take_lock_ops(), 2);
+
+        // Global: one per session (+1 per yield).
+        {
+            let cs = CsSession::enter(CsMode::Global, &m);
+            let _g = step.acquire(&cs);
+            cs.yield_cs();
+        }
+        assert_eq!(take_lock_ops(), 2);
+    }
+}

@@ -1,0 +1,220 @@
+//! Virtual communication interfaces — MPICH's VCI model (§5.1).
+//!
+//! A VCI bundles a network endpoint with its own matching state. "With the
+//! per-VCI critical section model, each VCI uses separate mutexes and
+//! accesses dedicated network endpoints. Communications from separate VCIs
+//! can be fully concurrent."
+//!
+//! In this runtime a VCI *is* the unit the paper's whole argument revolves
+//! around: implicit hashing distributes traffic over the implicit pool,
+//! while `MPIX_Stream_create` pins a VCI from the explicit pool to one
+//! serial execution context so every lock can be elided.
+
+pub mod hashing;
+pub mod lock;
+pub mod pool;
+
+use std::cell::UnsafeCell;
+#[cfg(debug_assertions)]
+use std::sync::atomic::Ordering;
+use std::sync::atomic::AtomicI64;
+use std::sync::Arc;
+
+use crate::fabric::addr::EpAddr;
+use crate::fabric::endpoint::Endpoint;
+use crate::mpi::matching::MatchState;
+use lock::{CsSession, StepLock};
+
+/// Which pool a VCI belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Implicit pool: shared by traditional communicators via hashing;
+    /// protected by the configured critical-section mode.
+    Implicit,
+    /// Explicit (reserved) pool: owned by MPIX streams; lock-free under
+    /// the stream serial-context guarantee.
+    Explicit,
+}
+
+/// A virtual communication interface.
+pub struct Vci {
+    idx: u16,
+    ep: Arc<Endpoint>,
+    pool: PoolKind,
+    state: UnsafeCell<MatchState>,
+    /// Fine-grained endpoint tx/drain lock (PerVci mode).
+    ep_lock: StepLock,
+    /// Fine-grained matching-state lock (PerVci mode).
+    state_lock: StepLock,
+    /// Debug-mode serial-context check for lock-free access.
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    owner: AtomicI64,
+}
+
+unsafe impl Send for Vci {}
+unsafe impl Sync for Vci {}
+
+impl Vci {
+    pub fn new(idx: u16, ep: Arc<Endpoint>, pool: PoolKind) -> Self {
+        Vci {
+            idx,
+            ep,
+            pool,
+            state: UnsafeCell::new(MatchState::new()),
+            ep_lock: StepLock::new(),
+            state_lock: StepLock::new(),
+            owner: AtomicI64::new(-1),
+        }
+    }
+
+    pub fn idx(&self) -> u16 {
+        self.idx
+    }
+
+    pub fn pool(&self) -> PoolKind {
+        self.pool
+    }
+
+    pub fn ep(&self) -> &Arc<Endpoint> {
+        &self.ep
+    }
+
+    pub fn addr(&self) -> EpAddr {
+        self.ep.addr()
+    }
+
+    /// Run `f` over the matching state under the session's discipline.
+    ///
+    /// Soundness: `Global` — the session holds the process-wide mutex;
+    /// `PerVci` — `state_lock` is held for the duration; `LockFree` — the
+    /// caller is the VCI's serial stream context (debug-checked).
+    #[inline]
+    pub fn with_state<R>(&self, cs: &CsSession<'_>, f: impl FnOnce(&mut MatchState) -> R) -> R {
+        let _guard = self.state_lock.acquire(cs);
+        #[cfg(debug_assertions)]
+        let _check = self.serial_check(cs);
+        // SAFETY: exclusive access per the discipline above.
+        let state = unsafe { &mut *self.state.get() };
+        f(state)
+    }
+
+    /// Serialize endpoint access (tx doorbell / rx drain) per the session
+    /// discipline. Hold the returned token across the endpoint operation.
+    #[inline]
+    pub fn ep_access<'a>(&'a self, cs: &CsSession<'_>) -> Option<std::sync::MutexGuard<'a, ()>> {
+        self.ep_lock.acquire(cs)
+    }
+
+    /// Quiescence check used by `MPIX_Stream_free`: nothing parked in the
+    /// matching state and nothing pending in the endpoint ring.
+    pub fn is_quiescent(&self, cs: &CsSession<'_>) -> bool {
+        self.ep.inbound_len() == 0 && self.with_state(cs, |st| st.is_quiescent())
+    }
+
+    #[cfg(debug_assertions)]
+    fn serial_check(&self, cs: &CsSession<'_>) -> Option<SerialGuard<'_>> {
+        use crate::config::CsMode;
+        if cs.mode() != CsMode::LockFree {
+            return None;
+        }
+        let me = thread_token();
+        match self.owner.compare_exchange(-1, me, Ordering::Acquire, Ordering::Relaxed) {
+            Ok(_) => Some(SerialGuard { vci: self }),
+            Err(cur) => {
+                assert_eq!(
+                    cur, me,
+                    "serial-context violation: VCI {} accessed lock-free from two threads concurrently",
+                    self.idx
+                );
+                None // re-entrant from owner; keep ownership
+            }
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+pub(crate) struct SerialGuard<'a> {
+    vci: &'a Vci,
+}
+
+#[cfg(debug_assertions)]
+impl Drop for SerialGuard<'_> {
+    fn drop(&mut self) {
+        self.vci.owner.store(-1, Ordering::Release);
+    }
+}
+
+#[cfg(debug_assertions)]
+fn thread_token() -> i64 {
+    use std::cell::Cell;
+    static NEXT: AtomicI64 = AtomicI64::new(1);
+    thread_local! {
+        static ID: Cell<i64> = const { Cell::new(0) };
+    }
+    ID.with(|c| {
+        if c.get() == 0 {
+            c.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        c.get()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CsMode;
+    use crate::fabric::Fabric;
+    use std::sync::Mutex;
+
+    fn vci() -> (Vci, Mutex<()>) {
+        let f = Fabric::new(1, 1, 1024);
+        (Vci::new(0, f.endpoint(EpAddr { rank: 0, ep: 0 }), PoolKind::Implicit), Mutex::new(()))
+    }
+
+    #[test]
+    fn state_access_roundtrip() {
+        let (v, m) = vci();
+        for mode in [CsMode::Global, CsMode::PerVci, CsMode::LockFree] {
+            let cs = CsSession::enter(mode, &m);
+            let n = v.with_state(&cs, |st| {
+                assert!(st.is_quiescent());
+                st.posted_len()
+            });
+            assert_eq!(n, 0);
+        }
+    }
+
+    #[test]
+    fn quiescent_when_fresh() {
+        let (v, m) = vci();
+        let cs = CsSession::enter(CsMode::PerVci, &m);
+        assert!(v.is_quiescent(&cs));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn lockfree_concurrent_access_panics() {
+        use std::sync::Arc;
+        let f = Fabric::new(1, 1, 1024);
+        let v = Arc::new(Vci::new(0, f.endpoint(EpAddr { rank: 0, ep: 0 }), PoolKind::Explicit));
+        // Fake another thread owning the VCI.
+        v.owner.store(424242, Ordering::SeqCst);
+        let v2 = v.clone();
+        let res = std::thread::spawn(move || {
+            let m = Mutex::new(());
+            let cs = CsSession::enter(CsMode::LockFree, &m);
+            v2.with_state(&cs, |_| ());
+        })
+        .join();
+        assert!(res.is_err(), "expected serial-context violation");
+    }
+
+    #[test]
+    fn ep_access_guard_only_in_pervci() {
+        let (v, m) = vci();
+        let cs = CsSession::enter(CsMode::PerVci, &m);
+        assert!(v.ep_access(&cs).is_some());
+        let cs = CsSession::enter(CsMode::LockFree, &m);
+        assert!(v.ep_access(&cs).is_none());
+    }
+}

@@ -1,0 +1,180 @@
+//! The implicit / explicit VCI pools (§5.1).
+//!
+//! "For our prototype implementation, we separate the pool of VCIs into an
+//! implicit pool and an explicit pool. The size of each pool can be
+//! controlled by the user via MPI tool interface control variables."
+//!
+//! `MPIX_Stream_create` allocates from the explicit pool and fails with
+//! [`crate::error::MpiErr::NoEndpoints`] when it is exhausted — unless the
+//! configuration opts into round-robin endpoint *sharing* across streams
+//! (§3.1: "The implementation may also assign a single network endpoint to
+//! multiple MPIX streams ... in a round-robin fashion"), in which case a
+//! per-endpoint critical section becomes necessary again.
+
+use std::sync::Mutex;
+
+use crate::error::{MpiErr, Result};
+
+/// Allocator over the explicit pool. VCI indices `0..implicit` are the
+/// implicit pool; indices `implicit..implicit+explicit` are reserved.
+pub struct VciPool {
+    implicit: usize,
+    explicit: usize,
+    inner: Mutex<PoolState>,
+    share: bool,
+}
+
+struct PoolState {
+    /// Free-list of reserved VCI indices.
+    free: Vec<u16>,
+    /// Per-reserved-VCI user count (only >1 when sharing is enabled).
+    users: Vec<u32>,
+    /// Round-robin cursor for shared assignment.
+    rr: usize,
+}
+
+/// Result of an explicit allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VciLease {
+    pub idx: u16,
+    /// True if this VCI is shared with other streams (requires a
+    /// per-endpoint critical section; the runtime then treats the stream
+    /// path as PerVci instead of LockFree).
+    pub shared: bool,
+}
+
+impl VciPool {
+    pub fn new(implicit: usize, explicit: usize, share: bool) -> Self {
+        let free = (0..explicit).rev().map(|i| (implicit + i) as u16).collect();
+        VciPool {
+            implicit,
+            explicit,
+            inner: Mutex::new(PoolState { free, users: vec![0; explicit], rr: 0 }),
+            share,
+        }
+    }
+
+    pub fn implicit_size(&self) -> usize {
+        self.implicit
+    }
+
+    pub fn explicit_size(&self) -> usize {
+        self.explicit
+    }
+
+    /// Allocate a reserved VCI for a new stream.
+    pub fn alloc(&self) -> Result<VciLease> {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(idx) = st.free.pop() {
+            let slot = idx as usize - self.implicit;
+            st.users[slot] = 1;
+            return Ok(VciLease { idx, shared: false });
+        }
+        if self.explicit == 0 {
+            return Err(MpiErr::NoEndpoints(
+                "explicit VCI pool size is 0 — set Config::explicit_pool before creating streams".into(),
+            ));
+        }
+        if !self.share {
+            return Err(MpiErr::NoEndpoints(format!(
+                "all {} reserved endpoints are in use (enable stream_share_endpoints for round-robin sharing)",
+                self.explicit
+            )));
+        }
+        // Round-robin sharing over the reserved pool.
+        let slot = st.rr % self.explicit;
+        st.rr += 1;
+        st.users[slot] += 1;
+        Ok(VciLease { idx: (self.implicit + slot) as u16, shared: true })
+    }
+
+    /// Release a reserved VCI. Returns `true` when the endpoint became
+    /// free (last user released it).
+    pub fn free(&self, idx: u16) -> Result<bool> {
+        let slot = (idx as usize)
+            .checked_sub(self.implicit)
+            .filter(|s| *s < self.explicit)
+            .ok_or_else(|| MpiErr::Arg(format!("VCI {idx} is not in the explicit pool")))?;
+        let mut st = self.inner.lock().unwrap();
+        if st.users[slot] == 0 {
+            return Err(MpiErr::Arg(format!("double free of VCI {idx}")));
+        }
+        st.users[slot] -= 1;
+        if st.users[slot] == 0 {
+            st.free.push(idx);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Number of reserved VCIs currently leased.
+    pub fn in_use(&self) -> usize {
+        let st = self.inner.lock().unwrap();
+        st.users.iter().filter(|&&u| u > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_exhausts_then_fails() {
+        let p = VciPool::new(1, 2, false);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(a.idx, 1);
+        assert_eq!(b.idx, 2);
+        assert!(!a.shared && !b.shared);
+        // Paper: "The implementation should return failure if it runs out
+        // of network endpoints."
+        assert!(matches!(p.alloc(), Err(MpiErr::NoEndpoints(_))));
+        // Freeing makes the resource available again.
+        assert!(p.free(a.idx).unwrap());
+        let c = p.alloc().unwrap();
+        assert_eq!(c.idx, 1);
+    }
+
+    #[test]
+    fn zero_pool_always_fails() {
+        let p = VciPool::new(4, 0, false);
+        assert!(matches!(p.alloc(), Err(MpiErr::NoEndpoints(_))));
+    }
+
+    #[test]
+    fn sharing_round_robins() {
+        let p = VciPool::new(1, 2, true);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        let d = p.alloc().unwrap();
+        assert!(!a.shared && !b.shared);
+        assert!(c.shared && d.shared, "overflow allocations are shared");
+        assert_ne!(c.idx, d.idx, "round-robin must spread shared streams");
+        // Shared frees only release the endpoint at the last user.
+        let first_free = p.free(c.idx).unwrap();
+        assert!(!first_free || p.in_use() < 2);
+    }
+
+    #[test]
+    fn free_validates_range_and_double_free() {
+        let p = VciPool::new(2, 2, false);
+        assert!(p.free(0).is_err(), "implicit VCIs are not freeable");
+        assert!(p.free(9).is_err());
+        let a = p.alloc().unwrap();
+        p.free(a.idx).unwrap();
+        assert!(p.free(a.idx).is_err(), "double free must fail");
+    }
+
+    #[test]
+    fn in_use_tracks_leases() {
+        let p = VciPool::new(0, 3, false);
+        assert_eq!(p.in_use(), 0);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert_eq!(p.in_use(), 2);
+        p.free(a.idx).unwrap();
+        assert_eq!(p.in_use(), 1);
+    }
+}

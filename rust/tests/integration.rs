@@ -1,0 +1,429 @@
+//! Integration tests: multi-rank scenarios across the full stack
+//! (fabric + mpi + vci + stream layers together).
+
+use mpix::config::{Config, CsMode, HashPolicy};
+use mpix::mpi::datatype::{as_bytes, as_bytes_mut, Datatype, Op};
+use mpix::mpi::info::Info;
+use mpix::mpi::world::World;
+use mpix::mpi::{ANY_SOURCE, ANY_TAG};
+use mpix::prelude::ANY_INDEX;
+
+fn world(n: usize) -> World {
+    World::with_ranks(n).unwrap()
+}
+
+// ----------------------------------------------------------------------
+// Point-to-point across ranks
+// ----------------------------------------------------------------------
+
+#[test]
+fn blocking_ring_all_cs_modes() {
+    for cs in [CsMode::Global, CsMode::PerVci] {
+        let cfg = Config { cs_mode: cs, implicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(4).config(cfg).build().unwrap();
+        w.run(|p| {
+            let n = p.nranks();
+            let me = p.rank();
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let sr = p.isend(&me.to_le_bytes(), next, 7, p.world_comm())?;
+            let mut buf = [0u8; 4];
+            let st = p.recv(&mut buf, prev as i32, 7, p.world_comm())?;
+            assert_eq!(u32::from_le_bytes(buf), prev);
+            assert_eq!(st.source, prev);
+            assert_eq!(st.count, 4);
+            p.wait(sr)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn rendezvous_large_messages() {
+    let cfg = Config { eager_threshold: 1024, ..Default::default() };
+    let w = World::builder().ranks(2).config(cfg).build().unwrap();
+    w.run(|p| {
+        let size = 256 * 1024; // well past the threshold
+        if p.rank() == 0 {
+            let data: Vec<u8> = (0..size).map(|i| (i % 251) as u8).collect();
+            p.send(&data, 1, 0, p.world_comm())?;
+        } else {
+            let mut buf = vec![0u8; size];
+            let st = p.recv(&mut buf, 0, 0, p.world_comm())?;
+            assert_eq!(st.count, size);
+            assert!(buf.iter().enumerate().all(|(i, &b)| b == (i % 251) as u8));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn wildcard_source_and_tag() {
+    let w = world(3);
+    w.run(|p| {
+        if p.rank() == 0 {
+            let mut seen = [false; 2];
+            for _ in 0..2 {
+                let mut buf = [0u8; 1];
+                let st = p.recv(&mut buf, ANY_SOURCE, ANY_TAG, p.world_comm())?;
+                assert_eq!(st.source as u8, buf[0]);
+                assert_eq!(st.tag, buf[0] as i32 * 10);
+                seen[buf[0] as usize - 1] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        } else {
+            let me = p.rank() as u8;
+            p.send(&[me], 0, me as i32 * 10, p.world_comm())?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn derived_datatype_column_exchange() {
+    // Send a matrix column (vector datatype) and unpack it into a column
+    // of a different matrix.
+    let w = world(2);
+    w.run(|p| {
+        const R: usize = 6;
+        const C: usize = 5;
+        let dt = Datatype::vector(R, 1, C, Datatype::F32)?;
+        if p.rank() == 0 {
+            let m: Vec<f32> = (0..R * C).map(|i| i as f32).collect();
+            // column 2 of m
+            p.send_dt(as_bytes(&m[2..]), &dt, 1, 1, 0, p.world_comm())?;
+        } else {
+            let mut m = vec![0f32; R * C];
+            // receive into column 3
+            let st = p.recv_dt(as_bytes_mut(&mut m[3..]), &dt, 1, 0, 0, p.world_comm())?;
+            assert_eq!(st.count, R * 4);
+            for r in 0..R {
+                assert_eq!(m[r * C + 3], (r * C + 2) as f32, "row {r}");
+                // everything else untouched
+                assert_eq!(m[r * C], 0.0);
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Collectives
+// ----------------------------------------------------------------------
+
+#[test]
+fn collectives_suite() {
+    let w = world(4);
+    w.run(|p| {
+        let comm = p.world_comm();
+        let n = p.nranks() as usize;
+        let me = p.rank();
+
+        // bcast
+        let mut buf = if me == 2 { *b"hello-bcast!" } else { [0u8; 12] };
+        p.bcast(&mut buf, 2, comm)?;
+        assert_eq!(&buf, b"hello-bcast!");
+
+        // allgather
+        let mine = [me as u8; 3];
+        let mut all = vec![0u8; 3 * n];
+        p.allgather(&mine, &mut all, comm)?;
+        for r in 0..n {
+            assert_eq!(&all[3 * r..3 * r + 3], &[r as u8; 3]);
+        }
+
+        // allreduce sum of f64
+        let mut acc = Vec::from(as_bytes(&[me as f64, 1.0f64]));
+        p.allreduce(&mut acc, &Datatype::F64, Op::Sum, comm)?;
+        let s0 = f64::from_le_bytes(acc[..8].try_into().unwrap());
+        let s1 = f64::from_le_bytes(acc[8..].try_into().unwrap());
+        assert_eq!(s0, (0..n as u64).sum::<u64>() as f64);
+        assert_eq!(s1, n as f64);
+
+        // reduce max of i32 at root 1
+        let mut v = Vec::from(as_bytes(&[me as i32 * 10]));
+        p.reduce(&mut v, &Datatype::I32, Op::Max, 1, comm)?;
+        if me == 1 {
+            assert_eq!(i32::from_le_bytes(v[..4].try_into().unwrap()), 30);
+        }
+
+        // gather at root 0
+        let mut g = if me == 0 { vec![0u8; 2 * n] } else { Vec::new() };
+        p.gather(&[me as u8, 0xAB], &mut g, 0, comm)?;
+        if me == 0 {
+            for r in 0..n {
+                assert_eq!(g[2 * r], r as u8);
+                assert_eq!(g[2 * r + 1], 0xAB);
+            }
+        }
+
+        // alltoall
+        let send: Vec<u8> = (0..n).map(|d| (me as u8) * 16 + d as u8).collect();
+        let mut recv = vec![0u8; n];
+        p.alltoall(&send, &mut recv, comm)?;
+        for s in 0..n {
+            assert_eq!(recv[s], (s as u8) * 16 + me as u8);
+        }
+
+        // barrier (smoke: no deadlock, consistent ordering)
+        p.barrier(comm)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn comm_split_subgroups_communicate() {
+    let w = world(4);
+    w.run(|p| {
+        let color = (p.rank() % 2) as i32;
+        let sub = p.comm_split(p.world_comm(), color, p.rank() as i32)?.expect("in a color");
+        assert_eq!(sub.size(), 2);
+        // Rank order inside the color follows (key, rank).
+        let partner = 1 - sub.rank();
+        let sr = p.isend(&[p.rank() as u8], partner, 0, &sub)?;
+        let mut b = [0u8; 1];
+        p.recv(&mut b, partner as i32, 0, &sub)?;
+        // My partner in the same color group differs from me by 2.
+        assert_eq!(b[0] as u32 % 2, p.rank() % 2);
+        assert_ne!(b[0] as u32, p.rank());
+        p.wait(sr)?;
+        // Undefined color opts out.
+        let none = p.comm_split(p.world_comm(), -1, 0)?;
+        assert!(none.is_none());
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn comm_dup_isolates_traffic() {
+    let w = world(2);
+    w.run(|p| {
+        let dup = p.comm_dup(p.world_comm())?;
+        if p.rank() == 0 {
+            // Same tag on both comms; receivers must see no cross-talk.
+            p.send(b"world", 1, 5, p.world_comm())?;
+            p.send(b"dup__", 1, 5, &dup)?;
+        } else {
+            let mut b = [0u8; 5];
+            p.recv(&mut b, 0, 5, &dup)?;
+            assert_eq!(&b, b"dup__");
+            p.recv(&mut b, 0, 5, p.world_comm())?;
+            assert_eq!(&b, b"world");
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Streams end-to-end
+// ----------------------------------------------------------------------
+
+#[test]
+fn concurrent_stream_comms_with_threads() {
+    const NT: usize = 3;
+    let cfg = Config { explicit_pool: NT, ..Default::default() };
+    let w = World::builder().ranks(2).config(cfg).build().unwrap();
+    w.run(|p| {
+        let mut streams = Vec::new();
+        let mut comms = Vec::new();
+        for _ in 0..NT {
+            let s = p.stream_create(&Info::null())?;
+            comms.push(p.stream_comm_create(p.world_comm(), Some(&s))?);
+            streams.push(s);
+        }
+        std::thread::scope(|sc| {
+            for (i, c) in comms.iter().enumerate() {
+                let p = p.clone();
+                sc.spawn(move || {
+                    for round in 0..50u32 {
+                        if p.rank() == 0 {
+                            let payload = (i as u32) << 16 | round;
+                            p.send(&payload.to_le_bytes(), 1, 3, c).unwrap();
+                        } else {
+                            let mut b = [0u8; 4];
+                            p.recv(&mut b, 0, 3, c).unwrap();
+                            let v = u32::from_le_bytes(b);
+                            assert_eq!(v >> 16, i as u32, "cross-stream leakage");
+                            assert_eq!(v & 0xFFFF, round, "per-stream order violated");
+                        }
+                    }
+                });
+            }
+        });
+        drop(comms);
+        for s in streams {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn collectives_over_stream_comms() {
+    let cfg = Config { explicit_pool: 1, ..Default::default() };
+    let w = World::builder().ranks(3).config(cfg).build().unwrap();
+    w.run(|p| {
+        let s = p.stream_create(&Info::null())?;
+        let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+        // §5.1: collectives are fully stream-aware.
+        let mut v = Vec::from(as_bytes(&[p.rank() as i64]));
+        p.allreduce(&mut v, &Datatype::I64, Op::Sum, &c)?;
+        assert_eq!(i64::from_le_bytes(v[..8].try_into().unwrap()), 0 + 1 + 2);
+        let mut all = vec![0u8; 4 * 3];
+        p.allgather(&(p.rank() * 7).to_le_bytes(), &mut all, &c)?;
+        for r in 0..3u32 {
+            assert_eq!(u32::from_le_bytes(all[4 * r as usize..][..4].try_into().unwrap()), r * 7);
+        }
+        drop(c);
+        p.stream_free(s)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn mixed_null_and_real_streams() {
+    let cfg = Config { explicit_pool: 1, hash_policy: HashPolicy::PerComm, ..Default::default() };
+    let w = World::builder().ranks(2).config(cfg).build().unwrap();
+    w.run(|p| {
+        // Rank 0 attaches a stream; rank 1 passes MPIX_STREAM_NULL.
+        let s = if p.rank() == 0 { Some(p.stream_create(&Info::null())?) } else { None };
+        let c = p.stream_comm_create(p.world_comm(), s.as_ref())?;
+        if p.rank() == 0 {
+            p.send(b"x", 1, 0, &c)?;
+            let mut b = [0u8; 1];
+            p.recv(&mut b, 1, 0, &c)?;
+            assert_eq!(&b, b"y");
+        } else {
+            let mut b = [0u8; 1];
+            p.recv(&mut b, 0, 0, &c)?;
+            assert_eq!(&b, b"x");
+            p.send(b"y", 0, 0, &c)?;
+        }
+        drop(c);
+        if let Some(s) = s {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn multiplex_all_to_all_threads() {
+    // The §3.5 motivation: "two processes each with 4 threads will need 16
+    // stream communicators" — with one multiplex comm, none.
+    const NT: usize = 4;
+    let cfg = Config { explicit_pool: NT, ..Default::default() };
+    let w = World::builder().ranks(2).config(cfg).build().unwrap();
+    w.run(|p| {
+        let streams: Vec<_> = (0..NT).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+        let c = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+        let peer = 1 - p.rank();
+        std::thread::scope(|sc| {
+            for i in 0..NT {
+                let p = p.clone();
+                let c = &c;
+                sc.spawn(move || {
+                    // Thread i sends one message to every remote thread...
+                    for j in 0..NT {
+                        let payload = [i as u8, j as u8];
+                        p.stream_send(&payload, peer, 9, c, i as i32, j as i32).unwrap();
+                    }
+                    // ...and receives one from every remote thread.
+                    let mut seen = [false; NT];
+                    for _ in 0..NT {
+                        let mut b = [0u8; 2];
+                        let st = p
+                            .stream_recv(&mut b, peer as i32, 9, c, ANY_INDEX, i as i32)
+                            .unwrap();
+                        assert_eq!(b[1] as usize, i, "routed to wrong dst_idx");
+                        assert_eq!(st.src_idx as u8, b[0]);
+                        seen[b[0] as usize] = true;
+                    }
+                    assert!(seen.iter().all(|&s| s));
+                });
+            }
+        });
+        p.barrier(p.world_comm())?;
+        drop(c);
+        for s in streams {
+            p.stream_free(s)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ----------------------------------------------------------------------
+// GPU enqueue end-to-end
+// ----------------------------------------------------------------------
+
+#[test]
+fn enqueue_pipeline_orders_mpi_against_kernel_ops() {
+    use mpix::config::EnqueueMode;
+    for mode in [EnqueueMode::HostFunc, EnqueueMode::ProgressThread] {
+        let cfg = Config { explicit_pool: 1, enqueue_mode: mode, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            if p.rank() == 0 {
+                for i in 0..10u32 {
+                    p.send_enqueue(&i.to_le_bytes(), 1, 0, &c)?;
+                }
+                gs.synchronize()?;
+            } else {
+                let d = dev.alloc(4);
+                let acc = dev.alloc(40);
+                for i in 0..10u32 {
+                    p.recv_enqueue_dev(d, 0, 0, &c)?;
+                    // In-order stream: the d2d copy sees message i.
+                    dev.memcpy_d2d_async(&gs, acc.slice(4 * i as usize, 4)?, d, 4)?;
+                }
+                gs.synchronize()?;
+                let bytes = dev.read_sync(acc)?;
+                for i in 0..10u32 {
+                    let v = u32::from_le_bytes(bytes[4 * i as usize..][..4].try_into().unwrap());
+                    assert_eq!(v, i, "stream ordering violated between MPI and memcpy ops");
+                }
+                dev.free(d)?;
+                dev.free(acc)?;
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn public_sendrecv_exchanges() {
+    let w = world(2);
+    w.run(|p| {
+        let peer = 1 - p.rank();
+        let mine = [p.rank() as u8; 4];
+        let mut theirs = [0xFFu8; 4];
+        let st = p.sendrecv(&mine, peer, 1, &mut theirs, peer as i32, 1, p.world_comm())?;
+        assert_eq!(theirs, [peer as u8; 4]);
+        assert_eq!(st.source, peer);
+        Ok(())
+    })
+    .unwrap();
+}

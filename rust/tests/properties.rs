@@ -1,0 +1,337 @@
+//! Property-based tests over randomized schedules (a small self-contained
+//! property harness — proptest is unavailable in the offline crate set).
+//!
+//! Invariants (DESIGN.md §7): matching order, no loss/duplication under
+//! any critical-section mode and endpoint mapping, per-stream ordering,
+//! multiplex routing, datatype pack/unpack roundtrips, and DES sanity.
+
+use mpix::config::{Config, CsMode, HashPolicy};
+use mpix::mpi::datatype::{as_bytes, as_bytes_mut, Datatype};
+use mpix::mpi::info::Info;
+use mpix::mpi::world::World;
+use mpix::mpi::{ANY_SOURCE, ANY_TAG};
+use mpix::sim::calibrate::Calibration;
+use mpix::sim::engine::{ActorSpec, Engine, Step};
+use mpix::sim::msgrate::{sim_global, sim_pervci, sim_stream};
+
+/// xorshift64* — deterministic, dependency-free RNG.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+// ----------------------------------------------------------------------
+// Matching order
+// ----------------------------------------------------------------------
+
+/// Two sequentially issued sends that match the same receive pattern must
+/// match in issue order — for random tag schedules, under every CS mode.
+#[test]
+fn prop_matching_order_per_tag() {
+    for (case, cs) in [(1u64, CsMode::Global), (2, CsMode::PerVci), (3, CsMode::LockFree)] {
+        let mut rng = Rng::new(0xC0FFEE + case);
+        for round in 0..8 {
+            let n_msgs = 2 + rng.below(30) as usize;
+            let tags: Vec<i32> = (0..n_msgs).map(|_| rng.below(3) as i32).collect();
+            let cfg = match cs {
+                CsMode::Global => Config::fig3_global(),
+                CsMode::PerVci => Config::fig3_pervci(2),
+                CsMode::LockFree => Config::fig3_stream(1),
+            };
+            let w = World::builder().ranks(2).config(cfg).build().unwrap();
+            let tags2 = tags.clone();
+            w.run(move |p| {
+                let (streams, comm);
+                if cs == CsMode::LockFree {
+                    let s = p.stream_create(&Info::null())?;
+                    comm = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                    streams = Some(s);
+                } else {
+                    comm = p.comm_dup(p.world_comm())?;
+                    streams = None;
+                }
+                if p.rank() == 0 {
+                    for (seq, &tag) in tags2.iter().enumerate() {
+                        p.send(&(seq as u32).to_le_bytes(), 1, tag, &comm)?;
+                    }
+                } else {
+                    // Per tag value, sequence numbers must arrive ascending.
+                    let mut last_seen = [-1i64; 3];
+                    for _ in 0..tags2.len() {
+                        let mut b = [0u8; 4];
+                        let st = p.recv(&mut b, 0, ANY_TAG, &comm)?;
+                        let seq = u32::from_le_bytes(b) as i64;
+                        let t = st.tag as usize;
+                        assert!(
+                            seq > last_seen[t],
+                            "round {round}: tag {t} delivered {seq} after {}",
+                            last_seen[t]
+                        );
+                        last_seen[t] = seq;
+                    }
+                }
+                p.barrier(p.world_comm())?;
+                drop(comm);
+                if let Some(s) = streams {
+                    p.stream_free(s)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+}
+
+/// Posted-receive order: wildcard receives posted first must match first.
+#[test]
+fn prop_posted_order_with_wildcards() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..6 {
+        let n = 2 + rng.below(20) as usize;
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                // Give the receiver a head start so receives are posted
+                // (exercises the posted path, not just unexpected).
+                for seq in 0..n as u32 {
+                    p.send(&seq.to_le_bytes(), 1, 4, p.world_comm())?;
+                }
+            } else {
+                let mut reqs = Vec::new();
+                let mut bufs = vec![[0u8; 4]; n];
+                for b in bufs.iter_mut() {
+                    reqs.push(p.irecv(b, ANY_SOURCE, ANY_TAG, p.world_comm())?);
+                }
+                p.waitall(reqs)?;
+                for (i, b) in bufs.iter().enumerate() {
+                    assert_eq!(u32::from_le_bytes(*b) as usize, i, "posted order violated");
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+// ----------------------------------------------------------------------
+// No loss / duplication under random configurations
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_no_loss_random_configs() {
+    let mut rng = Rng::new(42);
+    for case in 0..6 {
+        let pool = 1 + rng.below(4) as usize;
+        let policy = match rng.below(3) {
+            0 => HashPolicy::Constant,
+            1 => HashPolicy::PerComm,
+            _ => HashPolicy::SenderAnyRecvZero,
+        };
+        let cs = if rng.below(2) == 0 { CsMode::Global } else { CsMode::PerVci };
+        let msgs = 50 + rng.below(200);
+        let cfg = Config {
+            implicit_pool: pool,
+            cs_mode: cs,
+            hash_policy: policy,
+            ep_ring_capacity: 64, // small ring: exercise backpressure
+            ..Default::default()
+        };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                for seq in 0..msgs as u32 {
+                    p.send(&seq.to_le_bytes(), 1, 0, p.world_comm())?;
+                }
+            } else {
+                let mut sum = 0u64;
+                for _ in 0..msgs {
+                    let mut b = [0u8; 4];
+                    p.recv(&mut b, 0, 0, p.world_comm())?;
+                    sum += u32::from_le_bytes(b) as u64;
+                }
+                let expect = (0..msgs).sum::<u64>();
+                assert_eq!(sum, expect, "case {case}: loss or duplication detected");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+/// Random multiplex topologies: every (src_idx, dst_idx) message delivered
+/// exactly once to the right stream.
+#[test]
+fn prop_multiplex_routing_random() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..4 {
+        let n0 = 1 + rng.below(3) as usize;
+        let n1 = 1 + rng.below(3) as usize;
+        let cfg = Config { explicit_pool: n0.max(n1), ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let nl = if p.rank() == 0 { n0 } else { n1 };
+            let streams: Vec<_> = (0..nl).map(|_| p.stream_create(&Info::null()).unwrap()).collect();
+            let c = p.stream_comm_create_multiple(p.world_comm(), &streams)?;
+            if p.rank() == 0 {
+                for i in 0..n0 {
+                    for j in 0..n1 {
+                        p.stream_send(&[i as u8, j as u8], 1, 0, &c, i as i32, j as i32)?;
+                    }
+                }
+            } else {
+                // Each local stream j receives exactly n0 messages, all
+                // addressed to j.
+                for j in 0..n1 {
+                    let mut seen = vec![false; n0];
+                    for _ in 0..n0 {
+                        let mut b = [0u8; 2];
+                        let st = p.stream_recv(
+                            &mut b,
+                            0,
+                            0,
+                            &c,
+                            mpix::prelude::ANY_INDEX,
+                            j as i32,
+                        )?;
+                        assert_eq!(b[1] as usize, j);
+                        assert_eq!(st.src_idx as u8, b[0]);
+                        assert!(!seen[b[0] as usize], "duplicate delivery");
+                        seen[b[0] as usize] = true;
+                    }
+                    assert!(seen.iter().all(|&s| s), "missing sender index");
+                }
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            for s in streams {
+                p.stream_free(s)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+// ----------------------------------------------------------------------
+// Datatype roundtrips
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_datatype_pack_unpack_roundtrip() {
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        // Random (possibly nested) datatype.
+        let inner = match rng.below(3) {
+            0 => Datatype::U8,
+            1 => Datatype::F32,
+            _ => Datatype::I64,
+        };
+        let blocklen = 1 + rng.below(3) as usize;
+        let stride = blocklen + rng.below(3) as usize;
+        let vcount = 1 + rng.below(4) as usize;
+        let dt = if rng.below(2) == 0 {
+            Datatype::contiguous(1 + rng.below(4) as usize, inner)
+        } else {
+            Datatype::vector(vcount, blocklen, stride, inner).unwrap()
+        };
+        let count = 1 + rng.below(3) as usize;
+        let len = dt.min_buffer_len(count);
+        let src: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let wire = dt.pack(&src, count).unwrap();
+        assert_eq!(wire.len(), dt.size() * count);
+        let mut dst = vec![0u8; len];
+        dt.unpack(&wire, &mut dst, count).unwrap();
+        // Re-pack must reproduce the wire exactly (the significant bytes
+        // round-trip; padding bytes are don't-cares).
+        let wire2 = dt.pack(&dst, count).unwrap();
+        assert_eq!(wire, wire2, "dt {dt:?} count {count}");
+    }
+}
+
+/// Typed views keep length invariants.
+#[test]
+fn prop_as_bytes_roundtrip() {
+    let mut rng = Rng::new(99);
+    for _ in 0..20 {
+        let n = 1 + rng.below(64) as usize;
+        let v: Vec<f32> = (0..n).map(|_| rng.below(1000) as f32 / 7.0).collect();
+        let mut w = vec![0f32; n];
+        as_bytes_mut(&mut w).copy_from_slice(as_bytes(&v));
+        assert_eq!(v, w);
+    }
+}
+
+// ----------------------------------------------------------------------
+// DES sanity
+// ----------------------------------------------------------------------
+
+/// Makespan is monotone in contention and bounded below by work/parallelism.
+#[test]
+fn prop_des_bounds() {
+    let mut rng = Rng::new(123);
+    for _ in 0..20 {
+        let actors = 1 + rng.below(8) as usize;
+        let work = 50 + rng.below(200);
+        let repeat = 5 + rng.below(50);
+        // All sharing one mutex:
+        let mut shared = Engine::new();
+        let m = shared.add_mutex(0);
+        for _ in 0..actors {
+            shared.add_actor(ActorSpec {
+                script: vec![Step::Acquire(m), Step::Work(work), Step::Release(m)],
+                repeat,
+            });
+        }
+        let serial = shared.run().makespan_ns;
+        assert_eq!(serial, actors as u64 * work * repeat, "full serialization");
+
+        // Independent:
+        let mut free = Engine::new();
+        for _ in 0..actors {
+            free.add_actor(ActorSpec { script: vec![Step::Work(work)], repeat });
+        }
+        let parallel = free.run().makespan_ns;
+        assert_eq!(parallel, work * repeat, "perfect parallelism");
+        assert!(parallel <= serial);
+    }
+}
+
+/// The three Fig-3 models keep their qualitative relations for any
+/// calibration with stream <= pervci and plausible globals.
+#[test]
+fn prop_fig3_shape_stable_under_calibration_noise() {
+    let mut rng = Rng::new(555);
+    for _ in 0..10 {
+        let stream = 150.0 + rng.below(400) as f64;
+        let cal = Calibration {
+            t_stream_ns: stream,
+            t_pervci_ns: stream * (1.05 + rng.below(40) as f64 / 100.0),
+            t_global_ns: stream * (1.0 + rng.below(20) as f64 / 100.0),
+            lock_ns: 10.0 + rng.below(20) as f64,
+            atomic_ns: 5.0,
+            handover_ns: 60.0 + rng.below(100) as f64,
+        };
+        let msgs = 500;
+        let g20 = sim_global(&cal, 20, msgs).rate;
+        let g1 = sim_global(&cal, 1, msgs).rate;
+        let v20 = sim_pervci(&cal, 20, msgs, 20).rate;
+        let s20 = sim_stream(&cal, 20, msgs).rate;
+        assert!(g20 < 3.0 * g1, "global CS must collapse");
+        assert!(v20 > 10.0 * g20 / 3.0, "per-vci must scale past global");
+        assert!(s20 > v20, "stream must beat per-vci at scale");
+    }
+}

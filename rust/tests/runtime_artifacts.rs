@@ -1,0 +1,138 @@
+//! Artifact-backed tests: require `make artifacts` (skipped with a notice
+//! otherwise). These validate the full AOT bridge: jax/Pallas -> HLO text
+//! -> PJRT compile -> execution from the rust side, numerics included.
+
+use mpix::runtime::XlaRuntime;
+
+fn artifacts_present() -> bool {
+    let ok = std::path::Path::new("artifacts/saxpy.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping artifact tests: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn saxpy_artifact_numerics() {
+    if !artifacts_present() {
+        return;
+    }
+    let exe = XlaRuntime::global().load("artifacts/saxpy.hlo.txt").unwrap();
+    const N: usize = 1 << 20;
+    let x: Vec<f32> = (0..N).map(|i| (i % 97) as f32 / 7.0).collect();
+    let y: Vec<f32> = (0..N).map(|i| (i % 31) as f32 / 3.0).collect();
+    let out = exe.run_f32(&[(&x, &[N]), (&y, &[N])]).unwrap();
+    assert_eq!(out.len(), N);
+    for i in (0..N).step_by(9973) {
+        let expect = 2.0 * x[i] + y[i];
+        assert!((out[i] - expect).abs() < 1e-5, "i={i}: {} vs {expect}", out[i]);
+    }
+}
+
+#[test]
+fn stencil_artifact_numerics() {
+    if !artifacts_present() {
+        return;
+    }
+    let exe = XlaRuntime::global().load("artifacts/stencil.hlo.txt").unwrap();
+    const HW: usize = 256;
+    const P: usize = HW + 2;
+    let padded: Vec<f32> = (0..P * P).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0).collect();
+    let out = exe.run_f32(&[(&padded, &[P, P])]).unwrap();
+    assert_eq!(out.len(), HW * HW);
+    for (r, c) in [(0usize, 0usize), (10, 200), (255, 255), (100, 3)] {
+        let up = padded[r * P + (c + 1)];
+        let down = padded[(r + 2) * P + (c + 1)];
+        let left = padded[(r + 1) * P + c];
+        let right = padded[(r + 1) * P + (c + 2)];
+        let expect = 0.25 * (up + down + left + right);
+        let got = out[r * HW + c];
+        assert!((got - expect).abs() < 1e-6, "({r},{c}): {got} vs {expect}");
+    }
+}
+
+#[test]
+fn axpby_artifact_numerics() {
+    if !artifacts_present() {
+        return;
+    }
+    let exe = XlaRuntime::global().load("artifacts/axpby.hlo.txt").unwrap();
+    const N: usize = 4096;
+    let alpha = [3.0f32];
+    let beta = [-1.5f32];
+    let x: Vec<f32> = (0..N).map(|i| i as f32 / 100.0).collect();
+    let y: Vec<f32> = (0..N).map(|i| (N - i) as f32 / 50.0).collect();
+    let out = exe.run_f32(&[(&alpha, &[1]), (&beta, &[1]), (&x, &[N]), (&y, &[N])]).unwrap();
+    for i in (0..N).step_by(411) {
+        let expect = 3.0 * x[i] - 1.5 * y[i];
+        assert!((out[i] - expect).abs() < 1e-4 * expect.abs().max(1.0));
+    }
+}
+
+#[test]
+fn load_dir_registers_all() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = XlaRuntime::new().unwrap();
+    let exes = rt.load_dir("artifacts").unwrap();
+    assert!(exes.len() >= 3);
+    for name in ["saxpy", "stencil", "axpby"] {
+        rt.get(name).unwrap();
+    }
+}
+
+#[test]
+fn listing4_end_to_end_through_enqueue() {
+    if !artifacts_present() {
+        return;
+    }
+    // The full Listing-4 flow (send_enqueue -> recv_enqueue_dev -> kernel
+    // -> copyback), verified internally.
+    mpix::coordinator::driver::run_saxpy_listing4(1 << 20, "artifacts").unwrap();
+}
+
+#[test]
+fn kernel_launch_on_gpu_stream_matches_host_execution() {
+    if !artifacts_present() {
+        return;
+    }
+    use mpix::mpi::world::World;
+    let w = World::with_ranks(1).unwrap();
+    let p = w.proc(0);
+    let dev = p.gpu();
+    let exe = XlaRuntime::global().load("artifacts/axpby.hlo.txt").unwrap();
+    const N: usize = 4096;
+    let s = dev.create_stream();
+    let d_a = dev.alloc(4);
+    let d_b = dev.alloc(4);
+    let d_x = dev.alloc(N * 4);
+    let d_y = dev.alloc(N * 4);
+    let d_o = dev.alloc(N * 4);
+    let to_bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|f| f.to_le_bytes()).collect() };
+    dev.memcpy_h2d_async(&s, d_a, &to_bytes(&[2.0])).unwrap();
+    dev.memcpy_h2d_async(&s, d_b, &to_bytes(&[1.0])).unwrap();
+    let x: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..N).map(|i| (i * 2) as f32).collect();
+    dev.memcpy_h2d_async(&s, d_x, &to_bytes(&x)).unwrap();
+    dev.memcpy_h2d_async(&s, d_y, &to_bytes(&y)).unwrap();
+    dev.launch_kernel_f32(
+        &s,
+        exe.clone(),
+        vec![(d_a, vec![1]), (d_b, vec![1]), (d_x, vec![N]), (d_y, vec![N])],
+        d_o,
+    )
+    .unwrap();
+    s.synchronize().unwrap();
+    let out = dev.read_sync(d_o).unwrap();
+    let host = exe.run_f32(&[(&[2.0f32][..], &[1][..]), (&[1.0f32][..], &[1]), (&x, &[N]), (&y, &[N])]).unwrap();
+    for i in (0..N).step_by(373) {
+        let v = f32::from_le_bytes(out[4 * i..4 * i + 4].try_into().unwrap());
+        assert_eq!(v, host[i]);
+        assert_eq!(v, 2.0 * x[i] + y[i]);
+    }
+    for d in [d_a, d_b, d_x, d_y, d_o] {
+        dev.free(d).unwrap();
+    }
+    dev.destroy_stream(&s).unwrap();
+}
