@@ -136,6 +136,12 @@ pub struct Config {
     pub stream_share_endpoints: bool,
     /// GPU enqueue implementation (§5.2).
     pub enqueue_mode: EnqueueMode,
+    /// Cap on enqueue progress lanes (dedicated host progress threads)
+    /// per process in [`EnqueueMode::ProgressThread`]. Lanes are spawned
+    /// lazily, one per GPU stream; beyond the cap, streams share lanes
+    /// round-robin. 1 reproduces the single-progress-thread design
+    /// (event-driven, without the old engine's polling).
+    pub enqueue_lanes: usize,
     /// Modeled host-function launch cost in nanoseconds (the
     /// `cudaLaunchHostFunc` "heavy switching cost"); busy-waited on the
     /// dispatcher thread so benches can expose it. 0 = off.
@@ -160,6 +166,7 @@ impl Default for Config {
             ep_ring_capacity: 4096,
             stream_share_endpoints: false,
             enqueue_mode: EnqueueMode::HostFunc,
+            enqueue_lanes: 4,
             hostfunc_switch_ns: 0,
             wire_latency_ns: 0,
             spin_before_yield: 64,
@@ -181,6 +188,9 @@ impl Config {
         }
         if self.ep_ring_capacity < 2 || !self.ep_ring_capacity.is_power_of_two() {
             return Err(MpiErr::Arg("ep_ring_capacity must be a power of two >= 2".into()));
+        }
+        if self.enqueue_lanes == 0 {
+            return Err(MpiErr::Arg("enqueue_lanes must be >= 1".into()));
         }
         Ok(())
     }
@@ -239,6 +249,12 @@ mod tests {
     #[test]
     fn ring_capacity_must_be_pow2() {
         let c = Config { ep_ring_capacity: 1000, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_enqueue_lanes_rejected() {
+        let c = Config { enqueue_lanes: 0, ..Default::default() };
         assert!(c.validate().is_err());
     }
 

@@ -403,7 +403,9 @@ pub fn enqueue_pipeline(
                         p.recv_enqueue_dev(dbuf, 0, 0, &comm)?;
                     }
                 }
-                gs.synchronize()?;
+                // synchronize_enqueue also surfaces any failure recorded
+                // on the enqueue path (the ops no longer panic in-thread).
+                p.synchronize_enqueue(&comm)?;
                 crate::gpu::stream::busy_wait_ns(sync_cost_ns);
             }
         }
@@ -494,7 +496,7 @@ pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
             let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
             let t0 = Instant::now();
             p.send_enqueue(&bytes, 1, 0, &stream_comm)?;
-            stream.synchronize()?;
+            p.synchronize_enqueue(&stream_comm)?;
             println!("rank 0: sent {n} floats via MPIX_Send_enqueue in {:?}", t0.elapsed());
         } else {
             let d_x = dev.alloc(n * 4);
@@ -512,8 +514,8 @@ pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
             let mut out = vec![0u8; n * 4];
             unsafe { dev.memcpy_d2h_async(&stream, out.as_mut_ptr(), out.len(), d_y)? };
             // One synchronize covers memcpys + MPI + kernel — the point of
-            // the enqueue APIs.
-            stream.synchronize()?;
+            // the enqueue APIs (and surfaces any enqueue-path failure).
+            p.synchronize_enqueue(&stream_comm)?;
             let dt = t0.elapsed();
             let expect = A_VAL * X_VAL + Y_VAL;
             let mut max_err = 0f32;

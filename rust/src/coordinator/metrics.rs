@@ -1,4 +1,7 @@
-//! Lightweight metrics: rate counters and log-scale latency histograms.
+//! Lightweight metrics: rate counters, gauges and log-scale latency
+//! histograms. The enqueue progress lanes ([`crate::stream::progress`])
+//! publish per-lane dispatch counts, wakeups, queue depth and
+//! trigger→dispatch stall time through these types.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -34,6 +37,46 @@ impl RateCounter {
 }
 
 impl Default for RateCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// An instantaneous level gauge (e.g. queue depth), lock-free.
+pub struct Gauge {
+    level: AtomicU64,
+    /// High-water mark observed across the gauge's lifetime.
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge { level: AtomicU64::new(0), peak: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        let now = self.level.fetch_add(1, Ordering::AcqRel) + 1;
+        self.peak.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// Saturating decrement (a double-decrement bug must not wrap to
+    /// u64::MAX and poison every later reading).
+    pub fn dec(&self) {
+        let _ = self
+            .level
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| v.checked_sub(1));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.level.load(Ordering::Acquire)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Acquire)
+    }
+}
+
+impl Default for Gauge {
     fn default() -> Self {
         Self::new()
     }
@@ -130,6 +173,22 @@ mod tests {
         assert!(h.mean_ns() > 100.0 && h.mean_ns() < 100_000.0);
         assert!(h.percentile_ns(50.0) <= 256, "p50 in the 100ns bucket");
         assert!(h.percentile_ns(99.0) >= 65_536, "p99 in the 100µs bucket");
+    }
+
+    #[test]
+    fn gauge_tracks_level_and_peak() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.peak(), 3);
+        g.dec();
+        g.dec();
+        g.dec(); // extra dec saturates at zero instead of wrapping
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.peak(), 3);
     }
 
     #[test]

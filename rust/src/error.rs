@@ -5,106 +5,129 @@
 //! specifically requires some calls to *fail* (e.g. `MPIX_Stream_create`
 //! when the explicit VCI pool is exhausted, `MPIX_Stream_free` while
 //! operations are pending), so errors are part of the contract under test.
-
-use thiserror::Error;
+//!
+//! `Display` and `std::error::Error` are implemented by hand — the offline
+//! crate set has no `thiserror`.
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, MpiErr>;
 
 /// MPI-style error classes.
-#[derive(Debug, Error, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MpiErr {
     /// `MPI_ERR_COMM`: invalid communicator, or a communicator that does
     /// not satisfy the operation's requirements (e.g. enqueue APIs on a
     /// communicator without an attached GPU stream).
-    #[error("invalid communicator: {0}")]
     Comm(String),
 
     /// `MPI_ERR_RANK`: rank out of range for the communicator.
-    #[error("invalid rank {rank} for communicator of size {size}")]
     Rank { rank: i32, size: u32 },
 
     /// `MPI_ERR_TAG`: tag out of range.
-    #[error("invalid tag {0}")]
     Tag(i32),
 
     /// `MPI_ERR_COUNT` / `MPI_ERR_TRUNCATE`: receive buffer too small for a
     /// matched message.
-    #[error("message truncated: incoming {incoming} bytes > buffer {buffer} bytes")]
     Truncate { incoming: usize, buffer: usize },
 
     /// `MPI_ERR_STREAM` (MPIX): invalid stream handle, stream misuse, or a
     /// stream serial-context violation detected by the runtime.
-    #[error("invalid MPIX stream: {0}")]
     Stream(String),
 
     /// Resource exhaustion: the explicit VCI pool has no free network
     /// endpoint. The paper: "The implementation should return failure if it
     /// runs out of network endpoints."
-    #[error("out of network endpoints: {0}")]
     NoEndpoints(String),
 
     /// `MPIX_Stream_free` with operations still pending. The paper: "
     /// MPIX_Stream_free may fail with an appropriate error code if the
     /// internal resource deallocation cannot be completed."
-    #[error("stream busy: {0}")]
     StreamBusy(String),
 
     /// `MPI_ERR_INFO*`: malformed info key/value (e.g. bad hex blob).
-    #[error("invalid info: {0}")]
     Info(String),
 
     /// `MPI_ERR_REQUEST`: invalid or mismatched request (e.g.
     /// `MPIX_Waitall_enqueue` over requests from different streams).
-    #[error("invalid request: {0}")]
     Request(String),
 
     /// `MPI_ERR_ARG`: any other invalid argument.
-    #[error("invalid argument: {0}")]
     Arg(String),
 
     /// Datatype mismatch or unsupported datatype for the operation.
-    #[error("datatype error: {0}")]
     Datatype(String),
 
     /// GPU runtime error (simulated device).
-    #[error("gpu runtime error: {0}")]
     Gpu(String),
 
-    /// PJRT/XLA runtime error surfaced from the `xla` crate.
-    #[error("xla runtime error: {0}")]
+    /// PJRT/XLA runtime error surfaced from the backend.
     Xla(String),
 
+    /// A failure on the asynchronous enqueue path (MPIX `*_enqueue`): an
+    /// operation driven by a progress lane failed, or the progress engine
+    /// was shut down with operations pending. Surfaced to the caller at
+    /// the matching wait/synchronize point, never as a panic on the lane
+    /// or dispatcher thread.
+    Enqueue(String),
+
     /// Internal invariant violation — a bug in the runtime itself.
-    #[error("internal error: {0}")]
     Internal(String),
 }
+
+impl std::fmt::Display for MpiErr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiErr::Comm(s) => write!(f, "invalid communicator: {s}"),
+            MpiErr::Rank { rank, size } => {
+                write!(f, "invalid rank {rank} for communicator of size {size}")
+            }
+            MpiErr::Tag(t) => write!(f, "invalid tag {t}"),
+            MpiErr::Truncate { incoming, buffer } => {
+                write!(f, "message truncated: incoming {incoming} bytes > buffer {buffer} bytes")
+            }
+            MpiErr::Stream(s) => write!(f, "invalid MPIX stream: {s}"),
+            MpiErr::NoEndpoints(s) => write!(f, "out of network endpoints: {s}"),
+            MpiErr::StreamBusy(s) => write!(f, "stream busy: {s}"),
+            MpiErr::Info(s) => write!(f, "invalid info: {s}"),
+            MpiErr::Request(s) => write!(f, "invalid request: {s}"),
+            MpiErr::Arg(s) => write!(f, "invalid argument: {s}"),
+            MpiErr::Datatype(s) => write!(f, "datatype error: {s}"),
+            MpiErr::Gpu(s) => write!(f, "gpu runtime error: {s}"),
+            MpiErr::Xla(s) => write!(f, "xla runtime error: {s}"),
+            MpiErr::Enqueue(s) => write!(f, "enqueue progress error: {s}"),
+            MpiErr::Internal(s) => write!(f, "internal error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for MpiErr {}
 
 impl MpiErr {
     /// The MPI error class integer (subset of the standard's codes, plus
     /// MPIX extensions in the implementation-defined range).
     pub fn class(&self) -> i32 {
         match self {
-            MpiErr::Comm(_) => 5,         // MPI_ERR_COMM
-            MpiErr::Rank { .. } => 6,     // MPI_ERR_RANK
-            MpiErr::Tag(_) => 4,          // MPI_ERR_TAG
+            MpiErr::Comm(_) => 5,          // MPI_ERR_COMM
+            MpiErr::Rank { .. } => 6,      // MPI_ERR_RANK
+            MpiErr::Tag(_) => 4,           // MPI_ERR_TAG
             MpiErr::Truncate { .. } => 15, // MPI_ERR_TRUNCATE
-            MpiErr::Request(_) => 19,     // MPI_ERR_REQUEST
-            MpiErr::Arg(_) => 12,         // MPI_ERR_ARG
-            MpiErr::Info(_) => 28,        // MPI_ERR_INFO
-            MpiErr::Datatype(_) => 3,     // MPI_ERR_TYPE
-            MpiErr::Stream(_) => 57,      // MPIX_ERR_STREAM (impl-defined)
-            MpiErr::NoEndpoints(_) => 58, // MPIX_ERR_NOENDPOINTS
-            MpiErr::StreamBusy(_) => 59,  // MPIX_ERR_STREAM_BUSY
+            MpiErr::Request(_) => 19,      // MPI_ERR_REQUEST
+            MpiErr::Arg(_) => 12,          // MPI_ERR_ARG
+            MpiErr::Info(_) => 28,         // MPI_ERR_INFO
+            MpiErr::Datatype(_) => 3,      // MPI_ERR_TYPE
+            MpiErr::Stream(_) => 57,       // MPIX_ERR_STREAM (impl-defined)
+            MpiErr::NoEndpoints(_) => 58,  // MPIX_ERR_NOENDPOINTS
+            MpiErr::StreamBusy(_) => 59,   // MPIX_ERR_STREAM_BUSY
             MpiErr::Gpu(_) => 60,
             MpiErr::Xla(_) => 61,
-            MpiErr::Internal(_) => 16,    // MPI_ERR_INTERN
+            MpiErr::Enqueue(_) => 62,      // MPIX_ERR_ENQUEUE
+            MpiErr::Internal(_) => 16,     // MPI_ERR_INTERN
         }
     }
 }
 
-impl From<xla::Error> for MpiErr {
-    fn from(e: xla::Error) -> Self {
+impl From<crate::xla_compat::Error> for MpiErr {
+    fn from(e: crate::xla_compat::Error) -> Self {
         MpiErr::Xla(e.to_string())
     }
 }
@@ -118,9 +141,12 @@ mod tests {
         let s = MpiErr::Stream("x".into());
         let n = MpiErr::NoEndpoints("x".into());
         let b = MpiErr::StreamBusy("x".into());
+        let q = MpiErr::Enqueue("x".into());
         assert_ne!(s.class(), n.class());
         assert_ne!(n.class(), b.class());
+        assert_ne!(b.class(), q.class());
         assert!(s.class() >= 57, "MPIX classes live in impl-defined range");
+        assert!(q.class() >= 57, "MPIX classes live in impl-defined range");
     }
 
     #[test]
@@ -128,5 +154,13 @@ mod tests {
         let e = MpiErr::Truncate { incoming: 16, buffer: 8 };
         let msg = format!("{e}");
         assert!(msg.contains("16") && msg.contains("8"));
+        let q = MpiErr::Enqueue("lane 3 shut down".into());
+        assert!(format!("{q}").contains("lane 3"));
+    }
+
+    #[test]
+    fn xla_compat_error_converts() {
+        let e: MpiErr = crate::xla_compat::Error("no backend".into()).into();
+        assert!(matches!(e, MpiErr::Xla(_)));
     }
 }

@@ -101,6 +101,12 @@ impl GpuStream {
         self.shared.depth.load(Ordering::Acquire) == 0
     }
 
+    /// Operations enqueued but not yet executed (metrics: the enqueue
+    /// progress lanes report this alongside their own queue depth).
+    pub fn depth(&self) -> u64 {
+        self.shared.depth.load(Ordering::Acquire)
+    }
+
     /// `cudaStreamSynchronize`: block until everything enqueued so far has
     /// executed.
     pub fn synchronize(&self) -> Result<()> {

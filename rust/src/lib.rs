@@ -16,10 +16,17 @@
 //!   evaluates (global CS, per-VCI CS, lock-free stream-exclusive).
 //! * [`stream`] — **the paper's contribution**: `MPIX_Stream`, stream
 //!   communicators, multiplex stream communicators, indexed stream
-//!   point-to-point, and the GPU enqueue APIs.
+//!   point-to-point, and the GPU enqueue APIs. The enqueue APIs are
+//!   driven by [`stream::progress`]: a sharded, event-driven progress
+//!   engine — one lazily-spawned lane (host progress thread) per GPU
+//!   stream, capped by `Config::enqueue_lanes`, with edge-triggered
+//!   wakeup (no polling timeout, no shared-queue scan) and per-lane
+//!   metrics.
 //! * [`gpu`] — a simulated GPU runtime (in-order streams, events, device
 //!   memory, host-function launch) whose kernels are AOT-compiled XLA
-//!   executables loaded through [`runtime`] (PJRT CPU client).
+//!   executables loaded through [`runtime`] (PJRT CPU client). The
+//!   backend is imported via [`xla_compat`], an offline shim that
+//!   degrades gracefully when the real `xla` crate is unavailable.
 //! * [`sim`] — a calibrated discrete-event virtual-time simulator used to
 //!   regenerate the paper's thread-scaling results (Figure 3) on hosts
 //!   with fewer cores than the paper's testbed.
@@ -60,6 +67,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stream;
 pub mod vci;
+pub mod xla_compat;
 
 /// Convenient re-exports for examples and applications.
 pub mod prelude {

@@ -8,9 +8,7 @@
 //! behaviour under test is preserved.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{Config, CsMode};
 use crate::error::{MpiErr, Result};
@@ -65,9 +63,11 @@ pub struct ProcShared {
     shared_flags: Vec<AtomicBool>,
     /// Stream-id allocator (per process).
     next_stream_id: AtomicU32,
-    gpu: OnceCell<Arc<GpuDevice>>,
-    world_comm: OnceCell<Comm>,
-    pub(crate) enqueue_engine: OnceCell<Arc<crate::stream::enqueue::EnqueueEngine>>,
+    gpu: OnceLock<Arc<GpuDevice>>,
+    world_comm: OnceLock<Comm>,
+    /// Sharded enqueue progress subsystem (lazily built on first enqueue;
+    /// also carries per-stream sticky errors for the HostFunc mode).
+    progress: OnceLock<Arc<crate::stream::progress::ProgressRouter>>,
     /// RMA window registry (target side): win id -> exposed memory.
     windows: Mutex<std::collections::HashMap<u32, Arc<crate::mpi::rma::WinTarget>>>,
     /// RMA origin-side in-flight op results.
@@ -190,9 +190,9 @@ impl WorldBuilder {
                     pool: VciPool::new(cfg.implicit_pool, cfg.explicit_pool, cfg.stream_share_endpoints),
                     shared_flags: (0..cfg.explicit_pool).map(|_| AtomicBool::new(false)).collect(),
                     next_stream_id: AtomicU32::new(1),
-                    gpu: OnceCell::new(),
-                    world_comm: OnceCell::new(),
-                    enqueue_engine: OnceCell::new(),
+                    gpu: OnceLock::new(),
+                    world_comm: OnceLock::new(),
+                    progress: OnceLock::new(),
                     windows: Mutex::new(std::collections::HashMap::new()),
                     rma_results: crate::mpi::rma::RmaResults::default(),
                 });
@@ -298,6 +298,23 @@ impl Proc {
     /// The simulated GPU device attached to this process (created lazily).
     pub fn gpu(&self) -> Arc<GpuDevice> {
         self.shared.gpu.get_or_init(|| Arc::new(GpuDevice::new(self.shared.rank))).clone()
+    }
+
+    /// The enqueue progress subsystem (created lazily; the lane cap is
+    /// [`Config::enqueue_lanes`]).
+    pub fn progress(&self) -> Arc<crate::stream::progress::ProgressRouter> {
+        self.shared
+            .progress
+            .get_or_init(|| {
+                crate::stream::progress::ProgressRouter::new(self.config().enqueue_lanes)
+            })
+            .clone()
+    }
+
+    /// The progress subsystem if it has been created — for lifecycle hooks
+    /// (e.g. stream free) that must not instantiate it as a side effect.
+    pub(crate) fn progress_opt(&self) -> Option<Arc<crate::stream::progress::ProgressRouter>> {
+        self.shared.progress.get().cloned()
     }
 }
 

@@ -11,12 +11,17 @@
 //! that submit jobs over a channel. GPU-stream dispatcher threads block on
 //! the reply — which also mirrors how a real deployment funnels kernel
 //! launches through a driver thread.
+//!
+//! The backend is imported through [`crate::xla_compat`], which is either
+//! the real `xla` crate or an offline shim that fails every job with an
+//! actionable message (see that module's docs).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::{MpiErr, Result};
+use crate::xla_compat as xla;
 
 enum Job {
     Load { path: PathBuf, reply: mpsc::Sender<Result<usize>> },
@@ -55,9 +60,8 @@ impl XlaRuntime {
 
     /// The process-wide runtime.
     pub fn global() -> &'static XlaRuntime {
-        static RT: once_cell::sync::Lazy<XlaRuntime> =
-            once_cell::sync::Lazy::new(|| XlaRuntime::new().expect("init XLA runtime"));
-        &RT
+        static RT: std::sync::OnceLock<XlaRuntime> = std::sync::OnceLock::new();
+        RT.get_or_init(|| XlaRuntime::new().expect("init XLA runtime"))
     }
 
     /// Load + compile one HLO-text artifact; the registry key is the file
@@ -148,11 +152,21 @@ fn executor_loop(rx: mpsc::Receiver<Job>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
-            // Fail every job with a clear message.
+            // Fail every job with a clear message. A missing artifact is
+            // still reported as such (the actionable error) even when the
+            // client itself is unavailable.
             while let Ok(job) = rx.recv() {
                 match job {
-                    Job::Load { reply, .. } => {
-                        let _ = reply.send(Err(MpiErr::Xla(format!("PJRT CPU client failed: {e}"))));
+                    Job::Load { path, reply } => {
+                        let msg = if path.exists() {
+                            format!("PJRT CPU client failed: {e}")
+                        } else {
+                            format!(
+                                "artifact {} missing — run `make artifacts` first",
+                                path.display()
+                            )
+                        };
+                        let _ = reply.send(Err(MpiErr::Xla(msg)));
                     }
                     Job::Run { reply, .. } => {
                         let _ = reply.send(Err(MpiErr::Xla(format!("PJRT CPU client failed: {e}"))));

@@ -12,22 +12,34 @@
 //! * **HostFunc** — the MPICH-4.1a1 prototype: the whole MPI operation is
 //!   enqueued as a host function on the GPU stream
 //!   (`cudaLaunchHostFunc`), paying the modeled switching cost per op.
-//! * **ProgressThread** — the paper's "better implementation": a dedicated
-//!   host thread drives the MPI operations; only lightweight event
-//!   triggers/waits are enqueued on the GPU stream.
+//! * **ProgressThread** — the paper's "better implementation", sharded:
+//!   the per-process [`ProgressRouter`](crate::stream::progress) assigns
+//!   each GPU stream a dedicated progress lane (capped by
+//!   [`Config::enqueue_lanes`](crate::config::Config::enqueue_lanes));
+//!   only lightweight trigger/gate ops are enqueued on the GPU stream,
+//!   and the trigger hands the MPI op to the lane — edge-triggered, no
+//!   polling, no shared-queue scan. See [`crate::stream::progress`] for
+//!   the lane design.
+//!
+//! Error contract: arguments are validated **at call time** (rank, tag,
+//! communicator/stream requirements — parity across all entry points).
+//! Runtime failures of the asynchronous operation are recorded per GPU
+//! stream and surface as [`MpiErr`] from the matching completion point —
+//! [`Proc::wait_enqueue`] / [`Proc::waitall_enqueue`] for i-variants,
+//! [`Proc::synchronize_enqueue`] for blocking variants — never as a panic
+//! on a lane or dispatcher thread.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 
 use crate::config::EnqueueMode;
 use crate::error::{MpiErr, Result};
-use crate::gpu::{DevicePtr, GpuStream};
+use crate::gpu::{DevicePtr, GpuDevice, GpuStream};
 use crate::mpi::comm::Comm;
 use crate::mpi::datatype::Datatype;
 use crate::mpi::matching::{RecvDest, ANY_SOURCE, ANY_TAG};
 use crate::mpi::request::Request;
 use crate::mpi::world::Proc;
+use crate::stream::progress::LaneOp;
 
 /// Handle returned by `MPIX_Isend_enqueue` / `MPIX_Irecv_enqueue`; resolved
 /// by `MPIX_Wait_enqueue` / `MPIX_Waitall_enqueue` *on the same stream*.
@@ -42,6 +54,9 @@ enum SlotState {
     /// Initiated: the real request, plus receive staging (the staging
     /// buffer and the device destination it must be flushed to).
     Started { req: Request, staging: Option<(Box<[u8]>, DevicePtr)> },
+    /// Initiation failed on the progress lane; the error is replayed at
+    /// the wait point.
+    Failed(MpiErr),
     /// Consumed by a wait op.
     Done,
 }
@@ -49,103 +64,6 @@ enum SlotState {
 impl EnqueuedRequest {
     pub fn stream_id(&self) -> u32 {
         self.stream_id
-    }
-}
-
-/// The dedicated-progress-thread engine (§5.2's "better implementation").
-/// Operations are queued in enqueue order; the GPU stream only flips a
-/// ready flag and (for synchronizing ops) waits a done gate.
-pub struct EnqueueEngine {
-    queue: Arc<EngineQueue>,
-}
-
-struct EngineQueue {
-    ops: Mutex<VecDeque<EngineOp>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
-}
-
-struct EngineOp {
-    ready: Arc<AtomicBool>,
-    done: Arc<(Mutex<bool>, Condvar)>,
-    func: Box<dyn FnOnce() + Send>,
-}
-
-impl EnqueueEngine {
-    pub fn new() -> Arc<EnqueueEngine> {
-        let queue = Arc::new(EngineQueue {
-            ops: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-        });
-        let q = queue.clone();
-        std::thread::Builder::new()
-            .name("mpix-enqueue-progress".into())
-            .spawn(move || {
-                loop {
-                    let op = {
-                        let mut ops = q.ops.lock().unwrap();
-                        loop {
-                            if q.shutdown.load(Ordering::Acquire) {
-                                return;
-                            }
-                            // Find the first op whose trigger has fired
-                            // (ops from different GPU streams may become
-                            // ready out of queue order).
-                            if let Some(pos) =
-                                ops.iter().position(|o| o.ready.load(Ordering::Acquire))
-                            {
-                                break ops.remove(pos).unwrap();
-                            }
-                            let (guard, _) =
-                                q.cv.wait_timeout(ops, std::time::Duration::from_millis(1)).unwrap();
-                            ops = guard;
-                        }
-                    };
-                    (op.func)();
-                    let (m, cv) = &*op.done;
-                    *m.lock().unwrap() = true;
-                    cv.notify_all();
-                }
-            })
-            .expect("spawn enqueue progress thread");
-        Arc::new(EnqueueEngine { queue })
-    }
-
-    /// Register an operation and wire its trigger/wait onto the GPU
-    /// stream. `sync` decides whether the stream stalls until the MPI op
-    /// completes (blocking-semantics enqueue) or proceeds (i-variants).
-    fn submit(&self, gpu: &GpuStream, sync: bool, func: Box<dyn FnOnce() + Send>) -> Result<()> {
-        let ready = Arc::new(AtomicBool::new(false));
-        let done = Arc::new((Mutex::new(false), Condvar::new()));
-        {
-            let mut ops = self.queue.ops.lock().unwrap();
-            ops.push_back(EngineOp { ready: ready.clone(), done: done.clone(), func });
-        }
-        // Trigger op: cheap flag flip in stream order.
-        let q = self.queue.clone();
-        gpu.enqueue(Box::new(move || {
-            ready.store(true, Ordering::Release);
-            q.cv.notify_all();
-        }))?;
-        if sync {
-            // Stall the stream until the MPI op finishes.
-            gpu.enqueue(Box::new(move || {
-                let (m, cv) = &*done;
-                let mut d = m.lock().unwrap();
-                while !*d {
-                    d = cv.wait(d).unwrap();
-                }
-            }))?;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for EnqueueEngine {
-    fn drop(&mut self) {
-        self.queue.shutdown.store(true, Ordering::Release);
-        self.queue.cv.notify_all();
     }
 }
 
@@ -162,79 +80,159 @@ fn enqueue_target(comm: &Comm) -> Result<GpuStream> {
         .ok_or_else(|| MpiErr::Comm("the attached MPIX stream is not GPU-backed".into()))
 }
 
-impl Proc {
-    fn engine(&self) -> Arc<EnqueueEngine> {
-        self.shared.enqueue_engine.get_or_init(EnqueueEngine::new).clone()
+/// Call-time validation for send-side enqueue entry points — the same
+/// checks `route_tx` applies, pulled forward so a bad `dst`/`tag` fails
+/// the call instead of faulting the operation asynchronously.
+fn validate_send_args(comm: &Comm, dst: u32, tag: i32) -> Result<()> {
+    comm.check_rank(dst)?;
+    if tag < 0 {
+        return Err(MpiErr::Tag(tag));
     }
+    Ok(())
+}
 
+/// Call-time validation for receive-side enqueue entry points (wildcards
+/// allowed, mirroring `route_rx`).
+fn validate_recv_args(comm: &Comm, src: i32, tag: i32) -> Result<()> {
+    if src != ANY_SOURCE {
+        comm.check_rank(src as u32)?;
+    }
+    if tag < 0 && tag != ANY_TAG {
+        return Err(MpiErr::Tag(tag));
+    }
+    Ok(())
+}
+
+/// Complete one i-enqueue request state: wait the MPI request and flush
+/// receive staging to the device. Shared by `wait_enqueue` and the
+/// batched `waitall_enqueue`.
+fn complete_one(p: &Proc, dev: &GpuDevice, state: SlotState) -> Result<()> {
+    match state {
+        SlotState::Started { req, staging } => {
+            let st = p.wait(req)?;
+            if let Some((staging, dst)) = staging {
+                dev.write_sync(dst.slice(0, st.count)?, &staging[..st.count])?;
+            }
+            Ok(())
+        }
+        SlotState::Failed(e) => Err(e),
+        SlotState::NotStarted => Err(MpiErr::Internal(
+            "wait op ran before its initiate op — stream ordering violated".into(),
+        )),
+        SlotState::Done => {
+            Err(MpiErr::Request("request already completed by a previous wait".into()))
+        }
+    }
+}
+
+impl Proc {
     /// Dispatch an enqueue-op per the configured mode. `sync` = stall the
-    /// GPU stream until the MPI op completes.
-    fn enqueue_op(&self, gpu: &GpuStream, sync: bool, func: Box<dyn FnOnce() + Send>) -> Result<()> {
+    /// GPU stream until the MPI op completes. The closure's `Result` is
+    /// recorded per-stream on failure (see module docs), never panicked.
+    fn enqueue_op(&self, gpu: &GpuStream, sync: bool, func: LaneOp) -> Result<()> {
         match self.config().enqueue_mode {
             EnqueueMode::HostFunc => {
                 // Prototype path: the op runs inline on the dispatcher
                 // thread, paying the modeled switch cost. `sync` is
                 // implicit (host funcs block the stream).
                 let cost = self.config().hostfunc_switch_ns;
-                gpu.launch_host_func(cost, func)
+                let router = self.progress();
+                let stream_id = gpu.id();
+                gpu.launch_host_func(cost, move || {
+                    if let Err(e) = func() {
+                        router.record_error(stream_id, e);
+                    }
+                })
             }
-            EnqueueMode::ProgressThread => self.engine().submit(gpu, sync, func),
+            EnqueueMode::ProgressThread => self.progress().submit(gpu, sync, func),
+        }
+    }
+
+    /// `cudaStreamSynchronize` with the enqueue error contract: block
+    /// until everything enqueued on the communicator's GPU stream has
+    /// executed, then surface the first failure recorded for the stream
+    /// (clearing it), if any.
+    pub fn synchronize_enqueue(&self, comm: &Comm) -> Result<()> {
+        let gpu = enqueue_target(comm)?;
+        gpu.synchronize()?;
+        match self.progress().take_error(gpu.id()) {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 
     /// `MPIX_Send_enqueue` from a host buffer (snapshotted at call time).
     pub fn send_enqueue(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
+        validate_send_args(comm, dst, tag)?;
         let p = self.clone();
         let c = comm.clone();
         let data = buf.to_vec();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            p.send(&data, dst, tag, &c).expect("enqueued send failed");
-        }))
+        self.enqueue_op(&gpu, true, Box::new(move || p.send(&data, dst, tag, &c)))
     }
 
     /// `MPIX_Send_enqueue` from device memory (GPU-aware path: the payload
     /// is read from the device heap when the stream reaches the op).
     pub fn send_enqueue_dev(&self, src: DevicePtr, dst: u32, tag: i32, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
+        validate_send_args(comm, dst, tag)?;
         let p = self.clone();
         let c = comm.clone();
         let dev = self.gpu();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            let data = dev.read_sync(src).expect("device read for enqueued send");
-            p.send(&data, dst, tag, &c).expect("enqueued send failed");
-        }))
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let data = dev.read_sync(src)?;
+                p.send(&data, dst, tag, &c)
+            }),
+        )
     }
 
     /// `MPIX_Recv_enqueue` into device memory (the Listing-4 pattern:
     /// `MPIX_Recv_enqueue(d_x, ...)`).
     pub fn recv_enqueue_dev(&self, dst: DevicePtr, src: i32, tag: i32, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
+        validate_recv_args(comm, src, tag)?;
         let p = self.clone();
         let c = comm.clone();
         let dev = self.gpu();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            let mut staging = vec![0u8; dst.len()];
-            let st = p.recv(&mut staging, src, tag, &c).expect("enqueued recv failed");
-            dev.write_sync(dst.slice(0, st.count).expect("recv range"), &staging[..st.count])
-                .expect("device write for enqueued recv");
-        }))
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let mut staging = vec![0u8; dst.len()];
+                let st = p.recv(&mut staging, src, tag, &c)?;
+                dev.write_sync(dst.slice(0, st.count)?, &staging[..st.count])
+            }),
+        )
     }
 
     /// `MPIX_Isend_enqueue`: initiate on the stream, complete with
     /// [`Proc::wait_enqueue`].
     pub fn isend_enqueue(&self, buf: &[u8], dst: u32, tag: i32, comm: &Comm) -> Result<EnqueuedRequest> {
         let gpu = enqueue_target(comm)?;
+        validate_send_args(comm, dst, tag)?;
         let stream_id = comm.local_stream().unwrap().id();
         let slot = Arc::new(Mutex::new(SlotState::NotStarted));
         let p = self.clone();
         let c = comm.clone();
         let data = buf.to_vec();
         let s2 = slot.clone();
-        self.enqueue_op(&gpu, false, Box::new(move || {
-            let req = p.isend(&data, dst, tag, &c).expect("enqueued isend failed");
-            *s2.lock().unwrap() = SlotState::Started { req, staging: None };
-        }))?;
+        self.enqueue_op(
+            &gpu,
+            false,
+            Box::new(move || match p.isend(&data, dst, tag, &c) {
+                Ok(req) => {
+                    *s2.lock().unwrap() = SlotState::Started { req, staging: None };
+                    Ok(())
+                }
+                Err(e) => {
+                    *s2.lock().unwrap() = SlotState::Failed(e.clone());
+                    Err(e)
+                }
+            }),
+        )?;
         Ok(EnqueuedRequest { slot, stream_id })
     }
 
@@ -247,29 +245,43 @@ impl Proc {
         comm: &Comm,
     ) -> Result<EnqueuedRequest> {
         let gpu = enqueue_target(comm)?;
+        validate_recv_args(comm, src, tag)?;
         let stream_id = comm.local_stream().unwrap().id();
-        if src != ANY_SOURCE {
-            comm.check_rank(src as u32)?;
-        }
-        if tag < 0 && tag != ANY_TAG {
-            return Err(MpiErr::Tag(tag));
-        }
         let slot = Arc::new(Mutex::new(SlotState::NotStarted));
         let p = self.clone();
         let c = comm.clone();
         let s2 = slot.clone();
-        self.enqueue_op(&gpu, false, Box::new(move || {
-            let mut staging = vec![0u8; dst.len()].into_boxed_slice();
-            let dest = RecvDest::new(&mut staging, Datatype::U8, dst.len()).expect("staging dest");
-            let route = p.route_rx(&c, src, tag, c.ctx_id(), None).expect("recv route");
-            let req = p.irecv_dest(dest, route).expect("enqueued irecv failed");
-            *s2.lock().unwrap() = SlotState::Started { req, staging: Some((staging, dst)) };
-        }))?;
+        self.enqueue_op(
+            &gpu,
+            false,
+            Box::new(move || {
+                let init = || -> Result<(Request, Box<[u8]>)> {
+                    let mut staging = vec![0u8; dst.len()].into_boxed_slice();
+                    let dest = RecvDest::new(&mut staging, Datatype::U8, dst.len())?;
+                    let route = p.route_rx(&c, src, tag, c.ctx_id(), None)?;
+                    let req = p.irecv_dest(dest, route)?;
+                    Ok((req, staging))
+                };
+                match init() {
+                    Ok((req, staging)) => {
+                        *s2.lock().unwrap() =
+                            SlotState::Started { req, staging: Some((staging, dst)) };
+                        Ok(())
+                    }
+                    Err(e) => {
+                        *s2.lock().unwrap() = SlotState::Failed(e.clone());
+                        Err(e)
+                    }
+                }
+            }),
+        )?;
         Ok(EnqueuedRequest { slot, stream_id })
     }
 
     /// `MPIX_Wait_enqueue`: enqueue the completion of an i-enqueue
-    /// operation onto its stream.
+    /// operation onto its stream. A failure of the waited operation is
+    /// recorded for the stream and surfaces from
+    /// [`Proc::synchronize_enqueue`].
     pub fn wait_enqueue(&self, req: EnqueuedRequest, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
         let stream = comm.local_stream().unwrap();
@@ -282,30 +294,23 @@ impl Proc {
         }
         let p = self.clone();
         let dev = self.gpu();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            let state = std::mem::replace(&mut *req.slot.lock().unwrap(), SlotState::Done);
-            match state {
-                SlotState::Started { req, staging } => {
-                    let st = p.wait(req).expect("enqueued wait failed");
-                    if let Some((staging, dst)) = staging {
-                        dev.write_sync(dst.slice(0, st.count).expect("recv range"), &staging[..st.count])
-                            .expect("device write for enqueued irecv");
-                    }
-                }
-                SlotState::NotStarted => {
-                    panic!("wait op ran before its initiate op — stream ordering violated")
-                }
-                SlotState::Done => panic!("double MPIX_Wait_enqueue on the same request"),
-            }
-        }))
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let state = std::mem::replace(&mut *req.slot.lock().unwrap(), SlotState::Done);
+                complete_one(&p, &dev, state)
+            }),
+        )
     }
 
     /// `MPIX_Waitall_enqueue`. All requests must have been issued on the
-    /// same local stream — enforced, per the paper.
+    /// same local stream — enforced, per the paper. Submits **one** batched
+    /// engine op covering every request (a single trigger/gate pair on the
+    /// GPU stream), instead of N sequential `wait_enqueue` round-trips.
     pub fn waitall_enqueue(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
-        let stream = comm
-            .local_stream()
-            .ok_or_else(|| MpiErr::Comm("waitall_enqueue requires a GPU stream communicator".into()))?;
+        let gpu = enqueue_target(comm)?;
+        let stream = comm.local_stream().unwrap();
         for r in &reqs {
             if r.stream_id != stream.id() {
                 return Err(MpiErr::Request(format!(
@@ -315,10 +320,31 @@ impl Proc {
                 )));
             }
         }
-        for r in reqs {
-            self.wait_enqueue(r, comm)?;
+        if reqs.is_empty() {
+            return Ok(());
         }
-        Ok(())
+        let p = self.clone();
+        let dev = self.gpu();
+        let slots: Vec<Arc<Mutex<SlotState>>> = reqs.iter().map(|r| r.slot.clone()).collect();
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                // Complete every request even after a failure (so no MPI
+                // request leaks half-waited); report the first error.
+                let mut first_err = None;
+                for slot in &slots {
+                    let state = std::mem::replace(&mut *slot.lock().unwrap(), SlotState::Done);
+                    if let Err(e) = complete_one(&p, &dev, state) {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                match first_err {
+                    Some(e) => Err(e),
+                    None => Ok(()),
+                }
+            }),
+        )
     }
 }
 
@@ -349,11 +375,11 @@ mod tests {
             let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
             if p.rank() == 0 {
                 p.send_enqueue(b"payload!", 1, 3, &c)?;
-                gs.synchronize()?;
+                p.synchronize_enqueue(&c)?;
             } else {
                 let d = dev.alloc(8);
                 p.recv_enqueue_dev(d, 0, 3, &c)?;
-                gs.synchronize()?;
+                p.synchronize_enqueue(&c)?;
                 assert_eq!(dev.read_sync(d)?, b"payload!");
                 dev.free(d)?;
             }
@@ -391,14 +417,14 @@ mod tests {
                 let r1 = p.isend_enqueue(b"aa", 1, 1, &c)?;
                 let r2 = p.isend_enqueue(b"bb", 1, 2, &c)?;
                 p.waitall_enqueue(vec![r1, r2], &c)?;
-                gs.synchronize()?;
+                p.synchronize_enqueue(&c)?;
             } else {
                 let d1 = dev.alloc(2);
                 let d2 = dev.alloc(2);
                 let r1 = p.irecv_enqueue_dev(d1, 0, 1, &c)?;
                 let r2 = p.irecv_enqueue_dev(d2, 0, 2, &c)?;
                 p.waitall_enqueue(vec![r1, r2], &c)?;
-                gs.synchronize()?;
+                p.synchronize_enqueue(&c)?;
                 assert_eq!(dev.read_sync(d1)?, b"aa");
                 assert_eq!(dev.read_sync(d2)?, b"bb");
             }
@@ -431,6 +457,247 @@ mod tests {
         p.gpu().free(d).unwrap();
         drop(c);
         p.stream_free(s).unwrap();
+    }
+
+    /// A 1-rank world for validation and self-messaging tests.
+    fn self_world(mode: EnqueueMode, lanes: usize) -> World {
+        World::builder()
+            .ranks(1)
+            .config(Config {
+                explicit_pool: 2,
+                enqueue_mode: mode,
+                enqueue_lanes: lanes,
+                ..Default::default()
+            })
+            .build()
+            .unwrap()
+    }
+
+    fn gpu_comm(p: &Proc) -> (crate::gpu::GpuStream, crate::stream::MpixStream, Comm) {
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        (gs, s, c)
+    }
+
+    #[test]
+    fn call_time_validation_parity() {
+        // Every enqueue entry point rejects a bad rank/tag at call time
+        // with an MpiErr — none of them defer the blowup to the progress
+        // path (the old behaviour for send/recv_enqueue_dev).
+        let w = self_world(EnqueueMode::ProgressThread, 1);
+        let p = w.proc(0);
+        let (gs, s, c) = gpu_comm(p);
+        let d = p.gpu().alloc(8);
+
+        assert!(matches!(p.send_enqueue(b"x", 7, 0, &c), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.send_enqueue(b"x", 0, -3, &c), Err(MpiErr::Tag(-3))));
+        assert!(matches!(p.send_enqueue_dev(d, 7, 0, &c), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.send_enqueue_dev(d, 0, -3, &c), Err(MpiErr::Tag(-3))));
+        assert!(matches!(p.recv_enqueue_dev(d, 7, 0, &c), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.recv_enqueue_dev(d, 0, -3, &c), Err(MpiErr::Tag(-3))));
+        assert!(matches!(p.isend_enqueue(b"x", 7, 0, &c), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.isend_enqueue(b"x", 0, -3, &c), Err(MpiErr::Tag(-3))));
+        assert!(matches!(p.irecv_enqueue_dev(d, 7, 0, &c), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.irecv_enqueue_dev(d, 0, -3, &c), Err(MpiErr::Tag(-3))));
+        assert!(matches!(p.bcast_enqueue_dev(d, 7, &c), Err(MpiErr::Rank { .. })));
+
+        // Wildcards stay accepted on the receive side.
+        let sreq = p.isend(b"wildcard", 0, 5, &c).unwrap();
+        p.recv_enqueue_dev(d, ANY_SOURCE, ANY_TAG, &c).unwrap();
+        p.synchronize_enqueue(&c).unwrap();
+        p.wait(sreq).unwrap();
+        assert_eq!(p.gpu().read_sync(d).unwrap(), b"wildcard");
+
+        p.gpu().free(d).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+        p.gpu().destroy_stream(&gs).unwrap();
+    }
+
+    #[test]
+    fn async_failure_surfaces_at_synchronize_not_panic() {
+        // A runtime failure on the progress path (truncated receive) must
+        // surface as an MpiErr from synchronize_enqueue, in both modes.
+        for mode in [EnqueueMode::HostFunc, EnqueueMode::ProgressThread] {
+            let w = self_world(mode, 1);
+            let p = w.proc(0);
+            let (gs, s, c) = gpu_comm(p);
+            let small = p.gpu().alloc(4);
+            let sreq = p.isend(b"eightbyt", 0, 9, &c).unwrap();
+            p.recv_enqueue_dev(small, 0, 9, &c).unwrap();
+            let err = p.synchronize_enqueue(&c);
+            assert!(
+                matches!(err, Err(MpiErr::Truncate { .. })),
+                "{mode:?}: expected Truncate, got {err:?}"
+            );
+            // The sticky error is cleared once taken.
+            p.synchronize_enqueue(&c).unwrap();
+            p.wait(sreq).unwrap();
+            p.gpu().free(small).unwrap();
+            drop(c);
+            p.stream_free(s).unwrap();
+            p.gpu().destroy_stream(&gs).unwrap();
+        }
+    }
+
+    #[test]
+    fn engine_teardown_releases_blocked_stream() {
+        // Old bug: Drop set `shutdown` but never joined nor fired pending
+        // `done` gates, so a GPU stream blocked in a sync gate hung
+        // forever. Now: shutdown fail-flushes gates; the stream wakes and
+        // the error is reported at synchronize_enqueue.
+        let w = self_world(EnqueueMode::ProgressThread, 1);
+        let p = w.proc(0);
+        let (gs, s, c) = gpu_comm(p);
+
+        // Stall the GPU stream so the send_enqueue trigger stays queued
+        // behind the blocker while we shut the router down.
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let g2 = gate.clone();
+        gs.launch_host_func(0, move || {
+            let (m, cv) = &*g2;
+            let mut go = m.lock().unwrap();
+            while !*go {
+                go = cv.wait(go).unwrap();
+            }
+        })
+        .unwrap();
+        p.send_enqueue(b"payload!", 0, 1, &c).unwrap();
+        p.progress().shutdown();
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        // The stream must come back (no hang) and report the teardown.
+        let err = p.synchronize_enqueue(&c);
+        assert!(matches!(err, Err(MpiErr::Enqueue(_))), "expected Enqueue error, got {err:?}");
+
+        drop(c);
+        p.stream_free(s).unwrap();
+        p.gpu().destroy_stream(&gs).unwrap();
+    }
+
+    #[test]
+    fn progress_mode_wakeup_beats_polling_floor() {
+        // Regression guard for the lost-wakeup race: with the old engine a
+        // missed notification cost a full 1 ms wait_timeout tick per op.
+        // Edge-triggered lanes must keep the mean trigger→dispatch stall
+        // far below that even from an idle lane.
+        let w = self_world(EnqueueMode::ProgressThread, 1);
+        let p = w.proc(0);
+        let (gs, s, c) = gpu_comm(p);
+        const OPS: usize = 32;
+        for i in 0..OPS {
+            p.send_enqueue(&(i as u64).to_le_bytes(), 0, i as i32, &c).unwrap();
+            p.synchronize_enqueue(&c).unwrap();
+            // Let the lane go idle so each op exercises the wakeup path.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let mut b = [0u8; 8];
+        for i in 0..OPS {
+            p.recv(&mut b, 0, i as i32, &c).unwrap();
+            assert_eq!(u64::from_le_bytes(b), i as u64);
+        }
+        let snaps = p.progress().metrics();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].dispatched as usize, OPS);
+        // Median, not mean: robust to one scheduler deschedule on CI.
+        assert!(
+            snaps[0].stall_p50_ns < 1_000_000,
+            "p50 trigger→dispatch stall {}ns — polling floor is back?",
+            snaps[0].stall_p50_ns
+        );
+
+        drop(c);
+        p.stream_free(s).unwrap();
+        p.gpu().destroy_stream(&gs).unwrap();
+    }
+
+    #[test]
+    fn multi_stream_enqueue_stress_preserves_per_stream_order() {
+        // N GPU streams × M ops per stream, under both modes, with the
+        // lane cap below the stream count so lanes are shared. Per-stream
+        // FIFO is asserted via strictly increasing payloads per comm.
+        const NSTREAMS: usize = 4;
+        const MSGS: u64 = 16;
+        for mode in [EnqueueMode::HostFunc, EnqueueMode::ProgressThread] {
+            let w = World::builder()
+                .ranks(2)
+                .config(Config {
+                    explicit_pool: NSTREAMS,
+                    enqueue_mode: mode,
+                    enqueue_lanes: 2, // < NSTREAMS: forces lane sharing
+                    ..Default::default()
+                })
+                .build()
+                .unwrap();
+            w.run(|p| {
+                let dev = p.gpu();
+                let mut comms = Vec::new();
+                for _ in 0..NSTREAMS {
+                    let gs = dev.create_stream();
+                    let mut info = Info::new();
+                    info.set("type", "cudaStream_t");
+                    info.set_hex_u64("value", gs.id());
+                    let s = p.stream_create(&info)?;
+                    let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                    comms.push((gs, s, c));
+                }
+                if p.rank() == 0 {
+                    for (_, _, c) in &comms {
+                        for m in 0..MSGS {
+                            p.send_enqueue(&m.to_le_bytes(), 1, 0, c)?;
+                        }
+                    }
+                    for (_, _, c) in &comms {
+                        p.synchronize_enqueue(c)?;
+                    }
+                } else {
+                    let bufs: Vec<Vec<DevicePtr>> = (0..NSTREAMS)
+                        .map(|_| (0..MSGS).map(|_| dev.alloc(8)).collect())
+                        .collect();
+                    for (i, (_, _, c)) in comms.iter().enumerate() {
+                        for m in 0..MSGS as usize {
+                            p.recv_enqueue_dev(bufs[i][m], 0, 0, c)?;
+                        }
+                    }
+                    for (_, _, c) in &comms {
+                        p.synchronize_enqueue(c)?;
+                    }
+                    for row in &bufs {
+                        for (m, d) in row.iter().enumerate() {
+                            let got = u64::from_le_bytes(dev.read_sync(*d)?.try_into().unwrap());
+                            assert_eq!(got, m as u64, "per-stream FIFO violated");
+                        }
+                    }
+                    for row in bufs {
+                        for d in row {
+                            dev.free(d)?;
+                        }
+                    }
+                }
+                if matches!(p.config().enqueue_mode, EnqueueMode::ProgressThread) {
+                    assert!(
+                        p.progress().lane_count() <= 2,
+                        "lane pool must respect the enqueue_lanes cap"
+                    );
+                }
+                p.barrier(p.world_comm())?;
+                for (gs, s, c) in comms {
+                    drop(c);
+                    p.stream_free(s)?;
+                    dev.destroy_stream(&gs)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        }
     }
 
     #[test]
@@ -484,17 +751,22 @@ impl Proc {
     /// `MPIX_Bcast_enqueue`: enqueue a broadcast on the communicator's GPU
     /// stream. Ranks without an enqueuing stream call the conventional
     /// `bcast` — the two interoperate (the enqueued op runs the same
-    /// collective on the dispatcher thread).
+    /// collective on a progress lane).
     pub fn bcast_enqueue_dev(&self, buf: DevicePtr, root: u32, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
+        comm.check_rank(root)?;
         let p = self.clone();
         let c = comm.clone();
         let dev = self.gpu();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            let mut staging = dev.read_sync(buf).expect("bcast staging read");
-            p.bcast(&mut staging, root, &c).expect("enqueued bcast");
-            dev.write_sync(buf, &staging).expect("bcast staging write");
-        }))
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let mut staging = dev.read_sync(buf)?;
+                p.bcast(&mut staging, root, &c)?;
+                dev.write_sync(buf, &staging)
+            }),
+        )
     }
 
     /// `MPIX_Allreduce_enqueue` over device memory.
@@ -509,11 +781,15 @@ impl Proc {
         let p = self.clone();
         let c = comm.clone();
         let dev = self.gpu();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            let mut staging = dev.read_sync(buf).expect("allreduce staging read");
-            p.allreduce(&mut staging, &dt, op, &c).expect("enqueued allreduce");
-            dev.write_sync(buf, &staging).expect("allreduce staging write");
-        }))
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let mut staging = dev.read_sync(buf)?;
+                p.allreduce(&mut staging, &dt, op, &c)?;
+                dev.write_sync(buf, &staging)
+            }),
+        )
     }
 
     /// `MPIX_Barrier_enqueue`.
@@ -521,9 +797,7 @@ impl Proc {
         let gpu = enqueue_target(comm)?;
         let p = self.clone();
         let c = comm.clone();
-        self.enqueue_op(&gpu, true, Box::new(move || {
-            p.barrier(&c).expect("enqueued barrier");
-        }))
+        self.enqueue_op(&gpu, true, Box::new(move || p.barrier(&c)))
     }
 }
 
@@ -559,7 +833,7 @@ mod coll_tests {
                 dev.write_sync(db, &bytes)?;
                 p.bcast_enqueue_dev(db, 0, &c)?;
                 p.barrier_enqueue(&c)?;
-                gs.synchronize()?;
+                p.synchronize_enqueue(&c)?;
                 assert_eq!(u64::from_le_bytes(dev.read_sync(d)?.try_into().unwrap()), 1 + 2 + 3);
                 assert_eq!(u64::from_le_bytes(dev.read_sync(db)?.try_into().unwrap()), 0xAA);
                 dev.free(d)?;

@@ -5,13 +5,18 @@
 //!   `MPIX_Stream_comm_create_multiple`.
 //! * [`pt2pt`] — the indexed `MPIX_Stream_send/recv/isend/irecv`.
 //! * [`enqueue`] — `MPIX_{Send,Recv,Isend,Irecv,Wait,Waitall}_enqueue`.
+//! * [`progress`] — the sharded, event-driven progress engine behind the
+//!   enqueue APIs: one lazily-spawned lane per GPU stream (capped by
+//!   `Config::enqueue_lanes`), edge-triggered handoff with no polling.
 
 pub mod enqueue;
+pub mod progress;
 pub mod pt2pt;
 pub mod stream;
 pub mod stream_comm;
 
-pub use enqueue::{EnqueuedRequest, EnqueueEngine};
+pub use enqueue::EnqueuedRequest;
+pub use progress::{LaneSnapshot, ProgressRouter};
 pub use stream::MpixStream;
 
 /// `MPIX_ANY_INDEX` (§3.5): wildcard source stream index for receives on

@@ -1,0 +1,676 @@
+//! Sharded, event-driven progress engine for the `MPIX_*_enqueue` APIs
+//! (§5.2's "better implementation", scaled out).
+//!
+//! The paper's thesis is that one serial context should map to one private
+//! communication path. The previous engine inverted that: every GPU stream
+//! on a rank funneled into a single progress thread scanning one shared
+//! `VecDeque` under a 1 ms `wait_timeout` — the timeout existed only to
+//! paper over a lost-wakeup race (the GPU trigger flipped a `ready` flag
+//! and notified *without holding the queue lock*). This module replaces it
+//! with **progress lanes**:
+//!
+//! * One lane per GPU stream (lanes are lazily spawned and pooled per
+//!   [`Proc`](crate::mpi::world::Proc), capped by
+//!   [`Config::enqueue_lanes`](crate::config::Config::enqueue_lanes);
+//!   beyond the cap, streams share lanes round-robin).
+//! * Each lane is fed by its own queue. The GPU trigger op *hands the MPI
+//!   operation to the lane* when the stream reaches it, so readiness is
+//!   edge-triggered: the lane worker pops in FIFO order — **no polling
+//!   timeout and no O(n) ready scan**. Wakeup is notify-under-lock, which
+//!   closes the lost-wakeup race by construction.
+//! * Enqueued closures return [`Result`]; a failure is recorded per-stream
+//!   and surfaced to the caller at the matching wait/synchronize point
+//!   ([`Proc::synchronize_enqueue`](crate::mpi::world::Proc) /
+//!   `wait_enqueue`) instead of panicking on the lane thread.
+//! * Shutdown joins every lane worker and fails the completion gates of
+//!   any still-queued operations, so a GPU stream blocked in a sync gate
+//!   wakes with [`MpiErr::Enqueue`] instead of hanging forever.
+//!
+//! Per-lane metrics (ops dispatched, wakeups, queue depth + peak, and
+//! trigger→dispatch stall time) are published through
+//! [`crate::coordinator::metrics`].
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::metrics::{Gauge, LatencyHist, RateCounter};
+use crate::error::{MpiErr, Result};
+use crate::gpu::GpuStream;
+
+/// An MPI operation driven on a lane thread. Returns `Result` so failures
+/// propagate to the caller instead of panicking the lane.
+pub(crate) type LaneOp = Box<dyn FnOnce() -> Result<()> + Send>;
+
+// ----------------------------------------------------------------------
+// Completion gate
+// ----------------------------------------------------------------------
+
+/// Gate between a lane worker (producer of the outcome) and the GPU
+/// stream's dispatcher (consumer): carries the operation's `Result` so
+/// stream-side waits observe failures, not just completion.
+pub(crate) struct DoneGate {
+    state: Mutex<Option<Result<()>>>,
+    cv: Condvar,
+}
+
+impl DoneGate {
+    pub(crate) fn new() -> Arc<DoneGate> {
+        Arc::new(DoneGate { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// Publish the outcome (first writer wins) and wake all waiters.
+    pub(crate) fn set(&self, r: Result<()>) {
+        let mut st = self.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(r);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until the outcome is published.
+    pub(crate) fn wait(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.as_ref() {
+                return r.clone();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Per-stream outcome tracking
+// ----------------------------------------------------------------------
+
+/// Per-GPU-stream bookkeeping shared by the router, every lane worker and
+/// every trigger closure: sticky first-failure per stream, plus dispatched
+/// op counts.
+pub(crate) struct StreamStats {
+    errors: Mutex<HashMap<u64, MpiErr>>,
+    ops: Mutex<HashMap<u64, u64>>,
+}
+
+impl StreamStats {
+    fn new() -> Arc<StreamStats> {
+        Arc::new(StreamStats { errors: Mutex::new(HashMap::new()), ops: Mutex::new(HashMap::new()) })
+    }
+
+    /// Record the first failure observed for `stream_id` (later failures
+    /// are dropped — MPI surfaces the first error of a faulted path).
+    pub(crate) fn record_error(&self, stream_id: u64, e: MpiErr) {
+        self.errors.lock().unwrap().entry(stream_id).or_insert(e);
+    }
+
+    fn take_error(&self, stream_id: u64) -> Option<MpiErr> {
+        self.errors.lock().unwrap().remove(&stream_id)
+    }
+
+    fn count_op(&self, stream_id: u64) {
+        *self.ops.lock().unwrap().entry(stream_id).or_insert(0) += 1;
+    }
+
+    fn ops(&self, stream_id: u64) -> u64 {
+        self.ops.lock().unwrap().get(&stream_id).copied().unwrap_or(0)
+    }
+
+    fn detach(&self, stream_id: u64) {
+        self.errors.lock().unwrap().remove(&stream_id);
+        self.ops.lock().unwrap().remove(&stream_id);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Progress lane
+// ----------------------------------------------------------------------
+
+/// One queued operation: handed over by the GPU trigger when the stream
+/// reaches it (i.e. the op is *ready* the moment it is pushed).
+struct LaneMsg {
+    stream_id: u64,
+    op: LaneOp,
+    done: Option<Arc<DoneGate>>,
+    sent_at: Instant,
+}
+
+/// Per-lane metrics, published through [`crate::coordinator::metrics`].
+pub struct LaneMetrics {
+    /// Operations completed by this lane.
+    pub dispatched: RateCounter,
+    /// Times the worker was woken from an idle wait to process work.
+    pub wakeups: RateCounter,
+    /// Current / peak queue depth.
+    pub depth: Gauge,
+    /// Trigger→dispatch stall: time from the GPU stream reaching the
+    /// trigger op to the lane picking the operation up. The old polling
+    /// engine floored this at up to 1 ms; edge-triggered lanes keep it in
+    /// the microsecond range.
+    pub stall: LatencyHist,
+}
+
+impl LaneMetrics {
+    fn new() -> LaneMetrics {
+        LaneMetrics {
+            dispatched: RateCounter::new(),
+            wakeups: RateCounter::new(),
+            depth: Gauge::new(),
+            stall: LatencyHist::new(),
+        }
+    }
+}
+
+struct LaneState {
+    queue: VecDeque<LaneMsg>,
+    closed: bool,
+}
+
+struct LaneShared {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+    metrics: LaneMetrics,
+}
+
+/// A progress lane: one worker thread draining one FIFO of ready ops.
+pub(crate) struct ProgressLane {
+    index: usize,
+    shared: Arc<LaneShared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ProgressLane {
+    fn spawn(index: usize, stats: Arc<StreamStats>) -> Arc<ProgressLane> {
+        let shared = Arc::new(LaneShared {
+            state: Mutex::new(LaneState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            metrics: LaneMetrics::new(),
+        });
+        let ws = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("mpix-progress-lane-{index}"))
+            .spawn(move || lane_worker(index, ws, stats))
+            .expect("spawn progress lane");
+        Arc::new(ProgressLane { index, shared, worker: Mutex::new(Some(handle)) })
+    }
+
+    pub(crate) fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Hand a ready operation to the lane. Returns the message back if the
+    /// lane is already shut down so the caller can fail its gate.
+    fn push(&self, msg: LaneMsg) -> std::result::Result<(), LaneMsg> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(msg);
+        }
+        self.shared.metrics.depth.inc();
+        st.queue.push_back(msg);
+        // Notify while holding the lock: the worker cannot be between its
+        // queue check and its wait, so the wakeup cannot be lost.
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// Close the lane: no new work is accepted; the worker fail-flushes
+    /// anything still queued (their gates resolve to `MpiErr::Enqueue`)
+    /// and exits.
+    fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Join the worker thread (idempotent). If called *from* the lane's
+    /// own thread — possible when a lane op held the last `Proc` clone,
+    /// so dropping it tears down the whole router on this thread — the
+    /// worker is detached instead of self-joined (which would deadlock).
+    fn join(&self) {
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            if h.thread().id() == std::thread::current().id() {
+                return;
+            }
+            let _ = h.join();
+        }
+    }
+
+    pub(crate) fn metrics(&self) -> &LaneMetrics {
+        &self.shared.metrics
+    }
+}
+
+/// What the worker pulled off the queue: one op to run, or (on close) the
+/// remaining queue to fail-flush. Ops are always dropped *outside* the
+/// lane lock — an op closure can hold the last `Proc` clone, whose drop
+/// tears down the router and re-enters this lane's lock.
+enum Pulled {
+    Run(LaneMsg),
+    Flush(Vec<LaneMsg>),
+}
+
+fn lane_worker(index: usize, shared: Arc<LaneShared>, stats: Arc<StreamStats>) {
+    loop {
+        let pulled = {
+            let mut st = shared.state.lock().unwrap();
+            let mut waited = false;
+            loop {
+                if st.closed {
+                    break Pulled::Flush(st.queue.drain(..).collect());
+                }
+                if let Some(m) = st.queue.pop_front() {
+                    shared.metrics.depth.dec();
+                    if waited {
+                        shared.metrics.wakeups.add(1);
+                    }
+                    break Pulled::Run(m);
+                }
+                waited = true;
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        match pulled {
+            Pulled::Run(msg) => {
+                shared.metrics.stall.record(msg.sent_at.elapsed());
+                let r = (msg.op)();
+                shared.metrics.dispatched.add(1);
+                stats.count_op(msg.stream_id);
+                if let Err(e) = &r {
+                    stats.record_error(msg.stream_id, e.clone());
+                }
+                if let Some(d) = &msg.done {
+                    d.set(r);
+                }
+            }
+            Pulled::Flush(msgs) => {
+                // Fail-flush: wake every op still queued with an error
+                // instead of silently dropping its gate (the old engine's
+                // teardown hang).
+                for m in msgs {
+                    shared.metrics.depth.dec();
+                    let e = MpiErr::Enqueue(format!(
+                        "progress lane {index} shut down with operations pending"
+                    ));
+                    stats.record_error(m.stream_id, e.clone());
+                    if let Some(d) = &m.done {
+                        d.set(Err(e));
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Router
+// ----------------------------------------------------------------------
+
+/// Point-in-time view of one lane, for reports and tests.
+#[derive(Debug, Clone)]
+pub struct LaneSnapshot {
+    pub lane: usize,
+    /// GPU streams currently assigned to this lane.
+    pub streams: usize,
+    pub dispatched: u64,
+    pub wakeups: u64,
+    pub depth: u64,
+    pub depth_peak: u64,
+    pub stall_mean_ns: f64,
+    pub stall_p50_ns: u64,
+    pub stall_p99_ns: u64,
+}
+
+struct RouterState {
+    lanes: Vec<Arc<ProgressLane>>,
+    /// GPU stream id → lane index.
+    assign: HashMap<u64, usize>,
+    /// Set by [`ProgressRouter::shutdown`] under this lock, so no lane can
+    /// be spawned concurrently with (or after) shutdown and escape the
+    /// close/join pass.
+    closed: bool,
+}
+
+/// The per-process progress subsystem: assigns GPU streams to lanes,
+/// tracks per-stream outcomes, and owns lane lifecycle.
+pub struct ProgressRouter {
+    max_lanes: usize,
+    state: Mutex<RouterState>,
+    stats: Arc<StreamStats>,
+}
+
+impl ProgressRouter {
+    /// `max_lanes` is [`Config::enqueue_lanes`](crate::config::Config):
+    /// the cap on concurrent progress threads per process.
+    pub fn new(max_lanes: usize) -> Arc<ProgressRouter> {
+        Arc::new(ProgressRouter {
+            max_lanes: max_lanes.max(1),
+            state: Mutex::new(RouterState {
+                lanes: Vec::new(),
+                assign: HashMap::new(),
+                closed: false,
+            }),
+            stats: StreamStats::new(),
+        })
+    }
+
+    /// The lane serving `stream_id`, lazily spawning until the cap and
+    /// sharing round-robin beyond it. Fails once the router is shut down.
+    fn lane_for(&self, stream_id: u64) -> Result<Arc<ProgressLane>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(MpiErr::Enqueue("progress engine is shut down".into()));
+        }
+        if let Some(&i) = st.assign.get(&stream_id) {
+            return Ok(st.lanes[i].clone());
+        }
+        let idx = if st.lanes.len() < self.max_lanes {
+            st.lanes.push(ProgressLane::spawn(st.lanes.len(), self.stats.clone()));
+            st.lanes.len() - 1
+        } else {
+            // Share the least-loaded lane (fewest assigned streams), so
+            // churn (create/free/create) reuses lanes freed by
+            // `detach_stream` instead of piling onto a busy one.
+            (0..st.lanes.len())
+                .min_by_key(|&i| st.assign.values().filter(|&&a| a == i).count())
+                .unwrap_or(0)
+        };
+        st.assign.insert(stream_id, idx);
+        Ok(st.lanes[idx].clone())
+    }
+
+    /// Register `op` to run when GPU stream `gpu` reaches this point, and
+    /// (for `sync`) stall the stream until the op completes. The trigger
+    /// enqueued on the stream hands the op to the lane — edge-triggered,
+    /// in stream order.
+    pub(crate) fn submit(&self, gpu: &GpuStream, sync: bool, op: LaneOp) -> Result<()> {
+        let stream_id = gpu.id();
+        let lane = self.lane_for(stream_id)?;
+        let done = if sync { Some(DoneGate::new()) } else { None };
+        let trigger_done = done.clone();
+        let stats = self.stats.clone();
+        gpu.enqueue(Box::new(move || {
+            let msg = LaneMsg { stream_id, op, done: trigger_done, sent_at: Instant::now() };
+            if let Err(msg) = lane.push(msg) {
+                let e = MpiErr::Enqueue(format!(
+                    "progress lane {} is shut down; operation dropped",
+                    lane.index()
+                ));
+                stats.record_error(stream_id, e.clone());
+                if let Some(d) = &msg.done {
+                    d.set(Err(e));
+                }
+            }
+        }))?;
+        if let Some(d) = done {
+            // Stall the stream until the MPI op finishes. Failures are
+            // already recorded per-stream; the gate only orders the
+            // stream.
+            gpu.enqueue(Box::new(move || {
+                let _ = d.wait();
+            }))?;
+        }
+        Ok(())
+    }
+
+    /// Record a failure for `stream_id` (used by the HostFunc path, which
+    /// runs ops on the GPU dispatcher rather than a lane).
+    pub(crate) fn record_error(&self, stream_id: u64, e: MpiErr) {
+        self.stats.record_error(stream_id, e);
+    }
+
+    /// Take (and clear) the first failure recorded for `stream_id`.
+    pub fn take_error(&self, stream_id: u64) -> Option<MpiErr> {
+        self.stats.take_error(stream_id)
+    }
+
+    /// Operations dispatched for `stream_id` across all lanes.
+    pub fn stream_ops(&self, stream_id: u64) -> u64 {
+        self.stats.ops(stream_id)
+    }
+
+    /// Lanes currently spawned (≤ the `enqueue_lanes` cap).
+    pub fn lane_count(&self) -> usize {
+        self.state.lock().unwrap().lanes.len()
+    }
+
+    /// Per-lane metric snapshots.
+    pub fn metrics(&self) -> Vec<LaneSnapshot> {
+        let st = self.state.lock().unwrap();
+        st.lanes
+            .iter()
+            .map(|l| {
+                let m = l.metrics();
+                LaneSnapshot {
+                    lane: l.index(),
+                    streams: st.assign.values().filter(|&&i| i == l.index()).count(),
+                    dispatched: m.dispatched.count(),
+                    wakeups: m.wakeups.count(),
+                    depth: m.depth.get(),
+                    depth_peak: m.depth.peak(),
+                    stall_mean_ns: m.stall.mean_ns(),
+                    stall_p50_ns: m.stall.percentile_ns(50.0),
+                    stall_p99_ns: m.stall.percentile_ns(99.0),
+                }
+            })
+            .collect()
+    }
+
+    /// Detach a destroyed GPU stream: drop its lane assignment and
+    /// per-stream bookkeeping (sticky error, op counts) so long-running
+    /// processes that churn streams do not grow these maps without bound.
+    /// Called from `MPIX_Stream_free` for GPU-backed streams; a later
+    /// re-attach of the same GPU stream simply re-assigns a lane.
+    pub fn detach_stream(&self, stream_id: u64) {
+        self.state.lock().unwrap().assign.remove(&stream_id);
+        self.stats.detach(stream_id);
+    }
+
+    /// Shut down every lane: refuse new submissions, close queues,
+    /// fail-flush pending gates, join all workers. Idempotent; called
+    /// from `Drop`.
+    pub fn shutdown(&self) {
+        let lanes: Vec<Arc<ProgressLane>> = {
+            let mut st = self.state.lock().unwrap();
+            st.closed = true;
+            st.lanes.clone()
+        };
+        for l in &lanes {
+            l.close();
+        }
+        for l in &lanes {
+            l.join();
+        }
+    }
+}
+
+impl Drop for ProgressRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn lanes_spawn_lazily_up_to_cap_then_share() {
+        let r = ProgressRouter::new(2);
+        assert_eq!(r.lane_count(), 0, "no lanes before first stream");
+        let a = r.lane_for(10).unwrap().index();
+        let b = r.lane_for(11).unwrap().index();
+        let c = r.lane_for(12).unwrap().index();
+        let a2 = r.lane_for(10).unwrap().index();
+        assert_eq!(r.lane_count(), 2, "capped at enqueue_lanes");
+        assert_ne!(a, b, "distinct streams get private lanes until the cap");
+        assert_eq!(a, a2, "assignment is stable");
+        assert!(c == a || c == b, "overflow stream shares an existing lane");
+        r.shutdown();
+        // A shut-down router refuses new streams and submissions.
+        assert!(matches!(r.lane_for(13), Err(MpiErr::Enqueue(_))));
+        let gs = GpuStream::spawn(70);
+        assert!(matches!(r.submit(&gs, true, Box::new(|| Ok(()))), Err(MpiErr::Enqueue(_))));
+        gs.shutdown();
+    }
+
+    #[test]
+    fn ops_run_in_trigger_order_and_propagate_results() {
+        let r = ProgressRouter::new(1);
+        let gs = GpuStream::spawn(71);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..8 {
+            let log = log.clone();
+            r.submit(
+                &gs,
+                false,
+                Box::new(move || {
+                    log.lock().unwrap().push(i);
+                    Ok(())
+                }),
+            )
+            .unwrap();
+        }
+        // A failing op is recorded sticky for the stream, not panicked.
+        r.submit(&gs, true, Box::new(|| Err(MpiErr::Arg("boom".into())))).unwrap();
+        gs.synchronize().unwrap();
+        // The lane drains asynchronously from the GPU stream for async
+        // ops, but the final sync op orders everything before it.
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+        assert!(matches!(r.take_error(gs.id()), Some(MpiErr::Arg(_))));
+        assert!(r.take_error(gs.id()).is_none(), "take clears the sticky error");
+        assert_eq!(r.stream_ops(gs.id()), 9);
+        let snaps = r.metrics();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].dispatched, 9);
+        assert_eq!(snaps[0].depth, 0, "queue drained");
+        r.shutdown();
+        gs.shutdown();
+    }
+
+    #[test]
+    fn wakeup_is_event_driven_not_polled() {
+        // 64 sequential sync round-trips; the old engine's 1 ms polling
+        // crutch floored each at up to a timeout tick. Edge-triggered
+        // handoff keeps mean trigger→dispatch stall well under 1 ms even
+        // on a loaded CI box.
+        let r = ProgressRouter::new(1);
+        let gs = GpuStream::spawn(72);
+        for _ in 0..64 {
+            r.submit(&gs, true, Box::new(|| Ok(()))).unwrap();
+            gs.synchronize().unwrap();
+            // Let the lane go idle so every op exercises the wakeup path.
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let snaps = r.metrics();
+        let snap = &snaps[0];
+        assert_eq!(snap.dispatched, 64);
+        // Median, not mean: a single multi-ms scheduler deschedule on a
+        // loaded CI box must not flip the verdict. The old polling engine
+        // floored the median at ~1 ms; edge-triggered handoff keeps it in
+        // the tens of microseconds.
+        assert!(
+            snap.stall_p50_ns < 1_000_000,
+            "p50 trigger→dispatch stall {}ns must be well under the old 1 ms polling floor",
+            snap.stall_p50_ns
+        );
+        assert!(snap.wakeups > 0, "idle lane wakes via notification");
+        r.shutdown();
+        gs.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_pending_gates_instead_of_hanging() {
+        let r = ProgressRouter::new(1);
+        // Spawn the lane, then close it before any trigger fires.
+        let lane = r.lane_for(99).unwrap();
+        lane.close();
+        let gate = DoneGate::new();
+        let pushed = lane.push(LaneMsg {
+            stream_id: 99,
+            op: Box::new(|| Ok(())),
+            done: Some(gate.clone()),
+            sent_at: Instant::now(),
+        });
+        assert!(pushed.is_err(), "closed lane rejects new work");
+        // A queued-but-unprocessed op: re-open scenario via a fresh router.
+        let r2 = ProgressRouter::new(1);
+        let blocker = Arc::new((Mutex::new(false), Condvar::new()));
+        let b2 = blocker.clone();
+        let lane2 = r2.lane_for(100).unwrap();
+        // First op blocks the lane worker...
+        lane2
+            .push(LaneMsg {
+                stream_id: 100,
+                op: Box::new(move || {
+                    let (m, cv) = &*b2;
+                    let mut go = m.lock().unwrap();
+                    while !*go {
+                        go = cv.wait(go).unwrap();
+                    }
+                    Ok(())
+                }),
+                done: None,
+                sent_at: Instant::now(),
+            })
+            .unwrap();
+        // ...second op sits queued behind it with a sync gate.
+        let gate2 = DoneGate::new();
+        lane2
+            .push(LaneMsg {
+                stream_id: 100,
+                op: Box::new(|| Ok(())),
+                done: Some(gate2.clone()),
+                sent_at: Instant::now(),
+            })
+            .unwrap();
+        lane2.close();
+        // Unblock the in-flight op; the worker then fail-flushes op 2.
+        {
+            let (m, cv) = &*blocker;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert!(matches!(gate2.wait(), Err(MpiErr::Enqueue(_))), "pending gate failed, not dropped");
+        assert!(matches!(r2.take_error(100), Some(MpiErr::Enqueue(_))));
+        r2.shutdown(); // joins; must not hang
+    }
+
+    #[test]
+    fn multiple_streams_fan_out_across_lanes() {
+        let r = ProgressRouter::new(4);
+        let streams: Vec<GpuStream> = (0..4).map(|i| GpuStream::spawn(80 + i)).collect();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for gs in &streams {
+            for _ in 0..16 {
+                let hits = hits.clone();
+                r.submit(
+                    gs,
+                    false,
+                    Box::new(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    }),
+                )
+                .unwrap();
+            }
+        }
+        for gs in &streams {
+            r.submit(gs, true, Box::new(|| Ok(()))).unwrap();
+            gs.synchronize().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+        assert_eq!(r.lane_count(), 4, "one private lane per stream under the cap");
+        for s in r.metrics() {
+            assert_eq!(s.streams, 1);
+            assert_eq!(s.dispatched, 17);
+        }
+        r.shutdown();
+        for gs in streams {
+            gs.shutdown();
+        }
+    }
+}

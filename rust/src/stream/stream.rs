@@ -183,6 +183,12 @@ impl Proc {
         if freed {
             self.mark_vci_shared(idx, false);
         }
+        // Drop per-stream progress bookkeeping (lane assignment, sticky
+        // error, op counts) for GPU-backed streams so stream churn does
+        // not grow the router's maps without bound.
+        if let (Some(gs), Some(router)) = (stream.inner.gpu_stream(), self.progress_opt()) {
+            router.detach_stream(gs.id());
+        }
         Ok(())
     }
 }

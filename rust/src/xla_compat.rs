@@ -1,0 +1,125 @@
+//! Offline shim for the `xla` crate (xla-rs / `xla_extension`).
+//!
+//! The crate set available in this environment is offline, so the real
+//! PJRT/XLA backend cannot be linked. This module mirrors the exact API
+//! surface [`crate::runtime`] consumes — `PjRtClient::cpu`,
+//! `HloModuleProto::from_text_file`, `XlaComputation::from_proto`,
+//! `PjRtLoadedExecutable::execute`, `Literal` conversions and [`Error`] —
+//! so the runtime compiles and degrades gracefully: every job fails with
+//! an actionable "built without the XLA/PJRT backend" error instead of a
+//! link failure, and artifact-backed tests skip (they already skip when
+//! `artifacts/` is absent).
+//!
+//! To run against real XLA, replace this module's contents with
+//! `pub use xla::*;` and add `xla = "0.1"` to `Cargo.toml` — no other
+//! file changes are needed; `crate::runtime` and `crate::error` import
+//! the backend exclusively through this module.
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str = "built without the XLA/PJRT backend (offline xla_compat shim); \
+     swap rust/src/xla_compat.rs for the real `xla` crate to enable kernels";
+
+/// PJRT client handle. The shim constructor always fails (no backend).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// `xla::PjRtClient::cpu()` — in the shim, reports the missing
+    /// backend so the executor thread fails every job with a clear
+    /// message rather than panicking.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable. Unconstructible through the shim (the client
+/// constructor fails first), so the methods only satisfy the type
+/// checker.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Device buffer returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Host literal (tensor value).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shim_reports_missing_backend() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("xla_compat"), "error names the shim: {e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_surface_typechecks() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
