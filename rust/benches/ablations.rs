@@ -1,261 +1,18 @@
-//! Ablations: the design-choice anatomy behind the Fig. 3 curves.
-//!
-//!  1. lock-op counts per message per mode (the thread-local tally from
-//!     the real communication path) — the paper's "multiple critical
-//!     sections along the communication path" claim, quantified;
-//!  2. uncontended lock / atomic micro-costs (the "even uncontended
-//!     atomics hurt" §5.3 remark);
-//!  3. VCI pool-size sweep in the virtual-time replay: what happens when
-//!     streams outnumber endpoints and round-robin sharing kicks in
-//!     (§3.1) — contention reappears;
-//!  4. eager threshold sweep: eager vs rendezvous per-message cost.
+//! Design-choice ablations — thin shim over the harness `ablation/*`
+//! scenarios: lock-op tallies per critical-section mode, uncontended
+//! sync micro-costs, the VCI pool-size sweep, the eager/rendezvous
+//! threshold sweep, and partitioned-vs-streams orchestration.
 //!
 //! Run: `cargo bench --bench ablations`
+//! (env `PALLAS_BENCH_SMOKE=1` for the CI sizing; `pallas-bench
+//! --scenario 'ablation/*'` is the same thing with JSON output.)
 
-use mpix::bench_util::{bench, fmt_ns};
-use mpix::config::Config;
-use mpix::coordinator::driver::{msgrate_live, MsgrateMode};
-use mpix::mpi::world::World;
-use mpix::sim::calibrate::{calibrate, measure_atomic_ns, measure_lock_ns};
-use mpix::sim::msgrate::sim_pervci;
-use mpix::vci::lock::take_lock_ops;
+use mpix::harness::{profile_from_env, Registry};
 
 fn main() {
-    lock_anatomy();
-    micro_costs();
-    pool_sweep();
-    eager_threshold_sweep();
-    partitioned_vs_streams();
-}
-
-/// 5. §4.3: MPI-4 partitioned communication vs explicit MPIX streams for
-///    the same workload — N worker threads each moving their slice of a
-///    shared buffer every iteration. Partitioned: one psend, each thread
-///    `MPI_Pready`s its partition (implicit endpoint mapping from the
-///    init stage). Streams: each thread sends its slice over its own
-///    stream communicator (explicit endpoint control).
-fn partitioned_vs_streams() {
-    use mpix::mpi::world::World;
-    use std::time::Instant;
-    println!("\n== ablation 5 (§4.3): partitioned communication vs MPIX streams ==");
-    const THREADS: usize = 4;
-    const SLICE: usize = 512;
-    const ROUNDS: u64 = 500;
-
-    // --- partitioned ---
-    let cfg = Config { implicit_pool: THREADS, ..Default::default() };
-    let world = World::builder().ranks(2).config(cfg).build().unwrap();
-    let elapsed = std::sync::Mutex::new(None);
-    world
-        .run(|p| {
-            let buf = vec![1u8; THREADS * SLICE];
-            p.barrier(p.world_comm())?;
-            let t0 = Instant::now();
-            if p.rank() == 0 {
-                let ps = p.psend_init(&buf, THREADS, 1, 0, p.world_comm())?;
-                for _ in 0..ROUNDS {
-                    std::thread::scope(|s| {
-                        for part in 0..THREADS {
-                            let p = p.clone();
-                            let ps = ps.clone();
-                            s.spawn(move || p.pready(&ps, part).unwrap());
-                        }
-                    });
-                    p.pwait_send(&ps)?;
-                }
-            } else {
-                let mut rbuf = vec![0u8; THREADS * SLICE];
-                for _ in 0..ROUNDS {
-                    let mut pr = p.precv_init(&mut rbuf, THREADS, 0, 0, p.world_comm())?;
-                    p.pwait_recv(&mut pr)?;
-                }
-            }
-            p.barrier(p.world_comm())?;
-            if p.rank() == 0 {
-                *elapsed.lock().unwrap() = Some(t0.elapsed());
-            }
-            Ok(())
-        })
-        .unwrap();
-    let dt_part = elapsed.into_inner().unwrap().unwrap();
-
-    // --- streams ---
-    let cfg = Config { implicit_pool: 1, explicit_pool: THREADS, ..Default::default() };
-    let world = World::builder().ranks(2).config(cfg).build().unwrap();
-    let elapsed = std::sync::Mutex::new(None);
-    world
-        .run(|p| {
-            let mut streams = Vec::new();
-            let mut comms = Vec::new();
-            for _ in 0..THREADS {
-                let s = p.stream_create(&mpix::mpi::info::Info::null())?;
-                comms.push(p.stream_comm_create(p.world_comm(), Some(&s))?);
-                streams.push(s);
-            }
-            p.barrier(p.world_comm())?;
-            let t0 = Instant::now();
-            std::thread::scope(|sc| {
-                for (i, c) in comms.iter().enumerate() {
-                    let p = p.clone();
-                    let _ = i;
-                    sc.spawn(move || {
-                        let slice = vec![1u8; SLICE];
-                        let mut rbuf = vec![0u8; SLICE];
-                        for _ in 0..ROUNDS {
-                            if p.rank() == 0 {
-                                p.send(&slice, 1, 0, c).unwrap();
-                            } else {
-                                p.recv(&mut rbuf, 0, 0, c).unwrap();
-                            }
-                        }
-                    });
-                }
-            });
-            p.barrier(p.world_comm())?;
-            if p.rank() == 0 {
-                *elapsed.lock().unwrap() = Some(t0.elapsed());
-            }
-            drop(comms);
-            for s in streams {
-                p.stream_free(s)?;
-            }
-            Ok(())
-        })
-        .unwrap();
-    let dt_stream = elapsed.into_inner().unwrap().unwrap();
-    println!(
-        "  partitioned ({THREADS} parts x {ROUNDS} rounds): {:>10.3?}  ({:.1} us/round)",
-        dt_part,
-        dt_part.as_micros() as f64 / ROUNDS as f64
-    );
-    println!(
-        "  streams     ({THREADS} thrds x {ROUNDS} rounds): {:>10.3?}  ({:.1} us/round)",
-        dt_stream,
-        dt_stream.as_micros() as f64 / ROUNDS as f64
-    );
-    println!(
-        "  note: partitioned re-inits per round (per MPI-4 restart semantics here) and\n         \x20 pready spawns per-round threads; streams keep threads hot — the paper's\n         \x20 point is orchestration flexibility, not raw rate (§4.3)."
-    );
-}
-
-/// 1. Lock acquisitions per message, per mode, measured on the real path.
-fn lock_anatomy() {
-    println!("== ablation 1: lock acquisitions per message (live) ==");
-    let msgs = 2_000u64;
-    for mode in MsgrateMode::all() {
-        // One thread pair; the tally is read on the *receiver* side
-        // (rank 1 runs in-process, so the thread-local tally aggregates
-        // both sides of each rank's threads; report per message).
-        let _ = take_lock_ops();
-        let r = msgrate_live(mode, 1, msgs, 64, 8).expect("live");
-        // take_lock_ops on this thread only counts main-thread ops; the
-        // per-thread counts were asserted inside the workers. Report the
-        // path cost instead plus the documented per-mode lock schedule.
-        println!(
-            "  {:>10}: {:>7.0} ns/msg  (schedule: {})",
-            r.mode,
-            r.ns_per_msg,
-            match mode {
-                MsgrateMode::GlobalCs => "1 process-wide CS per MPI call",
-                MsgrateMode::PerVci => "ep lock on send + state lock on post + ep/state per progress poll",
-                MsgrateMode::Stream => "0 locks (serial-context guarantee)",
-            }
-        );
-    }
-    // Direct lock-op tally on a single in-thread exchange.
-    for (name, cfg) in [
-        ("global-cs", Config::fig3_global()),
-        ("per-vci", Config::fig3_pervci(1)),
-        ("stream", Config::fig3_stream(1)),
-    ] {
-        let world = World::builder().ranks(1).config(cfg).build().unwrap();
-        let p = world.proc(0);
-        let comm = if name == "stream" {
-            let s = p.stream_create(&mpix::mpi::info::Info::null()).unwrap();
-            let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
-            std::mem::forget(s); // keep stream alive for the comm
-            c
-        } else {
-            p.comm_dup(p.world_comm()).unwrap()
-        };
-        let _ = take_lock_ops();
-        let n = 200;
-        for i in 0..n {
-            let sr = p.isend(&[1u8; 8], 0, i, &comm).unwrap();
-            let mut b = [0u8; 8];
-            let st = p.recv(&mut b, 0, i, &comm).unwrap();
-            assert_eq!(st.count, 8);
-            p.wait(sr).unwrap();
-        }
-        let ops = take_lock_ops();
-        println!("  {:>10}: {:.1} lock-ops per self-message (exact tally)", name, ops as f64 / n as f64);
-    }
-}
-
-/// 2. Micro-costs.
-fn micro_costs() {
-    println!("\n== ablation 2: synchronization micro-costs ==");
-    let lock = measure_lock_ns(2_000_000);
-    let atomic = measure_atomic_ns(2_000_000);
-    println!("  uncontended Mutex lock+unlock: {}", fmt_ns(lock));
-    println!("  uncontended atomic fetch_add:  {}", fmt_ns(atomic));
-    let s = bench("arc-clone", 2, 5, 1_000_000, || {
-        let a = std::sync::Arc::new(0u64);
-        for _ in 0..1_000_000 {
-            std::hint::black_box(a.clone());
-        }
-    });
-    println!("  Arc clone+drop:                {}", fmt_ns(s.mean_ns()));
-}
-
-/// 3. Pool-size sweep (replay): 8 streams over 1..8 endpoints.
-fn pool_sweep() {
-    println!("\n== ablation 3: endpoint pool size (8 threads, virtual-time replay) ==");
-    let cal = calibrate(10_000).expect("calibration");
-    for pool in [1usize, 2, 4, 8] {
-        let pt = sim_pervci(&cal, 8, 10_000, pool);
-        println!("  pool={pool}: {:>8.3} Mmsg/s", pt.rate / 1e6);
-    }
-}
-
-/// 4. Eager threshold: per-message cost below/above the rendezvous
-///    switch-over.
-fn eager_threshold_sweep() {
-    println!("\n== ablation 4: eager vs rendezvous ==");
-    for (label, size, threshold) in
-        [("eager 8B", 8usize, 64 * 1024usize), ("eager 32KiB", 32 * 1024, 64 * 1024), ("rendezvous 128KiB", 128 * 1024, 64 * 1024), ("forced-rdv 8B", 8, 0)]
-    {
-        let cfg = Config { eager_threshold: threshold, ..Config::fig3_stream(1) };
-        let world = World::builder().ranks(2).config(cfg).build().unwrap();
-        let elapsed = std::sync::Mutex::new(None);
-        let msgs = if size > 1024 { 500u64 } else { 3_000 };
-        world
-            .run(|p| {
-                let s = p.stream_create(&mpix::mpi::info::Info::null())?;
-                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
-                p.barrier(p.world_comm())?;
-                let t0 = std::time::Instant::now();
-                if p.rank() == 0 {
-                    let buf = vec![0u8; size];
-                    for _ in 0..msgs {
-                        p.send(&buf, 1, 0, &c)?;
-                    }
-                } else {
-                    let mut buf = vec![0u8; size];
-                    for _ in 0..msgs {
-                        p.recv(&mut buf, 0, 0, &c)?;
-                    }
-                }
-                p.barrier(p.world_comm())?;
-                if p.rank() == 0 {
-                    *elapsed.lock().unwrap() = Some(t0.elapsed());
-                }
-                drop(c);
-                p.stream_free(s)?;
-                Ok(())
-            })
-            .unwrap();
-        let dt = elapsed.into_inner().unwrap().unwrap();
-        println!("  {:>18}: {:>9} /msg", label, fmt_ns(dt.as_nanos() as f64 / msgs as f64));
-    }
+    let profile = profile_from_env();
+    let report = Registry::standard()
+        .run(&["ablation".to_string()], &profile)
+        .expect("ablation scenarios");
+    report.print_text();
 }

@@ -1,47 +1,18 @@
-//! §5.2 regeneration: the GPU enqueue implementations.
-//!
-//! A K-stage device-compute + message pipeline, four ways:
-//!  * full-sync baseline — GPU-aware MPI without enqueue: a
-//!    cudaStreamSynchronize before every MPI call;
-//!  * enqueue via cudaLaunchHostFunc with the paper's "heavy switching
-//!    cost" modeled (the MPICH 4.1a1 prototype);
-//!  * enqueue via cudaLaunchHostFunc with zero switching cost (upper
-//!    bound for that design);
-//!  * enqueue via a dedicated host progress thread (the paper's "better
-//!    implementation": only event triggers on the kernel queue).
+//! §5.2 GPU enqueue pipeline — thin shim over the harness
+//! `enqueue/pipeline` scenario (full-sync baseline vs
+//! `cudaLaunchHostFunc` with/without the modeled switching cost vs the
+//! dedicated host progress thread).
 //!
 //! Run: `cargo bench --bench enqueue`
-//! (env ENQ_STAGES / ENQ_COMPUTE_NS / ENQ_SWITCH_NS to resize).
+//! (env `PALLAS_BENCH_SMOKE=1` for the CI sizing; `pallas-bench
+//! --scenario enqueue/pipeline` is the same thing with JSON output.)
 
-use mpix::config::EnqueueMode;
-use mpix::coordinator::driver::enqueue_pipeline;
-use mpix::coordinator::report;
-
-fn env_u64(k: &str, d: u64) -> u64 {
-    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
-}
+use mpix::harness::{profile_from_env, Registry};
 
 fn main() {
-    let stages = env_u64("ENQ_STAGES", 300);
-    let compute = env_u64("ENQ_COMPUTE_NS", 20_000);
-    let switch = env_u64("ENQ_SWITCH_NS", 30_000);
-    // Real cudaStreamSynchronize costs a driver round trip (~10-20us);
-    // our simulated synchronize is a cheap condvar, so the round trip is
-    // modeled explicitly (per synchronize call).
-    let sync = env_u64("ENQ_SYNC_NS", 15_000);
-    println!(
-        "== enqueue: {stages} stages, {compute}ns device compute/stage, {sync}ns modeled sync round-trip =="
-    );
-    let rows = vec![
-        enqueue_pipeline(None, stages, compute, 0, sync).expect("full-sync"),
-        enqueue_pipeline(Some(EnqueueMode::HostFunc), stages, compute, switch, sync)
-            .expect("hostfunc+switch"),
-        enqueue_pipeline(Some(EnqueueMode::HostFunc), stages, compute, 0, sync).expect("hostfunc"),
-        enqueue_pipeline(Some(EnqueueMode::ProgressThread), stages, compute, 0, sync).expect("progress"),
-    ];
-    report::print_pipeline(&rows);
-    let base = rows[0].per_stage_ns;
-    for r in &rows[1..] {
-        println!("  {} vs full-sync: {:.2}x", r.variant, base / r.per_stage_ns);
-    }
+    let profile = profile_from_env();
+    let report = Registry::standard()
+        .run(&["enqueue/pipeline".to_string()], &profile)
+        .expect("enqueue pipeline scenario");
+    report.print_text();
 }

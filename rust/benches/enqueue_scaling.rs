@@ -1,190 +1,19 @@
-//! Enqueue progress-engine scaling sweep: HostFunc vs a single progress
-//! lane vs sharded lanes, 1 → 2×cores GPU streams.
-//!
-//! Two measurements per (variant, stream count):
-//!
-//! * **per-op latency** — sequential `MPIX_Send_enqueue` +
-//!   `synchronize_enqueue` round-trips on one stream. The old global
-//!   engine's 1 ms polling crutch floored this at up to ~1 ms/op when its
-//!   lost-wakeup race hit; the edge-triggered lanes keep it in the
-//!   microsecond range (the lane stall p99 column shows the handoff
-//!   delay directly).
-//! * **aggregate throughput** — N streams × M `MPIX_Send_enqueue` ops all
-//!   in flight, one synchronize per stream at the end. With sharded
-//!   lanes this scales with stream count up to `Config::enqueue_lanes`.
+//! Enqueue progress-engine scaling — thin shim over the harness
+//! `enqueue/hostfunc-vs-lanes` scenario (aggregate throughput across N
+//! GPU streams: hostfunc dispatch vs one progress lane vs N sharded
+//! lanes, with the lane-stall p99 exported from the metrics snapshots).
 //!
 //! Run: `cargo bench --bench enqueue_scaling`
-//! (env ENQ_SCALE_MSGS / ENQ_SCALE_LAT_OPS / ENQ_SCALE_SWITCH_NS to
-//! resize.)
+//! (env `PALLAS_BENCH_SMOKE=1` for the CI sizing; `pallas-bench
+//! --scenario enqueue/hostfunc-vs-lanes` is the same thing with JSON
+//! output.)
 
-use std::sync::Mutex;
-use std::time::Instant;
-
-use mpix::config::{Config, EnqueueMode};
-use mpix::error::Result;
-use mpix::mpi::info::Info;
-use mpix::mpi::world::World;
-
-fn env_u64(k: &str, d: u64) -> u64 {
-    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
-}
-
-struct Row {
-    variant: String,
-    streams: usize,
-    per_op_us: f64,
-    rate_kops: f64,
-    stall_p99_us: Option<f64>,
-}
-
-/// One sweep point. Rank 0 drives the enqueue path under test; rank 1
-/// sinks the traffic with plain receives so only the sender's engine is
-/// measured.
-fn run_case(
-    variant: &str,
-    mode: EnqueueMode,
-    lanes: usize,
-    nstreams: usize,
-    lat_ops: u64,
-    msgs: u64,
-    switch_ns: u64,
-) -> Result<Row> {
-    let cfg = Config {
-        explicit_pool: nstreams,
-        max_endpoints: nstreams + 8,
-        enqueue_mode: mode,
-        enqueue_lanes: lanes,
-        hostfunc_switch_ns: switch_ns,
-        ..Default::default()
-    };
-    let world = World::builder().ranks(2).config(cfg).build()?;
-    let lat_slot: Mutex<Option<f64>> = Mutex::new(None);
-    let rate_slot: Mutex<Option<f64>> = Mutex::new(None);
-    let stall_slot: Mutex<Option<f64>> = Mutex::new(None);
-
-    world.run(|p| {
-        let dev = p.gpu();
-        let mut comms = Vec::new();
-        for _ in 0..nstreams {
-            let gs = dev.create_stream();
-            let mut info = Info::new();
-            info.set("type", "cudaStream_t");
-            info.set_hex_u64("value", gs.id());
-            let s = p.stream_create(&info)?;
-            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
-            comms.push((gs, s, c));
-        }
-        p.barrier(p.world_comm())?;
-
-        // Phase 1: sequential round-trip latency on stream 0.
-        if p.rank() == 0 {
-            let c = &comms[0].2;
-            let t0 = Instant::now();
-            for i in 0..lat_ops {
-                p.send_enqueue(&i.to_le_bytes(), 1, 0, c)?;
-                p.synchronize_enqueue(c)?;
-            }
-            *lat_slot.lock().unwrap() = Some(t0.elapsed().as_nanos() as f64 / lat_ops as f64 / 1e3);
-        } else {
-            let c = &comms[0].2;
-            let mut b = [0u8; 8];
-            for _ in 0..lat_ops {
-                p.recv(&mut b, 0, 0, c)?;
-            }
-        }
-        p.barrier(p.world_comm())?;
-
-        // Phase 2: aggregate throughput over all streams.
-        if p.rank() == 0 {
-            let t0 = Instant::now();
-            for (_, _, c) in &comms {
-                for m in 0..msgs {
-                    p.send_enqueue(&m.to_le_bytes(), 1, 1, c)?;
-                }
-            }
-            for (_, _, c) in &comms {
-                p.synchronize_enqueue(c)?;
-            }
-            let total = (msgs * nstreams as u64) as f64;
-            *rate_slot.lock().unwrap() = Some(total / t0.elapsed().as_secs_f64() / 1e3);
-            if matches!(p.config().enqueue_mode, EnqueueMode::ProgressThread) {
-                let worst = p
-                    .progress()
-                    .metrics()
-                    .iter()
-                    .map(|s| s.stall_p99_ns)
-                    .max()
-                    .unwrap_or(0);
-                *stall_slot.lock().unwrap() = Some(worst as f64 / 1e3);
-            }
-        } else {
-            let mut b = [0u8; 8];
-            for (_, _, c) in &comms {
-                for _ in 0..msgs {
-                    p.recv(&mut b, 0, 1, c)?;
-                }
-            }
-        }
-        p.barrier(p.world_comm())?;
-
-        for (gs, s, c) in comms {
-            drop(c);
-            p.stream_free(s)?;
-            dev.destroy_stream(&gs)?;
-        }
-        Ok(())
-    })?;
-
-    Ok(Row {
-        variant: variant.to_string(),
-        streams: nstreams,
-        per_op_us: lat_slot.into_inner().unwrap().unwrap_or(f64::NAN),
-        rate_kops: rate_slot.into_inner().unwrap().unwrap_or(f64::NAN),
-        stall_p99_us: stall_slot.into_inner().unwrap(),
-    })
-}
+use mpix::harness::{profile_from_env, Registry};
 
 fn main() {
-    let lat_ops = env_u64("ENQ_SCALE_LAT_OPS", 64);
-    let msgs = env_u64("ENQ_SCALE_MSGS", 200);
-    let switch_ns = env_u64("ENQ_SCALE_SWITCH_NS", 30_000);
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let mut sweep = vec![1usize, 2, 4, 8, 16, 32];
-    sweep.retain(|&n| n <= (2 * cores).max(2));
-
-    println!(
-        "== enqueue scaling: {lat_ops} latency ops, {msgs} msgs/stream, \
-         hostfunc switch {switch_ns}ns, {cores} cores =="
-    );
-    println!(
-        "{:>24} {:>8} {:>14} {:>14} {:>14}",
-        "variant", "streams", "per-op (us)", "rate (kop/s)", "stall p99 (us)"
-    );
-    for &n in &sweep {
-        let cases: Vec<(String, EnqueueMode, usize)> = vec![
-            ("hostfunc".into(), EnqueueMode::HostFunc, 1),
-            ("progress/1-lane".into(), EnqueueMode::ProgressThread, 1),
-            (format!("progress/{n}-lanes"), EnqueueMode::ProgressThread, n),
-        ];
-        for (name, mode, lanes) in cases {
-            match run_case(&name, mode, lanes, n, lat_ops, msgs, switch_ns) {
-                Ok(r) => {
-                    let stall = r
-                        .stall_p99_us
-                        .map(|v| format!("{v:>14.1}"))
-                        .unwrap_or_else(|| format!("{:>14}", "-"));
-                    println!(
-                        "{:>24} {:>8} {:>14.2} {:>14.1} {stall}",
-                        r.variant, r.streams, r.per_op_us, r.rate_kops
-                    );
-                }
-                Err(e) => println!("{name:>24} {n:>8}  failed: {e}"),
-            }
-        }
-    }
-    println!(
-        "\nshape checks: per-op latency for progress variants must sit well \
-         under the old 1 ms polling floor; progress/N-lanes rate should hold \
-         or improve vs progress/1-lane as streams grow."
-    );
+    let profile = profile_from_env();
+    let report = Registry::standard()
+        .run(&["enqueue/hostfunc-vs-lanes".to_string()], &profile)
+        .expect("enqueue lane scenario");
+    report.print_text();
 }

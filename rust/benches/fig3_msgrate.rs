@@ -1,41 +1,19 @@
-//! Figure 3 regeneration: multithread message rate on 8-byte messages,
-//! three critical-section regimes.
+//! Figure 3 regeneration — thin shim over the harness `msgrate/*`
+//! scenarios (live single-stream calibration + calibrated virtual-time
+//! replay per lock mode; see DESIGN.md §5 for why thread scaling is
+//! replayed on small hosts).
 //!
-//! Two sources, both printed:
-//!  1. live single-thread calibration of the real runtime (per-mode
-//!     ns/message + lock/atomic micro-costs);
-//!  2. the calibrated virtual-time replay sweeping 1..20 threads (see
-//!     DESIGN.md §5 for why thread scaling must be replayed on a 1-core
-//!     host).
-//!
-//! Run: `cargo bench --bench fig3_msgrate` (env FIG3_MSGS to resize).
+//! Run: `cargo bench --bench fig3_msgrate`
+//! (env `PALLAS_BENCH_SMOKE=1` for the CI sizing, `PALLAS_BENCH_SEED=N`
+//! to reseed; `pallas-bench --scenario msgrate` is the same thing with
+//! JSON output.)
 
-use mpix::coordinator::driver::{msgrate_live, MsgrateMode};
-use mpix::coordinator::report;
-use mpix::sim::calibrate::calibrate;
-use mpix::sim::msgrate::fig3_series;
+use mpix::harness::{profile_from_env, Registry};
 
 fn main() {
-    let msgs: u64 = std::env::var("FIG3_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(30_000);
-    println!("== fig3_msgrate: calibrating from live runs ({msgs} msgs/mode) ==");
-    let cal = calibrate(msgs).expect("calibration");
-    println!(
-        "calibration: stream={:.0}ns  per-vci={:.0}ns  global={:.0}ns  lock={:.1}ns  atomic={:.1}ns  handover={:.0}ns",
-        cal.t_stream_ns, cal.t_pervci_ns, cal.t_global_ns, cal.lock_ns, cal.atomic_ns, cal.handover_ns
-    );
-    for v in cal.shape_violations() {
-        println!("  [shape warning] {v}");
-    }
-
-    // Live multi-thread smoke points (functional; scaling is replayed).
-    for threads in [1usize, 2, 4] {
-        for mode in MsgrateMode::all() {
-            let r = msgrate_live(mode, threads, msgs / threads as u64, 64, 8).expect("live run");
-            report::print_msgrate_live(&r);
-        }
-    }
-
-    let threads = [1usize, 2, 4, 8, 12, 16, 20];
-    let rows = fig3_series(&cal, &threads, msgs);
-    report::print_fig3(&rows, "calibrated virtual-time replay");
+    let profile = profile_from_env();
+    let report = Registry::standard()
+        .run(&["msgrate".to_string()], &profile)
+        .expect("msgrate scenarios");
+    report.print_text();
 }

@@ -1,32 +1,17 @@
-//! Figure 1 regeneration: the two thread-communication patterns.
+//! Figure 1 patterns — thin shim over the harness `patterns/*` scenarios
+//! (N-to-1 via one multiplex stream communicator vs the multi-comm
+//! polling alternative the paper calls "cumbersome").
 //!
-//! (a) one-to-one — covered by fig3_msgrate (thread-paired streams);
-//!     here we add the *pattern-level* comparison at a fixed thread count.
-//! (b) N-to-1 — N sender threads, one polling receiver: a multiplex
-//!     stream communicator (one comm, MPIX_ANY_INDEX) vs the multi-comm
-//!     alternative the paper calls "cumbersome" (poll each communicator
-//!     in turn).
-//!
-//! Run: `cargo bench --bench patterns` (env PATTERNS_MSGS to resize).
+//! Run: `cargo bench --bench patterns`
+//! (env `PALLAS_BENCH_SMOKE=1` for the CI sizing; `pallas-bench
+//! --scenario patterns` is the same thing with JSON output.)
 
-use mpix::coordinator::driver::{msgrate_live, n_to_1_live, MsgrateMode};
-use mpix::coordinator::report;
+use mpix::harness::{profile_from_env, Registry};
 
 fn main() {
-    let msgs: u64 =
-        std::env::var("PATTERNS_MSGS").ok().and_then(|v| v.parse().ok()).unwrap_or(5_000);
-
-    println!("== patterns: (a) one-to-one at 4 thread pairs ==");
-    for mode in MsgrateMode::all() {
-        let r = msgrate_live(mode, 4, msgs, 64, 8).expect("one-to-one");
-        report::print_msgrate_live(&r);
-    }
-
-    println!("\n== patterns: (b) N-to-1 ==");
-    let mut rows = Vec::new();
-    for senders in [1usize, 2, 4, 8] {
-        rows.push(n_to_1_live(senders, msgs, true).expect("multiplex"));
-        rows.push(n_to_1_live(senders, msgs, false).expect("multi-comm"));
-    }
-    report::print_n_to_1(&rows);
+    let profile = profile_from_env();
+    let report = Registry::standard()
+        .run(&["patterns".to_string()], &profile)
+        .expect("pattern scenarios");
+    report.print_text();
 }

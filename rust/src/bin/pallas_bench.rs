@@ -1,0 +1,123 @@
+//! `pallas-bench` — the unified benchmark harness CLI.
+//!
+//! ```text
+//! pallas-bench --list
+//! pallas-bench [--smoke] [--scenario a,b,...] [--seed N] [--json PATH]
+//!              [--baseline PATH [--threshold 0.85]]
+//! ```
+//!
+//! * `--list`           print every registered scenario name and exit
+//! * `--scenario`       comma-separated names / `group` prefixes /
+//!                      trailing-`*` globs (default: all scenarios)
+//! * `--smoke`          seconds-scale CI sizing (default: full profile)
+//! * `--seed`           deterministic RNG seed (default 42)
+//! * `--json PATH`      write the machine-readable `pallas-bench/v1`
+//!                      report (the `BENCH_results.json` schema)
+//! * `--baseline PATH`  compare gated metrics against a reference report
+//! * `--threshold T`    regression gate ratio in (0, 1], default 0.85
+//!
+//! Exit codes: 0 ok, 1 runtime error, 2 usage error, 3 perf regression.
+
+use mpix::cli::Args;
+use mpix::error::Result;
+use mpix::harness::{baseline, Profile, Registry, Report};
+
+fn main() {
+    let args = match Args::parse_flags_only(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("usage error: {e}");
+            std::process::exit(2);
+        }
+    };
+    std::process::exit(match run(&args) {
+        Ok(code) => code,
+        // Invalid-argument errors (bad flag values, unknown scenarios,
+        // unreadable baselines) are usage errors per the documented
+        // exit-code contract; everything else is a runtime failure.
+        Err(mpix::error::MpiErr::Arg(e)) => {
+            eprintln!("usage error: {e}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    });
+}
+
+fn run(args: &Args) -> Result<i32> {
+    let registry = Registry::standard();
+    if args.get_bool("list") {
+        for name in registry.names() {
+            println!("{name}");
+        }
+        return Ok(0);
+    }
+
+    let seed = args.get_u64("seed", 42)?;
+    let profile = if args.get_bool("smoke") { Profile::smoke(seed) } else { Profile::full(seed) };
+    let patterns: Vec<String> = match args.get("scenario") {
+        None => Vec::new(),
+        Some(s) => s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect(),
+    };
+
+    let (report, failures) = registry.run_collect(&patterns, &profile)?;
+    report.print_text();
+    print_headline_ratio(&report);
+
+    // Write the report before acting on failures or the gate, so a
+    // failing CI run still uploads an inspectable artifact.
+    if let Some(path) = args.get("json") {
+        report.write_json(path)?;
+        eprintln!("[pallas-bench] wrote {path}");
+    }
+
+    if !failures.is_empty() {
+        println!("\n{} scenario(s) FAILED:", failures.len());
+        for (name, e) in &failures {
+            println!("  {name}: {e}");
+        }
+        return Ok(1);
+    }
+
+    if let Some(base_path) = args.get("baseline") {
+        let threshold = args.get_f64("threshold", 0.85)?;
+        let base = baseline::load(base_path)?;
+        let regressions = baseline::compare(&report, &base, threshold)?;
+        if regressions.is_empty() {
+            println!(
+                "\nbaseline gate: PASS (threshold {threshold}, baseline {base_path}, \
+                 {} scenario(s) compared)",
+                report.results.len()
+            );
+        } else {
+            println!("\nbaseline gate: FAIL (threshold {threshold}, baseline {base_path})");
+            for r in &regressions {
+                println!("  REGRESSION: {r}");
+            }
+            return Ok(3);
+        }
+    }
+    Ok(0)
+}
+
+/// The paper's headline shape, surfaced whenever both message-rate
+/// scenarios ran: lock-free throughput over global-CS at 4 streams.
+fn print_headline_ratio(report: &Report) {
+    let rate = |scenario: &str| {
+        report
+            .record(scenario)
+            .and_then(|r| r.metric("rate_4_msgs_per_sec"))
+            .map(|m| m.value)
+    };
+    if let (Some(stream), Some(global)) = (rate("msgrate/stream"), rate("msgrate/global-cs")) {
+        if global > 0.0 {
+            println!(
+                "\nheadline: lock-free streams vs global-CS at 4 streams = {:.2}x \
+                 (paper shape requires >= 2x)",
+                stream / global
+            );
+        }
+    }
+}

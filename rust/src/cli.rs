@@ -11,23 +11,31 @@ pub struct Args {
     flags: HashMap<String, String>,
 }
 
+/// Drain `--key value` / `--flag` pairs from an argument stream (shared
+/// by the subcommand-style and flags-only parsers).
+fn parse_flag_pairs<I: Iterator<Item = String>>(
+    it: &mut std::iter::Peekable<I>,
+) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    while let Some(arg) = it.next() {
+        let Some(key) = arg.strip_prefix("--") else {
+            return Err(MpiErr::Arg(format!("unexpected positional argument '{arg}'")));
+        };
+        let value = match it.peek() {
+            Some(v) if !v.starts_with("--") => it.next().unwrap(),
+            _ => "true".to_string(),
+        };
+        flags.insert(key.to_string(), value);
+    }
+    Ok(flags)
+}
+
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut it = argv.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
-        let mut flags = HashMap::new();
-        while let Some(arg) = it.next() {
-            let Some(key) = arg.strip_prefix("--") else {
-                return Err(MpiErr::Arg(format!("unexpected positional argument '{arg}'")));
-            };
-            let value = match it.peek() {
-                Some(v) if !v.starts_with("--") => it.next().unwrap(),
-                _ => "true".to_string(),
-            };
-            flags.insert(key.to_string(), value);
-        }
-        Ok(Args { command, flags })
+        Ok(Args { command, flags: parse_flag_pairs(&mut it)? })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -45,8 +53,24 @@ impl Args {
         }
     }
 
+    /// Parse a flags-only command line (no leading subcommand) — the
+    /// `pallas-bench` style: `--list --scenario x --threshold 0.85`.
+    pub fn parse_flags_only(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        Ok(Args { command: String::new(), flags: parse_flag_pairs(&mut it)? })
+    }
+
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| MpiErr::Arg(format!("--{key} expects a number, got '{v}'")))
+            }
+        }
     }
 
     /// Parse a comma-separated usize list.
@@ -108,5 +132,21 @@ mod tests {
     fn empty_argv_gives_help() {
         let a = Args::parse(std::iter::empty::<String>()).unwrap();
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn flags_only_parse() {
+        let a = Args::parse_flags_only(
+            "--list --scenario msgrate --threshold 0.9".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(a.command.is_empty());
+        assert!(a.get_bool("list"));
+        assert_eq!(a.get("scenario"), Some("msgrate"));
+        assert!((a.get_f64("threshold", 0.85).unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(a.get_f64("missing", 0.85).unwrap(), 0.85);
+        assert!(Args::parse_flags_only(["positional".to_string()]).is_err());
+        let bad = Args::parse_flags_only(["--threshold".to_string(), "abc".to_string()]).unwrap();
+        assert!(bad.get_f64("threshold", 0.85).is_err());
     }
 }

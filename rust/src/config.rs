@@ -223,6 +223,19 @@ impl Config {
             ..Default::default()
         }
     }
+
+    /// Preset for benchmark-harness workloads driving `n` explicit GPU
+    /// streams: a reserved pool sized for `n` plus headroom in the
+    /// endpoint cap so enqueue scenarios never trip the finite-endpoint
+    /// guard while sweeping stream counts.
+    pub fn bench_streams(n: usize) -> Self {
+        Config {
+            implicit_pool: 1,
+            explicit_pool: n,
+            max_endpoints: (n + 8).max(64),
+            ..Default::default()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -271,6 +284,16 @@ mod tests {
         assert_eq!(s.cs_mode, CsMode::LockFree);
         for c in [g, v, s] {
             c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn bench_streams_preset_valid_at_any_sweep_point() {
+        for n in [1usize, 2, 4, 8, 16, 64, 128] {
+            let c = Config::bench_streams(n);
+            c.validate().unwrap();
+            assert_eq!(c.explicit_pool, n);
+            assert!(c.max_endpoints >= c.implicit_pool + c.explicit_pool);
         }
     }
 

@@ -471,7 +471,9 @@ mod tests {
 /// Rank 0 fills `x` and `MPIX_Send_enqueue`s it; rank 1 enqueues
 /// `cudaMemcpyAsync(d_y, ...)`, `MPIX_Recv_enqueue(d_x, ...)`, the SAXPY
 /// kernel, and the result copy-back onto one GPU stream — no host-side
-/// synchronization between communication and compute.
+/// synchronization between communication and compute. Requires the
+/// `xla_compat` backend feature (default-on).
+#[cfg(feature = "xla_compat")]
 pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
     const A_VAL: f32 = 2.0;
     const X_VAL: f32 = 1.0;

@@ -146,6 +146,43 @@ impl Default for LatencyHist {
     }
 }
 
+/// Point-in-time export of a [`Gauge`], for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GaugeSnapshot {
+    pub level: u64,
+    pub peak: u64,
+}
+
+impl Gauge {
+    /// Read level and peak at once.
+    pub fn snapshot(&self) -> GaugeSnapshot {
+        GaugeSnapshot { level: self.get(), peak: self.peak() }
+    }
+}
+
+/// Point-in-time export of a [`LatencyHist`] — consumed by the per-lane
+/// [`LaneSnapshot`](crate::stream::progress::LaneSnapshot)s the benchmark
+/// harness exports into `BENCH_results.json` scenario records.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl LatencyHist {
+    /// Read count, mean and the report percentiles at once.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.percentile_ns(50.0),
+            p99_ns: self.percentile_ns(99.0),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +226,27 @@ mod tests {
         g.dec(); // extra dec saturates at zero instead of wrapping
         assert_eq!(g.get(), 0);
         assert_eq!(g.peak(), 3);
+    }
+
+    #[test]
+    fn snapshots_mirror_live_values() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        let gs = g.snapshot();
+        assert_eq!(gs.level, 1);
+        assert_eq!(gs.peak, 2);
+
+        let h = LatencyHist::new();
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(200));
+        }
+        let hs = h.snapshot();
+        assert_eq!(hs.count, 10);
+        assert!(hs.mean_ns > 0.0);
+        assert_eq!(hs.p50_ns, h.percentile_ns(50.0));
+        assert_eq!(hs.p99_ns, h.percentile_ns(99.0));
     }
 
     #[test]

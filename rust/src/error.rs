@@ -126,6 +126,7 @@ impl MpiErr {
     }
 }
 
+#[cfg(feature = "xla_compat")]
 impl From<crate::xla_compat::Error> for MpiErr {
     fn from(e: crate::xla_compat::Error) -> Self {
         MpiErr::Xla(e.to_string())
@@ -158,6 +159,7 @@ mod tests {
         assert!(format!("{q}").contains("lane 3"));
     }
 
+    #[cfg(feature = "xla_compat")]
     #[test]
     fn xla_compat_error_converts() {
         let e: MpiErr = crate::xla_compat::Error("no backend".into()).into();

@@ -27,6 +27,52 @@ pub struct EpStats {
     pub backpressure_events: AtomicU64,
 }
 
+/// Point-in-time copy of an endpoint's counters — the form benchmark
+/// reports and tests consume (plain integers, freely addable).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EpStatsSnapshot {
+    pub tx_packets: u64,
+    pub rx_packets: u64,
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub backpressure_events: u64,
+}
+
+impl EpStats {
+    /// Read every counter at once.
+    pub fn snapshot(&self) -> EpStatsSnapshot {
+        EpStatsSnapshot {
+            tx_packets: self.tx_packets.load(Ordering::Relaxed),
+            rx_packets: self.rx_packets.load(Ordering::Relaxed),
+            tx_bytes: self.tx_bytes.load(Ordering::Relaxed),
+            rx_bytes: self.rx_bytes.load(Ordering::Relaxed),
+            backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter — the per-scenario reset hook the benchmark
+    /// harness calls between its warmup and measure phases so reported
+    /// traffic covers only the measured window.
+    pub fn reset(&self) {
+        self.tx_packets.store(0, Ordering::Relaxed);
+        self.rx_packets.store(0, Ordering::Relaxed);
+        self.tx_bytes.store(0, Ordering::Relaxed);
+        self.rx_bytes.store(0, Ordering::Relaxed);
+        self.backpressure_events.store(0, Ordering::Relaxed);
+    }
+}
+
+impl EpStatsSnapshot {
+    /// Accumulate another snapshot into this one (fabric-wide totals).
+    pub fn accumulate(&mut self, other: &EpStatsSnapshot) {
+        self.tx_packets += other.tx_packets;
+        self.rx_packets += other.rx_packets;
+        self.tx_bytes += other.tx_bytes;
+        self.rx_bytes += other.rx_bytes;
+        self.backpressure_events += other.backpressure_events;
+    }
+}
+
 /// A network endpoint: wire address + inbound ring + stats.
 pub struct Endpoint {
     addr: EpAddr,

@@ -14,7 +14,7 @@ pub mod wire;
 use std::sync::Arc;
 
 use addr::{AddressVector, EpAddr};
-use endpoint::Endpoint;
+use endpoint::{Endpoint, EpStatsSnapshot};
 use wire::Packet;
 
 /// The fabric: owns every endpoint in the world.
@@ -68,6 +68,28 @@ impl Fabric {
     pub fn endpoint(&self, addr: EpAddr) -> Arc<Endpoint> {
         self.av.resolve(addr).clone()
     }
+
+    /// Aggregate packet/byte counters across every endpoint in the world
+    /// — the snapshot the benchmark harness exports into scenario reports.
+    pub fn stats_totals(&self) -> EpStatsSnapshot {
+        let mut total = EpStatsSnapshot::default();
+        self.for_each_endpoint(|ep| total.accumulate(&ep.stats().snapshot()));
+        total
+    }
+
+    /// Zero every endpoint counter — the per-scenario reset hook invoked
+    /// between a scenario's warmup and measure phases.
+    pub fn reset_stats(&self) {
+        self.for_each_endpoint(|ep| ep.stats().reset());
+    }
+
+    fn for_each_endpoint(&self, mut f: impl FnMut(&Endpoint)) {
+        for r in 0..self.nranks {
+            for e in 0..self.eps_per_rank {
+                f(self.av.resolve(EpAddr { rank: r as u32, ep: e as u16 }).as_ref());
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +112,23 @@ mod tests {
         assert_eq!(got.reply_ep, src);
         // Source endpoint counted the tx.
         assert_eq!(f.endpoint(src).stats().tx_packets.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_totals_and_reset() {
+        let f = Fabric::new(2, 1, 1024);
+        let src = EpAddr { rank: 0, ep: 0 };
+        let dst = EpAddr { rank: 1, ep: 0 };
+        f.transmit(src, dst, Packet::eager(env(1), src, vec![7u8; 16])).unwrap();
+        let t = f.stats_totals();
+        assert_eq!(t.tx_packets, 1);
+        assert_eq!(t.rx_packets, 1);
+        assert_eq!(t.rx_bytes, 16);
+        f.reset_stats();
+        assert_eq!(f.stats_totals(), Default::default());
+        // Counters keep working after a reset.
+        f.transmit(src, dst, Packet::eager(env(2), src, vec![0u8; 4])).unwrap();
+        assert_eq!(f.stats_totals().tx_packets, 1);
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub use memory::{DeviceHeap, DevicePtr};
 pub use stream::GpuStream;
 
 use crate::error::{MpiErr, Result};
+#[cfg(feature = "xla_compat")]
 use crate::runtime::Executable;
 
 /// A simulated GPU device.
@@ -166,6 +167,8 @@ impl GpuDevice {
     /// buffers, writing the (single) output to `out`. The executable runs
     /// on the dispatcher thread — asynchronously with respect to the host,
     /// in order with respect to the stream, like a real kernel.
+    /// Only available with the `xla_compat` backend feature (default-on).
+    #[cfg(feature = "xla_compat")]
     pub fn launch_kernel_f32(
         self: &Arc<Self>,
         stream: &GpuStream,

@@ -1,0 +1,479 @@
+//! Baseline loading and perf-regression gating.
+//!
+//! `pallas-bench --baseline bench/baseline.json --threshold 0.85`
+//! compares the current run against a checked-in reference and exits
+//! non-zero on regression. Gating is direction-aware and only covers
+//! metrics that (a) carry a gate direction in the *current* run and
+//! (b) exist in the baseline — so adding a new scenario never breaks CI,
+//! and contextual (`info`) metrics never gate.
+//!
+//! The module includes a minimal recursive-descent JSON parser (serde is
+//! unavailable in the offline crate set); it accepts the full JSON value
+//! grammar, which is more than [`crate::harness::report`] emits, so a
+//! hand-edited baseline also loads.
+
+use crate::error::{MpiErr, Result};
+use crate::harness::report::Report;
+use crate::harness::stats::Direction;
+
+// ----------------------------------------------------------------------
+// Minimal JSON value + parser
+// ----------------------------------------------------------------------
+
+/// Parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document. Errors carry a byte offset for debugging
+/// hand-edited baselines.
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        return Err(p.err("trailing data after JSON document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> MpiErr {
+        MpiErr::Arg(format!("JSON parse error at byte {}: {msg}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t') | Some(b'\n') | Some(b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(fields)),
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // Surrogate pairs: decode when a low surrogate
+                        // follows; lone surrogates become U+FFFD.
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bytes[self.pos..].starts_with(b"\\u") {
+                                self.pos += 2;
+                                let lo = self.hex4()?;
+                                let combined =
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo.wrapping_sub(0xDC00));
+                                char::from_u32(combined).unwrap_or('\u{FFFD}')
+                            } else {
+                                '\u{FFFD}'
+                            }
+                        } else {
+                            char::from_u32(cp).unwrap_or('\u{FFFD}')
+                        };
+                        out.push(c);
+                    }
+                    _ => return Err(self.err("bad escape sequence")),
+                },
+                Some(c) if c < 0x20 => return Err(self.err("raw control char in string")),
+                Some(c) => {
+                    // Re-assemble UTF-8 multibyte sequences byte-by-byte.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = utf8_width(c);
+                        let end = (start + width).min(self.bytes.len());
+                        match std::str::from_utf8(&self.bytes[start..end]) {
+                            Ok(s) => {
+                                out.push_str(s);
+                                self.pos = end;
+                            }
+                            Err(_) => return Err(self.err("invalid UTF-8 in string")),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        s.parse::<f64>().map(Json::Num).map_err(|_| self.err(&format!("bad number '{s}'")))
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    if first >= 0xF0 {
+        4
+    } else if first >= 0xE0 {
+        3
+    } else {
+        2
+    }
+}
+
+// ----------------------------------------------------------------------
+// Baseline comparison
+// ----------------------------------------------------------------------
+
+/// One gated metric that fell outside the threshold.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub scenario: String,
+    pub metric: String,
+    pub direction: Direction,
+    pub current: f64,
+    pub baseline: f64,
+    /// current/baseline for higher-is-better, baseline/current for
+    /// lower-is-better — so `ratio < threshold` always means regression.
+    pub ratio: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{} regressed: current {:.4e} vs baseline {:.4e} ({}; ratio {:.3})",
+            self.scenario,
+            self.metric,
+            self.current,
+            self.baseline,
+            self.direction.as_str(),
+            self.ratio
+        )
+    }
+}
+
+/// Load a baseline JSON document from disk.
+pub fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| MpiErr::Arg(format!("read baseline {path}: {e}")))?;
+    let doc = parse(&text)?;
+    if let Some(schema) = doc.get("schema").and_then(|s| s.as_str()) {
+        if schema != crate::harness::report::SCHEMA {
+            return Err(MpiErr::Arg(format!(
+                "baseline {path} has schema '{schema}', expected '{}'",
+                crate::harness::report::SCHEMA
+            )));
+        }
+    }
+    Ok(doc)
+}
+
+/// Compare `current` against `baseline` with `threshold` in (0, 1].
+/// Returns every gated metric that regressed (empty = pass). Scenarios or
+/// metrics absent from the baseline are skipped, not failed.
+pub fn compare(current: &Report, baseline: &Json, threshold: f64) -> Result<Vec<Regression>> {
+    if !(threshold > 0.0 && threshold <= 1.0) {
+        return Err(MpiErr::Arg(format!("threshold {threshold} must be in (0, 1]")));
+    }
+    let base_results = baseline
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| MpiErr::Arg("baseline has no 'results' array".into()))?;
+    let mut regressions = Vec::new();
+    for rec in &current.results {
+        let Some(base_rec) = base_results
+            .iter()
+            .find(|b| b.get("scenario").and_then(|s| s.as_str()) == Some(rec.scenario.as_str()))
+        else {
+            continue;
+        };
+        for m in &rec.metrics {
+            if m.direction == Direction::Info {
+                continue;
+            }
+            let Some(base_val) = base_rec
+                .get("metrics")
+                .and_then(|ms| ms.get(&m.name))
+                .and_then(|entry| entry.get("value"))
+                .and_then(|v| v.as_f64())
+            else {
+                continue;
+            };
+            if !(base_val.is_finite() && m.value.is_finite()) || base_val <= 0.0 {
+                continue;
+            }
+            let ratio = match m.direction {
+                Direction::HigherIsBetter => m.value / base_val,
+                Direction::LowerIsBetter => base_val / m.value.max(f64::MIN_POSITIVE),
+                Direction::Info => unreachable!(),
+            };
+            if ratio < threshold {
+                regressions.push(Regression {
+                    scenario: rec.scenario.clone(),
+                    metric: m.name.clone(),
+                    direction: m.direction,
+                    current: m.value,
+                    baseline: base_val,
+                    ratio,
+                });
+            }
+        }
+    }
+    Ok(regressions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::report::ScenarioRecord;
+    use crate::harness::stats::Metric;
+
+    #[test]
+    fn parser_handles_core_grammar() {
+        let v = parse(r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny"}, "d": true, "e": null}"#)
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_f64().unwrap(), -300.0);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\ny");
+        assert_eq!(v.get("d"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("e"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parser_handles_unicode_escapes() {
+        let v = parse(r#""café 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café 😀");
+        let raw = parse("\"café\"").unwrap();
+        assert_eq!(raw.as_str().unwrap(), "café");
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\": 1} trailing").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    fn report_with(scenario: &str, metric: Metric) -> Report {
+        let mut rep = Report::new("smoke", 1);
+        rep.results.push(ScenarioRecord {
+            scenario: scenario.into(),
+            params: vec![],
+            metrics: vec![metric],
+            elapsed_ms: 1.0,
+        });
+        rep
+    }
+
+    fn baseline_with(scenario: &str, metric: &str, value: f64) -> Json {
+        parse(&format!(
+            r#"{{"schema": "pallas-bench/v1", "results": [
+                {{"scenario": "{scenario}", "metrics": {{"{metric}": {{"value": {value}}}}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn higher_is_better_gate() {
+        let base = baseline_with("s", "rate", 100.0);
+        // Within threshold: 90 >= 100 * 0.85.
+        let ok = report_with("s", Metric::higher("rate", 90.0, "x"));
+        assert!(compare(&ok, &base, 0.85).unwrap().is_empty());
+        // Regression: 80 < 100 * 0.85.
+        let bad = report_with("s", Metric::higher("rate", 80.0, "x"));
+        let regs = compare(&bad, &base, 0.85).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].ratio < 0.85);
+        assert!(format!("{}", regs[0]).contains("regressed"));
+    }
+
+    #[test]
+    fn a_baseline_2x_above_measurement_fails() {
+        // The CI acceptance case: baseline set to 2x what the host can do.
+        let base = baseline_with("s", "rate", 200.0);
+        let cur = report_with("s", Metric::higher("rate", 100.0, "x"));
+        assert_eq!(compare(&cur, &base, 0.85).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn lower_is_better_gate() {
+        let base = baseline_with("s", "lat", 100.0);
+        let ok = report_with("s", Metric::lower("lat", 110.0, "ns"));
+        assert!(compare(&ok, &base, 0.85).unwrap().is_empty(), "110 <= 100/0.85");
+        let bad = report_with("s", Metric::lower("lat", 130.0, "ns"));
+        assert_eq!(compare(&bad, &base, 0.85).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn info_and_missing_metrics_never_gate() {
+        let base = baseline_with("s", "rate", 1e12);
+        let info = report_with("s", Metric::info("rate", 1.0, "x"));
+        assert!(compare(&info, &base, 0.85).unwrap().is_empty());
+        let other = report_with("s", Metric::higher("other_metric", 1.0, "x"));
+        assert!(compare(&other, &base, 0.85).unwrap().is_empty());
+        let other_scenario = report_with("t", Metric::higher("rate", 1.0, "x"));
+        assert!(compare(&other_scenario, &base, 0.85).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_threshold_rejected() {
+        let base = baseline_with("s", "rate", 1.0);
+        let rep = report_with("s", Metric::higher("rate", 1.0, "x"));
+        assert!(compare(&rep, &base, 0.0).is_err());
+        assert!(compare(&rep, &base, 1.5).is_err());
+    }
+}

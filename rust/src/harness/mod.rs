@@ -1,0 +1,225 @@
+//! The unified benchmark harness (the `pallas-bench` subsystem).
+//!
+//! Replaces the repository's free-standing bench reporters with one
+//! scenario registry: every workload — pt2pt ping-pong, multi-stream
+//! message-rate scaling per lock mode, stream-comm alltoall, the GPU
+//! enqueue pipeline and its lane sweep, and the design ablations — is a
+//! named struct implementing [`Scenario`], with warmup/measure phases,
+//! deterministic seeding and p50/p99/mean + rate aggregation.
+//!
+//! Layers:
+//!
+//! * [`scenario`] — the [`Scenario`] trait, sizing [`Profile`]s and the
+//!   registry's scenario implementations;
+//! * [`stats`] — summaries, gate-direction metrics, deterministic RNG;
+//! * [`report`] — the stable `pallas-bench/v1` JSON schema + emitter;
+//! * [`baseline`] — JSON parsing and the threshold regression gate CI
+//!   runs on every PR.
+//!
+//! Entry points: the `pallas-bench` binary (`--list`, `--scenario`,
+//! `--smoke`, `--json`, `--baseline`, `--threshold`) and the thin shims
+//! in `benches/`.
+
+pub mod baseline;
+pub mod report;
+pub mod scenario;
+pub mod stats;
+
+use std::time::Instant;
+
+pub use report::{Report, ScenarioRecord, SCHEMA};
+pub use scenario::{Profile, Scenario, ScenarioResult};
+pub use stats::{Direction, Metric, Summary};
+
+use crate::coordinator::driver::MsgrateMode;
+use crate::error::{MpiErr, Result};
+
+/// Sizing profile from the environment — the bench shims' knobs:
+/// `PALLAS_BENCH_SMOKE=1` selects the seconds-scale CI sizing,
+/// `PALLAS_BENCH_SEED=N` overrides the deterministic seed (default 42).
+pub fn profile_from_env() -> Profile {
+    let seed =
+        std::env::var("PALLAS_BENCH_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(42);
+    let smoke =
+        matches!(std::env::var("PALLAS_BENCH_SMOKE").ok().as_deref(), Some("1") | Some("true"));
+    if smoke {
+        Profile::smoke(seed)
+    } else {
+        Profile::full(seed)
+    }
+}
+
+/// The scenario registry: an ordered, named collection of benchmark
+/// workloads.
+pub struct Registry {
+    scenarios: Vec<Box<dyn Scenario>>,
+}
+
+impl Registry {
+    /// Every scenario `pallas-bench` ships.
+    pub fn standard() -> Registry {
+        Registry {
+            scenarios: vec![
+                Box::new(scenario::PingPong),
+                Box::new(scenario::MsgRate { mode: MsgrateMode::GlobalCs }),
+                Box::new(scenario::MsgRate { mode: MsgrateMode::PerVci }),
+                Box::new(scenario::MsgRate { mode: MsgrateMode::Stream }),
+                Box::new(scenario::StreamAlltoall),
+                Box::new(scenario::EnqueuePipeline),
+                Box::new(scenario::EnqueueLanes { streams: 4 }),
+                Box::new(scenario::Nto1 { multiplex: true }),
+                Box::new(scenario::Nto1 { multiplex: false }),
+                Box::new(scenario::AblationLockOps),
+                Box::new(scenario::AblationMicroCosts),
+                Box::new(scenario::AblationPoolSweep),
+                Box::new(scenario::AblationEagerThreshold),
+                Box::new(scenario::AblationPartitioned),
+            ],
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.scenarios.iter().map(|s| s.name()).collect()
+    }
+
+    /// Scenarios matching any pattern: exact name, `group` prefix, or a
+    /// trailing-`*` glob. Empty patterns select everything.
+    pub fn select(&self, patterns: &[String]) -> Vec<&dyn Scenario> {
+        let all = self.scenarios.iter().map(|b| b.as_ref());
+        if patterns.is_empty() {
+            return all.collect();
+        }
+        all.filter(|s| {
+            let name = s.name();
+            patterns.iter().any(|p| {
+                name == *p
+                    || name.starts_with(&format!("{p}/"))
+                    || (p.ends_with('*') && name.starts_with(p.trim_end_matches('*')))
+            })
+        })
+        .collect()
+    }
+
+    /// Run every selected scenario in registry order. EVERY pattern must
+    /// match at least one scenario (a typo'd CI gate must not silently
+    /// pass by measuring nothing). Scenario failures don't abort the
+    /// sweep: completed records are returned alongside the per-scenario
+    /// errors, so a partially failed run still yields an inspectable
+    /// report.
+    pub fn run_collect(
+        &self,
+        patterns: &[String],
+        profile: &Profile,
+    ) -> Result<(Report, Vec<(String, MpiErr)>)> {
+        for p in patterns {
+            if self.select(std::slice::from_ref(p)).is_empty() {
+                return Err(MpiErr::Arg(format!(
+                    "no scenario matches '{p}'; try --list (available: {})",
+                    self.names().join(", ")
+                )));
+            }
+        }
+        let selected = self.select(patterns);
+        if selected.is_empty() {
+            return Err(MpiErr::Arg("no scenarios registered".into()));
+        }
+        let mut rep = Report::new(profile.name(), profile.seed);
+        let mut failures = Vec::new();
+        for s in selected {
+            let name = s.name();
+            eprintln!("[pallas-bench] {name} ...");
+            let t0 = Instant::now();
+            match s.run(profile) {
+                Ok(result) => rep.results.push(ScenarioRecord {
+                    scenario: name,
+                    params: s.params(),
+                    metrics: result.metrics,
+                    elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+                }),
+                Err(e) => {
+                    eprintln!("[pallas-bench] {name} FAILED: {e}");
+                    failures.push((name, e));
+                }
+            }
+        }
+        Ok((rep, failures))
+    }
+
+    /// [`Registry::run_collect`] with failures promoted to a hard error
+    /// — the bench-shim entry point.
+    pub fn run(&self, patterns: &[String], profile: &Profile) -> Result<Report> {
+        let (rep, failures) = self.run_collect(patterns, profile)?;
+        if let Some((name, e)) = failures.into_iter().next() {
+            return Err(MpiErr::Internal(format!("scenario '{name}' failed: {e}")));
+        }
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_cover_the_tentpole() {
+        let reg = Registry::standard();
+        let names = reg.names();
+        assert!(names.len() >= 4, "schema requires >= 4 scenarios, got {}", names.len());
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+        for required in [
+            "pt2pt/pingpong",
+            "msgrate/global-cs",
+            "msgrate/per-vci",
+            "msgrate/stream",
+            "stream/alltoall",
+            "enqueue/pipeline",
+            "enqueue/hostfunc-vs-lanes",
+        ] {
+            assert!(names.iter().any(|n| n == required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn select_by_prefix_glob_and_exact() {
+        let reg = Registry::standard();
+        assert_eq!(reg.select(&[]).len(), reg.names().len());
+        let msgrate = reg.select(&["msgrate".to_string()]);
+        assert_eq!(msgrate.len(), 3);
+        let glob = reg.select(&["ablation/*".to_string()]);
+        assert_eq!(glob.len(), 5);
+        let exact = reg.select(&["pt2pt/pingpong".to_string()]);
+        assert_eq!(exact.len(), 1);
+        assert!(reg.select(&["nope".to_string()]).is_empty());
+    }
+
+    #[test]
+    fn run_rejects_unknown_patterns() {
+        let reg = Registry::standard();
+        let err = reg.run(&["bogus".to_string()], &Profile::smoke(1));
+        assert!(err.is_err());
+        // Every pattern must match — a typo'd pattern next to a valid one
+        // must not be silently skipped.
+        let err = reg.run_collect(
+            &["ablation/micro-costs".to_string(), "enqueue/hostfunc-vs-lane".to_string()],
+            &Profile::smoke(1),
+        );
+        assert!(matches!(err, Err(MpiErr::Arg(_))), "typo'd pattern must error, got {err:?}");
+    }
+
+    #[test]
+    fn run_produces_schema_valid_json() {
+        let reg = Registry::standard();
+        let rep = reg.run(&["ablation/micro-costs".to_string()], &Profile::smoke(1)).unwrap();
+        assert_eq!(rep.results.len(), 1);
+        let parsed = baseline::parse(&rep.to_json()).unwrap();
+        assert_eq!(parsed.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+        let results = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(
+            results[0].get("scenario").and_then(|s| s.as_str()),
+            Some("ablation/micro-costs")
+        );
+    }
+}

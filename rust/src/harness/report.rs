@@ -1,0 +1,262 @@
+//! Machine-readable benchmark reports.
+//!
+//! The JSON schema (`pallas-bench/v1`) is the contract between
+//! `pallas-bench`, the checked-in CI baseline and any downstream
+//! dashboard:
+//!
+//! ```json
+//! {
+//!   "schema": "pallas-bench/v1",
+//!   "git_sha": "<sha or 'unknown'>",
+//!   "profile": "smoke" | "full",
+//!   "seed": 42,
+//!   "results": [
+//!     {
+//!       "scenario": "msgrate/stream",
+//!       "elapsed_ms": 123.4,
+//!       "params": { "mode": "stream", "streams": "1,2,4,8" },
+//!       "metrics": {
+//!         "rate_4_msgs_per_sec": {
+//!           "value": 1.2e7, "unit": "msg/s",
+//!           "direction": "higher_is_better"
+//!         }
+//!       }
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Emission is hand-rolled (no serde in the offline crate set); the
+//! matching parser lives in [`crate::harness::baseline`].
+
+use std::fmt::Write as _;
+
+use crate::error::{MpiErr, Result};
+use crate::harness::stats::{Direction, Metric};
+
+/// Current schema identifier. Bump on any breaking field change.
+pub const SCHEMA: &str = "pallas-bench/v1";
+
+/// One scenario's outcome inside a report.
+#[derive(Debug, Clone)]
+pub struct ScenarioRecord {
+    pub scenario: String,
+    pub params: Vec<(String, String)>,
+    pub metrics: Vec<Metric>,
+    pub elapsed_ms: f64,
+}
+
+impl ScenarioRecord {
+    pub fn metric(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+}
+
+/// A full `pallas-bench` run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub git_sha: String,
+    pub profile: String,
+    pub seed: u64,
+    pub results: Vec<ScenarioRecord>,
+}
+
+impl Report {
+    pub fn new(profile: &str, seed: u64) -> Report {
+        Report { git_sha: git_sha(), profile: profile.to_string(), seed, results: Vec::new() }
+    }
+
+    pub fn record(&self, scenario: &str) -> Option<&ScenarioRecord> {
+        self.results.iter().find(|r| r.scenario == scenario)
+    }
+
+    /// Serialize to the `pallas-bench/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"schema\": \"{}\",", json_escape(SCHEMA));
+        let _ = writeln!(out, "  \"git_sha\": \"{}\",", json_escape(&self.git_sha));
+        let _ = writeln!(out, "  \"profile\": \"{}\",", json_escape(&self.profile));
+        let _ = writeln!(out, "  \"seed\": {},", self.seed);
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            out.push_str("    {\n");
+            let _ = writeln!(out, "      \"scenario\": \"{}\",", json_escape(&r.scenario));
+            let _ = writeln!(out, "      \"elapsed_ms\": {},", json_num(r.elapsed_ms));
+            out.push_str("      \"params\": {");
+            for (j, (k, v)) in r.params.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(out, "\"{}\": \"{}\"", json_escape(k), json_escape(v));
+            }
+            out.push_str("},\n");
+            out.push_str("      \"metrics\": {\n");
+            for (j, m) in r.metrics.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    "        \"{}\": {{\"value\": {}, \"unit\": \"{}\", \"direction\": \"{}\"}}",
+                    json_escape(&m.name),
+                    json_num(m.value),
+                    json_escape(m.unit),
+                    m.direction.as_str()
+                );
+                out.push_str(if j + 1 < r.metrics.len() { ",\n" } else { "\n" });
+            }
+            out.push_str("      }\n");
+            out.push_str(if i + 1 < self.results.len() { "    },\n" } else { "    }\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| MpiErr::Arg(format!("write report {path}: {e}")))
+    }
+
+    /// Human-readable table of every record, for terminal runs and bench
+    /// shims.
+    pub fn print_text(&self) {
+        println!("pallas-bench report  (profile={}, sha={})", self.profile, self.git_sha);
+        for r in &self.results {
+            let params: Vec<String> = r.params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            println!("\n== {}  [{}]  ({:.0} ms)", r.scenario, params.join(" "), r.elapsed_ms);
+            for m in &r.metrics {
+                let gate = match m.direction {
+                    Direction::HigherIsBetter => " [gate ^]",
+                    Direction::LowerIsBetter => " [gate v]",
+                    Direction::Info => "",
+                };
+                println!("  {:<38} {:>16} {}{}", m.name, format_value(m.value), m.unit, gate);
+            }
+        }
+    }
+}
+
+fn format_value(v: f64) -> String {
+    if v.abs() >= 1e6 || (v != 0.0 && v.abs() < 1e-3) {
+        format!("{v:.3e}")
+    } else if v.fract() == 0.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// JSON number: finite floats render via Rust's round-trip `Display`
+/// (never `inf`/`NaN`, which are invalid JSON — those become `null`).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Best-effort commit id for the report: `PALLAS_BENCH_SHA` env override,
+/// then `GITHUB_SHA` (set by Actions), then `git rev-parse HEAD`, then
+/// `"unknown"`. Never fails — a bench run outside a checkout still
+/// produces a valid report.
+pub fn git_sha() -> String {
+    for var in ["PALLAS_BENCH_SHA", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(var) {
+            let v = v.trim().to_string();
+            if !v.is_empty() {
+                return v;
+            }
+        }
+    }
+    let out = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output();
+    if let Ok(o) = out {
+        if o.status.success() {
+            if let Ok(s) = String::from_utf8(o.stdout) {
+                let s = s.trim().to_string();
+                if !s.is_empty() {
+                    return s;
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> Report {
+        let mut rep = Report::new("smoke", 42);
+        rep.git_sha = "abc123".into();
+        rep.results.push(ScenarioRecord {
+            scenario: "msgrate/stream".into(),
+            params: vec![("mode".into(), "stream".into())],
+            metrics: vec![
+                Metric::higher("rate_4_msgs_per_sec", 1.25e7, "msg/s"),
+                Metric::info("note \"quoted\"", f64::NAN, "x"),
+            ],
+            elapsed_ms: 12.5,
+        });
+        rep
+    }
+
+    #[test]
+    fn json_contains_schema_and_values() {
+        let j = sample_report().to_json();
+        assert!(j.contains("\"schema\": \"pallas-bench/v1\""));
+        assert!(j.contains("\"git_sha\": \"abc123\""));
+        assert!(j.contains("\"rate_4_msgs_per_sec\""));
+        assert!(j.contains("\"direction\": \"higher_is_better\""));
+        assert!(j.contains("\\\"quoted\\\""), "keys are escaped");
+        assert!(j.contains("\"value\": null"), "non-finite values become null");
+        assert!(!j.contains("NaN"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let rep = sample_report();
+        let parsed = crate::harness::baseline::parse(&rep.to_json()).unwrap();
+        let results = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        let m = results[0]
+            .get("metrics")
+            .and_then(|m| m.get("rate_4_msgs_per_sec"))
+            .and_then(|m| m.get("value"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((m - 1.25e7).abs() < 1.0);
+    }
+
+    #[test]
+    fn escape_and_num_edges() {
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(json_num(2.0), "2");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn git_sha_env_override() {
+        // Avoid touching process env in parallel tests: just verify the
+        // fallback path yields a non-empty string.
+        assert!(!git_sha().is_empty());
+    }
+}

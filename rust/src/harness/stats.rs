@@ -1,0 +1,164 @@
+//! Statistic aggregation for harness scenarios: per-iteration summaries
+//! (p50/p99/mean), metric records with gate directions, and the
+//! deterministic RNG every scenario seeds from.
+
+/// xorshift64* — the deterministic, dependency-free RNG scenarios use so
+/// two runs with the same `--seed` exercise identical payloads and
+/// schedules.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Fill `buf` with deterministic bytes.
+    pub fn fill(&mut self, buf: &mut [u8]) {
+        for chunk in buf.chunks_mut(8) {
+            let v = self.next_u64().to_le_bytes();
+            let n = chunk.len();
+            chunk.copy_from_slice(&v[..n]);
+        }
+    }
+}
+
+/// How a metric participates in baseline regression gating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughput-like: regression when `current < baseline * threshold`.
+    HigherIsBetter,
+    /// Latency-like: regression when `current > baseline / threshold`.
+    LowerIsBetter,
+    /// Contextual only — never gated.
+    Info,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher_is_better",
+            Direction::LowerIsBetter => "lower_is_better",
+            Direction::Info => "info",
+        }
+    }
+}
+
+/// One named measurement emitted by a scenario.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: &'static str,
+    pub direction: Direction,
+}
+
+impl Metric {
+    pub fn higher(name: impl Into<String>, value: f64, unit: &'static str) -> Metric {
+        Metric { name: name.into(), value, unit, direction: Direction::HigherIsBetter }
+    }
+
+    pub fn lower(name: impl Into<String>, value: f64, unit: &'static str) -> Metric {
+        Metric { name: name.into(), value, unit, direction: Direction::LowerIsBetter }
+    }
+
+    pub fn info(name: impl Into<String>, value: f64, unit: &'static str) -> Metric {
+        Metric { name: name.into(), value, unit, direction: Direction::Info }
+    }
+}
+
+/// Order statistics over per-iteration wall times (nanoseconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn from_ns(mut samples: Vec<f64>) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = samples.len();
+        let pick = |p: f64| samples[(((n - 1) as f64) * p / 100.0).round() as usize];
+        Summary {
+            n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: pick(50.0),
+            p99_ns: pick(99.0),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+        }
+    }
+
+    /// Export as metrics. The p50 is the gate (median resists scheduler
+    /// outliers that would make a p99 gate flaky on shared CI hosts);
+    /// p99/mean/min ride along as context.
+    pub fn latency_metrics(&self, prefix: &str) -> Vec<Metric> {
+        vec![
+            Metric::lower(format!("{prefix}_p50_ns"), self.p50_ns, "ns"),
+            Metric::info(format!("{prefix}_p99_ns"), self.p99_ns, "ns"),
+            Metric::info(format!("{prefix}_mean_ns"), self.mean_ns, "ns"),
+            Metric::info(format!("{prefix}_min_ns"), self.min_ns, "ns"),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut buf1 = [0u8; 13];
+        let mut buf2 = [0u8; 13];
+        Rng::new(7).fill(&mut buf1);
+        Rng::new(7).fill(&mut buf2);
+        assert_eq!(buf1, buf2);
+        assert_ne!(buf1, [0u8; 13]);
+    }
+
+    #[test]
+    fn summary_order_statistics() {
+        let s = Summary::from_ns(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+        assert_eq!(s.p50_ns, 3.0);
+        assert!((s.mean_ns - 3.0).abs() < 1e-9);
+        let empty = Summary::from_ns(vec![]);
+        assert_eq!(empty.n, 0);
+    }
+
+    #[test]
+    fn latency_metrics_gate_only_p50() {
+        let s = Summary::from_ns(vec![1.0, 2.0, 3.0]);
+        let ms = s.latency_metrics("x");
+        assert_eq!(ms[0].name, "x_p50_ns");
+        assert_eq!(ms[0].direction, Direction::LowerIsBetter);
+        assert!(ms[1..].iter().all(|m| m.direction == Direction::Info));
+    }
+
+}

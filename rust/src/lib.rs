@@ -24,9 +24,16 @@
 //!   metrics.
 //! * [`gpu`] — a simulated GPU runtime (in-order streams, events, device
 //!   memory, host-function launch) whose kernels are AOT-compiled XLA
-//!   executables loaded through [`runtime`] (PJRT CPU client). The
-//!   backend is imported via [`xla_compat`], an offline shim that
-//!   degrades gracefully when the real `xla` crate is unavailable.
+//!   executables loaded through `runtime` (PJRT CPU client). The backend
+//!   is imported via `xla_compat`, an offline shim that degrades
+//!   gracefully when the real `xla` crate is unavailable; both modules
+//!   sit behind the default-on `xla_compat` cargo feature, so
+//!   `--no-default-features` builds the pure message-passing runtime.
+//! * [`harness`] — the unified benchmark subsystem behind the
+//!   `pallas-bench` binary: a scenario registry (ping-pong, message-rate
+//!   scaling per lock mode, stream alltoall, enqueue pipeline/lanes,
+//!   ablations), machine-readable `BENCH_results.json` reports and the
+//!   CI perf-regression baseline gate.
 //! * [`sim`] — a calibrated discrete-event virtual-time simulator used to
 //!   regenerate the paper's thread-scaling results (Figure 3) on hosts
 //!   with fewer cores than the paper's testbed.
@@ -55,18 +62,20 @@
 //! }).unwrap();
 //! ```
 
-pub mod bench_util;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod fabric;
 pub mod gpu;
+pub mod harness;
 pub mod mpi;
+#[cfg(feature = "xla_compat")]
 pub mod runtime;
 pub mod sim;
 pub mod stream;
 pub mod vci;
+#[cfg(feature = "xla_compat")]
 pub mod xla_compat;
 
 /// Convenient re-exports for examples and applications.

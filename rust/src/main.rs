@@ -142,9 +142,19 @@ fn print_calibration(c: &Calibration) {
     }
 }
 
+#[cfg(feature = "xla_compat")]
 fn cmd_saxpy(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1 << 20)?;
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
     // The SAXPY example is the end-to-end Listing-4 driver; reuse it here.
     mpix::coordinator::driver::run_saxpy_listing4(n, &dir)
+}
+
+#[cfg(not(feature = "xla_compat"))]
+fn cmd_saxpy(_args: &Args) -> Result<()> {
+    Err(mpix::error::MpiErr::Xla(
+        "this binary was built without the `xla_compat` feature; rebuild with default \
+         features to run the SAXPY listing"
+            .into(),
+    ))
 }

@@ -10,7 +10,7 @@
 //!
 //! Wire protocol: RMA packets share the fabric with point-to-point but
 //! carry [`RMA_CTX_BIT`] in the context id; the progress engine routes
-//! them to [`handle_rma_packet`] instead of the matching engine. Every
+//! them to `handle_rma_packet` instead of the matching engine. Every
 //! origin operation is acknowledged (PUT/ACC → ACK, GET → DATA), so a
 //! returned operation is also remotely complete, and `fence` reduces to a
 //! barrier.

@@ -116,6 +116,13 @@ impl World {
         &self.procs[r]
     }
 
+    /// The shared fabric — exposes the per-scenario counter snapshot /
+    /// reset hooks ([`Fabric::stats_totals`], [`Fabric::reset_stats`])
+    /// the benchmark harness uses.
+    pub fn fabric(&self) -> &Fabric {
+        &self.shared.fabric
+    }
+
     /// Run `f` once per rank, each on its own OS thread; joins all and
     /// propagates the first error (panics re-raise).
     pub fn run<F>(&self, f: F) -> Result<()>

@@ -71,7 +71,7 @@ const CALIBRATION_RUNS: usize = 5;
 
 /// Run the full calibration. `msgs` messages per mode per run
 /// (single-threaded live runs of the real runtime, interleaved best of
-/// [`CALIBRATION_RUNS`]).
+/// `CALIBRATION_RUNS`).
 pub fn calibrate(msgs: u64) -> Result<Calibration> {
     // Warm up allocators/caches with a short throwaway run.
     let _ = msgrate_live(MsgrateMode::Stream, 1, msgs / 10 + 1, 256, 8)?;

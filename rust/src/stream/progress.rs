@@ -442,16 +442,18 @@ impl ProgressRouter {
             .iter()
             .map(|l| {
                 let m = l.metrics();
+                let depth = m.depth.snapshot();
+                let stall = m.stall.snapshot();
                 LaneSnapshot {
                     lane: l.index(),
                     streams: st.assign.values().filter(|&&i| i == l.index()).count(),
                     dispatched: m.dispatched.count(),
                     wakeups: m.wakeups.count(),
-                    depth: m.depth.get(),
-                    depth_peak: m.depth.peak(),
-                    stall_mean_ns: m.stall.mean_ns(),
-                    stall_p50_ns: m.stall.percentile_ns(50.0),
-                    stall_p99_ns: m.stall.percentile_ns(99.0),
+                    depth: depth.level,
+                    depth_peak: depth.peak,
+                    stall_mean_ns: stall.mean_ns,
+                    stall_p50_ns: stall.p50_ns,
+                    stall_p99_ns: stall.p99_ns,
                 }
             })
             .collect()
@@ -637,6 +639,81 @@ mod tests {
         assert!(matches!(gate2.wait(), Err(MpiErr::Enqueue(_))), "pending gate failed, not dropped");
         assert!(matches!(r2.take_error(100), Some(MpiErr::Enqueue(_))));
         r2.shutdown(); // joins; must not hang
+    }
+
+    #[test]
+    fn concurrent_submitters_racing_shutdown_lose_no_gates() {
+        // 4 submitter threads spam sync + async ops on their own GPU
+        // streams while the main thread tears the router down mid-flight.
+        // Invariants under the race:
+        //  * every submit() either errors at the call site or its
+        //    trigger/gate resolves — so no stream synchronize() hangs;
+        //  * ops never execute after being rejected (executed <= accepted);
+        //  * accounting is total: accepted + rejected == submitted.
+        use std::sync::atomic::AtomicU64;
+        for round in 0..8u64 {
+            let r = ProgressRouter::new(2);
+            let streams: Vec<GpuStream> =
+                (0..4).map(|i| GpuStream::spawn(3_000 + round * 16 + i)).collect();
+            let executed = Arc::new(AtomicU64::new(0));
+            let accepted = Arc::new(AtomicU64::new(0));
+            let rejected = Arc::new(AtomicU64::new(0));
+            const OPS_PER_STREAM: u64 = 150;
+            std::thread::scope(|s| {
+                for gs in &streams {
+                    let r = r.clone();
+                    let executed = executed.clone();
+                    let accepted = accepted.clone();
+                    let rejected = rejected.clone();
+                    s.spawn(move || {
+                        for i in 0..OPS_PER_STREAM {
+                            let ex = executed.clone();
+                            let op: LaneOp = Box::new(move || {
+                                ex.fetch_add(1, Ordering::SeqCst);
+                                Ok(())
+                            });
+                            match r.submit(gs, i % 8 == 0, op) {
+                                Ok(()) => {
+                                    accepted.fetch_add(1, Ordering::SeqCst);
+                                }
+                                Err(MpiErr::Enqueue(_)) => {
+                                    rejected.fetch_add(1, Ordering::SeqCst);
+                                }
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            }
+                        }
+                    });
+                }
+                // Stagger the teardown across rounds so it lands before,
+                // during and after the submission burst.
+                std::thread::sleep(Duration::from_micros(200 * round));
+                r.shutdown();
+            });
+            // Every accepted trigger must resolve: a hang here is the
+            // lost-gate bug this test exists to catch (the test runner's
+            // timeout is the watchdog).
+            for gs in &streams {
+                gs.synchronize().unwrap();
+            }
+            let acc = accepted.load(Ordering::SeqCst);
+            let rej = rejected.load(Ordering::SeqCst);
+            let done = executed.load(Ordering::SeqCst);
+            assert_eq!(acc + rej, 4 * OPS_PER_STREAM, "accounting must be total");
+            assert!(done <= acc, "executed ({done}) cannot exceed accepted ({acc})");
+            // Post-shutdown: submissions refused, queues empty, shutdown
+            // idempotent.
+            assert!(matches!(
+                r.submit(&streams[0], true, Box::new(|| Ok(()))),
+                Err(MpiErr::Enqueue(_))
+            ));
+            for snap in r.metrics() {
+                assert_eq!(snap.depth, 0, "lane {} left ops queued", snap.lane);
+            }
+            r.shutdown();
+            for gs in streams {
+                gs.shutdown();
+            }
+        }
     }
 
     #[test]

@@ -167,6 +167,80 @@ mod tests {
         assert!(p.free(a.idx).is_err(), "double free must fail");
     }
 
+    use crate::harness::stats::Rng;
+
+    /// Cross-check the pool against a model of live leases: users counts
+    /// match, the free list is duplicate-free, in-range and disjoint from
+    /// every in-use slot, and every zero-user slot is on the free list.
+    fn check_invariants(p: &VciPool, live: &[VciLease], implicit: usize, explicit: usize) {
+        let mut model = vec![0u32; explicit];
+        for l in live {
+            model[l.idx as usize - implicit] += 1;
+        }
+        let st = p.inner.lock().unwrap();
+        assert_eq!(st.users, model, "users counts diverged from the lease model");
+        let mut seen = std::collections::HashSet::new();
+        for &idx in &st.free {
+            assert!(seen.insert(idx), "duplicate free-list entry {idx}");
+            let slot = (idx as usize).checked_sub(implicit).expect("free entry below pool base");
+            assert!(slot < explicit, "free entry {idx} out of range");
+            assert_eq!(st.users[slot], 0, "free-list entry {idx} overlaps an in-use slot");
+        }
+        let zero_slots = model.iter().filter(|&&u| u == 0).count();
+        assert_eq!(st.free.len(), zero_slots, "free list must cover exactly the zero-user slots");
+        drop(st);
+        assert_eq!(p.in_use(), explicit - zero_slots);
+    }
+
+    #[test]
+    fn property_random_alloc_free_keeps_invariants() {
+        for (seed, implicit, share) in
+            [(1u64, 0usize, false), (2, 1, false), (3, 2, true), (4, 0, true), (5, 3, true)]
+        {
+            let explicit = 4usize;
+            let p = VciPool::new(implicit, explicit, share);
+            let mut live: Vec<VciLease> = Vec::new();
+            let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+            for _ in 0..2_000 {
+                let was_full = p.in_use() == explicit;
+                if rng.below(100) < 55 || live.is_empty() {
+                    match p.alloc() {
+                        Ok(lease) => {
+                            let slot = lease.idx as usize;
+                            assert!(
+                                slot >= implicit && slot < implicit + explicit,
+                                "lease {slot} outside the explicit pool"
+                            );
+                            // Overflow sharing kicks in exactly when every
+                            // slot is taken (and only with share enabled).
+                            assert_eq!(lease.shared, was_full, "shared flag vs pool occupancy");
+                            assert!(share || !lease.shared);
+                            live.push(lease);
+                        }
+                        Err(MpiErr::NoEndpoints(_)) => {
+                            assert!(!share, "a sharing pool never exhausts");
+                            assert!(was_full, "alloc may only fail when every slot is leased");
+                        }
+                        Err(e) => panic!("unexpected alloc error: {e}"),
+                    }
+                } else {
+                    let pick = rng.below(live.len() as u64) as usize;
+                    let lease = live.swap_remove(pick);
+                    let last_user_left =
+                        live.iter().filter(|l| l.idx == lease.idx).count() == 0;
+                    assert_eq!(p.free(lease.idx).unwrap(), last_user_left);
+                }
+                check_invariants(&p, &live, implicit, explicit);
+            }
+            // Drain and verify the pool returns to pristine.
+            while let Some(l) = live.pop() {
+                p.free(l.idx).unwrap();
+            }
+            check_invariants(&p, &live, implicit, explicit);
+            assert_eq!(p.in_use(), 0);
+        }
+    }
+
     #[test]
     fn in_use_tracks_leases() {
         let p = VciPool::new(0, 3, false);

@@ -1,6 +1,8 @@
 //! Artifact-backed tests: require `make artifacts` (skipped with a notice
 //! otherwise). These validate the full AOT bridge: jax/Pallas -> HLO text
 //! -> PJRT compile -> execution from the rust side, numerics included.
+//! The whole file needs the `xla_compat` backend feature (default-on).
+#![cfg(feature = "xla_compat")]
 
 use mpix::runtime::XlaRuntime;
 
