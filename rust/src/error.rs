@@ -70,6 +70,12 @@ pub enum MpiErr {
     /// or dispatcher thread.
     Enqueue(String),
 
+    /// `MPI_ERR_RMA_SYNC`-style one-sided failure: an origin operation
+    /// outside a fence epoch, `win_free` with an open epoch, or a target
+    /// that rejected the operation (NACK) instead of corrupting its
+    /// window.
+    Rma(String),
+
     /// Internal invariant violation — a bug in the runtime itself.
     Internal(String),
 }
@@ -95,6 +101,7 @@ impl std::fmt::Display for MpiErr {
             MpiErr::Gpu(s) => write!(f, "gpu runtime error: {s}"),
             MpiErr::Xla(s) => write!(f, "xla runtime error: {s}"),
             MpiErr::Enqueue(s) => write!(f, "enqueue progress error: {s}"),
+            MpiErr::Rma(s) => write!(f, "one-sided (RMA) error: {s}"),
             MpiErr::Internal(s) => write!(f, "internal error: {s}"),
         }
     }
@@ -121,6 +128,7 @@ impl MpiErr {
             MpiErr::Gpu(_) => 60,
             MpiErr::Xla(_) => 61,
             MpiErr::Enqueue(_) => 62,      // MPIX_ERR_ENQUEUE
+            MpiErr::Rma(_) => 14,          // MPI_ERR_RMA_SYNC
             MpiErr::Internal(_) => 16,     // MPI_ERR_INTERN
         }
     }

@@ -3,9 +3,11 @@
 //! Replaces the repository's free-standing bench reporters with one
 //! scenario registry: every workload — pt2pt ping-pong, multi-stream
 //! message-rate scaling per lock mode, stream-comm alltoall, the GPU
-//! enqueue pipeline and its lane sweep, and the design ablations — is a
-//! named struct implementing [`Scenario`], with warmup/measure phases,
-//! deterministic seeding and p50/p99/mean + rate aggregation.
+//! enqueue pipeline and its lane sweep, one-sided RMA latency and
+//! message-rate scaling, partitioned pt2pt scaling and lane-fired
+//! triggers, and the design ablations — is a named struct implementing
+//! [`Scenario`], with warmup/measure phases, deterministic seeding and
+//! p50/p99/mean + rate aggregation.
 //!
 //! Layers:
 //!
@@ -69,6 +71,10 @@ impl Registry {
                 Box::new(scenario::EnqueueLanes { streams: 4 }),
                 Box::new(scenario::Nto1 { multiplex: true }),
                 Box::new(scenario::Nto1 { multiplex: false }),
+                Box::new(scenario::RmaPingPong),
+                Box::new(scenario::RmaMsgRate),
+                Box::new(scenario::PartitionedScaling),
+                Box::new(scenario::PartitionedEnqueue),
                 Box::new(scenario::AblationLockOps),
                 Box::new(scenario::AblationMicroCosts),
                 Box::new(scenario::AblationPoolSweep),
@@ -177,6 +183,10 @@ mod tests {
             "stream/alltoall",
             "enqueue/pipeline",
             "enqueue/hostfunc-vs-lanes",
+            "rma/pingpong",
+            "rma/msgrate",
+            "partitioned/scaling",
+            "partitioned/enqueue",
         ] {
             assert!(names.iter().any(|n| n == required), "missing {required}");
         }
@@ -190,6 +200,10 @@ mod tests {
         assert_eq!(msgrate.len(), 3);
         let glob = reg.select(&["ablation/*".to_string()]);
         assert_eq!(glob.len(), 5);
+        let rma = reg.select(&["rma".to_string()]);
+        assert_eq!(rma.len(), 2, "rma prefix selects pingpong + msgrate");
+        let part = reg.select(&["partitioned/*".to_string()]);
+        assert_eq!(part.len(), 2, "partitioned glob selects scaling + enqueue");
         let exact = reg.select(&["pt2pt/pingpong".to_string()]);
         assert_eq!(exact.len(), 1);
         assert!(reg.select(&["nope".to_string()]).is_empty());

@@ -669,6 +669,454 @@ impl Scenario for Nto1 {
 }
 
 // ----------------------------------------------------------------------
+// rma/pingpong
+// ----------------------------------------------------------------------
+
+/// One-sided latency over a 2-rank window: put and get round-trip times
+/// on the implicit (§5.1 prototype) route, a full fence→put→fence epoch
+/// round, and the §4.3 stream-routed put for comparison. The passive
+/// rank services window traffic from inside a blocking barrier (blocking
+/// waits drive global progress, so RMA targets drain without a dedicated
+/// thread).
+pub struct RmaPingPong;
+
+impl RmaPingPong {
+    const PAYLOAD: usize = 64;
+}
+
+impl Scenario for RmaPingPong {
+    fn name(&self) -> String {
+        "rma/pingpong".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("payload_bytes".into(), Self::PAYLOAD.to_string()),
+            ("paths".into(), "implicit,stream".into()),
+        ]
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let rounds = profile.scale(600, 100);
+        let warm = rounds / 10 + 1;
+        let fence_rounds = profile.scale(120, 30);
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let put_s: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let get_s: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let fence_s: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let sput_s: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let seed = profile.seed;
+        world.run(|p| {
+            let mut payload = vec![0u8; Self::PAYLOAD];
+            Rng::new(seed ^ 0x7a11a5).fill(&mut payload);
+            // Implicit-route window over the world communicator.
+            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                for i in 0..(warm + rounds) {
+                    let t0 = Instant::now();
+                    p.put(&win, 1, 0, &payload)?;
+                    if i >= warm {
+                        put_s.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                    }
+                }
+            }
+            // Rank 1 services the puts while blocked in this barrier.
+            p.barrier(p.world_comm())?;
+            if p.rank() == 0 {
+                for i in 0..(warm + rounds) {
+                    let t0 = Instant::now();
+                    let got = p.get(&win, 1, 0, Self::PAYLOAD)?;
+                    if i >= warm {
+                        get_s.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                    }
+                    if got.len() != Self::PAYLOAD {
+                        return Err(MpiErr::Internal("short get response".into()));
+                    }
+                }
+            }
+            p.barrier(p.world_comm())?;
+            // Full epoch round: fence, origin put, closing fence.
+            for i in 0..fence_rounds {
+                let t0 = Instant::now();
+                p.win_fence(&win)?;
+                if p.rank() == 0 {
+                    p.put(&win, 1, 0, &payload)?;
+                }
+                p.win_fence(&win)?;
+                if p.rank() == 0 && i >= fence_rounds / 10 {
+                    fence_s.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                }
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            // Stream-routed window (§4.3): same shape over the stream
+            // communicator's endpoint table.
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 4096], &c)?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                for i in 0..(warm + rounds) {
+                    let t0 = Instant::now();
+                    p.stream_put(&win, 1, 0, &payload)?;
+                    if i >= warm {
+                        sput_s.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                    }
+                }
+            }
+            // Rank 1 services stream-routed puts from the stream-comm
+            // barrier (its wait progresses the stream VCI).
+            p.barrier(&c)?;
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)
+        })?;
+        let put = Summary::from_ns(put_s.into_inner().unwrap());
+        let get = Summary::from_ns(get_s.into_inner().unwrap());
+        let fence = Summary::from_ns(fence_s.into_inner().unwrap());
+        let sput = Summary::from_ns(sput_s.into_inner().unwrap());
+        let mut metrics = vec![
+            Metric::lower("rma_put_p50_ns", put.p50_ns, "ns"),
+            Metric::info("rma_put_p99_ns", put.p99_ns, "ns"),
+            Metric::lower("rma_get_p50_ns", get.p50_ns, "ns"),
+            Metric::info("rma_get_p99_ns", get.p99_ns, "ns"),
+            Metric::info("fence_epoch_round_p50_ns", fence.p50_ns, "ns"),
+            Metric::info("stream_put_p50_ns", sput.p50_ns, "ns"),
+        ];
+        if put.mean_ns > 0.0 {
+            metrics.push(Metric::info("rate_put_ops_per_sec", 1e9 / put.mean_ns, "op/s"));
+        }
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
+// rma/msgrate
+// ----------------------------------------------------------------------
+
+/// Multi-stream one-sided message rate, global-CS vs per-VCI locking:
+/// live single-threaded calibration of the real put path under each
+/// critical-section regime, then the calibrated virtual-time replay over
+/// [`MSGRATE_STREAMS`] — the same method as the `msgrate/*` scenarios.
+/// The gated §4.3 claim: per-VCI window routing must beat the global
+/// critical section at ≥ 4 streams.
+pub struct RmaMsgRate;
+
+impl RmaMsgRate {
+    /// Min-of-runs ns/op of a self-put loop under `cfg`'s critical-section
+    /// regime (scheduler noise only ever inflates a run).
+    fn calibrate(cfg: &Config, msgs: u64, runs: u64) -> Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..runs {
+            let world = World::builder().ranks(1).config(cfg.clone()).build()?;
+            let p = world.proc(0);
+            let win = p.win_create(vec![0u8; 64], p.world_comm())?;
+            p.win_fence(&win)?;
+            let data = [9u8; 8];
+            let t0 = Instant::now();
+            for _ in 0..msgs {
+                p.put(&win, 0, 0, &data)?;
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / msgs as f64);
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+        }
+        Ok(best)
+    }
+}
+
+impl Scenario for RmaMsgRate {
+    fn name(&self) -> String {
+        "rma/msgrate".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("modes".into(), "global-cs,per-vci".into()),
+            ("streams".into(), "1,2,4,8".into()),
+            ("msg_bytes".into(), "8".into()),
+            ("source".into(), "live calibration + virtual-time replay".into()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = Self::calibrate(&Config::fig3_pervci(4), profile.scale(2_000, 400), 1)?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let msgs = profile.scale(15_000, 2_000);
+        let runs = profile.scale(4, 2);
+        let t_global = Self::calibrate(&Config::fig3_global(), msgs, runs)?;
+        let t_pervci = Self::calibrate(&Config::fig3_pervci(4), msgs, runs)?;
+        let lock_ns = measure_lock_ns(profile.scale(1_000_000, 200_000));
+        let cal = |t: f64| Calibration {
+            t_global_ns: t,
+            t_pervci_ns: t,
+            t_stream_ns: t,
+            lock_ns,
+            atomic_ns: 0.0,
+            handover_ns: lock_ns * HANDOVER_MULTIPLIER,
+        };
+        let cal_g = cal(t_global);
+        let cal_v = cal(t_pervci);
+        let sim_msgs = profile.scale(20_000, 5_000);
+        let mut metrics = vec![
+            Metric::info("calibrated_ns_per_op_global", t_global, "ns"),
+            Metric::info("calibrated_ns_per_op_pervci", t_pervci, "ns"),
+        ];
+        let mut g4 = 0.0;
+        let mut v4 = 0.0;
+        for &n in &MSGRATE_STREAMS {
+            let g = sim_global(&cal_g, n, sim_msgs).rate;
+            let v = sim_pervci(&cal_v, n, sim_msgs, n).rate;
+            if n == 4 {
+                g4 = g;
+                v4 = v;
+            }
+            metrics.push(Metric::info(format!("rate_global_{n}_msgs_per_sec"), g, "msg/s"));
+            metrics.push(Metric::higher(format!("rate_pervci_{n}_msgs_per_sec"), v, "msg/s"));
+        }
+        // The acceptance shape is a hard failure, not just a gate: window
+        // traffic over dedicated VCIs must out-scale the global CS.
+        if v4 <= g4 {
+            return Err(MpiErr::Internal(format!(
+                "per-VCI RMA replay must beat global-CS at 4 streams ({v4} vs {g4} msg/s)"
+            )));
+        }
+        metrics.push(Metric::higher("pervci_over_global_4", v4 / g4, "x"));
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
+// partitioned/scaling
+// ----------------------------------------------------------------------
+
+/// §4.3 partitioned scaling: rounds of a fixed 4 KiB message split into
+/// 1..8 partitions, triggered out of order, over the init-stage mapping
+/// partition → `part % implicit_pool`.
+pub struct PartitionedScaling;
+
+impl PartitionedScaling {
+    const TOTAL: usize = 4096;
+
+    fn rounds_ns(parts: usize, rounds: u64) -> Result<f64> {
+        let cfg = Config { implicit_pool: 4, ..Default::default() };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let elapsed: Mutex<Option<f64>> = Mutex::new(None);
+        world.run(|p| {
+            p.barrier(p.world_comm())?;
+            let t0 = Instant::now();
+            if p.rank() == 0 {
+                let buf = vec![1u8; Self::TOTAL];
+                let ps = p.psend_init(&buf, parts, 1, 0, p.world_comm())?;
+                for _ in 0..rounds {
+                    // Reverse order: the out-of-order trigger semantics.
+                    for part in (0..parts).rev() {
+                        p.pready(&ps, part)?;
+                    }
+                    p.pwait_send(&ps)?;
+                }
+            } else {
+                let mut rbuf = vec![0u8; Self::TOTAL];
+                for _ in 0..rounds {
+                    let mut pr = p.precv_init(&mut rbuf, parts, 0, 0, p.world_comm())?;
+                    p.pwait_recv(&mut pr)?;
+                }
+            }
+            p.barrier(p.world_comm())?;
+            if p.rank() == 0 {
+                *elapsed.lock().unwrap() = Some(t0.elapsed().as_nanos() as f64);
+            }
+            Ok(())
+        })?;
+        elapsed
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))
+    }
+}
+
+impl Scenario for PartitionedScaling {
+    fn name(&self) -> String {
+        "partitioned/scaling".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("partitions".into(), "1,2,4,8".into()),
+            ("total_bytes".into(), Self::TOTAL.to_string()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = Self::rounds_ns(4, profile.scale(40, 10))?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let rounds = profile.scale(400, 80);
+        let mut metrics = Vec::new();
+        for parts in [1usize, 2, 4, 8] {
+            let total_ns = Self::rounds_ns(parts, rounds)?;
+            let rps = rounds as f64 / (total_ns / 1e9);
+            metrics.push(if parts == 8 {
+                Metric::higher(format!("rounds_per_sec_{parts}"), rps, "op/s")
+            } else {
+                Metric::info(format!("rounds_per_sec_{parts}"), rps, "op/s")
+            });
+            metrics.push(Metric::info(
+                format!("us_per_round_{parts}"),
+                total_ns / rounds as f64 / 1e3,
+                "us",
+            ));
+        }
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
+// partitioned/enqueue
+// ----------------------------------------------------------------------
+
+/// §4.3 partition triggers fired from GPU enqueue lanes vs the host: the
+/// same 4-partition message per round, `pready`'d either directly (host
+/// serial context) or via `pready_enqueue` on a GPU stream driven by the
+/// PR-1 progress lanes.
+pub struct PartitionedEnqueue;
+
+impl PartitionedEnqueue {
+    const PARTS: usize = 4;
+    const TOTAL: usize = 2048;
+
+    fn run_phases(rounds: u64) -> Result<(f64, f64)> {
+        let cfg = Config {
+            implicit_pool: Self::PARTS,
+            explicit_pool: 1,
+            enqueue_mode: EnqueueMode::ProgressThread,
+            ..Default::default()
+        };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let host_ns: Mutex<Option<f64>> = Mutex::new(None);
+        let lane_ns: Mutex<Option<f64>> = Mutex::new(None);
+        world.run(|p| {
+            // The GPU enqueue context: rank 0 attaches a GPU-backed
+            // stream, rank 1 participates with MPIX_STREAM_NULL
+            // (stream-comm creation is collective).
+            let (gs, s, c) = if p.rank() == 0 {
+                let dev = p.gpu();
+                let g = dev.create_stream();
+                let mut info = Info::new();
+                info.set("type", "cudaStream_t");
+                info.set_hex_u64("value", g.id());
+                let st = p.stream_create(&info)?;
+                let c = p.stream_comm_create(p.world_comm(), Some(&st))?;
+                (Some(g), Some(st), c)
+            } else {
+                (None, None, p.stream_comm_create(p.world_comm(), None)?)
+            };
+            if p.rank() == 0 {
+                let buf = vec![1u8; Self::TOTAL];
+                let ps = p.psend_init(&buf, Self::PARTS, 1, 0, p.world_comm())?;
+                // Phase 1: host-fired triggers.
+                p.barrier(p.world_comm())?;
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    for part in 0..Self::PARTS {
+                        p.pready(&ps, part)?;
+                    }
+                    p.pwait_send(&ps)?;
+                }
+                *host_ns.lock().unwrap() = Some(t0.elapsed().as_nanos() as f64);
+                // Phase 2: lane-fired triggers.
+                p.barrier(p.world_comm())?;
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    for part in 0..Self::PARTS {
+                        p.pready_enqueue(&ps, part, &c)?;
+                    }
+                    p.synchronize_enqueue(&c)?;
+                    p.pwait_send(&ps)?;
+                }
+                *lane_ns.lock().unwrap() = Some(t0.elapsed().as_nanos() as f64);
+                drop(ps);
+            } else {
+                let mut rbuf = vec![0u8; Self::TOTAL];
+                p.barrier(p.world_comm())?;
+                for _ in 0..rounds {
+                    let mut pr = p.precv_init(&mut rbuf, Self::PARTS, 0, 0, p.world_comm())?;
+                    p.pwait_recv(&mut pr)?;
+                }
+                p.barrier(p.world_comm())?;
+                for _ in 0..rounds {
+                    let mut pr = p.precv_init(&mut rbuf, Self::PARTS, 0, 0, p.world_comm())?;
+                    p.pwait_recv(&mut pr)?;
+                }
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            if let Some(st) = s {
+                p.stream_free(st)?;
+            }
+            if let Some(g) = gs {
+                p.gpu().destroy_stream(&g)?;
+            }
+            Ok(())
+        })?;
+        let host = host_ns
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| MpiErr::Internal("no host timing recorded".into()))?;
+        let lanes = lane_ns
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| MpiErr::Internal("no lane timing recorded".into()))?;
+        Ok((host, lanes))
+    }
+}
+
+impl Scenario for PartitionedEnqueue {
+    fn name(&self) -> String {
+        "partitioned/enqueue".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("partitions".into(), Self::PARTS.to_string()),
+            ("total_bytes".into(), Self::TOTAL.to_string()),
+            ("trigger".into(), "host,enqueue-lanes".into()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = Self::run_phases(profile.scale(20, 8))?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let rounds = profile.scale(250, 50);
+        let (host_ns, lane_ns) = Self::run_phases(rounds)?;
+        let lane_rps = rounds as f64 / (lane_ns / 1e9);
+        Ok(ScenarioResult {
+            metrics: vec![
+                Metric::info("us_per_round_host", host_ns / rounds as f64 / 1e3, "us"),
+                Metric::info("us_per_round_lanes", lane_ns / rounds as f64 / 1e3, "us"),
+                Metric::higher("rounds_per_sec_lanes", lane_rps, "op/s"),
+                Metric::info(
+                    "lanes_over_host",
+                    host_ns / lane_ns.max(f64::MIN_POSITIVE),
+                    "x",
+                ),
+            ],
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
 // ablation/lock-ops
 // ----------------------------------------------------------------------
 
@@ -1042,6 +1490,48 @@ mod tests {
         let r1 = r.metrics.iter().find(|m| m.name == "rate_1_msgs_per_sec").unwrap().value;
         let r4 = r.metrics.iter().find(|m| m.name == "rate_4_msgs_per_sec").unwrap().value;
         assert!(r4 > r1, "lock-free replay must scale with streams ({r4} vs {r1})");
+    }
+
+    #[test]
+    fn rma_pingpong_scenario_smoke() {
+        let r = RmaPingPong.run(&Profile::smoke(11)).unwrap();
+        for gated in ["rma_put_p50_ns", "rma_get_p50_ns"] {
+            let m = r.metrics.iter().find(|m| m.name == gated).unwrap();
+            assert!(m.value > 0.0, "{gated} must be measured");
+        }
+        let sput = r.metrics.iter().find(|m| m.name == "stream_put_p50_ns").unwrap();
+        assert!(sput.value > 0.0, "stream-routed put must be measured");
+    }
+
+    #[test]
+    fn rma_msgrate_scenario_smoke_shows_pervci_win() {
+        let r = RmaMsgRate.run(&Profile::smoke(13)).unwrap();
+        let g4 =
+            r.metrics.iter().find(|m| m.name == "rate_global_4_msgs_per_sec").unwrap().value;
+        let v4 =
+            r.metrics.iter().find(|m| m.name == "rate_pervci_4_msgs_per_sec").unwrap().value;
+        assert!(v4 > g4, "per-vci RMA replay must beat global-cs at 4 streams ({v4} vs {g4})");
+        let ratio = r.metrics.iter().find(|m| m.name == "pervci_over_global_4").unwrap();
+        assert!(ratio.value > 1.0);
+    }
+
+    #[test]
+    fn partitioned_scaling_scenario_smoke() {
+        let r = PartitionedScaling.run(&Profile::smoke(17)).unwrap();
+        for parts in [1, 2, 4, 8] {
+            let m =
+                r.metrics.iter().find(|m| m.name == format!("rounds_per_sec_{parts}")).unwrap();
+            assert!(m.value > 0.0, "partition sweep point {parts} must be measured");
+        }
+    }
+
+    #[test]
+    fn partitioned_enqueue_scenario_smoke() {
+        let r = PartitionedEnqueue.run(&Profile::smoke(19)).unwrap();
+        let lanes = r.metrics.iter().find(|m| m.name == "rounds_per_sec_lanes").unwrap();
+        assert!(lanes.value > 0.0);
+        let host = r.metrics.iter().find(|m| m.name == "us_per_round_host").unwrap();
+        assert!(host.value > 0.0);
     }
 
     #[test]

@@ -13,6 +13,22 @@
 //! their partitions concurrently, which is exactly the scenario the
 //! ablation bench compares against explicit MPIX streams.
 //!
+//! **Stream integration (§4.3).** Partitioned operations are also
+//! first-class stream citizens:
+//!
+//! * Over a *stream communicator*, partition traffic routes through the
+//!   stream endpoints on both sides (sender issues from its local stream
+//!   VCI, receiver posts on its registered endpoint), so triggers run in
+//!   the stream's lock-free serial context.
+//! * [`Proc::psend_init_stream`] binds the send side of a conventional
+//!   communicator's partitioned operation to an explicit [`MpixStream`]:
+//!   every `pready` issues from that stream's VCI while the target
+//!   mapping stays `part % implicit_pool` (what the receiver posted).
+//! * [`Proc::pready_enqueue`] fires a partition trigger from a GPU
+//!   enqueue lane: the trigger is registered on the communicator's GPU
+//!   stream and executed by the PR-1 progress engine, with failures
+//!   surfacing at [`Proc::synchronize_enqueue`](crate::mpi::world::Proc).
+//!
 //! Partition traffic is disambiguated from plain point-to-point on the
 //! same communicator by carrying the partition number in the envelope's
 //! index fields (plain traffic uses `NO_INDEX`).
@@ -23,12 +39,14 @@ use std::sync::{Arc, Mutex};
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
 use crate::fabric::wire::Envelope;
-use crate::mpi::comm::Comm;
+use crate::mpi::comm::{Comm, CommKind};
 use crate::mpi::datatype::Datatype;
 use crate::mpi::matching::{MatchPattern, RecvDest};
 use crate::mpi::pt2pt::{RxRoute, TxRoute};
 use crate::mpi::request::Request;
 use crate::mpi::world::Proc;
+use crate::stream::stream::StreamInner;
+use crate::stream::MpixStream;
 
 struct PsendInner {
     comm: Comm,
@@ -39,6 +57,9 @@ struct PsendInner {
     ptr: *const u8,
     ready: Vec<AtomicBool>,
     reqs: Vec<Mutex<Option<Request>>>,
+    /// Explicit stream binding: partition triggers issue from this
+    /// stream's VCI instead of the implicit `part % pool` mapping.
+    stream: Option<Arc<StreamInner>>,
 }
 
 unsafe impl Send for PsendInner {}
@@ -70,21 +91,81 @@ impl PartitionedRecv {
 }
 
 impl Proc {
-    fn partition_route_tx(&self, comm: &Comm, dst: u32, tag: i32, part: usize) -> Result<TxRoute<'static>> {
-        comm.check_rank(dst)?;
+    /// Resolve the route for one partition trigger. Regular
+    /// communicators keep the `part % implicit_pool` init-stage mapping
+    /// (unless the send is stream-bound, which moves the *issuing* side
+    /// onto the stream's VCI); stream communicators route through the
+    /// allgathered endpoint table on both sides.
+    fn partition_route_tx<'a>(&self, inner: &'a PsendInner, part: usize) -> Result<TxRoute<'a>> {
+        let comm = &inner.comm;
         let pool = self.config().implicit_pool;
-        let vci = (part % pool) as u16;
+        let dst_vci = match comm.kind() {
+            CommKind::Stream { .. } => comm.remote_vci(inner.dst).ok_or_else(|| {
+                MpiErr::Internal("stream communicator without an endpoint table".into())
+            })?,
+            // Unreachable in practice: psend_init_inner rejects multiplex
+            // comms before a PsendInner can exist.
+            CommKind::Multiplex { .. } => {
+                return Err(MpiErr::Internal("multiplex comm in partitioned route".into()));
+            }
+            CommKind::Regular => (part % pool) as u16,
+        };
+        let stream: Option<&StreamInner> =
+            inner.stream.as_deref().or_else(|| comm.local_stream().map(|s| &**s));
+        let src_vci = match stream {
+            Some(s) => s.vci_idx(),
+            None => (part % pool) as u16,
+        };
         Ok(TxRoute {
-            src_vci: vci,
-            dst_ep: EpAddr { rank: comm.world_rank(dst)?, ep: vci },
+            src_vci,
+            dst_ep: EpAddr { rank: comm.world_rank(inner.dst)?, ep: dst_vci },
             env: Envelope {
                 ctx_id: comm.ctx_id(),
                 src_rank: comm.rank(),
-                tag,
+                tag: inner.tag,
                 src_idx: part as i32,
                 dst_idx: part as i32,
             },
-            stream: None,
+            stream,
+        })
+    }
+
+    fn psend_init_inner(
+        &self,
+        buf: &[u8],
+        parts: usize,
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+        stream: Option<Arc<StreamInner>>,
+    ) -> Result<PartitionedSend> {
+        if parts == 0 || buf.len() % parts != 0 {
+            return Err(MpiErr::Arg(format!(
+                "buffer of {} bytes does not split into {parts} equal partitions",
+                buf.len()
+            )));
+        }
+        comm.check_rank(dst)?;
+        if tag < 0 {
+            return Err(MpiErr::Tag(tag));
+        }
+        if comm.is_multiplex() {
+            return Err(MpiErr::Comm(
+                "partitioned communication is not supported on multiplex stream communicators".into(),
+            ));
+        }
+        Ok(PartitionedSend {
+            inner: Arc::new(PsendInner {
+                comm: comm.clone(),
+                dst,
+                tag,
+                parts,
+                part_len: buf.len() / parts,
+                ptr: buf.as_ptr(),
+                ready: (0..parts).map(|_| AtomicBool::new(false)).collect(),
+                reqs: (0..parts).map(|_| Mutex::new(None)).collect(),
+                stream,
+            }),
         })
     }
 
@@ -98,28 +179,31 @@ impl Proc {
         tag: i32,
         comm: &Comm,
     ) -> Result<PartitionedSend> {
-        if parts == 0 || buf.len() % parts != 0 {
-            return Err(MpiErr::Arg(format!(
-                "buffer of {} bytes does not split into {parts} equal partitions",
-                buf.len()
+        self.psend_init_inner(buf, parts, dst, tag, comm, None)
+    }
+
+    /// `MPIX_Psend_init` bound to an explicit stream (§4.3): every
+    /// partition trigger issues from `stream`'s VCI — the serial context
+    /// that fires `pready` owns a private network path, so concurrent
+    /// triggers from that context take no locks. The target mapping is
+    /// unchanged (what the receiver's `precv_init` posted).
+    pub fn psend_init_stream(
+        &self,
+        buf: &[u8],
+        parts: usize,
+        dst: u32,
+        tag: i32,
+        comm: &Comm,
+        stream: &MpixStream,
+    ) -> Result<PartitionedSend> {
+        if stream.inner.rank() != self.rank() {
+            return Err(MpiErr::Stream(format!(
+                "stream belongs to rank {}, used on rank {}",
+                stream.inner.rank(),
+                self.rank()
             )));
         }
-        comm.check_rank(dst)?;
-        if tag < 0 {
-            return Err(MpiErr::Tag(tag));
-        }
-        Ok(PartitionedSend {
-            inner: Arc::new(PsendInner {
-                comm: comm.clone(),
-                dst,
-                tag,
-                parts,
-                part_len: buf.len() / parts,
-                ptr: buf.as_ptr(),
-                ready: (0..parts).map(|_| AtomicBool::new(false)).collect(),
-                reqs: (0..parts).map(|_| Mutex::new(None)).collect(),
-            }),
-        })
+        self.psend_init_inner(buf, parts, dst, tag, comm, Some(stream.inner.clone()))
     }
 
     /// `MPI_Pready`: trigger partition `part`. Thread-safe; partitions may
@@ -135,10 +219,33 @@ impl Proc {
         let data = unsafe {
             std::slice::from_raw_parts(inner.ptr.add(part * inner.part_len), inner.part_len)
         };
-        let route = self.partition_route_tx(&inner.comm, inner.dst, inner.tag, part)?;
+        let route = self.partition_route_tx(inner, part)?;
         let req = self.isend_wire(data.to_vec(), route)?;
         *inner.reqs[part].lock().unwrap() = Some(req);
         Ok(())
+    }
+
+    /// `MPIX_Pready_enqueue`: fire the partition trigger from the GPU
+    /// enqueue lanes — `comm` supplies the GPU-backed stream communicator
+    /// (the enqueue context); the partition traffic itself follows the
+    /// partitioned operation's own routing. Out-of-range partitions fail
+    /// at call time; a double trigger is recorded per-stream and surfaces
+    /// at [`Proc::synchronize_enqueue`](crate::mpi::world::Proc).
+    pub fn pready_enqueue(&self, ps: &PartitionedSend, part: usize, comm: &Comm) -> Result<()> {
+        let gpu = crate::stream::enqueue::enqueue_target(comm)?;
+        if part >= ps.inner.parts {
+            return Err(MpiErr::Arg(format!(
+                "partition {part} out of range ({})",
+                ps.inner.parts
+            )));
+        }
+        let p = self.clone();
+        let ps = ps.clone();
+        // sync=true: the GPU stream stalls until the lane has actually
+        // fired the trigger, so a host-side `synchronize_enqueue` →
+        // `pwait_send` sequence can never observe a partition that was
+        // enqueued but not yet marked ready.
+        self.enqueue_op(&gpu, true, Box::new(move || p.pready(&ps, part)))
     }
 
     /// Complete all partitions (errors if some were never `pready`ed) and
@@ -181,6 +288,20 @@ impl Proc {
         comm.check_rank(src)?;
         let part_len = buf.len() / parts;
         let pool = self.config().implicit_pool;
+        // Stream communicator: every partition posts on this rank's
+        // registered endpoint (mirroring the sender's routing). Regular:
+        // the `part % pool` init-stage mapping.
+        let stream_vci = match comm.kind() {
+            CommKind::Stream { .. } => Some(comm.remote_vci(comm.rank()).ok_or_else(|| {
+                MpiErr::Internal("stream communicator without an endpoint table".into())
+            })?),
+            CommKind::Multiplex { .. } => {
+                return Err(MpiErr::Comm(
+                    "partitioned communication is not supported on multiplex stream communicators".into(),
+                ));
+            }
+            CommKind::Regular => None,
+        };
         let mut reqs = Vec::with_capacity(parts);
         for part in 0..parts {
             let slice = unsafe {
@@ -188,7 +309,7 @@ impl Proc {
             };
             let dest = RecvDest::new(slice, Datatype::U8, part_len)?;
             let route = RxRoute {
-                dst_vci: (part % pool) as u16,
+                dst_vci: stream_vci.unwrap_or((part % pool) as u16),
                 pattern: MatchPattern {
                     ctx_id: comm.ctx_id(),
                     src: src as i32,
@@ -196,7 +317,7 @@ impl Proc {
                     src_idx: part as i32,
                     dst_idx: part as i32,
                 },
-                stream: None,
+                stream: comm.local_stream().map(|s| &**s),
             };
             reqs.push(Some(self.irecv_dest(dest, route)?));
         }
@@ -337,5 +458,166 @@ mod tests {
         assert!(p.psend_init(&buf, 0, 0, 0, p.world_comm()).is_err(), "zero partitions");
         let mut rbuf = [0u8; 10];
         assert!(p.precv_init(&mut rbuf, 4, 0, 0, p.world_comm()).is_err());
+    }
+
+    #[test]
+    fn stream_bound_psend_issues_from_stream_vci() {
+        use std::sync::atomic::Ordering;
+        let cfg = Config { implicit_pool: 2, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            const PARTS: usize = 4;
+            const PLEN: usize = 32;
+            if p.rank() == 0 {
+                let s = p.stream_create(&crate::mpi::info::Info::null())?;
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i / PLEN) as u8).collect();
+                let ps = p.psend_init_stream(&buf, PARTS, 1, 3, p.world_comm(), &s)?;
+                let tx_bytes = |idx: u16| {
+                    p.vci(idx).ep().stats().tx_bytes.load(Ordering::Relaxed)
+                };
+                let before = tx_bytes(s.vci_idx());
+                for part in [3, 1, 0, 2] {
+                    p.pready(&ps, part)?;
+                }
+                p.pwait_send(&ps)?;
+                assert!(
+                    tx_bytes(s.vci_idx()) >= before + (PARTS * PLEN) as u64,
+                    "triggers must issue from the bound stream's endpoint"
+                );
+                drop(ps);
+                p.stream_free(s)?;
+            } else {
+                // Receiver posted nothing stream-specific: the target
+                // mapping stays `part % implicit_pool`.
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 3, p.world_comm())?;
+                p.pwait_recv(&mut pr)?;
+                for part in 0..PARTS {
+                    assert!(buf[part * PLEN..(part + 1) * PLEN].iter().all(|&b| b == part as u8));
+                }
+            }
+            p.barrier(p.world_comm())?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn partitioned_over_stream_comm_rides_stream_endpoints() {
+        use std::sync::atomic::Ordering;
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            const PARTS: usize = 4;
+            const PLEN: usize = 64;
+            let s = p.stream_create(&crate::mpi::info::Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let rx_before =
+                p.vci(s.vci_idx()).ep().stats().rx_bytes.load(Ordering::Relaxed);
+            if p.rank() == 0 {
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i / PLEN) as u8).collect();
+                let ps = p.psend_init(&buf, PARTS, 1, 2, &c)?;
+                for part in [2, 0, 3, 1] {
+                    p.pready(&ps, part)?;
+                }
+                p.pwait_send(&ps)?;
+                drop(ps);
+            } else {
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 2, &c)?;
+                p.pwait_recv(&mut pr)?;
+                for part in 0..PARTS {
+                    assert!(buf[part * PLEN..(part + 1) * PLEN].iter().all(|&b| b == part as u8));
+                }
+                assert!(
+                    p.vci(s.vci_idx()).ep().stats().rx_bytes.load(Ordering::Relaxed)
+                        >= rx_before + (PARTS * PLEN) as u64,
+                    "partition payload must land on the stream endpoint"
+                );
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn pready_from_enqueue_lanes_roundtrip_and_misuse() {
+        use crate::config::EnqueueMode;
+        use crate::mpi::info::Info;
+        let cfg = Config {
+            implicit_pool: 2,
+            explicit_pool: 1,
+            enqueue_mode: EnqueueMode::ProgressThread,
+            ..Default::default()
+        };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            const PARTS: usize = 4;
+            const PLEN: usize = 16;
+            if p.rank() == 0 {
+                let dev = p.gpu();
+                let gs = dev.create_stream();
+                let mut info = Info::new();
+                info.set("type", "cudaStream_t");
+                info.set_hex_u64("value", gs.id());
+                let s = p.stream_create(&info)?;
+                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i / PLEN) as u8).collect();
+                let ps = p.psend_init(&buf, PARTS, 1, 5, p.world_comm())?;
+                // No GPU stream comm: call-time Comm error.
+                assert!(matches!(
+                    p.pready_enqueue(&ps, 0, p.world_comm()),
+                    Err(MpiErr::Comm(_))
+                ));
+                // Out-of-range partition: call-time Arg error.
+                assert!(matches!(p.pready_enqueue(&ps, 9, &c), Err(MpiErr::Arg(_))));
+                for part in 0..PARTS {
+                    p.pready_enqueue(&ps, part, &c)?;
+                }
+                p.synchronize_enqueue(&c)?;
+                // Double trigger from the lane: recorded per-stream,
+                // surfaced at the next synchronize — never a lane panic.
+                p.pready_enqueue(&ps, 0, &c)?;
+                let err = p.synchronize_enqueue(&c);
+                assert!(
+                    matches!(err, Err(MpiErr::Request(_))),
+                    "double pready must surface as Request error, got {err:?}"
+                );
+                p.pwait_send(&ps)?;
+                drop(ps);
+                p.barrier(p.world_comm())?;
+                drop(c);
+                p.stream_free(s)?;
+                dev.destroy_stream(&gs)?;
+            } else {
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 5, p.world_comm())?;
+                p.pwait_recv(&mut pr)?;
+                for part in 0..PARTS {
+                    assert!(buf[part * PLEN..(part + 1) * PLEN].iter().all(|&b| b == part as u8));
+                }
+                p.barrier(p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn partitioned_rejected_on_multiplex_comms() {
+        let cfg = Config { explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let s = p.stream_create(&crate::mpi::info::Info::null()).unwrap();
+        let c = p.stream_comm_create_multiple(p.world_comm(), std::slice::from_ref(&s)).unwrap();
+        let buf = [0u8; 16];
+        assert!(matches!(p.psend_init(&buf, 4, 0, 0, &c), Err(MpiErr::Comm(_))));
+        let mut rbuf = [0u8; 16];
+        assert!(matches!(p.precv_init(&mut rbuf, 4, 0, 0, &c), Err(MpiErr::Comm(_))));
+        drop(c);
+        p.stream_free(s).unwrap();
     }
 }

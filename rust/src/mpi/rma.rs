@@ -3,20 +3,30 @@
 //! §5.1 of the paper: in the MPICH 4.1a1 prototype "one-sided operations
 //! are not explicitly stream-aware. A window created by using a stream
 //! communicator will behave like a conventional communicator with
-//! implicit VCI assignment." We reproduce exactly that: window traffic
-//! always routes through the implicit pool (`win_id % implicit_pool`),
-//! regardless of any stream attached to the creating communicator —
-//! making the stream-unawareness *observable* (see the tests).
+//! implicit VCI assignment." The conventional `put`/`get`/`accumulate`
+//! entry points reproduce exactly that: window traffic routes through the
+//! implicit pool (`win_id % implicit_pool`), regardless of any stream
+//! attached to the creating communicator — making the stream-unawareness
+//! *observable* (see the tests). The §4.3 generalization — one-sided ops
+//! as first-class stream citizens — lives in [`crate::stream::rma`]:
+//! `stream_put`/`stream_get`/`stream_accumulate` resolve an `RmaRoute`
+//! through the issuing stream's VCI and the target's registered endpoint
+//! instead, over the very same wire protocol below.
 //!
 //! Wire protocol: RMA packets share the fabric with point-to-point but
 //! carry [`RMA_CTX_BIT`] in the context id; the progress engine routes
 //! them to `handle_rma_packet` instead of the matching engine. Every
-//! origin operation is acknowledged (PUT/ACC → ACK, GET → DATA), so a
-//! returned operation is also remotely complete, and `fence` reduces to a
-//! barrier.
+//! origin operation is acknowledged (PUT/ACC → ACK, GET → DATA, any
+//! target-side rejection → NACK carrying the reason), so a returned
+//! operation is also remotely complete, and `fence` reduces to a barrier.
+//!
+//! Epoch discipline: origin operations are only legal inside a fence
+//! epoch (after the first `win_fence`), and `win_free` refuses while the
+//! current epoch has unfenced operations — both misuses return
+//! [`MpiErr::Rma`] instead of panicking or corrupting the window.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{MpiErr, Result};
@@ -37,6 +47,10 @@ const OP_GET: u8 = 1;
 const OP_ACC: u8 = 2;
 const OP_ACK: u8 = 3;
 const OP_DATA: u8 = 4;
+/// Target-side rejection; the body carries a UTF-8 reason. Replaces the
+/// old behaviour of panicking the target's progress context on a
+/// malformed operation.
+const OP_NACK: u8 = 5;
 
 const DT_F64: u8 = 0;
 const DT_I32: u8 = 1;
@@ -122,10 +136,24 @@ pub(crate) struct WinTarget {
     pub buf: Mutex<Vec<u8>>,
 }
 
-/// Origin-side results of in-flight RMA ops, keyed by token.
+/// Origin-side results of in-flight RMA ops: the response payload, or
+/// the target's NACK reason. Keyed by (window id, token) — tokens are
+/// allocated per-window, so concurrent operations on two windows (e.g. a
+/// host `get` racing a `put_enqueue` on a progress lane) must not collide
+/// in this proc-global map.
 #[derive(Default)]
 pub(crate) struct RmaResults {
-    pub done: Mutex<HashMap<u64, Vec<u8>>>,
+    pub done: Mutex<HashMap<(u32, u64), std::result::Result<Vec<u8>, String>>>,
+}
+
+/// Resolved origin route for one RMA operation: which local VCI issues it
+/// and which remote endpoint receives it. The conventional path derives
+/// both from `win_id % implicit_pool`; the stream-aware path
+/// ([`crate::stream::rma`]) derives them from the issuing stream and the
+/// stream communicator's endpoint table.
+pub(crate) struct RmaRoute {
+    pub src_vci: u16,
+    pub dst_ep: EpAddr,
 }
 
 struct WinInner {
@@ -134,9 +162,18 @@ struct WinInner {
     /// Per-rank window sizes (allgathered at creation).
     sizes: Vec<usize>,
     token: AtomicU64,
+    /// Set once the first `win_fence` completes: origin operations are
+    /// only legal inside a fence epoch.
+    fenced: AtomicBool,
+    /// Origin operations issued since the last fence. `win_free` refuses
+    /// while nonzero (the epoch is still open).
+    unfenced_ops: AtomicU64,
 }
 
-/// An RMA window over `comm`.
+/// An RMA window over `comm`. Handles are cheaply clonable (all clones
+/// share the epoch state); `win_free` consumes one handle and is
+/// idempotent-hostile like MPI — a second free of the same window errors.
+#[derive(Clone)]
 pub struct Window {
     inner: Arc<WinInner>,
 }
@@ -149,11 +186,27 @@ impl Window {
     pub fn size_at(&self, rank: u32) -> usize {
         self.inner.sizes[rank as usize]
     }
+
+    /// The communicator the window was created over.
+    pub(crate) fn comm(&self) -> &Comm {
+        &self.inner.comm
+    }
+
+    pub(crate) fn next_token(&self) -> u64 {
+        self.inner.token.fetch_add(1, Ordering::Relaxed)
+    }
 }
 
 impl Proc {
     fn rma_vci(&self, win_id: u32) -> u16 {
         (win_id as usize % self.config().implicit_pool) as u16
+    }
+
+    /// The §5.1 prototype route: both sides use `win_id % implicit_pool`,
+    /// ignoring any stream attachment.
+    fn rma_route_implicit(&self, win: &Window, target: u32) -> Result<RmaRoute> {
+        let vci = self.rma_vci(win.inner.id);
+        Ok(RmaRoute { src_vci: vci, dst_ep: EpAddr { rank: win.inner.comm.world_rank(target)?, ep: vci } })
     }
 
     /// `MPI_Win_create` (collective): expose `local` bytes of this
@@ -170,11 +223,35 @@ impl Proc {
         self.windows().lock().unwrap().insert(id, Arc::new(WinTarget { buf: Mutex::new(local) }));
         // Windows must be usable as soon as any rank returns.
         self.barrier(comm)?;
-        Ok(Window { inner: Arc::new(WinInner { id, comm: comm.clone(), sizes, token: AtomicU64::new(1) }) })
+        Ok(Window {
+            inner: Arc::new(WinInner {
+                id,
+                comm: comm.clone(),
+                sizes,
+                token: AtomicU64::new(1),
+                fenced: AtomicBool::new(false),
+                unfenced_ops: AtomicU64::new(0),
+            }),
+        })
     }
 
-    /// `MPI_Win_free` (collective).
+    /// `MPI_Win_free` (collective). Fails with [`MpiErr::Rma`] while the
+    /// current epoch has unfenced operations — on *every* rank, not just
+    /// the offender: the check is an allreduce, so a rank that misused
+    /// the epoch cannot strand compliant ranks inside the collective
+    /// teardown (and the error leaves the communicator's collective
+    /// sequencing intact). The handle stays usable (clone it before a
+    /// speculative free), so callers can fence and retry.
     pub fn win_free(&self, win: Window) -> Result<Vec<u8>> {
+        let mut open = win.inner.unfenced_ops.load(Ordering::Acquire).to_le_bytes();
+        self.allreduce(&mut open, &Datatype::U64, Op::Sum, &win.inner.comm)?;
+        let open = u64::from_le_bytes(open);
+        if open > 0 {
+            return Err(MpiErr::Rma(format!(
+                "win_free on window {} with an open epoch ({open} operation(s) since the last fence across the communicator); call win_fence first",
+                win.inner.id
+            )));
+        }
         self.barrier(&win.inner.comm)?;
         let t = self
             .windows()
@@ -190,9 +267,13 @@ impl Proc {
 
     /// `MPI_Win_fence`: separates RMA epochs. Because every origin op is
     /// remotely acknowledged before returning, completion only needs a
-    /// barrier.
+    /// barrier. The first fence opens the access epoch; every fence
+    /// closes the operations issued since the previous one.
     pub fn win_fence(&self, win: &Window) -> Result<()> {
-        self.barrier(&win.inner.comm)
+        self.barrier(&win.inner.comm)?;
+        win.inner.fenced.store(true, Ordering::Release);
+        win.inner.unfenced_ops.store(0, Ordering::Release);
+        Ok(())
     }
 
     /// Read this process's exposed window memory (between epochs).
@@ -211,15 +292,20 @@ impl Proc {
     fn rma_op(
         &self,
         win: &Window,
-        target: u32,
         header: RmaHeader,
         body: &[u8],
         expect_bytes: usize,
+        route: RmaRoute,
     ) -> Result<Vec<u8>> {
-        win.inner.comm.check_rank(target)?;
-        let vci_idx = self.rma_vci(win.inner.id);
-        let vci = self.vci(vci_idx);
-        let cs = self.session_for_vci(vci_idx);
+        if !win.inner.fenced.load(Ordering::Acquire) {
+            return Err(MpiErr::Rma(format!(
+                "RMA operation on window {} outside a fence epoch; call win_fence first",
+                win.inner.id
+            )));
+        }
+        win.inner.unfenced_ops.fetch_add(1, Ordering::AcqRel);
+        let vci = self.vci(route.src_vci);
+        let cs = self.session_for_vci(route.src_vci);
         let token = header.token;
         let payload = header.encode(body);
         let env = Envelope {
@@ -229,12 +315,14 @@ impl Proc {
             src_idx: NO_INDEX,
             dst_idx: NO_INDEX,
         };
-        let dst = EpAddr { rank: win.inner.comm.world_rank(target)?, ep: vci_idx };
         let packet = Packet::eager(env, vci.addr(), payload);
-        self.transmit_retry(vci, &cs, dst, packet)?;
-        // Spin for the ACK/DATA response (progressing our VCI).
+        self.transmit_retry(vci, &cs, route.dst_ep, packet)?;
+        // Spin for the ACK/DATA/NACK response (progressing our VCI).
         loop {
-            if let Some(data) = self.rma_results().done.lock().unwrap().remove(&token) {
+            if let Some(outcome) =
+                self.rma_results().done.lock().unwrap().remove(&(win.inner.id, token))
+            {
+                let data = outcome.map_err(MpiErr::Rma)?;
                 if data.len() != expect_bytes {
                     return Err(MpiErr::Internal(format!(
                         "rma response {} bytes, expected {expect_bytes}",
@@ -248,8 +336,15 @@ impl Proc {
         }
     }
 
-    /// `MPI_Put`: write `data` into the target window at `offset`.
-    pub fn put(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<()> {
+    /// Core put over a resolved route (shared with the stream-aware path).
+    pub(crate) fn rma_put_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        route: RmaRoute,
+    ) -> Result<()> {
         if offset + data.len() > win.size_at(target) {
             return Err(MpiErr::Arg(format!(
                 "put of {} bytes at {offset} exceeds target window of {} bytes",
@@ -257,23 +352,78 @@ impl Proc {
                 win.size_at(target)
             )));
         }
-        let token = win.inner.token.fetch_add(1, Ordering::Relaxed);
+        let token = win.next_token();
         let h = RmaHeader { opcode: OP_PUT, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, target, h, data, 0)?;
+        self.rma_op(win, h, data, 0, route)?;
         Ok(())
     }
 
-    /// `MPI_Get`: read `len` bytes from the target window at `offset`.
-    pub fn get(&self, win: &Window, target: u32, offset: usize, len: usize) -> Result<Vec<u8>> {
+    /// Core get over a resolved route (shared with the stream-aware path).
+    pub(crate) fn rma_get_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        len: usize,
+        route: RmaRoute,
+    ) -> Result<Vec<u8>> {
         if offset + len > win.size_at(target) {
             return Err(MpiErr::Arg(format!(
                 "get of {len} bytes at {offset} exceeds target window of {} bytes",
                 win.size_at(target)
             )));
         }
-        let token = win.inner.token.fetch_add(1, Ordering::Relaxed);
+        let token = win.next_token();
         let h = RmaHeader { opcode: OP_GET, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, target, h, &(len as u64).to_le_bytes(), len)
+        self.rma_op(win, h, &(len as u64).to_le_bytes(), len, route)
+    }
+
+    /// Core accumulate over a resolved route (shared with the stream-aware
+    /// path).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn rma_acc_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        dt: &Datatype,
+        op: Op,
+        route: RmaRoute,
+    ) -> Result<()> {
+        if data.len() % dt.size() != 0 {
+            return Err(MpiErr::Datatype("accumulate data not a whole number of elements".into()));
+        }
+        if offset + data.len() > win.size_at(target) {
+            return Err(MpiErr::Arg("accumulate exceeds target window".into()));
+        }
+        let token = win.next_token();
+        let h = RmaHeader {
+            opcode: OP_ACC,
+            dt: dt_code(dt)?,
+            rop: rop_code(op),
+            win_id: win.inner.id,
+            offset: offset as u64,
+            token,
+        };
+        self.rma_op(win, h, data, 0, route)?;
+        Ok(())
+    }
+
+    /// `MPI_Put`: write `data` into the target window at `offset`
+    /// (implicit-pool routing; see [`crate::stream::rma`] for the
+    /// stream-aware variant).
+    pub fn put(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<()> {
+        win.inner.comm.check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        self.rma_put_via(win, target, offset, data, route)
+    }
+
+    /// `MPI_Get`: read `len` bytes from the target window at `offset`.
+    pub fn get(&self, win: &Window, target: u32, offset: usize, len: usize) -> Result<Vec<u8>> {
+        win.inner.comm.check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        self.rma_get_via(win, target, offset, len, route)
     }
 
     /// `MPI_Accumulate`: elementwise `target = target op data`.
@@ -286,23 +436,9 @@ impl Proc {
         dt: &Datatype,
         op: Op,
     ) -> Result<()> {
-        if data.len() % dt.size() != 0 {
-            return Err(MpiErr::Datatype("accumulate data not a whole number of elements".into()));
-        }
-        if offset + data.len() > win.size_at(target) {
-            return Err(MpiErr::Arg("accumulate exceeds target window".into()));
-        }
-        let token = win.inner.token.fetch_add(1, Ordering::Relaxed);
-        let h = RmaHeader {
-            opcode: OP_ACC,
-            dt: dt_code(dt)?,
-            rop: rop_code(op),
-            win_id: win.inner.id,
-            offset: offset as u64,
-            token,
-        };
-        self.rma_op(win, target, h, data, 0)?;
-        Ok(())
+        win.inner.comm.check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        self.rma_acc_via(win, target, offset, data, dt, op, route)
     }
 }
 
@@ -323,31 +459,76 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 return; // window freed — drop (failure-injection path)
             };
             drop(reg);
+            // The target validates independently of the origin — a
+            // malformed operation must NACK, never panic the progress
+            // context or scribble past the window.
             let mut response = Vec::new();
+            let mut reject: Option<String> = None;
             {
                 let mut buf = win.buf.lock().unwrap();
                 let off = h.offset as usize;
+                let buf_len = buf.len();
+                let in_bounds =
+                    move |len: usize| off.checked_add(len).map_or(false, |end| end <= buf_len);
                 match h.opcode {
-                    OP_PUT => buf[off..off + body.len()].copy_from_slice(body),
+                    OP_PUT => {
+                        if in_bounds(body.len()) {
+                            buf[off..off + body.len()].copy_from_slice(body);
+                        } else {
+                            reject = Some(format!(
+                                "put of {} bytes at {off} exceeds target window of {} bytes",
+                                body.len(),
+                                buf.len()
+                            ));
+                        }
+                    }
                     OP_ACC => {
-                        let dt = dt_from_code(h.dt);
-                        let op = rop_from_code(h.rop);
-                        op.apply(&dt, &mut buf[off..off + body.len()], body).expect("acc apply");
+                        if in_bounds(body.len()) {
+                            let dt = dt_from_code(h.dt);
+                            let op = rop_from_code(h.rop);
+                            if let Err(e) = op.apply(&dt, &mut buf[off..off + body.len()], body) {
+                                reject = Some(format!("accumulate rejected at target: {e}"));
+                            }
+                        } else {
+                            reject = Some(format!(
+                                "accumulate of {} bytes at {off} exceeds target window of {} bytes",
+                                body.len(),
+                                buf.len()
+                            ));
+                        }
                     }
                     _ => {
-                        let len = u64::from_le_bytes(body[..8].try_into().unwrap()) as usize;
-                        response = buf[off..off + len].to_vec();
+                        if body.len() < 8 {
+                            reject = Some("malformed get request".into());
+                        } else {
+                            let len = u64::from_le_bytes(body[..8].try_into().unwrap()) as usize;
+                            if in_bounds(len) {
+                                response = buf[off..off + len].to_vec();
+                            } else {
+                                reject = Some(format!(
+                                    "get of {len} bytes at {off} exceeds target window of {} bytes",
+                                    buf.len()
+                                ));
+                            }
+                        }
                     }
                 }
             }
-            let opcode = if h.opcode == OP_GET { OP_DATA } else { OP_ACK };
+            let (opcode, out) = match reject {
+                Some(reason) => (OP_NACK, reason.into_bytes()),
+                None => (if h.opcode == OP_GET { OP_DATA } else { OP_ACK }, response),
+            };
             let rh = RmaHeader { opcode, dt: 0, rop: 0, win_id: h.win_id, offset: 0, token: h.token };
             let renv = Envelope { ctx_id: env.ctx_id, src_rank: 0, tag: 0, src_idx: NO_INDEX, dst_idx: NO_INDEX };
-            let packet = Packet::eager(renv, vci.addr(), rh.encode(&response));
+            let packet = Packet::eager(renv, vci.addr(), rh.encode(&out));
             let _ = proc.transmit_retry(vci, cs, reply_ep, packet);
         }
         OP_ACK | OP_DATA => {
-            proc.rma_results().done.lock().unwrap().insert(h.token, body.to_vec());
+            proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Ok(body.to_vec()));
+        }
+        OP_NACK => {
+            let reason = String::from_utf8_lossy(body).into_owned();
+            proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Err(reason));
         }
         _ => {}
     }
@@ -439,6 +620,29 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    #[test]
+    fn ops_outside_epoch_and_free_with_open_epoch_fail() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 16], p.world_comm()).unwrap();
+        // No fence yet: origin operations are outside any epoch.
+        assert!(matches!(p.put(&win, 0, 0, &[1u8; 4]), Err(MpiErr::Rma(_))));
+        assert!(matches!(p.get(&win, 0, 0, 4), Err(MpiErr::Rma(_))));
+        assert!(matches!(
+            p.accumulate(&win, 0, 0, &[0u8; 4], &Datatype::I32, Op::Sum),
+            Err(MpiErr::Rma(_))
+        ));
+        p.win_fence(&win).unwrap();
+        p.put(&win, 0, 0, &[9u8; 4]).unwrap();
+        // Open epoch: free refuses; the cloned handle stays usable, so
+        // fence-then-free recovers (no corruption, no panic).
+        let clone = win.clone();
+        assert!(matches!(p.win_free(win), Err(MpiErr::Rma(_))));
+        p.win_fence(&clone).unwrap();
+        let buf = p.win_free(clone).unwrap();
+        assert_eq!(&buf[..4], &[9u8; 4]);
     }
 
     #[test]

@@ -68,7 +68,9 @@ impl EnqueuedRequest {
 }
 
 /// Validate an enqueue call and produce the GPU stream to enqueue on.
-fn enqueue_target(comm: &Comm) -> Result<GpuStream> {
+/// Shared with the stream-RMA ([`crate::stream::rma`]) and partitioned
+/// (`pready_enqueue`) enqueue entry points.
+pub(crate) fn enqueue_target(comm: &Comm) -> Result<GpuStream> {
     let stream = comm.local_stream().ok_or_else(|| {
         MpiErr::Comm(
             "enqueue APIs require a stream communicator with a local GPU stream attached".into(),
@@ -129,7 +131,7 @@ impl Proc {
     /// Dispatch an enqueue-op per the configured mode. `sync` = stall the
     /// GPU stream until the MPI op completes. The closure's `Result` is
     /// recorded per-stream on failure (see module docs), never panicked.
-    fn enqueue_op(&self, gpu: &GpuStream, sync: bool, func: LaneOp) -> Result<()> {
+    pub(crate) fn enqueue_op(&self, gpu: &GpuStream, sync: bool, func: LaneOp) -> Result<()> {
         match self.config().enqueue_mode {
             EnqueueMode::HostFunc => {
                 // Prototype path: the op runs inline on the dispatcher

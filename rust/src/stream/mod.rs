@@ -5,6 +5,9 @@
 //!   `MPIX_Stream_comm_create_multiple`.
 //! * [`pt2pt`] — the indexed `MPIX_Stream_send/recv/isend/irecv`.
 //! * [`enqueue`] — `MPIX_{Send,Recv,Isend,Irecv,Wait,Waitall}_enqueue`.
+//! * [`rma`] — stream-aware one-sided operations (§4.3):
+//!   `MPIX_Stream_put/get/accumulate` over a stream communicator's
+//!   endpoint table, plus `MPIX_Put/Get_enqueue` on the progress lanes.
 //! * [`progress`] — the sharded, event-driven progress engine behind the
 //!   enqueue APIs: one lazily-spawned lane per GPU stream (capped by
 //!   `Config::enqueue_lanes`), edge-triggered handoff with no polling.
@@ -12,6 +15,7 @@
 pub mod enqueue;
 pub mod progress;
 pub mod pt2pt;
+pub mod rma;
 pub mod stream;
 pub mod stream_comm;
 

@@ -1,0 +1,329 @@
+//! Stream-aware one-sided communication — the §4.3 generalization.
+//!
+//! The paper argues MPIX streams apply beyond two-sided point-to-point:
+//! one-sided RMA is exactly the kind of "serial execution context" work
+//! that should map onto a stream's dedicated VCI. The MPICH 4.1a1
+//! prototype stops short of this ("one-sided operations are not
+//! explicitly stream-aware", §5.1) — reproduced by the conventional
+//! [`Proc::put`](crate::mpi::world::Proc)/`get`/`accumulate`, which always
+//! route through the implicit pool. This module supplies the missing
+//! half:
+//!
+//! * [`Proc::stream_put`] / [`Proc::stream_get`] /
+//!   [`Proc::stream_accumulate`] — origin operations on a window created
+//!   over a *stream communicator*: they issue from the local stream's VCI
+//!   (lock-free serial context, no critical section on the origin path)
+//!   and address the target rank's registered stream endpoint from the
+//!   communicator's allgathered table, instead of the
+//!   `win_id % implicit_pool` convention.
+//! * [`Proc::put_enqueue`] / [`Proc::get_enqueue`] — the `MPIX_*_enqueue`
+//!   shape for RMA: the operation is registered on the communicator's GPU
+//!   stream and driven by the PR-1 progress lanes, with call-time
+//!   argument validation and the usual per-stream sticky-error contract
+//!   (failures surface at
+//!   [`Proc::synchronize_enqueue`](crate::mpi::world::Proc)).
+//!
+//! Target-side progress needs no new machinery: RMA packets carry
+//! [`crate::mpi::rma::RMA_CTX_BIT`] and are serviced by whichever VCI they
+//! arrive on, so a target blocked in `win_fence` over the stream
+//! communicator (a barrier riding the stream endpoints) drains and
+//! acknowledges stream-routed window traffic.
+
+use crate::error::{MpiErr, Result};
+use crate::fabric::addr::EpAddr;
+use crate::gpu::DevicePtr;
+use crate::mpi::datatype::{Datatype, Op};
+use crate::mpi::rma::{RmaRoute, Window};
+use crate::mpi::world::Proc;
+use crate::stream::enqueue::enqueue_target;
+
+impl Proc {
+    /// Resolve the stream route for an origin operation: local stream VCI
+    /// → the target's registered endpoint. Requires the window to have
+    /// been created over a stream communicator with a local stream
+    /// attached.
+    fn stream_rma_route(&self, win: &Window, target: u32) -> Result<RmaRoute> {
+        let comm = win.comm();
+        comm.check_rank(target)?;
+        let dst_vci = comm.remote_vci(target).ok_or_else(|| {
+            MpiErr::Comm(
+                "stream RMA requires a window created over a stream communicator (MPIX_Stream_comm_create)".into(),
+            )
+        })?;
+        let stream = comm.local_stream().ok_or_else(|| {
+            MpiErr::Stream(
+                "stream RMA requires a local stream attached to the window's communicator (not MPIX_STREAM_NULL)".into(),
+            )
+        })?;
+        Ok(RmaRoute {
+            src_vci: stream.vci_idx(),
+            dst_ep: EpAddr { rank: comm.world_rank(target)?, ep: dst_vci },
+        })
+    }
+
+    /// `MPIX_Stream_put`: like [`Proc::put`], but issued from the window
+    /// communicator's stream VCI to the target's registered stream
+    /// endpoint.
+    pub fn stream_put(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<()> {
+        let route = self.stream_rma_route(win, target)?;
+        self.rma_put_via(win, target, offset, data, route)
+    }
+
+    /// `MPIX_Stream_get`: stream-routed [`Proc::get`].
+    pub fn stream_get(&self, win: &Window, target: u32, offset: usize, len: usize) -> Result<Vec<u8>> {
+        let route = self.stream_rma_route(win, target)?;
+        self.rma_get_via(win, target, offset, len, route)
+    }
+
+    /// `MPIX_Stream_accumulate`: stream-routed [`Proc::accumulate`].
+    pub fn stream_accumulate(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        dt: &Datatype,
+        op: Op,
+    ) -> Result<()> {
+        let route = self.stream_rma_route(win, target)?;
+        self.rma_acc_via(win, target, offset, data, dt, op, route)
+    }
+
+    /// `MPIX_Put_enqueue`: register a stream-routed put on the window
+    /// communicator's GPU stream (payload snapshotted at call time, like
+    /// `MPIX_Send_enqueue`). Arguments are validated at call time; a
+    /// runtime failure of the asynchronous operation surfaces at
+    /// [`Proc::synchronize_enqueue`].
+    pub fn put_enqueue(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<()> {
+        let gpu = enqueue_target(win.comm())?;
+        win.comm().check_rank(target)?;
+        if offset + data.len() > win.size_at(target) {
+            return Err(MpiErr::Arg(format!(
+                "put_enqueue of {} bytes at {offset} exceeds target window of {} bytes",
+                data.len(),
+                win.size_at(target)
+            )));
+        }
+        let p = self.clone();
+        let w = win.clone();
+        let d = data.to_vec();
+        self.enqueue_op(&gpu, true, Box::new(move || p.stream_put(&w, target, offset, &d)))
+    }
+
+    /// `MPIX_Get_enqueue`: register a stream-routed get on the window
+    /// communicator's GPU stream, landing the data in device memory when
+    /// the stream reaches the operation.
+    pub fn get_enqueue(&self, win: &Window, target: u32, offset: usize, dst: DevicePtr) -> Result<()> {
+        let gpu = enqueue_target(win.comm())?;
+        win.comm().check_rank(target)?;
+        if offset + dst.len() > win.size_at(target) {
+            return Err(MpiErr::Arg(format!(
+                "get_enqueue of {} bytes at {offset} exceeds target window of {} bytes",
+                dst.len(),
+                win.size_at(target)
+            )));
+        }
+        let p = self.clone();
+        let w = win.clone();
+        let dev = self.gpu();
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                let data = p.stream_get(&w, target, offset, dst.len())?;
+                dev.write_sync(dst, &data)
+            }),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::error::MpiErr;
+    use crate::mpi::datatype::{Datatype, Op};
+    use crate::mpi::info::Info;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn stream_rma_rides_stream_endpoints() {
+        // The mirror of rma.rs's `windows_are_not_stream_aware`: the
+        // stream-aware entry points MUST move the payload over the stream
+        // endpoints and keep the implicit pool quiet.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 16], &c)?;
+            p.win_fence(&win)?;
+            // Barrier fragments carry zero payload bytes, so payload byte
+            // counters isolate the RMA traffic race-free.
+            let rx_bytes = |idx: u16| {
+                p.vci(idx).ep().stats().rx_bytes.load(std::sync::atomic::Ordering::Relaxed)
+            };
+            let stream_before = rx_bytes(s.vci_idx());
+            let implicit_before = rx_bytes(0);
+            if p.rank() == 0 {
+                p.stream_put(&win, 1, 0, &[7u8; 16])?;
+            }
+            p.win_fence(&win)?;
+            assert_eq!(
+                rx_bytes(0),
+                implicit_before,
+                "stream RMA payload must not touch the implicit pool"
+            );
+            assert!(
+                rx_bytes(s.vci_idx()) > stream_before,
+                "the put (or its ack) must ride the stream endpoint"
+            );
+            if p.rank() == 1 {
+                assert_eq!(p.win_read_local(&win)?, vec![7u8; 16]);
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn stream_put_get_accumulate_roundtrip() {
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 32], &c)?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                p.stream_put(&win, 1, 4, b"stream-rma")?;
+                let contrib = 5i32.to_le_bytes();
+                p.stream_accumulate(&win, 1, 0, &contrib, &Datatype::I32, Op::Sum)?;
+                p.stream_accumulate(&win, 1, 0, &contrib, &Datatype::I32, Op::Sum)?;
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let got = p.stream_get(&win, 1, 4, 10)?;
+                assert_eq!(&got, b"stream-rma");
+                let acc = p.stream_get(&win, 1, 0, 4)?;
+                assert_eq!(i32::from_le_bytes(acc.try_into().unwrap()), 10);
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn stream_rma_requires_stream_comm_and_epoch() {
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        // Regular-communicator window: no endpoint table to route by.
+        let win = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();
+        p.win_fence(&win).unwrap();
+        assert!(matches!(p.stream_put(&win, 0, 0, &[1u8; 4]), Err(MpiErr::Comm(_))));
+        assert!(matches!(p.stream_get(&win, 0, 0, 4), Err(MpiErr::Comm(_))));
+        p.win_fence(&win).unwrap();
+        p.win_free(win).unwrap();
+        // MPIX_STREAM_NULL attachment: stream ops need a real stream.
+        let c = p.stream_comm_create(p.world_comm(), None).unwrap();
+        let win = p.win_create(vec![0u8; 8], &c).unwrap();
+        p.win_fence(&win).unwrap();
+        assert!(matches!(p.stream_put(&win, 0, 0, &[1u8; 4]), Err(MpiErr::Stream(_))));
+        p.win_fence(&win).unwrap();
+        p.win_free(win).unwrap();
+        // Epoch discipline applies to the stream path too.
+        let s = p.stream_create(&Info::null()).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        let win = p.win_create(vec![0u8; 8], &c).unwrap();
+        assert!(matches!(p.stream_put(&win, 0, 0, &[1u8; 4]), Err(MpiErr::Rma(_))));
+        p.win_fence(&win).unwrap();
+        p.stream_put(&win, 0, 0, &[1u8; 4]).unwrap();
+        p.win_fence(&win).unwrap();
+        p.win_free(win).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+    }
+
+    #[test]
+    fn rma_enqueue_roundtrip_on_gpu_stream() {
+        let cfg = Config { implicit_pool: 1, explicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 16], &c)?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                p.put_enqueue(&win, 1, 0, b"lane-put")?;
+                p.synchronize_enqueue(&c)?;
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let d = dev.alloc(8);
+                p.get_enqueue(&win, 1, 0, d)?;
+                p.synchronize_enqueue(&c)?;
+                assert_eq!(dev.read_sync(d)?, b"lane-put");
+                dev.free(d)?;
+            } else {
+                assert_eq!(&p.win_read_local(&win)?[..8], b"lane-put");
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn rma_enqueue_validates_at_call_time_and_surfaces_async_failures() {
+        let cfg = Config { implicit_pool: 1, explicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        let win = p.win_create(vec![0u8; 8], &c).unwrap();
+        // Call-time validation: bad rank and out-of-bounds fail the call,
+        // not the lane.
+        assert!(matches!(p.put_enqueue(&win, 9, 0, &[1u8; 4]), Err(MpiErr::Rank { .. })));
+        assert!(matches!(p.put_enqueue(&win, 0, 6, &[1u8; 4]), Err(MpiErr::Arg(_))));
+        let d = dev.alloc(16);
+        assert!(matches!(p.get_enqueue(&win, 0, 0, d), Err(MpiErr::Arg(_))), "dst larger than window");
+        dev.free(d).unwrap();
+        // Async failure: an epoch violation detected on the lane surfaces
+        // at synchronize_enqueue (no fence has opened the epoch yet).
+        p.put_enqueue(&win, 0, 0, &[1u8; 4]).unwrap();
+        let err = p.synchronize_enqueue(&c);
+        assert!(matches!(err, Err(MpiErr::Rma(_))), "expected Rma epoch error, got {err:?}");
+        // Enqueue on a plain window (no GPU stream comm) is a Comm error.
+        let plain = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();
+        assert!(matches!(p.put_enqueue(&plain, 0, 0, &[1u8; 2]), Err(MpiErr::Comm(_))));
+        p.win_fence(&plain).unwrap();
+        p.win_free(plain).unwrap();
+        p.win_fence(&win).unwrap();
+        p.win_free(win).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+        dev.destroy_stream(&gs).unwrap();
+    }
+}

@@ -215,6 +215,200 @@ fn cancel_returns_false_after_completion() {
 }
 
 // ----------------------------------------------------------------------
+// RMA epoch misuse
+// ----------------------------------------------------------------------
+
+#[test]
+fn rma_ops_outside_fence_epoch_fail_explicitly() {
+    use mpix::mpi::datatype::{Datatype, Op};
+    let w = World::with_ranks(2).unwrap();
+    w.run(|p| {
+        let win = p.win_create(vec![0u8; 32], p.world_comm())?;
+        // No fence yet: every origin op must return MpiErr::Rma — not
+        // panic, not silently write the target.
+        assert!(matches!(p.put(&win, 1, 0, &[1u8; 4]), Err(MpiErr::Rma(_))));
+        assert!(matches!(p.get(&win, 1, 0, 4), Err(MpiErr::Rma(_))));
+        assert!(matches!(
+            p.accumulate(&win, 1, 0, &4i32.to_le_bytes(), &Datatype::I32, Op::Sum),
+            Err(MpiErr::Rma(_))
+        ));
+        p.win_fence(&win)?;
+        if p.rank() == 0 {
+            p.put(&win, 1, 0, &[7u8; 4])?;
+        }
+        p.win_fence(&win)?;
+        if p.rank() == 1 {
+            assert_eq!(&p.win_read_local(&win)?[..4], &[7u8; 4], "window intact after misuse");
+        }
+        p.win_free(win)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn win_free_with_open_epoch_fails_on_every_rank_then_recovers() {
+    let w = World::with_ranks(2).unwrap();
+    w.run(|p| {
+        let win = p.win_create(vec![0u8; 16], p.world_comm())?;
+        p.win_fence(&win)?;
+        // Asymmetric misuse: only rank 0 leaves the epoch open. The
+        // epoch check is collective (allreduce), so BOTH ranks must
+        // refuse the free — a local-only check would return early on
+        // rank 0 and strand rank 1 inside the collective teardown.
+        if p.rank() == 0 {
+            p.put(&win, 1, 0, &[7u8; 8])?;
+        }
+        let clone = win.clone();
+        let err = p.win_free(win);
+        assert!(matches!(err, Err(MpiErr::Rma(_))), "open epoch must refuse free: {err:?}");
+        // Fence closes the epoch; free succeeds and returns the buffer
+        // with the put applied — nothing was corrupted.
+        p.win_fence(&clone)?;
+        let buf = p.win_free(clone)?;
+        if p.rank() == 1 {
+            assert_eq!(&buf[..8], &[7u8; 8]);
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn concurrent_rma_on_two_windows_does_not_cross_tokens() {
+    // Tokens are allocated per-window; the origin-side result map must
+    // key them by (window, token) or two windows' in-flight ops collide
+    // (one spin-loop consumes the other's response and hangs or errors).
+    // Two threads hammer puts+gets on their own windows concurrently.
+    let w = World::with_ranks(2).unwrap();
+    w.run(|p| {
+        let win_a = p.win_create(vec![0u8; 64], p.world_comm())?;
+        let win_b = p.win_create(vec![0u8; 64], p.world_comm())?;
+        p.win_fence(&win_a)?;
+        p.win_fence(&win_b)?;
+        if p.rank() == 0 {
+            std::thread::scope(|s| {
+                for (marker, win) in [(0xA5u8, &win_a), (0x5Bu8, &win_b)] {
+                    let p = p.clone();
+                    s.spawn(move || {
+                        for i in 0..100usize {
+                            p.put(win, 1, 0, &[marker; 16]).unwrap();
+                            let got = p.get(win, 1, 0, 16).unwrap();
+                            assert!(
+                                got.iter().all(|&b| b == marker),
+                                "iteration {i}: window read back foreign bytes {got:?}"
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        p.win_fence(&win_a)?;
+        p.win_fence(&win_b)?;
+        p.win_free(win_a)?;
+        p.win_free(win_b)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Partitioned misuse & races
+// ----------------------------------------------------------------------
+
+#[test]
+fn partitioned_misuse_fails_explicitly() {
+    let w = World::with_ranks(2).unwrap();
+    let p = w.proc(0);
+    let buf = [0u8; 32];
+    let ps = p.psend_init(&buf, 4, 1, 0, p.world_comm()).unwrap();
+    // Out-of-range partition.
+    assert!(matches!(p.pready(&ps, 4), Err(MpiErr::Arg(_))));
+    assert!(matches!(p.pready(&ps, usize::MAX), Err(MpiErr::Arg(_))));
+    // Double pready.
+    p.pready(&ps, 2).unwrap();
+    assert!(matches!(p.pready(&ps, 2), Err(MpiErr::Request(_))));
+    // Waiting with partitions never readied.
+    assert!(matches!(p.pwait_send(&ps), Err(MpiErr::Request(_))));
+    // parrived beyond the partition count.
+    let mut rbuf = [0u8; 32];
+    let pr = p.precv_init(&mut rbuf, 4, 1, 0, p.world_comm()).unwrap();
+    assert!(matches!(p.parrived(&pr, 9), Err(MpiErr::Arg(_))));
+    // Drain: trigger the rest and let rank 1's buffer go unmatched —
+    // requests cancel on drop, nothing hangs.
+    drop(pr);
+}
+
+#[test]
+fn pwait_recv_racing_parrived_under_stress() {
+    // The shutdown-stress pattern: repeated rounds with staggered timing,
+    // concurrent triggers on the send side and concurrent `parrived`
+    // polling threads on the receive side, all racing `pwait_recv`'s
+    // completion path. Invariants: no panic, no hang (the test runner's
+    // timeout is the watchdog), payload delivered exactly once per round.
+    const PARTS: usize = 4;
+    const PLEN: usize = 128;
+    for round in 0..8u64 {
+        let cfg = Config { implicit_pool: 4, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                let buf: Vec<u8> = (0..PARTS * PLEN).map(|i| (i / PLEN) as u8).collect();
+                let ps = p.psend_init(&buf, PARTS, 1, 0, p.world_comm())?;
+                // Stagger the triggers across rounds so they land before,
+                // during and after the receiver's polling burst.
+                std::thread::scope(|s| {
+                    for part in 0..PARTS {
+                        let p = p.clone();
+                        let ps = ps.clone();
+                        s.spawn(move || {
+                            std::thread::sleep(std::time::Duration::from_micros(
+                                (part as u64 * 37 + round * 53) % 211,
+                            ));
+                            p.pready(&ps, part).unwrap();
+                        });
+                    }
+                });
+                p.pwait_send(&ps)?;
+            } else {
+                let mut buf = vec![0u8; PARTS * PLEN];
+                let mut pr = p.precv_init(&mut buf, PARTS, 0, 0, p.world_comm())?;
+                // Concurrent pollers: each thread spins `parrived` on its
+                // own partition while the others poll theirs.
+                std::thread::scope(|s| {
+                    for part in 0..PARTS {
+                        let p = p.clone();
+                        let pr = &pr;
+                        s.spawn(move || {
+                            while !p.parrived(pr, part).unwrap() {
+                                std::hint::spin_loop();
+                            }
+                            // Once arrived, it stays arrived.
+                            assert!(p.parrived(pr, part).unwrap());
+                        });
+                    }
+                });
+                // The racing completion: pwait_recv right after (and, on
+                // odd rounds, *while*) pollers observed arrival.
+                p.pwait_recv(&mut pr)?;
+                for part in 0..PARTS {
+                    assert!(
+                        buf[part * PLEN..(part + 1) * PLEN].iter().all(|&b| b == part as u8),
+                        "round {round}: partition {part} corrupted"
+                    );
+                }
+                // After the wait, parrived reports consumed partitions
+                // as an explicit Request error, not a panic.
+                assert!(matches!(p.parrived(&pr, 0), Err(MpiErr::Request(_))));
+            }
+            p.barrier(p.world_comm())?;
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+// ----------------------------------------------------------------------
 // GPU misuse
 // ----------------------------------------------------------------------
 

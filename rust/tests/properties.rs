@@ -227,6 +227,231 @@ fn prop_multiplex_routing_random() {
 }
 
 // ----------------------------------------------------------------------
+// Matching-engine FIFO per (source, tag) — seeded, shrinking
+// ----------------------------------------------------------------------
+
+use mpix::fabric::addr::EpAddr;
+use mpix::fabric::wire::Envelope;
+use mpix::mpi::matching::{
+    MatchPattern, MatchState, PostedRecv, RecvDest, UnexpectedKind, UnexpectedMsg,
+};
+use mpix::mpi::request::{ReqKind, Request};
+use mpix::prelude::ANY_INDEX;
+
+/// One step of a randomized matching schedule: a message arriving on the
+/// wire from sender stream `stream` with `tag`, or a receive being
+/// posted (possibly with wildcards).
+#[derive(Clone, Copy, Debug)]
+enum MatchEv {
+    Arrive { stream: u8, tag: u8 },
+    Post { stream: Option<u8>, tag: Option<u8> },
+}
+
+/// Drive one schedule through a `MatchState` and verify the §2.1
+/// matching-order contract: for every (source stream, tag) pair, messages
+/// are consumed in arrival order, and after draining, every arrived
+/// message was delivered exactly once. Returns the violation as an error
+/// string so the caller can shrink the schedule.
+fn run_matching_case(nstreams: u8, ntags: u8, schedule: &[MatchEv]) -> Result<(), String> {
+    let npairs = nstreams as usize * ntags as usize;
+    let mut st = MatchState::new();
+    let mut next_arrive = vec![0u64; npairs];
+    let mut last_delivered = vec![-1i64; npairs];
+    let mut arrived = 0usize;
+    let mut delivered = 0usize;
+    // Buffers posted receives point into; boxed so addresses are stable.
+    let mut bufs: Vec<Box<[u8; 8]>> = Vec::new();
+    let mut pending: Vec<Request> = Vec::new();
+    let reply = EpAddr { rank: 1, ep: 0 };
+
+    let pair = |stream: u8, tag: u8| stream as usize * ntags as usize + tag as usize;
+    let mk_env = |stream: u8, tag: u8| Envelope {
+        ctx_id: 0,
+        src_rank: stream as u32,
+        tag: tag as i32,
+        src_idx: stream as i32,
+        dst_idx: 0,
+    };
+    let mut record = |env: &Envelope, data: &[u8]| -> Result<(), String> {
+        let seq = u64::from_le_bytes(data.try_into().map_err(|_| "short payload".to_string())?);
+        let k = pair(env.src_idx as u8, env.tag as u8);
+        if (seq as i64) <= last_delivered[k] {
+            return Err(format!(
+                "stream {} tag {} delivered seq {seq} after {}",
+                env.src_idx, env.tag, last_delivered[k]
+            ));
+        }
+        last_delivered[k] = seq as i64;
+        delivered += 1;
+        Ok(())
+    };
+
+    // Deliver an unexpected message into a fresh destination (the
+    // posted-receive path a real `irecv` takes when it finds a match in
+    // the unexpected queue).
+    fn consume_unexpected(
+        msg: UnexpectedMsg,
+        bufs: &mut Vec<Box<[u8; 8]>>,
+        record: &mut dyn FnMut(&Envelope, &[u8]) -> Result<(), String>,
+    ) -> Result<(), String> {
+        let UnexpectedMsg { env, kind, .. } = msg;
+        let UnexpectedKind::Eager(data) = kind else {
+            return Err("unexpected rendezvous in an eager-only schedule".into());
+        };
+        bufs.push(Box::new([0u8; 8]));
+        let buf = bufs.last_mut().unwrap();
+        let dest = RecvDest::new(&mut buf[..], Datatype::U8, 8).map_err(|e| e.to_string())?;
+        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+        assert!(req.inner().try_claim());
+        match dest.deliver(&env, &data) {
+            Ok(status) => req.inner().complete_ok(status),
+            Err(e) => return Err(format!("deliver failed: {e}")),
+        }
+        record(&env, &data)
+    }
+
+    for ev in schedule {
+        match *ev {
+            MatchEv::Arrive { stream, tag } => {
+                let k = pair(stream, tag);
+                let seq = next_arrive[k];
+                next_arrive[k] += 1;
+                arrived += 1;
+                let env = mk_env(stream, tag);
+                let data = seq.to_le_bytes().to_vec();
+                match st.match_posted(&env) {
+                    Some(posted) => {
+                        match posted.dest.deliver(&env, &data) {
+                            Ok(status) => posted.req.complete_ok(status),
+                            Err(e) => return Err(format!("deliver failed: {e}")),
+                        }
+                        record(&env, &data)?;
+                    }
+                    None => st.push_unexpected(UnexpectedMsg {
+                        env,
+                        reply_ep: reply,
+                        kind: UnexpectedKind::Eager(data),
+                    }),
+                }
+            }
+            MatchEv::Post { stream, tag } => {
+                let pattern = MatchPattern {
+                    ctx_id: 0,
+                    src: stream.map_or(ANY_SOURCE, |s| s as i32),
+                    tag: tag.map_or(ANY_TAG, |t| t as i32),
+                    src_idx: stream.map_or(ANY_INDEX, |s| s as i32),
+                    dst_idx: 0,
+                };
+                // MPI requires checking the unexpected queue first.
+                match st.take_unexpected(&pattern) {
+                    Some(msg) => consume_unexpected(msg, &mut bufs, &mut record)?,
+                    None => {
+                        bufs.push(Box::new([0u8; 8]));
+                        let buf = bufs.last_mut().unwrap();
+                        let dest =
+                            RecvDest::new(&mut buf[..], Datatype::U8, 8).map_err(|e| e.to_string())?;
+                        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+                        st.push_posted(PostedRecv {
+                            pattern,
+                            dest,
+                            req: req.inner().clone(),
+                        });
+                        pending.push(req);
+                    }
+                }
+            }
+        }
+    }
+
+    // Drain: wildcard receives until the unexpected queue is empty, then
+    // everything that arrived must have been delivered exactly once.
+    let drain = MatchPattern { ctx_id: 0, src: ANY_SOURCE, tag: ANY_TAG, src_idx: ANY_INDEX, dst_idx: 0 };
+    while let Some(msg) = st.take_unexpected(&drain) {
+        consume_unexpected(msg, &mut bufs, &mut record)?;
+    }
+    if delivered != arrived {
+        return Err(format!("{arrived} messages arrived but {delivered} were delivered"));
+    }
+    // `pending` holds never-matched receives; dropping them exercises the
+    // cancel-on-drop path (must not affect the verdict).
+    drop(pending);
+    Ok(())
+}
+
+/// Delta-debugging shrink: greedily remove chunks while the schedule
+/// still fails, halving the chunk size down to single events.
+fn shrink_matching_case(nstreams: u8, ntags: u8, schedule: Vec<MatchEv>) -> Vec<MatchEv> {
+    let mut cur = schedule;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            if run_matching_case(nstreams, ntags, &cand).is_err() {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            return cur;
+        }
+        chunk /= 2;
+    }
+}
+
+/// Interleaved tagged sends/recvs across 2–4 sender streams must match
+/// FIFO per (source, tag) regardless of arrival order — randomized
+/// schedules with wildcard receives, seeded like the `VciPool` property
+/// test, with failing schedules shrunk to a minimal reproduction.
+#[test]
+fn prop_matching_fifo_per_source_tag_with_shrinking() {
+    let mut rng = Rng::new(0xF1F0_0D1E);
+    for case in 0..16 {
+        let nstreams = 2 + rng.below(3) as u8; // 2..=4 sender streams
+        let ntags = 1 + rng.below(3) as u8; // 1..=3 tags
+        let npairs = nstreams as usize * ntags as usize;
+        let per_pair = 1 + rng.below(6) as usize;
+        let mut counts = vec![per_pair; npairs];
+        let mut left = npairs * per_pair;
+        let mut schedule = Vec::new();
+        while left > 0 {
+            if rng.below(5) < 3 {
+                // An arrival from a random pair with messages remaining
+                // — interleaving across pairs is the point of the test.
+                loop {
+                    let k = rng.below(npairs as u64) as usize;
+                    if counts[k] > 0 {
+                        counts[k] -= 1;
+                        left -= 1;
+                        schedule.push(MatchEv::Arrive {
+                            stream: (k / ntags as usize) as u8,
+                            tag: (k % ntags as usize) as u8,
+                        });
+                        break;
+                    }
+                }
+            } else {
+                let stream =
+                    if rng.below(3) == 0 { None } else { Some(rng.below(nstreams as u64) as u8) };
+                let tag = if rng.below(3) == 0 { None } else { Some(rng.below(ntags as u64) as u8) };
+                schedule.push(MatchEv::Post { stream, tag });
+            }
+        }
+        if let Err(msg) = run_matching_case(nstreams, ntags, &schedule) {
+            let minimal = shrink_matching_case(nstreams, ntags, schedule);
+            panic!(
+                "case {case} ({nstreams} streams x {ntags} tags): {msg}\n\
+                 minimal failing schedule ({} events): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
 // Datatype roundtrips
 // ----------------------------------------------------------------------
 
