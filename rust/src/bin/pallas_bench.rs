@@ -4,6 +4,7 @@
 //! pallas-bench --list
 //! pallas-bench [--smoke] [--scenario a,b,...] [--seed N] [--json PATH]
 //!              [--baseline PATH [--threshold 0.85]]
+//!              [--propose-baseline PATH [--margin 3]]
 //! ```
 //!
 //! * `--list`           print every registered scenario name and exit
@@ -15,6 +16,14 @@
 //!                      report (the `BENCH_results.json` schema)
 //! * `--baseline PATH`  compare gated metrics against a reference report
 //! * `--threshold T`    regression gate ratio in (0, 1], default 0.85
+//! * `--propose-baseline PATH`  write a baseline document derived from
+//!                      this run's gated metrics (the `baseline-refresh`
+//!                      workflow's artifact); requires the full sweep
+//!                      (no `--scenario` filter) and is skipped if any
+//!                      scenario failed
+//! * `--margin M`       slack factor for `--propose-baseline` (>= 1,
+//!                      default 3): floors at value/M, ceilings at
+//!                      value*M
 //!
 //! Exit codes: 0 ok, 1 runtime error, 2 usage error, 3 perf regression.
 
@@ -61,6 +70,15 @@ fn run(args: &Args) -> Result<i32> {
         None => Vec::new(),
         Some(s) => s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect(),
     };
+    // A baseline proposal must come from the full sweep: rendering one
+    // from a --scenario subset would emit a baseline missing every other
+    // scenario, and compare() skips missing scenarios — committing such a
+    // file silently un-gates the rest of the suite.
+    if args.get("propose-baseline").is_some() && !patterns.is_empty() {
+        return Err(mpix::error::MpiErr::Arg(
+            "--propose-baseline requires the full sweep; drop the --scenario filter".into(),
+        ));
+    }
 
     let (report, failures) = registry.run_collect(&patterns, &profile)?;
     report.print_text();
@@ -79,6 +97,16 @@ fn run(args: &Args) -> Result<i32> {
             println!("  {name}: {e}");
         }
         return Ok(1);
+    }
+
+    // Only a fully successful run may seed a baseline proposal — a partial
+    // sweep would silently drop the failed scenarios' gates.
+    if let Some(path) = args.get("propose-baseline") {
+        let margin = args.get_f64("margin", 3.0)?;
+        let text = baseline::propose(&report, margin)?;
+        std::fs::write(path, text)
+            .map_err(|e| mpix::error::MpiErr::Arg(format!("write proposed baseline {path}: {e}")))?;
+        eprintln!("[pallas-bench] wrote proposed baseline {path} (margin {margin}x)");
     }
 
     if let Some(base_path) = args.get("baseline") {

@@ -71,9 +71,13 @@ pub enum MpiErr {
     Enqueue(String),
 
     /// `MPI_ERR_RMA_SYNC`-style one-sided failure: an origin operation
-    /// outside a fence epoch, `win_free` with an open epoch, or a target
-    /// that rejected the operation (NACK) instead of corrupting its
-    /// window.
+    /// outside any epoch (no fence open, no lock held on the target), a
+    /// window-synchronization state-machine violation (`win_fence` inside
+    /// a passive lock epoch, `win_lock` with unfenced operations,
+    /// `win_unlock`/`win_flush` without a held lock, `win_free` with an
+    /// open epoch or held locks), or a target that rejected the operation
+    /// (NACK — bounds, datatype, unknown window, double unlock) instead
+    /// of corrupting its window.
     Rma(String),
 
     /// Internal invariant violation — a bug in the runtime itself.

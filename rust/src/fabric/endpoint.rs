@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 use super::addr::EpAddr;
 use super::queue::{MpscQueue, Pop};
-use super::wire::Packet;
+use super::wire::{Packet, RMA_CTX_BIT};
 
 /// Counters exported for metrics / tests.
 #[derive(Debug, Default)]
@@ -25,6 +25,11 @@ pub struct EpStats {
     pub tx_bytes: AtomicU64,
     pub rx_bytes: AtomicU64,
     pub backpressure_events: AtomicU64,
+    /// Inbound packets whose envelope carries [`RMA_CTX_BIT`] — one-sided
+    /// data ops, their responses, and the passive-target lock protocol.
+    /// Lets tests and the `rma/*` scenarios attribute window traffic to an
+    /// endpoint even when the packets carry no payload (lock grants).
+    pub rx_rma_packets: AtomicU64,
 }
 
 /// Point-in-time copy of an endpoint's counters — the form benchmark
@@ -36,6 +41,7 @@ pub struct EpStatsSnapshot {
     pub tx_bytes: u64,
     pub rx_bytes: u64,
     pub backpressure_events: u64,
+    pub rx_rma_packets: u64,
 }
 
 impl EpStats {
@@ -47,6 +53,7 @@ impl EpStats {
             tx_bytes: self.tx_bytes.load(Ordering::Relaxed),
             rx_bytes: self.rx_bytes.load(Ordering::Relaxed),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            rx_rma_packets: self.rx_rma_packets.load(Ordering::Relaxed),
         }
     }
 
@@ -59,6 +66,7 @@ impl EpStats {
         self.tx_bytes.store(0, Ordering::Relaxed);
         self.rx_bytes.store(0, Ordering::Relaxed);
         self.backpressure_events.store(0, Ordering::Relaxed);
+        self.rx_rma_packets.store(0, Ordering::Relaxed);
     }
 }
 
@@ -70,6 +78,7 @@ impl EpStatsSnapshot {
         self.tx_bytes += other.tx_bytes;
         self.rx_bytes += other.rx_bytes;
         self.backpressure_events += other.backpressure_events;
+        self.rx_rma_packets += other.rx_rma_packets;
     }
 }
 
@@ -109,10 +118,14 @@ impl Endpoint {
     /// sender must progress its own VCI and retry.
     pub fn deliver(&self, packet: Packet) -> Result<(), Packet> {
         let bytes = packet.kind.payload_len() as u64;
+        let is_rma = packet.env.ctx_id & RMA_CTX_BIT != 0;
         match self.inbound.push_bounded(packet, self.ring_capacity) {
             Ok(()) => {
                 self.stats.rx_packets.fetch_add(1, Ordering::Relaxed);
                 self.stats.rx_bytes.fetch_add(bytes, Ordering::Relaxed);
+                if is_rma {
+                    self.stats.rx_rma_packets.fetch_add(1, Ordering::Relaxed);
+                }
                 Ok(())
             }
             Err(p) => {
@@ -217,6 +230,30 @@ mod tests {
         assert_eq!(ep.stats().rx_bytes.load(Ordering::Relaxed), 100);
         ep.note_tx(64);
         assert_eq!(ep.stats().tx_bytes.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn rma_packets_classified_by_ctx_bit() {
+        let ep = Endpoint::new(EpAddr { rank: 1, ep: 0 }, 1024);
+        ep.deliver(pkt(1, 8)).unwrap();
+        assert_eq!(ep.stats().rx_rma_packets.load(Ordering::Relaxed), 0);
+        let rma = Packet::eager(
+            Envelope {
+                ctx_id: RMA_CTX_BIT | 3,
+                src_rank: 0,
+                tag: 0,
+                src_idx: NO_INDEX,
+                dst_idx: NO_INDEX,
+            },
+            EpAddr { rank: 0, ep: 0 },
+            vec![0u8; 4],
+        );
+        ep.deliver(rma).unwrap();
+        assert_eq!(ep.stats().rx_rma_packets.load(Ordering::Relaxed), 1);
+        let snap = ep.stats().snapshot();
+        assert_eq!(snap.rx_rma_packets, 1);
+        ep.stats().reset();
+        assert_eq!(ep.stats().snapshot().rx_rma_packets, 0);
     }
 
     #[test]

@@ -7,6 +7,46 @@
 
 use super::addr::EpAddr;
 
+/// Context-id bit marking one-sided (RMA) traffic (bit 30; bit 31 is the
+/// collective-context bit). A wire-protocol fact, so it lives here: the
+/// fabric layer can classify packets without reaching into the MPI layer,
+/// and the progress engine routes marked packets to the RMA handler
+/// instead of the matching engine.
+pub const RMA_CTX_BIT: u32 = 1 << 30;
+
+/// Wire opcodes of the one-sided protocol. Every packet whose envelope
+/// carries [`crate::fabric::wire::RMA_CTX_BIT`] starts its payload with
+/// one of these (see the header layout in [`crate::mpi::rma`]).
+pub mod rma_op {
+    /// Origin write; target replies [`ACK`] (or [`NACK`]).
+    pub const PUT: u8 = 0;
+    /// Origin read; target replies [`DATA`] (or [`NACK`]).
+    pub const GET: u8 = 1;
+    /// Origin read-modify-write; target replies [`ACK`] (or [`NACK`]).
+    pub const ACC: u8 = 2;
+    /// Target-side completion of a [`PUT`]/[`ACC`].
+    pub const ACK: u8 = 3;
+    /// Target-side response payload of a [`GET`].
+    pub const DATA: u8 = 4;
+    /// Target-side rejection of any origin operation; the body carries a
+    /// UTF-8 reason. Replaces the old behaviour of panicking the target's
+    /// progress context on a malformed operation.
+    pub const NACK: u8 = 5;
+    /// Passive-target lock request (`MPI_Win_lock`); the body byte is the
+    /// [`crate::mpi::win_lock::LockType`] wire code. The target either
+    /// grants immediately or queues the requester (strict FIFO).
+    pub const LOCK_REQ: u8 = 6;
+    /// Target-side admission of a queued or immediate [`LOCK_REQ`].
+    pub const LOCK_GRANT: u8 = 7;
+    /// Passive-target release (`MPI_Win_unlock`); the header token names
+    /// the held lock. The target replies [`UNLOCK_ACK`] and pushes
+    /// [`LOCK_GRANT`]s to every newly admitted waiter — or [`NACK`]s a
+    /// release that holds nothing (double unlock).
+    pub const UNLOCK: u8 = 8;
+    /// Target-side completion of an [`UNLOCK`].
+    pub const UNLOCK_ACK: u8 = 9;
+}
+
 /// Matching envelope. `src_idx`/`dst_idx` are [`NO_INDEX`] for ordinary
 /// (non-multiplex) traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,5 +156,26 @@ mod tests {
         let a = EpAddr { rank: 0, ep: 0 };
         assert_eq!(Packet::eager(e, a, vec![]).kind.kind_name(), "eager");
         assert_eq!(Packet::rts(e, a, 0, 0).kind.kind_name(), "rts");
+    }
+
+    #[test]
+    fn rma_opcodes_are_distinct() {
+        let ops = [
+            rma_op::PUT,
+            rma_op::GET,
+            rma_op::ACC,
+            rma_op::ACK,
+            rma_op::DATA,
+            rma_op::NACK,
+            rma_op::LOCK_REQ,
+            rma_op::LOCK_GRANT,
+            rma_op::UNLOCK,
+            rma_op::UNLOCK_ACK,
+        ];
+        let mut dedup = ops.to_vec();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ops.len(), "wire opcodes must not collide");
+        assert_eq!(RMA_CTX_BIT, 1 << 30);
     }
 }

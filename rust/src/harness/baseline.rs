@@ -11,9 +11,14 @@
 //! unavailable in the offline crate set); it accepts the full JSON value
 //! grammar, which is more than [`crate::harness::report`] emits, so a
 //! hand-edited baseline also loads.
+//!
+//! [`propose`] closes the loop the other way: it renders a run's report
+//! back into baseline form with a documented slack margin, so the
+//! `baseline-refresh` CI workflow can emit a ready-to-commit tightened
+//! baseline instead of leaving the floors to hand-editing.
 
 use crate::error::{MpiErr, Result};
-use crate::harness::report::Report;
+use crate::harness::report::{json_escape, json_num, Report};
 use crate::harness::stats::Direction;
 
 // ----------------------------------------------------------------------
@@ -374,10 +379,75 @@ pub fn compare(current: &Report, baseline: &Json, threshold: f64) -> Result<Vec<
     Ok(regressions)
 }
 
+// ----------------------------------------------------------------------
+// Baseline proposal (the `baseline-refresh` pipeline)
+// ----------------------------------------------------------------------
+
+/// Render a proposed baseline document from a run's report: every gated
+/// metric of every scenario, with `margin`× slack applied in the
+/// regression direction — floors at `value / margin` for higher-is-better
+/// rates, ceilings at `value * margin` for lower-is-better latencies.
+/// `info` metrics and scenarios without any gated metric are dropped, so
+/// the proposal gates exactly what [`compare`] would gate. The output
+/// round-trips through [`parse`]/[`load`].
+pub fn propose(report: &Report, margin: f64) -> Result<String> {
+    use std::fmt::Write as _;
+    if !margin.is_finite() || margin < 1.0 {
+        return Err(MpiErr::Arg(format!("--margin {margin} must be a finite number >= 1.0")));
+    }
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": \"{}\",", json_escape(crate::harness::report::SCHEMA));
+    let _ = writeln!(out, "  \"git_sha\": \"{}\",", json_escape(&report.git_sha));
+    let _ = writeln!(out, "  \"profile\": \"{}\",", json_escape(&report.profile));
+    let _ = writeln!(out, "  \"seed\": {},", report.seed);
+    let _ = writeln!(
+        out,
+        "  \"_note\": \"Proposed baseline derived from run {} ({} profile): every gated metric \
+         with {margin}x slack in the regression direction. Sanity-check against recent CI \
+         artifacts, then commit as rust/bench/baseline.json.\",",
+        json_escape(&report.git_sha),
+        json_escape(&report.profile)
+    );
+    out.push_str("  \"results\": [\n");
+    let gated: Vec<_> = report
+        .results
+        .iter()
+        .filter(|r| r.metrics.iter().any(|m| m.direction != Direction::Info))
+        .collect();
+    for (i, rec) in gated.iter().enumerate() {
+        out.push_str("    {\n");
+        let _ = writeln!(out, "      \"scenario\": \"{}\",", json_escape(&rec.scenario));
+        out.push_str("      \"metrics\": {\n");
+        let metrics: Vec<_> =
+            rec.metrics.iter().filter(|m| m.direction != Direction::Info).collect();
+        for (j, m) in metrics.iter().enumerate() {
+            let value = match m.direction {
+                Direction::HigherIsBetter => m.value / margin,
+                Direction::LowerIsBetter => m.value * margin,
+                Direction::Info => unreachable!("info metrics filtered above"),
+            };
+            let _ = write!(
+                out,
+                "        \"{}\": {{\"value\": {}, \"unit\": \"{}\", \"direction\": \"{}\"}}",
+                json_escape(&m.name),
+                json_num(value),
+                json_escape(m.unit),
+                m.direction.as_str()
+            );
+            out.push_str(if j + 1 < metrics.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("      }\n");
+        out.push_str(if i + 1 < gated.len() { "    },\n" } else { "    }\n" });
+    }
+    out.push_str("  ]\n}\n");
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::harness::report::ScenarioRecord;
+    use crate::harness::report::{ScenarioRecord, SCHEMA};
     use crate::harness::stats::Metric;
 
     #[test]
@@ -467,6 +537,55 @@ mod tests {
         assert!(compare(&other, &base, 0.85).unwrap().is_empty());
         let other_scenario = report_with("t", Metric::higher("rate", 1.0, "x"));
         assert!(compare(&other_scenario, &base, 0.85).unwrap().is_empty());
+    }
+
+    #[test]
+    fn propose_applies_margin_in_the_regression_direction() {
+        let mut rep = Report::new("smoke", 7);
+        rep.git_sha = "deadbeef".into();
+        rep.results.push(ScenarioRecord {
+            scenario: "s".into(),
+            params: vec![],
+            metrics: vec![
+                Metric::higher("rate", 300.0, "msg/s"),
+                Metric::lower("lat", 100.0, "ns"),
+                Metric::info("ctx", 5.0, "x"),
+            ],
+            elapsed_ms: 1.0,
+        });
+        let text = propose(&rep, 3.0).unwrap();
+        let doc = parse(&text).unwrap();
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+        let results = doc.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        let ms = results[0].get("metrics").unwrap();
+        let val = |name: &str| {
+            ms.get(name).and_then(|m| m.get("value")).and_then(|v| v.as_f64()).unwrap()
+        };
+        assert!((val("rate") - 100.0).abs() < 1e-9, "floor = rate / margin");
+        assert!((val("lat") - 300.0).abs() < 1e-9, "ceiling = latency * margin");
+        assert!(ms.get("ctx").is_none(), "info metrics never enter the baseline");
+        // The very run the proposal came from passes its own gate...
+        assert!(compare(&rep, &doc, 0.85).unwrap().is_empty());
+        // ...and a past-the-margin regression fails it.
+        let mut worse = rep.clone();
+        worse.results[0].metrics[0].value = 50.0;
+        assert_eq!(compare(&worse, &doc, 0.85).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn propose_drops_ungated_scenarios_and_rejects_bad_margins() {
+        let mut rep = Report::new("full", 1);
+        rep.results.push(ScenarioRecord {
+            scenario: "info-only".into(),
+            params: vec![],
+            metrics: vec![Metric::info("ctx", 1.0, "x")],
+            elapsed_ms: 1.0,
+        });
+        let doc = parse(&propose(&rep, 2.0).unwrap()).unwrap();
+        assert_eq!(doc.get("results").and_then(|r| r.as_arr()).unwrap().len(), 0);
+        assert!(propose(&rep, 0.5).is_err(), "margin < 1 would tighten past the measurement");
+        assert!(propose(&rep, f64::NAN).is_err());
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! Replaces the repository's free-standing bench reporters with one
 //! scenario registry: every workload — pt2pt ping-pong, multi-stream
 //! message-rate scaling per lock mode, stream-comm alltoall, the GPU
-//! enqueue pipeline and its lane sweep, one-sided RMA latency and
-//! message-rate scaling, partitioned pt2pt scaling and lane-fired
+//! enqueue pipeline and its lane sweep, one-sided RMA latency,
+//! message-rate scaling and passive-target (lock/unlock) contention,
+//! partitioned pt2pt scaling and lane-fired
 //! triggers, and the design ablations — is a named struct implementing
 //! [`Scenario`], with warmup/measure phases, deterministic seeding and
 //! p50/p99/mean + rate aggregation.
@@ -73,6 +74,7 @@ impl Registry {
                 Box::new(scenario::Nto1 { multiplex: false }),
                 Box::new(scenario::RmaPingPong),
                 Box::new(scenario::RmaMsgRate),
+                Box::new(scenario::RmaPassive),
                 Box::new(scenario::PartitionedScaling),
                 Box::new(scenario::PartitionedEnqueue),
                 Box::new(scenario::AblationLockOps),
@@ -185,6 +187,7 @@ mod tests {
             "enqueue/hostfunc-vs-lanes",
             "rma/pingpong",
             "rma/msgrate",
+            "rma/passive",
             "partitioned/scaling",
             "partitioned/enqueue",
         ] {
@@ -201,7 +204,7 @@ mod tests {
         let glob = reg.select(&["ablation/*".to_string()]);
         assert_eq!(glob.len(), 5);
         let rma = reg.select(&["rma".to_string()]);
-        assert_eq!(rma.len(), 2, "rma prefix selects pingpong + msgrate");
+        assert_eq!(rma.len(), 3, "rma prefix selects pingpong + msgrate + passive");
         let part = reg.select(&["partitioned/*".to_string()]);
         assert_eq!(part.len(), 2, "partitioned glob selects scaling + enqueue");
         let exact = reg.select(&["pt2pt/pingpong".to_string()]);

@@ -24,6 +24,7 @@ use crate::coordinator::driver::{enqueue_pipeline, msgrate_live, n_to_1_live, Ms
 use crate::error::{MpiErr, Result};
 use crate::harness::stats::{Metric, Rng, Summary};
 use crate::mpi::info::Info;
+use crate::mpi::rma::LockType;
 use crate::mpi::world::World;
 use crate::sim::calibrate::{measure_atomic_ns, measure_lock_ns, Calibration, HANDOVER_MULTIPLIER};
 use crate::sim::msgrate::{sim_global, sim_pervci, sim_stream};
@@ -893,6 +894,164 @@ impl Scenario for RmaMsgRate {
 }
 
 // ----------------------------------------------------------------------
+// rma/passive
+// ----------------------------------------------------------------------
+
+/// Passive-target synchronization (§4.3 lock/unlock): full
+/// lock→put→unlock epoch latency over a 2-rank window, plus a
+/// shared-vs-exclusive contention sweep — 1/2/4/8 origin streams
+/// (threads) hammering one target window. Exclusive writers serialize
+/// through the target's FIFO lock table (each epoch waits for the
+/// previous holder's release round-trip); shared readers admit
+/// concurrently, so the shared sweep should track or beat the exclusive
+/// one as streams grow. The target rank services the lock protocol from
+/// a blocking receive's progress loop — no dedicated progress thread.
+pub struct RmaPassive;
+
+impl RmaPassive {
+    const PAYLOAD: usize = 64;
+
+    /// Rank 0 runs `warm + rounds` lock(exclusive)→put→unlock epochs
+    /// against rank 1's window; rank 1 services them from a blocking
+    /// receive. Returns the per-epoch latency summary of the measured
+    /// rounds.
+    fn epoch_latency(rounds: u64, warm: u64, seed: u64) -> Result<Summary> {
+        let world = World::builder().ranks(2).config(Config::default()).build()?;
+        let samples: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            if p.rank() == 0 {
+                let mut payload = vec![0u8; Self::PAYLOAD];
+                Rng::new(seed ^ 0x10c4).fill(&mut payload);
+                for i in 0..(warm + rounds) {
+                    let t0 = Instant::now();
+                    p.win_lock(&win, 1, LockType::Exclusive)?;
+                    p.put(&win, 1, 0, &payload)?;
+                    p.win_unlock(&win, 1)?;
+                    if i >= warm {
+                        samples.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                    }
+                }
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        Ok(Summary::from_ns(samples.into_inner().unwrap()))
+    }
+
+    /// Aggregate passive epochs/sec with `streams` origin threads of
+    /// rank 0 contending on rank 1's window: exclusive lock→put→unlock
+    /// or shared lock→get→unlock, `iters` epochs per thread.
+    fn contention(streams: usize, iters: u64, kind: LockType) -> Result<f64> {
+        let world = World::builder().ranks(2).config(Config::default()).build()?;
+        let rate: Mutex<Option<f64>> = Mutex::new(None);
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            if p.rank() == 0 {
+                let t0 = Instant::now();
+                let results: Vec<Result<()>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..streams)
+                        .map(|t| {
+                            let p = p.clone();
+                            let win = win.clone();
+                            s.spawn(move || -> Result<()> {
+                                let slot = t * Self::PAYLOAD;
+                                for i in 0..iters {
+                                    p.win_lock(&win, 1, kind)?;
+                                    if kind == LockType::Exclusive {
+                                        p.put(&win, 1, slot, &[i as u8; 32])?;
+                                    } else {
+                                        let _ = p.get(&win, 1, slot, 32)?;
+                                    }
+                                    p.win_unlock(&win, 1)?;
+                                }
+                                Ok(())
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("contention thread panicked"))
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+                let total = (streams as u64 * iters) as f64;
+                *rate.lock().unwrap() = Some(total / t0.elapsed().as_secs_f64());
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        rate.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
+    }
+}
+
+impl Scenario for RmaPassive {
+    fn name(&self) -> String {
+        "rma/passive".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("payload_bytes".into(), Self::PAYLOAD.to_string()),
+            ("streams".into(), "1,2,4,8".into()),
+            ("modes".into(), "exclusive,shared".into()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = Self::epoch_latency(profile.scale(40, 10), 0, profile.seed)?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let rounds = profile.scale(400, 80);
+        let warm = rounds / 10 + 1;
+        let lat = Self::epoch_latency(rounds, warm, profile.seed)?;
+        let mut metrics = vec![
+            Metric::lower("lock_put_unlock_p50_ns", lat.p50_ns, "ns"),
+            Metric::info("lock_put_unlock_p99_ns", lat.p99_ns, "ns"),
+        ];
+        if lat.mean_ns > 0.0 {
+            metrics.push(Metric::info("rate_epochs_per_sec", 1e9 / lat.mean_ns, "op/s"));
+        }
+        let iters = profile.scale(120, 25);
+        let mut excl4 = 0.0;
+        let mut shared4 = 0.0;
+        for &n in &MSGRATE_STREAMS {
+            let excl = Self::contention(n, iters, LockType::Exclusive)?;
+            let shared = Self::contention(n, iters, LockType::Shared)?;
+            if n == 4 {
+                excl4 = excl;
+                shared4 = shared;
+            }
+            metrics.push(if n == 4 {
+                Metric::higher(format!("rate_exclusive_{n}_epochs_per_sec"), excl, "op/s")
+            } else {
+                Metric::info(format!("rate_exclusive_{n}_epochs_per_sec"), excl, "op/s")
+            });
+            metrics.push(Metric::info(format!("rate_shared_{n}_epochs_per_sec"), shared, "op/s"));
+        }
+        if excl4 <= 0.0 || shared4 <= 0.0 {
+            return Err(MpiErr::Internal(
+                "passive contention sweep produced a zero rate at 4 streams".into(),
+            ));
+        }
+        metrics.push(Metric::info("shared_over_exclusive_4", shared4 / excl4, "x"));
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
 // partitioned/scaling
 // ----------------------------------------------------------------------
 
@@ -1501,6 +1660,29 @@ mod tests {
         }
         let sput = r.metrics.iter().find(|m| m.name == "stream_put_p50_ns").unwrap();
         assert!(sput.value > 0.0, "stream-routed put must be measured");
+    }
+
+    #[test]
+    fn rma_passive_scenario_smoke() {
+        let r = RmaPassive.run(&Profile::smoke(23)).unwrap();
+        let p50 = r.metrics.iter().find(|m| m.name == "lock_put_unlock_p50_ns").unwrap();
+        assert!(p50.value > 0.0, "epoch latency must be measured");
+        for n in [1, 2, 4, 8] {
+            let e = r
+                .metrics
+                .iter()
+                .find(|m| m.name == format!("rate_exclusive_{n}_epochs_per_sec"))
+                .unwrap();
+            assert!(e.value > 0.0, "exclusive sweep point {n} must be measured");
+            let s = r
+                .metrics
+                .iter()
+                .find(|m| m.name == format!("rate_shared_{n}_epochs_per_sec"))
+                .unwrap();
+            assert!(s.value > 0.0, "shared sweep point {n} must be measured");
+        }
+        let ratio = r.metrics.iter().find(|m| m.name == "shared_over_exclusive_4").unwrap();
+        assert!(ratio.value > 0.0);
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod matching;
 pub mod pt2pt;
 pub mod request;
 pub mod status;
+pub mod win_lock;
 pub mod world;
 
 pub use matching::{ANY_SOURCE, ANY_TAG};

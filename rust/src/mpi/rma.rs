@@ -18,12 +18,27 @@
 //! them to `handle_rma_packet` instead of the matching engine. Every
 //! origin operation is acknowledged (PUT/ACC → ACK, GET → DATA, any
 //! target-side rejection → NACK carrying the reason), so a returned
-//! operation is also remotely complete, and `fence` reduces to a barrier.
+//! operation is also remotely complete, and `fence` reduces to a misuse
+//! allreduce plus a barrier.
 //!
-//! Epoch discipline: origin operations are only legal inside a fence
-//! epoch (after the first `win_fence`), and `win_free` refuses while the
-//! current epoch has unfenced operations — both misuses return
+//! Epoch discipline: origin operations are only legal inside an epoch —
+//! either a *fence* epoch (after the first `win_fence`) or a *passive*
+//! epoch (a `win_lock` held on the target rank). The two arms compose:
+//! `win_fence` refuses while any passive lock is held, `win_lock` refuses
+//! while the current fence epoch has unfenced operations, and `win_free`
+//! refuses while either kind of epoch is open — every misuse returns
 //! [`MpiErr::Rma`] instead of panicking or corrupting the window.
+//!
+//! Passive target (§4.3 lock/unlock synchronization): the lock table is
+//! owned by the *target* ([`crate::mpi::win_lock::LockTable`], stored in
+//! its window registration) and driven exclusively through the target's
+//! progress engine — acquisition and release are wire-protocol messages
+//! (request → grant, release → ack, both NACK-able), so a contended lock
+//! spins only the *origin's* calling thread and never blocks the target's
+//! application threads or the origin's enqueue lanes. Shared readers
+//! admit concurrently; exclusive writers queue in strict FIFO. Stream
+//! windows route the lock protocol (and the data operations issued under
+//! it) over the stream's VCI, exactly as in fence epochs.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -31,26 +46,19 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
-use crate::fabric::wire::{Envelope, Packet, NO_INDEX};
+use crate::fabric::wire::{rma_op, Envelope, Packet, NO_INDEX};
 use crate::mpi::comm::Comm;
 use crate::mpi::datatype::{Datatype, Op};
+use crate::mpi::win_lock::LockTable;
 use crate::mpi::world::Proc;
 use crate::vci::Vci;
 use crate::vci::lock::CsSession;
 
-/// Context-id bit marking RMA traffic (bit 30; bit 31 is the collective
-/// bit).
-pub const RMA_CTX_BIT: u32 = 1 << 30;
-
-const OP_PUT: u8 = 0;
-const OP_GET: u8 = 1;
-const OP_ACC: u8 = 2;
-const OP_ACK: u8 = 3;
-const OP_DATA: u8 = 4;
-/// Target-side rejection; the body carries a UTF-8 reason. Replaces the
-/// old behaviour of panicking the target's progress context on a
-/// malformed operation.
-const OP_NACK: u8 = 5;
+// Re-exported from the wire layer (the constants are wire-protocol facts;
+// the fabric classifies packets by them) so existing `mpi::rma` callers
+// keep working.
+pub use crate::fabric::wire::RMA_CTX_BIT;
+pub use crate::mpi::win_lock::LockType;
 
 const DT_F64: u8 = 0;
 const DT_I32: u8 = 1;
@@ -131,9 +139,12 @@ impl RmaHeader {
     }
 }
 
-/// Target-side window state registered with the process.
+/// Target-side window state registered with the process: the exposed
+/// memory plus the passive-target lock table (driven by the progress
+/// engine; grant metadata is the requester's reply endpoint).
 pub(crate) struct WinTarget {
     pub buf: Mutex<Vec<u8>>,
+    pub locks: Mutex<LockTable<EpAddr>>,
 }
 
 /// Origin-side results of in-flight RMA ops: the response payload, or
@@ -156,6 +167,31 @@ pub(crate) struct RmaRoute {
     pub dst_ep: EpAddr,
 }
 
+/// One origin-side passive hold: the wire token the target knows it by,
+/// the lock mode, and the owning thread (the stream serial context that
+/// acquired it — used to refuse same-context re-locks, which would queue
+/// behind their own hold and deadlock).
+struct Hold {
+    token: u64,
+    kind: LockType,
+    owner: std::thread::ThreadId,
+}
+
+/// Origin-side passive-epoch state: which targets this process holds
+/// locks on. A target maps to a *stack* of holds — concurrent streams of
+/// one rank may each hold a shared lock on the same target (each
+/// `win_lock` is its own wire-level hold); an exclusive hold is singular
+/// by construction (the target admits it alone).
+#[derive(Default)]
+struct PassiveState {
+    held: HashMap<u32, Vec<Hold>>,
+    /// Lock requests sent but not yet granted (or refused). Counted as
+    /// open passive state: `win_fence`/`win_free` must refuse while a
+    /// waiter is queued at a target — freeing the window would drop the
+    /// queued entry and leave the requester spinning forever.
+    pending: u64,
+}
+
 struct WinInner {
     id: u32,
     comm: Comm,
@@ -163,11 +199,28 @@ struct WinInner {
     sizes: Vec<usize>,
     token: AtomicU64,
     /// Set once the first `win_fence` completes: origin operations are
-    /// only legal inside a fence epoch.
+    /// only legal inside a fence epoch (or under a passive lock).
     fenced: AtomicBool,
     /// Origin operations issued since the last fence. `win_free` refuses
     /// while nonzero (the epoch is still open).
     unfenced_ops: AtomicU64,
+    /// Passive-target holds (see [`PassiveState`]); shared across window
+    /// clones like the fence state.
+    passive: Mutex<PassiveState>,
+}
+
+impl WinInner {
+    /// Does this origin hold any passive lock on `target`?
+    fn passive_holds_on(&self, target: u32) -> bool {
+        self.passive.lock().unwrap().held.get(&target).is_some_and(|v| !v.is_empty())
+    }
+
+    /// Total open passive state across all targets: granted holds plus
+    /// lock requests still in flight (see [`PassiveState::pending`]).
+    fn total_passive_holds(&self) -> u64 {
+        let ps = self.passive.lock().unwrap();
+        ps.pending + ps.held.values().map(|v| v.len() as u64).sum::<u64>()
+    }
 }
 
 /// An RMA window over `comm`. Handles are cheaply clonable (all clones
@@ -220,7 +273,10 @@ impl Proc {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
-        self.windows().lock().unwrap().insert(id, Arc::new(WinTarget { buf: Mutex::new(local) }));
+        self.windows().lock().unwrap().insert(
+            id,
+            Arc::new(WinTarget { buf: Mutex::new(local), locks: Mutex::new(LockTable::new()) }),
+        );
         // Windows must be usable as soon as any rank returns.
         self.barrier(comm)?;
         Ok(Window {
@@ -231,24 +287,35 @@ impl Proc {
                 token: AtomicU64::new(1),
                 fenced: AtomicBool::new(false),
                 unfenced_ops: AtomicU64::new(0),
+                passive: Mutex::new(PassiveState::default()),
             }),
         })
     }
 
-    /// `MPI_Win_free` (collective). Fails with [`MpiErr::Rma`] while the
-    /// current epoch has unfenced operations — on *every* rank, not just
-    /// the offender: the check is an allreduce, so a rank that misused
-    /// the epoch cannot strand compliant ranks inside the collective
-    /// teardown (and the error leaves the communicator's collective
-    /// sequencing intact). The handle stays usable (clone it before a
-    /// speculative free), so callers can fence and retry.
+    /// `MPI_Win_free` (collective). Fails with [`MpiErr::Rma`] while any
+    /// epoch is open — unfenced fence-epoch operations *or* held passive
+    /// locks — on *every* rank, not just the offender: the check is an
+    /// allreduce, so a rank that misused an epoch cannot strand compliant
+    /// ranks inside the collective teardown (and the error leaves the
+    /// communicator's collective sequencing intact). The handle stays
+    /// usable (clone it before a speculative free), so callers can
+    /// fence/unlock and retry.
     pub fn win_free(&self, win: Window) -> Result<Vec<u8>> {
-        let mut open = win.inner.unfenced_ops.load(Ordering::Acquire).to_le_bytes();
+        let mut open = [0u8; 16];
+        open[..8].copy_from_slice(&win.inner.unfenced_ops.load(Ordering::Acquire).to_le_bytes());
+        open[8..].copy_from_slice(&win.inner.total_passive_holds().to_le_bytes());
         self.allreduce(&mut open, &Datatype::U64, Op::Sum, &win.inner.comm)?;
-        let open = u64::from_le_bytes(open);
-        if open > 0 {
+        let unfenced = u64::from_le_bytes(open[..8].try_into().unwrap());
+        let locks = u64::from_le_bytes(open[8..].try_into().unwrap());
+        if locks > 0 {
             return Err(MpiErr::Rma(format!(
-                "win_free on window {} with an open epoch ({open} operation(s) since the last fence across the communicator); call win_fence first",
+                "win_free on window {} with {locks} held or pending passive lock(s) across the communicator; call win_unlock first",
+                win.inner.id
+            )));
+        }
+        if unfenced > 0 {
+            return Err(MpiErr::Rma(format!(
+                "win_free on window {} with an open epoch ({unfenced} operation(s) since the last fence across the communicator); call win_fence first",
                 win.inner.id
             )));
         }
@@ -267,9 +334,21 @@ impl Proc {
 
     /// `MPI_Win_fence`: separates RMA epochs. Because every origin op is
     /// remotely acknowledged before returning, completion only needs a
-    /// barrier. The first fence opens the access epoch; every fence
-    /// closes the operations issued since the previous one.
+    /// misuse allreduce plus a barrier. Fencing while any rank holds a
+    /// passive lock is a state-machine violation; the hold count is
+    /// allreduced (the `win_free` pattern) so the fence fails on *every*
+    /// rank — a local-only check would error on the offender and strand
+    /// compliant ranks inside the barrier.
     pub fn win_fence(&self, win: &Window) -> Result<()> {
+        let mut holds = win.inner.total_passive_holds().to_le_bytes();
+        self.allreduce(&mut holds, &Datatype::U64, Op::Sum, &win.inner.comm)?;
+        let holds = u64::from_le_bytes(holds);
+        if holds > 0 {
+            return Err(MpiErr::Rma(format!(
+                "win_fence on window {} inside a passive epoch ({holds} lock(s) held or pending across the communicator); call win_unlock first",
+                win.inner.id
+            )));
+        }
         self.barrier(&win.inner.comm)?;
         win.inner.fenced.store(true, Ordering::Release);
         win.inner.unfenced_ops.store(0, Ordering::Release);
@@ -289,25 +368,73 @@ impl Proc {
         Ok(out)
     }
 
+    /// Spin for the response to an in-flight RMA operation (ACK / DATA /
+    /// GRANT / UNLOCK-ACK / NACK), progressing the issuing VCI. Shared by
+    /// the data-op path and the lock protocol.
+    fn rma_await(
+        &self,
+        win: &Window,
+        token: u64,
+        vci: &Arc<Vci>,
+        cs: &CsSession<'_>,
+    ) -> Result<Vec<u8>> {
+        loop {
+            if let Some(outcome) =
+                self.rma_results().done.lock().unwrap().remove(&(win.inner.id, token))
+            {
+                return outcome.map_err(MpiErr::Rma);
+            }
+            self.progress_vci(vci, cs);
+            cs.yield_cs();
+        }
+    }
+
     fn rma_op(
         &self,
         win: &Window,
+        target: u32,
         header: RmaHeader,
         body: &[u8],
         expect_bytes: usize,
         route: RmaRoute,
     ) -> Result<Vec<u8>> {
-        if !win.inner.fenced.load(Ordering::Acquire) {
-            return Err(MpiErr::Rma(format!(
-                "RMA operation on window {} outside a fence epoch; call win_fence first",
-                win.inner.id
+        // Epoch discipline, passive arm first: an op covered by a held
+        // lock completes (remote ack below) before returning and is closed
+        // by win_unlock, so it never counts toward the fence epoch.
+        if !win.inner.passive_holds_on(target) {
+            if win.inner.fenced.load(Ordering::Acquire) {
+                win.inner.unfenced_ops.fetch_add(1, Ordering::AcqRel);
+            } else {
+                return Err(MpiErr::Rma(format!(
+                    "RMA operation on window {} outside any epoch (no fence epoch open, no lock \
+                     held on rank {target}); call win_fence or win_lock first",
+                    win.inner.id
+                )));
+            }
+        }
+        let data = self.rma_send_await(win, header, body, route)?;
+        if data.len() != expect_bytes {
+            return Err(MpiErr::Internal(format!(
+                "rma response {} bytes, expected {expect_bytes}",
+                data.len()
             )));
         }
-        win.inner.unfenced_ops.fetch_add(1, Ordering::AcqRel);
+        Ok(data)
+    }
+
+    /// The one wire-send path every origin-side RMA message takes — data
+    /// ops and the lock protocol alike: build the RMA envelope, transmit
+    /// over `route`, spin for the response keyed by the header's token.
+    fn rma_send_await(
+        &self,
+        win: &Window,
+        header: RmaHeader,
+        body: &[u8],
+        route: RmaRoute,
+    ) -> Result<Vec<u8>> {
         let vci = self.vci(route.src_vci);
         let cs = self.session_for_vci(route.src_vci);
         let token = header.token;
-        let payload = header.encode(body);
         let env = Envelope {
             ctx_id: RMA_CTX_BIT | win.inner.id,
             src_rank: win.inner.comm.rank(),
@@ -315,25 +442,9 @@ impl Proc {
             src_idx: NO_INDEX,
             dst_idx: NO_INDEX,
         };
-        let packet = Packet::eager(env, vci.addr(), payload);
+        let packet = Packet::eager(env, vci.addr(), header.encode(body));
         self.transmit_retry(vci, &cs, route.dst_ep, packet)?;
-        // Spin for the ACK/DATA/NACK response (progressing our VCI).
-        loop {
-            if let Some(outcome) =
-                self.rma_results().done.lock().unwrap().remove(&(win.inner.id, token))
-            {
-                let data = outcome.map_err(MpiErr::Rma)?;
-                if data.len() != expect_bytes {
-                    return Err(MpiErr::Internal(format!(
-                        "rma response {} bytes, expected {expect_bytes}",
-                        data.len()
-                    )));
-                }
-                return Ok(data);
-            }
-            self.progress_vci(vci, &cs);
-            cs.yield_cs();
-        }
+        self.rma_await(win, token, vci, &cs)
     }
 
     /// Core put over a resolved route (shared with the stream-aware path).
@@ -353,8 +464,8 @@ impl Proc {
             )));
         }
         let token = win.next_token();
-        let h = RmaHeader { opcode: OP_PUT, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, h, data, 0, route)?;
+        let h = RmaHeader { opcode: rma_op::PUT, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
+        self.rma_op(win, target, h, data, 0, route)?;
         Ok(())
     }
 
@@ -374,8 +485,8 @@ impl Proc {
             )));
         }
         let token = win.next_token();
-        let h = RmaHeader { opcode: OP_GET, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, h, &(len as u64).to_le_bytes(), len, route)
+        let h = RmaHeader { opcode: rma_op::GET, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
+        self.rma_op(win, target, h, &(len as u64).to_le_bytes(), len, route)
     }
 
     /// Core accumulate over a resolved route (shared with the stream-aware
@@ -399,14 +510,14 @@ impl Proc {
         }
         let token = win.next_token();
         let h = RmaHeader {
-            opcode: OP_ACC,
+            opcode: rma_op::ACC,
             dt: dt_code(dt)?,
             rop: rop_code(op),
             win_id: win.inner.id,
             offset: offset as u64,
             token,
         };
-        self.rma_op(win, h, data, 0, route)?;
+        self.rma_op(win, target, h, data, 0, route)?;
         Ok(())
     }
 
@@ -440,6 +551,208 @@ impl Proc {
         let route = self.rma_route_implicit(win, target)?;
         self.rma_acc_via(win, target, offset, data, dt, op, route)
     }
+
+    // ------------------------------------------------------------------
+    // Passive-target synchronization (lock/unlock)
+    // ------------------------------------------------------------------
+
+    /// Route for passive-target lock traffic and host-path data ops: a
+    /// window over a stream communicator with a local stream attached
+    /// issues from the stream's VCI to the target's registered endpoint
+    /// (§4.3, same as fence-epoch stream ops); everything else uses the
+    /// §5.1 implicit-pool convention.
+    fn passive_route(&self, win: &Window, target: u32) -> Result<RmaRoute> {
+        if win.comm().is_stream_comm() && win.comm().local_stream().is_some() {
+            self.stream_rma_route(win, target)
+        } else {
+            self.rma_route_implicit(win, target)
+        }
+    }
+
+    /// One round-trip of the lock protocol: send `opcode` for `token`,
+    /// spin for the GRANT / ACK / NACK keyed by the same token — the
+    /// shared [`Proc::rma_send_await`] wire path, minus the data-op epoch
+    /// accounting.
+    fn lock_rpc(
+        &self,
+        win: &Window,
+        target: u32,
+        opcode: u8,
+        token: u64,
+        body: &[u8],
+    ) -> Result<Vec<u8>> {
+        let route = self.passive_route(win, target)?;
+        let h = RmaHeader { opcode, dt: 0, rop: 0, win_id: win.inner.id, offset: 0, token };
+        self.rma_send_await(win, h, body, route)
+    }
+
+    /// `MPI_Win_lock`: open a passive epoch on `target`. Shared locks
+    /// admit concurrently with other shared holders; an exclusive lock is
+    /// granted alone, in strict FIFO order with every other waiter.
+    /// Acquisition is driven by the *target's* progress engine — this call
+    /// spins only the calling thread's own VCI until the grant arrives.
+    /// Illegal while the current fence epoch has unfenced operations, and
+    /// illegal from a thread that already holds a lock on `target` (the
+    /// new request would queue behind the caller's own hold and the spin
+    /// could never be satisfied — refused with [`MpiErr::Rma`] instead of
+    /// deadlocking; other threads' concurrent requests queue normally).
+    pub fn win_lock(&self, win: &Window, target: u32, kind: LockType) -> Result<()> {
+        win.inner.comm.check_rank(target)?;
+        let unfenced = win.inner.unfenced_ops.load(Ordering::Acquire);
+        if unfenced > 0 {
+            return Err(MpiErr::Rma(format!(
+                "win_lock on window {} inside a fence epoch with {unfenced} unfenced \
+                 operation(s); close it with win_fence first",
+                win.inner.id
+            )));
+        }
+        let owner = std::thread::current().id();
+        {
+            let ps = win.inner.passive.lock().unwrap();
+            if ps.held.get(&target).is_some_and(|v| v.iter().any(|h| h.owner == owner)) {
+                return Err(MpiErr::Rma(format!(
+                    "win_lock on window {} rank {target} from a thread that already holds a \
+                     lock on that rank (a re-lock queues behind its own hold and deadlocks); \
+                     call win_unlock first or issue from another stream's context",
+                    win.inner.id
+                )));
+            }
+        }
+        let token = win.next_token();
+        // The in-flight request counts as open passive state (see
+        // `PassiveState::pending`) so a concurrent fence/free refuses
+        // instead of dropping a queued waiter.
+        win.inner.passive.lock().unwrap().pending += 1;
+        let outcome = self.lock_rpc(win, target, rma_op::LOCK_REQ, token, &[kind.wire_code()]);
+        let mut ps = win.inner.passive.lock().unwrap();
+        ps.pending -= 1;
+        outcome?;
+        ps.held.entry(target).or_default().push(Hold { token, kind, owner });
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock`: close one passive hold on `target` — the calling
+    /// thread's own hold when it has one, else any (shared holds are
+    /// symmetric). Unlock completes every operation issued under the
+    /// lock: host-path ops are already remotely acknowledged, and ops
+    /// registered through the enqueue path are drained first by
+    /// synchronizing the window communicator's GPU stream, so nothing
+    /// issued under this lock can execute after the wire release (a lane
+    /// failure surfaces here, with the hold still intact). Unlocking
+    /// without a held lock is a state-machine violation
+    /// ([`MpiErr::Rma`]).
+    pub fn win_unlock(&self, win: &Window, target: u32) -> Result<()> {
+        win.inner.comm.check_rank(target)?;
+        if win.comm().local_stream().is_some_and(|s| s.is_gpu()) {
+            self.synchronize_enqueue(win.comm())?;
+        }
+        let hold = {
+            let mut ps = win.inner.passive.lock().unwrap();
+            let me = std::thread::current().id();
+            let Some(v) = ps.held.get_mut(&target).filter(|v| !v.is_empty()) else {
+                return Err(MpiErr::Rma(format!(
+                    "win_unlock on window {} rank {target} without a held lock",
+                    win.inner.id
+                )));
+            };
+            // Release this thread's own hold when it has one (the usual
+            // serial-context pairing). A thread with no hold may release
+            // a *shared* hold on another's behalf (shared holds are
+            // symmetric, and helper-thread teardown is a supported
+            // shape) — but never an exclusive one: stealing a writer's
+            // hold would admit the next waiter while the writer still
+            // believes it is exclusive.
+            let idx = match v.iter().rposition(|h| h.owner == me) {
+                Some(i) => i,
+                None if v.iter().all(|h| h.kind == LockType::Shared) => v.len() - 1,
+                None => {
+                    return Err(MpiErr::Rma(format!(
+                        "win_unlock on window {} rank {target}: this thread holds no lock there \
+                         and the outstanding exclusive hold belongs to another stream",
+                        win.inner.id
+                    )));
+                }
+            };
+            let hold = v.remove(idx);
+            let now_empty = v.is_empty();
+            if now_empty {
+                ps.held.remove(&target);
+            }
+            hold
+        };
+        match self.lock_rpc(win, target, rma_op::UNLOCK, hold.token, &[]) {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                // The wire release failed (target NACK or transport
+                // error): restore the origin-side hold so the two lock
+                // views don't silently diverge — a later win_free still
+                // refuses, and the caller can retry the unlock.
+                win.inner.passive.lock().unwrap().held.entry(target).or_default().push(hold);
+                Err(e)
+            }
+        }
+    }
+
+    /// `MPI_Win_lock_all`: a shared passive epoch covering every rank of
+    /// the window's communicator (acquired rank-by-rank in ascending
+    /// order; shared locks never conflict with each other, so the sweep
+    /// cannot deadlock against another `win_lock_all`).
+    pub fn win_lock_all(&self, win: &Window) -> Result<()> {
+        for r in 0..win.inner.comm.size() {
+            self.win_lock(win, r, LockType::Shared)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock_all`: release one hold on every rank (the inverse
+    /// of [`Proc::win_lock_all`]). Fails like [`Proc::win_unlock`] on the
+    /// first rank without a held lock.
+    pub fn win_unlock_all(&self, win: &Window) -> Result<()> {
+        for r in 0..win.inner.comm.size() {
+            self.win_unlock(win, r)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_flush`: complete all operations issued to `target` inside
+    /// the current passive epoch, without releasing the lock. Every
+    /// origin operation in this runtime is remotely acknowledged before
+    /// it returns, so there is nothing left to drain — the call validates
+    /// the epoch (a held lock is required) and progresses the issuing VCI
+    /// once, keeping the call shape of a deferred-completion transport.
+    pub fn win_flush(&self, win: &Window, target: u32) -> Result<()> {
+        win.inner.comm.check_rank(target)?;
+        if !win.inner.passive_holds_on(target) {
+            return Err(MpiErr::Rma(format!(
+                "win_flush on window {} rank {target} without a held lock",
+                win.inner.id
+            )));
+        }
+        let route = self.passive_route(win, target)?;
+        let vci = self.vci(route.src_vci);
+        let cs = self.session_for_vci(route.src_vci);
+        self.progress_vci(vci, &cs);
+        Ok(())
+    }
+
+    /// `MPI_Win_flush_all`: [`Proc::win_flush`] over every target this
+    /// origin currently holds a lock on. Requires at least one hold.
+    pub fn win_flush_all(&self, win: &Window) -> Result<()> {
+        let targets: Vec<u32> = {
+            let ps = win.inner.passive.lock().unwrap();
+            ps.held.iter().filter(|(_, v)| !v.is_empty()).map(|(t, _)| *t).collect()
+        };
+        if targets.is_empty() {
+            return Err(MpiErr::Rma(format!(
+                "win_flush_all on window {} without any held lock",
+                win.inner.id
+            )));
+        }
+        for t in targets {
+            self.win_flush(win, t)?;
+        }
+        Ok(())
+    }
 }
 
 /// Progress-engine hook: handle an RMA packet (target side or origin-side
@@ -452,8 +765,18 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
         return;
     };
     let (h, body) = RmaHeader::decode(&data);
+    // Target-side reply shared by the data-op and lock protocols. Never
+    // called while a window mutex is held: transmit can progress this VCI
+    // and re-enter the handler.
+    let respond = |dst: EpAddr, opcode: u8, token: u64, out: Vec<u8>| {
+        let rh = RmaHeader { opcode, dt: 0, rop: 0, win_id: h.win_id, offset: 0, token };
+        let renv =
+            Envelope { ctx_id: env.ctx_id, src_rank: 0, tag: 0, src_idx: NO_INDEX, dst_idx: NO_INDEX };
+        let packet = Packet::eager(renv, vci.addr(), rh.encode(&out));
+        let _ = proc.transmit_retry(vci, cs, dst, packet);
+    };
     match h.opcode {
-        OP_PUT | OP_ACC | OP_GET => {
+        rma_op::PUT | rma_op::ACC | rma_op::GET => {
             let reg = proc.windows().lock().unwrap();
             let Some(win) = reg.get(&h.win_id).cloned() else {
                 return; // window freed — drop (failure-injection path)
@@ -471,7 +794,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 let in_bounds =
                     move |len: usize| off.checked_add(len).map_or(false, |end| end <= buf_len);
                 match h.opcode {
-                    OP_PUT => {
+                    rma_op::PUT => {
                         if in_bounds(body.len()) {
                             buf[off..off + body.len()].copy_from_slice(body);
                         } else {
@@ -482,7 +805,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                             ));
                         }
                     }
-                    OP_ACC => {
+                    rma_op::ACC => {
                         if in_bounds(body.len()) {
                             let dt = dt_from_code(h.dt);
                             let op = rop_from_code(h.rop);
@@ -515,18 +838,81 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 }
             }
             let (opcode, out) = match reject {
-                Some(reason) => (OP_NACK, reason.into_bytes()),
-                None => (if h.opcode == OP_GET { OP_DATA } else { OP_ACK }, response),
+                Some(reason) => (rma_op::NACK, reason.into_bytes()),
+                None => {
+                    (if h.opcode == rma_op::GET { rma_op::DATA } else { rma_op::ACK }, response)
+                }
             };
-            let rh = RmaHeader { opcode, dt: 0, rop: 0, win_id: h.win_id, offset: 0, token: h.token };
-            let renv = Envelope { ctx_id: env.ctx_id, src_rank: 0, tag: 0, src_idx: NO_INDEX, dst_idx: NO_INDEX };
-            let packet = Packet::eager(renv, vci.addr(), rh.encode(&out));
-            let _ = proc.transmit_retry(vci, cs, reply_ep, packet);
+            respond(reply_ep, opcode, h.token, out);
         }
-        OP_ACK | OP_DATA => {
+        rma_op::LOCK_REQ => {
+            // The lock protocol NACKs instead of dropping on every
+            // malformed request: a lock requester spins until it hears
+            // back, so silence would hang the origin, not just lose data.
+            let key = (env.src_rank, h.token);
+            let reg = proc.windows().lock().unwrap();
+            let Some(win) = reg.get(&h.win_id).cloned() else {
+                drop(reg);
+                respond(
+                    reply_ep,
+                    rma_op::NACK,
+                    h.token,
+                    format!("lock request for unknown window {}", h.win_id).into_bytes(),
+                );
+                return;
+            };
+            drop(reg);
+            let Some(kind) = body.first().copied().and_then(LockType::from_wire) else {
+                respond(
+                    reply_ep,
+                    rma_op::NACK,
+                    h.token,
+                    b"malformed lock request (unknown lock type)".to_vec(),
+                );
+                return;
+            };
+            // Decide under the table mutex, transmit outside it.
+            let outcome = win.locks.lock().unwrap().request(key, kind, reply_ep);
+            match outcome {
+                Ok(Some(g)) => respond(g.meta, rma_op::LOCK_GRANT, g.key.1, Vec::new()),
+                Ok(None) => {} // queued; granted at a later release
+                // Duplicate key — NACK so the (malformed) origin errors
+                // instead of spinning, and the table stays releasable.
+                Err(reason) => respond(reply_ep, rma_op::NACK, h.token, reason.into_bytes()),
+            }
+        }
+        rma_op::UNLOCK => {
+            let key = (env.src_rank, h.token);
+            let reg = proc.windows().lock().unwrap();
+            let Some(win) = reg.get(&h.win_id).cloned() else {
+                drop(reg);
+                respond(
+                    reply_ep,
+                    rma_op::NACK,
+                    h.token,
+                    format!("unlock for unknown window {}", h.win_id).into_bytes(),
+                );
+                return;
+            };
+            drop(reg);
+            let outcome = win.locks.lock().unwrap().release(key);
+            match outcome {
+                Ok(granted) => {
+                    respond(reply_ep, rma_op::UNLOCK_ACK, h.token, Vec::new());
+                    // Admit every newly grantable waiter (one exclusive,
+                    // or a batch of consecutive shareds) from this — the
+                    // target's — progress context.
+                    for g in granted {
+                        respond(g.meta, rma_op::LOCK_GRANT, g.key.1, Vec::new());
+                    }
+                }
+                Err(reason) => respond(reply_ep, rma_op::NACK, h.token, reason.into_bytes()),
+            }
+        }
+        rma_op::ACK | rma_op::DATA | rma_op::LOCK_GRANT | rma_op::UNLOCK_ACK => {
             proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Ok(body.to_vec()));
         }
-        OP_NACK => {
+        rma_op::NACK => {
             let reason = String::from_utf8_lossy(body).into_owned();
             proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Err(reason));
         }
@@ -646,6 +1032,271 @@ mod tests {
     }
 
     #[test]
+    fn passive_lock_put_unlock_roundtrip() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 32], p.world_comm())?;
+            if p.rank() == 0 {
+                // A full passive epoch, no fence anywhere: lock, put,
+                // unlock — then tell the target it can stop servicing.
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                p.put(&win, 1, 4, b"passive!")?;
+                p.win_unlock(&win, 1)?;
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                // The target services lock requests and window traffic
+                // from inside this blocking receive's progress loop.
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+                let local = p.win_read_local(&win)?;
+                assert_eq!(&local[4..12], b"passive!");
+            }
+            // Passive ops never open a fence epoch, so the window frees
+            // without any fence having been called.
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn shared_locks_admit_concurrently() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 16], p.world_comm()).unwrap();
+        let a_holds = AtomicBool::new(false);
+        let b_done = AtomicBool::new(false);
+        let (a_holds, b_done) = (&a_holds, &b_done);
+        std::thread::scope(|s| {
+            let pa = p.clone();
+            let wa = win.clone();
+            let a = s.spawn(move || -> Result<()> {
+                pa.win_lock(&wa, 0, LockType::Shared)?;
+                a_holds.store(true, Ordering::Release);
+                // Hold the shared lock until B has acquired and released
+                // its own — if shared admission were not concurrent, B
+                // would queue behind this hold and the test would hang.
+                while !b_done.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                pa.win_unlock(&wa, 0)
+            });
+            let pb = p.clone();
+            let wb = win.clone();
+            let b = s.spawn(move || -> Result<()> {
+                while !a_holds.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                pb.win_lock(&wb, 0, LockType::Shared)?;
+                pb.win_unlock(&wb, 0)?;
+                b_done.store(true, Ordering::Release);
+                Ok(())
+            });
+            a.join().unwrap().unwrap();
+            b.join().unwrap().unwrap();
+        });
+        p.win_free(win).unwrap();
+    }
+
+    #[test]
+    fn exclusive_lock_excludes_until_release() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 16], p.world_comm()).unwrap();
+        let a_holds = AtomicBool::new(false);
+        let released = AtomicBool::new(false);
+        let (a_holds, released) = (&a_holds, &released);
+        std::thread::scope(|s| {
+            let pa = p.clone();
+            let wa = win.clone();
+            let a = s.spawn(move || -> Result<()> {
+                pa.win_lock(&wa, 0, LockType::Exclusive)?;
+                a_holds.store(true, Ordering::Release);
+                // Give B time to queue its request behind this hold.
+                for _ in 0..50 {
+                    pa.poke();
+                    std::thread::yield_now();
+                }
+                released.store(true, Ordering::Release);
+                pa.win_unlock(&wa, 0)
+            });
+            let pb = p.clone();
+            let wb = win.clone();
+            let b = s.spawn(move || -> Result<()> {
+                while !a_holds.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                pb.win_lock(&wb, 0, LockType::Exclusive)?;
+                // The grant can only have been issued after A's release.
+                assert!(
+                    released.load(Ordering::Acquire),
+                    "exclusive lock granted while another exclusive hold was live"
+                );
+                pb.win_unlock(&wb, 0)
+            });
+            a.join().unwrap().unwrap();
+            b.join().unwrap().unwrap();
+        });
+        p.win_free(win).unwrap();
+    }
+
+    #[test]
+    fn passive_state_machine_misuse_fails() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 16], p.world_comm()).unwrap();
+        // Unlock / flush without any held lock.
+        assert!(matches!(p.win_unlock(&win, 0), Err(MpiErr::Rma(_))));
+        assert!(matches!(p.win_flush(&win, 0), Err(MpiErr::Rma(_))));
+        assert!(matches!(p.win_flush_all(&win), Err(MpiErr::Rma(_))));
+        // Fence inside a passive epoch is a state-machine violation.
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        assert!(matches!(p.win_fence(&win), Err(MpiErr::Rma(_))));
+        p.put(&win, 0, 0, &[7u8; 4]).unwrap();
+        p.win_flush(&win, 0).unwrap();
+        p.win_flush_all(&win).unwrap();
+        // Free with a held lock refuses; unlock-then-free recovers.
+        let clone = win.clone();
+        assert!(matches!(p.win_free(win), Err(MpiErr::Rma(_))));
+        p.win_unlock(&clone, 0).unwrap();
+        // Lock inside a fence epoch with unfenced operations refuses.
+        p.win_fence(&clone).unwrap();
+        p.put(&clone, 0, 4, &[8u8; 4]).unwrap();
+        assert!(matches!(
+            p.win_lock(&clone, 0, LockType::Shared),
+            Err(MpiErr::Rma(_))
+        ));
+        p.win_fence(&clone).unwrap();
+        // A closed fence epoch admits a passive epoch again.
+        p.win_lock(&clone, 0, LockType::Shared).unwrap();
+        p.win_unlock(&clone, 0).unwrap();
+        let buf = p.win_free(clone).unwrap();
+        assert_eq!(&buf[..4], &[7u8; 4]);
+        assert_eq!(&buf[4..8], &[8u8; 4]);
+    }
+
+    #[test]
+    fn same_thread_relock_errors_instead_of_deadlocking() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();
+        p.win_lock(&win, 0, LockType::Shared).unwrap();
+        // A second request from the SAME serial context would queue behind
+        // its own hold (exclusive) or risk doing so (shared behind a later
+        // writer) and spin forever — refused instead.
+        assert!(matches!(p.win_lock(&win, 0, LockType::Exclusive), Err(MpiErr::Rma(_))));
+        assert!(matches!(p.win_lock(&win, 0, LockType::Shared), Err(MpiErr::Rma(_))));
+        p.win_unlock(&win, 0).unwrap();
+        // After the unlock the same thread locks again freely.
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        p.win_unlock(&win, 0).unwrap();
+        p.win_free(win).unwrap();
+    }
+
+    #[test]
+    fn fence_inside_passive_epoch_fails_on_every_rank() {
+        // The misuse check is collective (allreduce): rank 0 fences while
+        // holding a lock, and BOTH ranks must see the error — a
+        // local-only check would strand rank 1 inside the fence barrier.
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 8], p.world_comm())?;
+            if p.rank() == 0 {
+                // Rank 1 services this from inside its fence allreduce.
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+            }
+            let fence = p.win_fence(&win);
+            assert!(
+                matches!(fence, Err(MpiErr::Rma(_))),
+                "rank {} must refuse the fence: {fence:?}",
+                p.rank()
+            );
+            // Recovery: unlock, then the collective fence succeeds.
+            if p.rank() == 0 {
+                p.win_unlock(&win, 1)?;
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn lock_all_covers_every_rank() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();
+        p.win_lock_all(&win).unwrap();
+        // Shared epoch: reads are legal on every (here: the only) rank.
+        let got = p.get(&win, 0, 0, 8).unwrap();
+        assert_eq!(got, vec![0u8; 8]);
+        p.win_flush_all(&win).unwrap();
+        p.win_unlock_all(&win).unwrap();
+        assert!(matches!(p.win_unlock_all(&win), Err(MpiErr::Rma(_))), "epoch already closed");
+        p.win_free(win).unwrap();
+    }
+
+    #[test]
+    fn malformed_lock_traffic_nacks_instead_of_hanging() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();
+        let send_raw = |opcode: u8, win_id: u32, token: u64, body: &[u8]| {
+            let vci = p.vci(0);
+            let cs = p.session_for_vci(0);
+            let h = RmaHeader { opcode, dt: 0, rop: 0, win_id, offset: 0, token };
+            let env = Envelope {
+                ctx_id: RMA_CTX_BIT | win_id,
+                src_rank: 0,
+                tag: 0,
+                src_idx: NO_INDEX,
+                dst_idx: NO_INDEX,
+            };
+            let pkt = Packet::eager(env, vci.addr(), h.encode(body));
+            p.transmit_retry(vci, &cs, EpAddr { rank: 0, ep: 0 }, pkt).unwrap();
+        };
+        let take = |win_id: u32, token: u64| {
+            for _ in 0..8 {
+                p.poke();
+                if let Some(out) =
+                    p.rma_results().done.lock().unwrap().remove(&(win_id, token))
+                {
+                    return out;
+                }
+            }
+            panic!("no response for ({win_id}, {token})");
+        };
+        // Double unlock: release of a never-granted token.
+        send_raw(rma_op::UNLOCK, win.id(), 991, &[]);
+        let err = take(win.id(), 991).unwrap_err();
+        assert!(err.contains("without a held lock"), "{err}");
+        // Unknown lock type byte.
+        send_raw(rma_op::LOCK_REQ, win.id(), 992, &[9]);
+        let err = take(win.id(), 992).unwrap_err();
+        assert!(err.contains("unknown lock type"), "{err}");
+        // Lock request addressed to a window id that is out of range at
+        // the target.
+        let bogus = win.id() + 4096;
+        send_raw(rma_op::LOCK_REQ, bogus, 993, &[0]);
+        let err = take(bogus, 993).unwrap_err();
+        assert!(err.contains("unknown window"), "{err}");
+        send_raw(rma_op::UNLOCK, bogus, 994, &[]);
+        let err = take(bogus, 994).unwrap_err();
+        assert!(err.contains("unknown window"), "{err}");
+        // Duplicate lock request: the first grants, the replay NACKs —
+        // and the table stays releasable (no phantom holder).
+        send_raw(rma_op::LOCK_REQ, win.id(), 995, &[0]);
+        assert!(take(win.id(), 995).is_ok());
+        send_raw(rma_op::LOCK_REQ, win.id(), 995, &[0]);
+        let err = take(win.id(), 995).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        send_raw(rma_op::UNLOCK, win.id(), 995, &[]);
+        assert!(take(win.id(), 995).is_ok(), "the real hold releases cleanly");
+        p.win_free(win).unwrap();
+    }
+
+    #[test]
     fn windows_are_not_stream_aware() {
         // §5.1: a window created from a stream communicator routes through
         // the implicit pool, NOT the stream's endpoint.
@@ -656,24 +1307,25 @@ mod tests {
             let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
             let win = p.win_create(vec![0u8; 8], &c)?;
             p.win_fence(&win)?;
-            // Barrier fragments carry zero payload bytes, so payload
-            // byte counters isolate the RMA traffic race-free.
-            let rx_bytes = |idx: u16| {
-                p.vci(idx).ep().stats().rx_bytes.load(std::sync::atomic::Ordering::Relaxed)
+            // Count only RMA-classified packets (RMA_CTX_BIT): the fence
+            // collectives (allreduce + barrier) ride the stream comm's
+            // endpoints but can never pollute this counter.
+            let rx_rma = |idx: u16| {
+                p.vci(idx).ep().stats().rx_rma_packets.load(std::sync::atomic::Ordering::Relaxed)
             };
-            let stream_before = rx_bytes(s.vci_idx());
-            let implicit_before = rx_bytes(0);
+            let stream_before = rx_rma(s.vci_idx());
+            let implicit_before = rx_rma(0);
             if p.rank() == 0 {
                 p.put(&win, 1, 0, &[9u8; 8])?;
             }
             p.win_fence(&win)?;
             assert_eq!(
-                rx_bytes(s.vci_idx()),
+                rx_rma(s.vci_idx()),
                 stream_before,
-                "RMA payload must not touch the stream endpoint (prototype limitation reproduced)"
+                "RMA traffic must not touch the stream endpoint (prototype limitation reproduced)"
             );
             assert!(
-                rx_bytes(0) > implicit_before,
+                rx_rma(0) > implicit_before,
                 "the put (or its ack) must ride the implicit endpoint"
             );
             if p.rank() == 1 {

@@ -1,0 +1,276 @@
+//! Target-side passive-lock table for one-sided synchronization
+//! (`MPI_Win_lock`/`MPI_Win_unlock`).
+//!
+//! The table is the §4.3 passive-target state machine, owned by the
+//! *target* process and driven entirely from its progress engine: lock
+//! requests and releases arrive as wire packets
+//! ([`crate::fabric::wire::rma_op`]) and grants go back out as packets, so
+//! acquiring a lock never blocks the target's application threads — the
+//! discipline "MPI Progress For All" (arXiv:2405.13807) argues passive
+//! target requires.
+//!
+//! Admission policy:
+//!
+//! * **Strict FIFO.** A request is admitted immediately only when nothing
+//!   is queued ahead of it; otherwise it queues. Consequently the grant
+//!   order is exactly the arrival order — exclusive writers cannot starve
+//!   behind a stream of late-arriving readers. The property test in
+//!   `tests/properties.rs` reconstructs the grant order from the
+//!   [`Granted`] values this API returns and checks it equals the
+//!   arrival order verbatim.
+//! * **Shared readers admit concurrently.** Consecutive queued shared
+//!   requests are granted as one batch the moment no exclusive hold is in
+//!   the way.
+//! * **Exclusive writers hold alone.** An exclusive grant waits for every
+//!   current holder (shared or exclusive) to release, and blocks all
+//!   later admissions until its own release.
+//!
+//! The table is deliberately free of wire/runtime types (the grant
+//! metadata `M` is generic — the runtime stores the requester's reply
+//! endpoint, the property tests store `()`), so the state machine is unit-
+//! and property-testable in isolation.
+
+use std::collections::VecDeque;
+
+/// Passive-target lock mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockType {
+    /// `MPI_LOCK_SHARED`: concurrent readers.
+    Shared,
+    /// `MPI_LOCK_EXCLUSIVE`: a single writer.
+    Exclusive,
+}
+
+impl LockType {
+    /// Wire encoding (the lock-request body byte).
+    pub fn wire_code(self) -> u8 {
+        match self {
+            LockType::Shared => 0,
+            LockType::Exclusive => 1,
+        }
+    }
+
+    /// Decode the wire byte; `None` for an unknown code (the target NACKs
+    /// instead of guessing).
+    pub fn from_wire(code: u8) -> Option<LockType> {
+        match code {
+            0 => Some(LockType::Shared),
+            1 => Some(LockType::Exclusive),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LockType::Shared => "shared",
+            LockType::Exclusive => "exclusive",
+        }
+    }
+}
+
+/// Identity of one lock request: (origin rank in the window's
+/// communicator, origin-side token). Tokens are per-origin, so the pair is
+/// unique across concurrent requesters.
+pub type LockKey = (u32, u64);
+
+/// A grant decided by the table. `meta` is whatever the caller attached to
+/// the request (the runtime: the requester's reply endpoint).
+#[derive(Debug)]
+pub struct Granted<M> {
+    pub key: LockKey,
+    pub kind: LockType,
+    pub meta: M,
+}
+
+struct Waiter<M> {
+    key: LockKey,
+    kind: LockType,
+    meta: M,
+}
+
+/// The per-window lock table (see module docs for the admission policy).
+pub struct LockTable<M> {
+    holders: Vec<(LockKey, LockType)>,
+    queue: VecDeque<Waiter<M>>,
+}
+
+impl<M> Default for LockTable<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M> LockTable<M> {
+    pub fn new() -> LockTable<M> {
+        LockTable { holders: Vec::new(), queue: VecDeque::new() }
+    }
+
+    fn admissible(&self, kind: LockType) -> bool {
+        match kind {
+            LockType::Exclusive => self.holders.is_empty(),
+            LockType::Shared => self.holders.iter().all(|&(_, k)| k == LockType::Shared),
+        }
+    }
+
+    /// A lock request arrives. `Ok(Some(_))` grants immediately;
+    /// `Ok(None)` queues the request (FIFO) and its grant is returned by
+    /// a later [`LockTable::release`]. `Err` rejects a duplicate key —
+    /// keys come off the wire, so a malformed origin must be NACKed, not
+    /// asserted on (a duplicate holder would otherwise be unreleasable:
+    /// `release` removes only the first match).
+    pub fn request(
+        &mut self,
+        key: LockKey,
+        kind: LockType,
+        meta: M,
+    ) -> Result<Option<Granted<M>>, String> {
+        if self.holders.iter().any(|&(k, _)| k == key) || self.queue.iter().any(|w| w.key == key)
+        {
+            return Err(format!(
+                "duplicate lock request from rank {} (token {})",
+                key.0, key.1
+            ));
+        }
+        if self.queue.is_empty() && self.admissible(kind) {
+            self.holders.push((key, kind));
+            Ok(Some(Granted { key, kind, meta }))
+        } else {
+            self.queue.push_back(Waiter { key, kind, meta });
+            Ok(None)
+        }
+    }
+
+    /// A release arrives. Removes the hold and admits every newly
+    /// grantable waiter from the queue head (one exclusive, or a batch of
+    /// consecutive shareds). `Err` when `key` holds nothing — the
+    /// double-unlock the target NACKs.
+    pub fn release(&mut self, key: LockKey) -> Result<Vec<Granted<M>>, String> {
+        let Some(pos) = self.holders.iter().position(|&(k, _)| k == key) else {
+            return Err(format!(
+                "unlock from rank {} (token {}) without a held lock",
+                key.0, key.1
+            ));
+        };
+        self.holders.swap_remove(pos);
+        let mut granted = Vec::new();
+        while let Some(head) = self.queue.front() {
+            if !self.admissible(head.kind) {
+                break;
+            }
+            let w = self.queue.pop_front().expect("front just observed");
+            self.holders.push((w.key, w.kind));
+            granted.push(Granted { key: w.key, kind: w.kind, meta: w.meta });
+        }
+        Ok(granted)
+    }
+
+    /// Current holder count (shared holds coexist; an exclusive hold is
+    /// necessarily alone).
+    pub fn holders(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Requests queued behind the current holders.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(origin: u32, token: u64) -> LockKey {
+        (origin, token)
+    }
+
+    #[test]
+    fn shared_readers_admit_concurrently() {
+        let mut t: LockTable<()> = LockTable::new();
+        assert!(t.request(k(0, 1), LockType::Shared, ()).unwrap().is_some());
+        assert!(t.request(k(1, 1), LockType::Shared, ()).unwrap().is_some());
+        assert!(t.request(k(2, 1), LockType::Shared, ()).unwrap().is_some());
+        assert_eq!(t.holders(), 3);
+        assert_eq!(t.queued(), 0);
+    }
+
+    #[test]
+    fn exclusive_holds_alone_and_queues_fifo() {
+        let mut t: LockTable<&'static str> = LockTable::new();
+        // Grant order is observable from the returned Granted values.
+        let mut grants = Vec::new();
+        if let Some(g) = t.request(k(0, 1), LockType::Exclusive, "a").unwrap() {
+            grants.push(g.key);
+        }
+        assert!(t.request(k(1, 1), LockType::Exclusive, "b").unwrap().is_none());
+        assert!(t.request(k(2, 1), LockType::Exclusive, "c").unwrap().is_none());
+        assert_eq!(t.holders(), 1);
+        let g = t.release(k(0, 1)).unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].meta, "b");
+        grants.extend(g.iter().map(|g| g.key));
+        let g = t.release(k(1, 1)).unwrap();
+        assert_eq!(g[0].meta, "c");
+        grants.extend(g.iter().map(|g| g.key));
+        assert!(t.release(k(2, 1)).unwrap().is_empty());
+        assert_eq!(grants, vec![k(0, 1), k(1, 1), k(2, 1)], "strict FIFO grant order");
+    }
+
+    #[test]
+    fn readers_behind_a_writer_wait_then_batch() {
+        let mut t: LockTable<u32> = LockTable::new();
+        assert!(t.request(k(0, 1), LockType::Shared, 0).unwrap().is_some());
+        // Writer queues behind the reader; later readers queue behind the
+        // writer (no starvation).
+        assert!(t.request(k(1, 1), LockType::Exclusive, 1).unwrap().is_none());
+        assert!(t.request(k(2, 1), LockType::Shared, 2).unwrap().is_none());
+        assert!(t.request(k(3, 1), LockType::Shared, 3).unwrap().is_none());
+        // Reader releases -> writer alone.
+        let g = t.release(k(0, 1)).unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].kind, LockType::Exclusive);
+        assert_eq!(t.holders(), 1);
+        // Writer releases -> both readers in one batch.
+        let g = t.release(k(1, 1)).unwrap();
+        assert_eq!(g.len(), 2);
+        assert!(g.iter().all(|g| g.kind == LockType::Shared));
+        assert_eq!(t.holders(), 2);
+    }
+
+    #[test]
+    fn release_without_hold_is_an_error() {
+        let mut t: LockTable<()> = LockTable::new();
+        assert!(t.release(k(0, 7)).is_err());
+        t.request(k(0, 1), LockType::Shared, ()).unwrap();
+        t.release(k(0, 1)).unwrap();
+        let err = t.release(k(0, 1)).unwrap_err();
+        assert!(err.contains("without a held lock"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_not_asserted() {
+        // Keys arrive off the wire: a duplicate must surface as an error
+        // the target can NACK, in both held and queued positions.
+        let mut t: LockTable<()> = LockTable::new();
+        t.request(k(0, 1), LockType::Exclusive, ()).unwrap();
+        let err = t.request(k(0, 1), LockType::Exclusive, ()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(t.request(k(1, 1), LockType::Exclusive, ()).unwrap().is_none());
+        let err = t.request(k(1, 1), LockType::Shared, ()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // The table is unperturbed: releasing the holder admits the one
+        // queued waiter exactly once.
+        assert_eq!(t.release(k(0, 1)).unwrap().len(), 1);
+        assert_eq!(t.holders(), 1);
+        assert_eq!(t.queued(), 0);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        for kind in [LockType::Shared, LockType::Exclusive] {
+            assert_eq!(LockType::from_wire(kind.wire_code()), Some(kind));
+        }
+        assert_eq!(LockType::from_wire(9), None);
+        assert_ne!(LockType::Shared.as_str(), LockType::Exclusive.as_str());
+    }
+}

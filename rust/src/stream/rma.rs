@@ -28,6 +28,18 @@
 //! arrive on, so a target blocked in `win_fence` over the stream
 //! communicator (a barrier riding the stream endpoints) drains and
 //! acknowledges stream-routed window traffic.
+//!
+//! Passive epochs compose with all of the above: every entry point here is
+//! legal inside a `win_lock`/`win_unlock` epoch exactly as inside a fence
+//! epoch (the epoch check lives in the shared `rma_op` core), and on a
+//! stream window the lock protocol itself rides the stream's VCI — see
+//! [`crate::mpi::rma`]'s passive-target section. In particular
+//! [`Proc::put_enqueue`]/[`Proc::get_enqueue`] issued under a held lock
+//! are driven by the progress lanes without the lock ever blocking the
+//! lane: acquisition happened on the host thread, and `win_unlock`
+//! synchronizes the communicator's GPU stream before the wire release,
+//! so every lane op registered under the lock executes while the lock is
+//! still held.
 
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
@@ -41,8 +53,9 @@ impl Proc {
     /// Resolve the stream route for an origin operation: local stream VCI
     /// → the target's registered endpoint. Requires the window to have
     /// been created over a stream communicator with a local stream
-    /// attached.
-    fn stream_rma_route(&self, win: &Window, target: u32) -> Result<RmaRoute> {
+    /// attached. `pub(crate)`: the passive-target lock protocol
+    /// ([`crate::mpi::rma`]) routes through it for stream windows.
+    pub(crate) fn stream_rma_route(&self, win: &Window, target: u32) -> Result<RmaRoute> {
         let comm = win.comm();
         comm.check_rank(target)?;
         let dst_vci = comm.remote_vci(target).ok_or_else(|| {
@@ -143,6 +156,7 @@ mod tests {
     use crate::error::MpiErr;
     use crate::mpi::datatype::{Datatype, Op};
     use crate::mpi::info::Info;
+    use crate::mpi::rma::LockType;
     use crate::mpi::world::World;
 
     #[test]
@@ -157,24 +171,25 @@ mod tests {
             let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
             let win = p.win_create(vec![0u8; 16], &c)?;
             p.win_fence(&win)?;
-            // Barrier fragments carry zero payload bytes, so payload byte
-            // counters isolate the RMA traffic race-free.
-            let rx_bytes = |idx: u16| {
-                p.vci(idx).ep().stats().rx_bytes.load(std::sync::atomic::Ordering::Relaxed)
+            // Count only RMA-classified packets (RMA_CTX_BIT): the fence
+            // collectives ride the stream endpoints too, but can never
+            // pollute this counter.
+            let rx_rma = |idx: u16| {
+                p.vci(idx).ep().stats().rx_rma_packets.load(std::sync::atomic::Ordering::Relaxed)
             };
-            let stream_before = rx_bytes(s.vci_idx());
-            let implicit_before = rx_bytes(0);
+            let stream_before = rx_rma(s.vci_idx());
+            let implicit_before = rx_rma(0);
             if p.rank() == 0 {
                 p.stream_put(&win, 1, 0, &[7u8; 16])?;
             }
             p.win_fence(&win)?;
             assert_eq!(
-                rx_bytes(0),
+                rx_rma(0),
                 implicit_before,
-                "stream RMA payload must not touch the implicit pool"
+                "stream RMA traffic must not touch the implicit pool"
             );
             assert!(
-                rx_bytes(s.vci_idx()) > stream_before,
+                rx_rma(s.vci_idx()) > stream_before,
                 "the put (or its ack) must ride the stream endpoint"
             );
             if p.rank() == 1 {
@@ -288,6 +303,101 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    #[test]
+    fn stream_passive_epoch_rides_stream_endpoints() {
+        // The passive-target mirror of `stream_rma_rides_stream_endpoints`:
+        // on a stream window the whole lock protocol (request/grant,
+        // release/ack) and the data ops issued under it must ride the
+        // stream endpoints and keep the implicit pool quiet.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 16], &c)?;
+            let rx = |idx: u16| {
+                let st = p.vci(idx).ep().stats();
+                (
+                    st.rx_bytes.load(std::sync::atomic::Ordering::Relaxed),
+                    st.rx_rma_packets.load(std::sync::atomic::Ordering::Relaxed),
+                )
+            };
+            if p.rank() == 0 {
+                let (implicit_bytes, implicit_rma) = rx(0);
+                let (_, stream_rma_before) = rx(s.vci_idx());
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                p.stream_put(&win, 1, 0, &[5u8; 16])?;
+                p.win_unlock(&win, 1)?;
+                let (_, stream_rma) = rx(s.vci_idx());
+                assert!(
+                    stream_rma >= stream_rma_before + 3,
+                    "grant, put-ack and unlock-ack must arrive on the stream endpoint \
+                     ({stream_rma} vs {stream_rma_before})"
+                );
+                assert_eq!(rx(0), (implicit_bytes, implicit_rma), "implicit pool must stay quiet");
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                // The target services the stream endpoint explicitly: a
+                // passive target is not otherwise inside a stream call.
+                let mut b = [0u8; 1];
+                let req = p.irecv(&mut b, 0, 9, p.world_comm())?;
+                loop {
+                    p.poke();
+                    if p.test(&req)?.is_some() {
+                        break;
+                    }
+                }
+                assert_eq!(p.win_read_local(&win)?, vec![5u8; 16]);
+            }
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn rma_enqueue_inside_passive_epoch() {
+        // MPIX_*_enqueue under a held lock: the host thread opens the
+        // passive epoch, the progress lane issues the covered operations,
+        // and the host closes the epoch after synchronize — the lock never
+        // blocks the lane.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        let win = p.win_create(vec![0u8; 16], &c).unwrap();
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        p.put_enqueue(&win, 0, 0, b"lock+lane").unwrap();
+        // No explicit synchronize: win_unlock completes the epoch's
+        // operations, draining the communicator's GPU stream before the
+        // wire release — the lane op runs while the lock is still held.
+        p.win_unlock(&win, 0).unwrap();
+        assert_eq!(&p.win_read_local(&win).unwrap()[..9], b"lock+lane");
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        let d = dev.alloc(9);
+        p.get_enqueue(&win, 0, 0, d).unwrap();
+        p.synchronize_enqueue(&c).unwrap();
+        assert_eq!(dev.read_sync(d).unwrap(), b"lock+lane");
+        dev.free(d).unwrap();
+        p.win_unlock(&win, 0).unwrap();
+        // Without the lock (and with no fence), the lane-issued op fails
+        // at the synchronize point with the epoch error.
+        p.put_enqueue(&win, 0, 0, b"late").unwrap();
+        let err = p.synchronize_enqueue(&c);
+        assert!(matches!(err, Err(MpiErr::Rma(_))), "expected epoch error, got {err:?}");
+        p.win_free(win).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+        dev.destroy_stream(&gs).unwrap();
     }
 
     #[test]

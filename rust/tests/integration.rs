@@ -413,6 +413,122 @@ fn enqueue_pipeline_orders_mpi_against_kernel_ops() {
     }
 }
 
+// ----------------------------------------------------------------------
+// Passive-target RMA (win_lock/win_unlock) across the full stack
+// ----------------------------------------------------------------------
+
+/// The mutual-exclusion acid test: N threads of the origin rank each run
+/// read-modify-write epochs (lock-exclusive → get → add → put → unlock)
+/// against one counter in the target's window. Any admission bug — two
+/// concurrent exclusive grants, a shared grant sneaking past a writer —
+/// loses increments; the final counter value proves serialization.
+#[test]
+fn passive_exclusive_rmw_counter_is_exact() {
+    const THREADS: usize = 4;
+    const ITERS: u64 = 12;
+    let w = world(2);
+    w.run(|p| {
+        let win = p.win_create(vec![0u8; 8], p.world_comm())?;
+        if p.rank() == 0 {
+            let results: Vec<mpix::error::Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..THREADS)
+                    .map(|_| {
+                        let p = p.clone();
+                        let win = win.clone();
+                        s.spawn(move || -> mpix::error::Result<()> {
+                            for _ in 0..ITERS {
+                                p.win_lock(&win, 1, mpix::mpi::win_lock::LockType::Exclusive)?;
+                                let cur = p.get(&win, 1, 0, 8)?;
+                                let v = u64::from_le_bytes(cur.try_into().unwrap());
+                                p.put(&win, 1, 0, &(v + 1).to_le_bytes())?;
+                                p.win_unlock(&win, 1)?;
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("rmw thread panicked")).collect()
+            });
+            for r in results {
+                r?;
+            }
+            p.send(&[1u8], 1, 3, p.world_comm())?;
+        } else {
+            let mut b = [0u8; 1];
+            p.recv(&mut b, 0, 3, p.world_comm())?;
+            let local = p.win_read_local(&win)?;
+            let total = u64::from_le_bytes(local[..8].try_into().unwrap());
+            assert_eq!(
+                total,
+                (THREADS as u64) * ITERS,
+                "lost increments — exclusive locks failed to serialize the RMW epochs"
+            );
+        }
+        p.win_free(win)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Shared readers against one exclusive writer: readers admit
+/// concurrently (each sees a consistent snapshot — the writer always
+/// writes the two window cells as an equal pair inside its exclusive
+/// epoch, so a torn read proves a reader overlapped a writer).
+#[test]
+fn passive_shared_readers_see_consistent_snapshots() {
+    const READERS: usize = 3;
+    const ROUNDS: u64 = 10;
+    let w = world(2);
+    w.run(|p| {
+        let win = p.win_create(vec![0u8; 16], p.world_comm())?;
+        if p.rank() == 0 {
+            let results: Vec<mpix::error::Result<()>> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                // The writer: keeps both cells equal inside each epoch.
+                {
+                    let p = p.clone();
+                    let win = win.clone();
+                    handles.push(s.spawn(move || -> mpix::error::Result<()> {
+                        for i in 1..=ROUNDS {
+                            p.win_lock(&win, 1, mpix::mpi::win_lock::LockType::Exclusive)?;
+                            p.put(&win, 1, 0, &i.to_le_bytes())?;
+                            p.put(&win, 1, 8, &i.to_le_bytes())?;
+                            p.win_unlock(&win, 1)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for _ in 0..READERS {
+                    let p = p.clone();
+                    let win = win.clone();
+                    handles.push(s.spawn(move || -> mpix::error::Result<()> {
+                        for _ in 0..ROUNDS {
+                            p.win_lock(&win, 1, mpix::mpi::win_lock::LockType::Shared)?;
+                            let snap = p.get(&win, 1, 0, 16)?;
+                            p.win_unlock(&win, 1)?;
+                            let a = u64::from_le_bytes(snap[..8].try_into().unwrap());
+                            let b = u64::from_le_bytes(snap[8..].try_into().unwrap());
+                            assert_eq!(a, b, "torn read: shared epoch overlapped a writer");
+                        }
+                        Ok(())
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().expect("reader/writer panicked")).collect()
+            });
+            for r in results {
+                r?;
+            }
+            p.send(&[1u8], 1, 3, p.world_comm())?;
+        } else {
+            let mut b = [0u8; 1];
+            p.recv(&mut b, 0, 3, p.world_comm())?;
+        }
+        p.win_free(win)?;
+        Ok(())
+    })
+    .unwrap();
+}
+
 #[test]
 fn public_sendrecv_exchanges() {
     let w = world(2);

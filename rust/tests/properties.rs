@@ -452,8 +452,223 @@ fn prop_matching_fifo_per_source_tag_with_shrinking() {
 }
 
 // ----------------------------------------------------------------------
-// Datatype roundtrips
+// Passive-target lock table — seeded, shrinking
 // ----------------------------------------------------------------------
+
+use mpix::mpi::win_lock::{LockKey, LockTable, LockType};
+
+/// One step of a randomized passive-target schedule: stream `stream`
+/// requests the lock (shared or exclusive) or releases its current hold.
+/// A stream is a serial context, so it has at most one outstanding
+/// request/hold; events that would violate that are skipped by the
+/// runner (keeping delta-debugged sub-schedules valid).
+#[derive(Clone, Copy, Debug)]
+enum LockEv {
+    Request { stream: u8, exclusive: bool },
+    Release { stream: u8 },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum StreamState {
+    Idle,
+    Waiting(LockKey, LockType),
+    Holding(LockKey, LockType),
+}
+
+/// Drive one schedule through a [`LockTable`] and verify the
+/// passive-target contract: (1) an exclusive hold is always alone and
+/// shared holds never coexist with it; (2) strict FIFO — the grant log is
+/// exactly the arrival order of granted requests, so writers can't starve
+/// and readers can't jump the queue; (3) nothing is lost — after
+/// releasing every hold, all requests have been granted and the queue is
+/// empty. Returns the violation as an error string so the caller can
+/// shrink the schedule.
+fn run_lock_case(nstreams: u8, schedule: &[LockEv]) -> Result<(), String> {
+    let mut table: LockTable<()> = LockTable::new();
+    let mut state = vec![StreamState::Idle; nstreams as usize];
+    let mut next_token = vec![0u64; nstreams as usize];
+    let mut arrivals: Vec<LockKey> = Vec::new();
+    // Grant order as observed from the table's return values (the
+    // production API surface; the table keeps no log of its own).
+    let mut grant_log: Vec<LockKey> = Vec::new();
+
+    // Apply one table decision set: mark granted streams as holding and
+    // record the observed grant order.
+    fn absorb(
+        grants: impl IntoIterator<Item = mpix::mpi::win_lock::Granted<()>>,
+        state: &mut [StreamState],
+        grant_log: &mut Vec<LockKey>,
+    ) -> Result<(), String> {
+        for g in grants {
+            let s = g.key.0 as usize;
+            match state[s] {
+                StreamState::Waiting(k, kind) if k == g.key => {
+                    if kind != g.kind {
+                        return Err(format!("stream {s} granted {:?}, requested {kind:?}", g.kind));
+                    }
+                    state[s] = StreamState::Holding(k, kind);
+                    grant_log.push(g.key);
+                }
+                _ => return Err(format!("grant for stream {s} which is not waiting on {:?}", g.key)),
+            }
+        }
+        Ok(())
+    }
+
+    let check = |table: &LockTable<()>, state: &[StreamState], arrivals: &[LockKey], log: &[LockKey]| {
+        // (1) mutual exclusion between exclusive and anything else.
+        let holds: Vec<LockType> = state
+            .iter()
+            .filter_map(|s| match s {
+                StreamState::Holding(_, k) => Some(*k),
+                _ => None,
+            })
+            .collect();
+        if holds.contains(&LockType::Exclusive) && holds.len() > 1 {
+            return Err(format!("exclusive hold coexists with {} other hold(s)", holds.len() - 1));
+        }
+        if holds.len() != table.holders() {
+            return Err(format!(
+                "model tracks {} hold(s), table reports {}",
+                holds.len(),
+                table.holders()
+            ));
+        }
+        // (2) strict FIFO: grants are exactly the arrival-order prefix.
+        if log.len() > arrivals.len() || log != &arrivals[..log.len()] {
+            return Err(format!("grant log {log:?} is not the arrival prefix of {arrivals:?}"));
+        }
+        Ok(())
+    };
+
+    for ev in schedule {
+        match *ev {
+            LockEv::Request { stream, exclusive } => {
+                let s = stream as usize;
+                if state[s] != StreamState::Idle {
+                    continue; // serial context: one outstanding request/hold
+                }
+                let key: LockKey = (stream as u32, next_token[s]);
+                next_token[s] += 1;
+                let kind = if exclusive { LockType::Exclusive } else { LockType::Shared };
+                arrivals.push(key);
+                state[s] = StreamState::Waiting(key, kind);
+                let granted =
+                    table.request(key, kind, ()).map_err(|e| format!("request refused: {e}"))?;
+                if let Some(g) = granted {
+                    absorb([g], &mut state, &mut grant_log)?;
+                }
+            }
+            LockEv::Release { stream } => {
+                let s = stream as usize;
+                let StreamState::Holding(key, _) = state[s] else {
+                    continue; // nothing held — skipped, not an error
+                };
+                state[s] = StreamState::Idle;
+                let grants = table.release(key).map_err(|e| format!("release refused: {e}"))?;
+                absorb(grants, &mut state, &mut grant_log)?;
+            }
+        }
+        check(&table, &state, &arrivals, &grant_log)?;
+    }
+
+    // Drain: release every hold until the system is quiescent. Bounded by
+    // the schedule length — each pass releases at least one hold or the
+    // system is already quiet.
+    loop {
+        let Some(s) = state.iter().position(|st| matches!(st, StreamState::Holding(..))) else {
+            break;
+        };
+        let StreamState::Holding(key, _) = state[s] else { unreachable!() };
+        state[s] = StreamState::Idle;
+        let grants = table.release(key).map_err(|e| format!("drain release refused: {e}"))?;
+        absorb(grants, &mut state, &mut grant_log)?;
+        check(&table, &state, &arrivals, &grant_log)?;
+    }
+    // (3) nothing lost: every arrival granted, nothing queued or waiting.
+    if grant_log.len() != arrivals.len() {
+        return Err(format!(
+            "{} request(s) arrived but only {} were ever granted",
+            arrivals.len(),
+            grant_log.len()
+        ));
+    }
+    if table.queued() != 0 || state.iter().any(|s| matches!(s, StreamState::Waiting(..))) {
+        return Err("waiters left behind after draining every hold".into());
+    }
+    Ok(())
+}
+
+/// Delta-debugging shrink, same shape as `shrink_matching_case`: greedily
+/// remove chunks while the schedule still fails, halving the chunk size
+/// down to single events.
+fn shrink_lock_case(nstreams: u8, schedule: Vec<LockEv>) -> Vec<LockEv> {
+    let mut cur = schedule;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            if run_lock_case(nstreams, &cand).is_err() {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            return cur;
+        }
+        chunk /= 2;
+    }
+}
+
+/// Randomized lock/unlock contention schedules across 2–4 streams: FIFO
+/// fairness for exclusive writers, concurrent admission for shared
+/// readers, no lost waiters — with failing schedules shrunk to a minimal
+/// reproduction (the ISSUE-4 matching-engine-style property).
+#[test]
+fn prop_lock_table_fifo_and_exclusion_with_shrinking() {
+    let mut rng = Rng::new(0x10C4_7AB1);
+    for case in 0..24 {
+        let nstreams = 2 + rng.below(3) as u8; // 2..=4 contending streams
+        let len = 8 + rng.below(48) as usize;
+        let mut schedule = Vec::with_capacity(len);
+        for _ in 0..len {
+            let stream = rng.below(nstreams as u64) as u8;
+            if rng.below(2) == 0 {
+                schedule.push(LockEv::Request { stream, exclusive: rng.below(2) == 0 });
+            } else {
+                schedule.push(LockEv::Release { stream });
+            }
+        }
+        if let Err(msg) = run_lock_case(nstreams, &schedule) {
+            let minimal = shrink_lock_case(nstreams, schedule);
+            panic!(
+                "case {case} ({nstreams} streams): {msg}\n\
+                 minimal failing schedule ({} events): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+/// The deterministic concurrent-admission shape: every queued shared
+/// reader is admitted as one batch the instant the blocking writer
+/// releases.
+#[test]
+fn prop_shared_batch_admission_after_writer() {
+    let mut table: LockTable<u8> = LockTable::new();
+    assert!(table.request((0, 0), LockType::Exclusive, 0).unwrap().is_some());
+    for s in 1..=4u32 {
+        assert!(table.request((s, 0), LockType::Shared, s as u8).unwrap().is_none());
+    }
+    let granted = table.release((0, 0)).unwrap();
+    assert_eq!(granted.len(), 4, "all queued readers admit in one batch");
+    assert_eq!(table.holders(), 4);
+    assert_eq!(table.queued(), 0);
+}
 
 #[test]
 fn prop_datatype_pack_unpack_roundtrip() {
