@@ -18,13 +18,18 @@ pub const RMA_CTX_BIT: u32 = 1 << 30;
 /// carries [`crate::fabric::wire::RMA_CTX_BIT`] starts its payload with
 /// one of these (see the header layout in [`crate::mpi::rma`]).
 pub mod rma_op {
-    /// Origin write; target replies [`ACK`] (or [`NACK`]).
+    /// Origin write — *deferred*: the target records the outcome and
+    /// acknowledges in [`ACK_BATCH`]es, not per op.
     pub const PUT: u8 = 0;
-    /// Origin read; target replies [`DATA`] (or [`NACK`]).
+    /// Origin read; target replies [`DATA`] (or [`NACK`]) — reads stay
+    /// synchronous (the caller needs the bytes).
     pub const GET: u8 = 1;
-    /// Origin read-modify-write; target replies [`ACK`] (or [`NACK`]).
+    /// Origin read-modify-write — deferred like [`PUT`].
     pub const ACC: u8 = 2;
-    /// Target-side completion of a [`PUT`]/[`ACC`].
+    /// Target-side per-op completion. Legacy of the synchronous protocol
+    /// — deferred data ops now complete via [`ACK_BATCH`] and reads via
+    /// [`DATA`]; the opcode is retained (and still honored by the origin
+    /// handler) so the wire numbering stays stable.
     pub const ACK: u8 = 3;
     /// Target-side response payload of a [`GET`].
     pub const DATA: u8 = 4;
@@ -45,6 +50,22 @@ pub mod rma_op {
     pub const UNLOCK: u8 = 8;
     /// Target-side completion of an [`UNLOCK`].
     pub const UNLOCK_ACK: u8 = 9;
+    /// Batched completions of deferred [`PUT`]/[`ACC`] ops: the body is a
+    /// list of (op token, ok | NACK reason) entries
+    /// ([`crate::mpi::rma_track::encode_batch`]), emitted once per
+    /// [`crate::mpi::rma_track::ACK_BATCH_OPS`] processed ops or when a
+    /// [`FLUSH_REQ`] drains the partial batch. The origin's progress
+    /// engine applies entries to the window's op tracker — no call site
+    /// blocks on its own ack.
+    pub const ACK_BATCH: u8 = 10;
+    /// Origin flush probe (`MPI_Win_flush` / unlock / fence completion):
+    /// the body carries the origin's cumulative issued-op count for this
+    /// route; the target answers [`FLUSH_ACK`] (after draining pending
+    /// batches) once it has processed that many ops, parking the request
+    /// until then.
+    pub const FLUSH_REQ: u8 = 11;
+    /// Target-side answer to a satisfied [`FLUSH_REQ`].
+    pub const FLUSH_ACK: u8 = 12;
 }
 
 /// Matching envelope. `src_idx`/`dst_idx` are [`NO_INDEX`] for ordinary
@@ -171,6 +192,9 @@ mod tests {
             rma_op::LOCK_GRANT,
             rma_op::UNLOCK,
             rma_op::UNLOCK_ACK,
+            rma_op::ACK_BATCH,
+            rma_op::FLUSH_REQ,
+            rma_op::FLUSH_ACK,
         ];
         let mut dedup = ops.to_vec();
         dedup.sort_unstable();

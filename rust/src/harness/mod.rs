@@ -4,9 +4,9 @@
 //! scenario registry: every workload — pt2pt ping-pong, multi-stream
 //! message-rate scaling per lock mode, stream-comm alltoall, the GPU
 //! enqueue pipeline and its lane sweep, one-sided RMA latency,
-//! message-rate scaling and passive-target (lock/unlock) contention,
-//! partitioned pt2pt scaling and lane-fired
-//! triggers, and the design ablations — is a named struct implementing
+//! message-rate scaling, passive-target (lock/unlock) contention and
+//! deferred-completion flush pipelining, partitioned pt2pt scaling and
+//! lane-fired triggers, and the design ablations — is a named struct implementing
 //! [`Scenario`], with warmup/measure phases, deterministic seeding and
 //! p50/p99/mean + rate aggregation.
 //!
@@ -75,6 +75,7 @@ impl Registry {
                 Box::new(scenario::RmaPingPong),
                 Box::new(scenario::RmaMsgRate),
                 Box::new(scenario::RmaPassive),
+                Box::new(scenario::RmaFlush),
                 Box::new(scenario::PartitionedScaling),
                 Box::new(scenario::PartitionedEnqueue),
                 Box::new(scenario::AblationLockOps),
@@ -188,6 +189,7 @@ mod tests {
             "rma/pingpong",
             "rma/msgrate",
             "rma/passive",
+            "rma/flush",
             "partitioned/scaling",
             "partitioned/enqueue",
         ] {
@@ -204,7 +206,7 @@ mod tests {
         let glob = reg.select(&["ablation/*".to_string()]);
         assert_eq!(glob.len(), 5);
         let rma = reg.select(&["rma".to_string()]);
-        assert_eq!(rma.len(), 3, "rma prefix selects pingpong + msgrate + passive");
+        assert_eq!(rma.len(), 4, "rma prefix selects pingpong + msgrate + passive + flush");
         let part = reg.select(&["partitioned/*".to_string()]);
         assert_eq!(part.len(), 2, "partitioned glob selects scaling + enqueue");
         let exact = reg.select(&["pt2pt/pingpong".to_string()]);

@@ -943,14 +943,26 @@ impl RmaPassive {
         Ok(Summary::from_ns(samples.into_inner().unwrap()))
     }
 
+    /// Stride between the window regions the contention threads touch:
+    /// a multiple of the cache-line size with headroom, so concurrent
+    /// threads never write adjacent lines. The sweep must measure lock
+    /// contention at the target's FIFO table — with one shared (or
+    /// line-adjacent) measurement buffer, false sharing between origin
+    /// threads dominates and the shared-vs-exclusive comparison is
+    /// meaningless.
+    const REGION_STRIDE: usize = 256;
+
     /// Aggregate passive epochs/sec with `streams` origin threads of
     /// rank 0 contending on rank 1's window: exclusive lock→put→unlock
-    /// or shared lock→get→unlock, `iters` epochs per thread.
+    /// or shared lock→get→unlock, `iters` epochs per thread. Each
+    /// thread owns a [`Self::REGION_STRIDE`]-separated window region and
+    /// its own payload buffer — nothing is shared between threads except
+    /// the lock being measured.
     fn contention(streams: usize, iters: u64, kind: LockType) -> Result<f64> {
         let world = World::builder().ranks(2).config(Config::default()).build()?;
         let rate: Mutex<Option<f64>> = Mutex::new(None);
         world.run(|p| {
-            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            let win = p.win_create(vec![0u8; 8 * Self::REGION_STRIDE], p.world_comm())?;
             if p.rank() == 0 {
                 let t0 = Instant::now();
                 let results: Vec<Result<()>> = std::thread::scope(|s| {
@@ -959,11 +971,13 @@ impl RmaPassive {
                             let p = p.clone();
                             let win = win.clone();
                             s.spawn(move || -> Result<()> {
-                                let slot = t * Self::PAYLOAD;
+                                let slot = t * Self::REGION_STRIDE;
+                                let mut payload = [0u8; 32];
                                 for i in 0..iters {
+                                    payload.fill(i as u8);
                                     p.win_lock(&win, 1, kind)?;
                                     if kind == LockType::Exclusive {
-                                        p.put(&win, 1, slot, &[i as u8; 32])?;
+                                        p.put(&win, 1, slot, &payload)?;
                                     } else {
                                         let _ = p.get(&win, 1, slot, 32)?;
                                     }
@@ -1048,6 +1062,125 @@ impl Scenario for RmaPassive {
         }
         metrics.push(Metric::info("shared_over_exclusive_4", shared4 / excl4, "x"));
         Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
+// rma/flush
+// ----------------------------------------------------------------------
+
+/// Deferred-completion payoff (§4.3): pipelined puts against one
+/// `win_flush` vs per-op completion (a flush after every put), inside
+/// one exclusive passive epoch on a 2-rank window. Puts are no longer
+/// synchronously acknowledged, so the pipelined phase pays one transmit
+/// per op and one flush round-trip per burst, while the per-op phase
+/// pays a full round-trip every put — the gated ratio is the whole point
+/// of the deferred protocol. Ack batching is observable as context: the
+/// origin receives roughly one `ACK_BATCH` per
+/// [`crate::mpi::rma_track::ACK_BATCH_OPS`] puts instead of one ack per
+/// put.
+pub struct RmaFlush;
+
+impl RmaFlush {
+    const PAYLOAD: usize = 64;
+    const SLOTS: usize = 16;
+
+    /// Rank 0 runs `warm + ops` puts under one exclusive lock —
+    /// flushing after every put (`per_op`) or once per burst — while
+    /// rank 1 services from a blocking receive. Returns (puts/sec over
+    /// the measured ops, RMA packets received at the origin during the
+    /// measured phase).
+    fn put_rate(ops: u64, warm: u64, per_op: bool, seed: u64) -> Result<(f64, u64)> {
+        let world = World::builder().ranks(2).config(Config::default()).build()?;
+        let out: Mutex<Option<(f64, u64)>> = Mutex::new(None);
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; Self::SLOTS * Self::PAYLOAD], p.world_comm())?;
+            if p.rank() == 0 {
+                let mut payload = vec![0u8; Self::PAYLOAD];
+                Rng::new(seed ^ 0xf1a5).fill(&mut payload);
+                let rx_rma = |p: &crate::mpi::world::Proc| -> u64 {
+                    (0..p.vci_count())
+                        .map(|i| p.vci(i as u16).ep().stats().snapshot().rx_rma_packets)
+                        .sum()
+                };
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                for i in 0..warm {
+                    p.put(&win, 1, (i as usize % Self::SLOTS) * Self::PAYLOAD, &payload)?;
+                    if per_op {
+                        p.win_flush(&win, 1)?;
+                    }
+                }
+                p.win_flush(&win, 1)?;
+                let rx_before = rx_rma(p);
+                let t0 = Instant::now();
+                for i in 0..ops {
+                    p.put(&win, 1, (i as usize % Self::SLOTS) * Self::PAYLOAD, &payload)?;
+                    if per_op {
+                        p.win_flush(&win, 1)?;
+                    }
+                }
+                p.win_flush(&win, 1)?;
+                let rate = ops as f64 / t0.elapsed().as_secs_f64();
+                let rx = rx_rma(p) - rx_before;
+                p.win_unlock(&win, 1)?;
+                *out.lock().unwrap() = Some((rate, rx));
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        out.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
+    }
+}
+
+impl Scenario for RmaFlush {
+    fn name(&self) -> String {
+        "rma/flush".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("payload_bytes".into(), Self::PAYLOAD.to_string()),
+            ("modes".into(), "pipelined,per-op".into()),
+            ("ack_batch_ops".into(), crate::mpi::rma_track::ACK_BATCH_OPS.to_string()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = Self::put_rate(profile.scale(200, 40), 0, false, profile.seed)?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let pipe_ops = profile.scale(4_000, 600);
+        let sync_ops = profile.scale(800, 150);
+        let warm = |ops: u64| ops / 10 + 1;
+        let (pipelined, rx_pipelined) =
+            Self::put_rate(pipe_ops, warm(pipe_ops), false, profile.seed)?;
+        let (per_op, _) = Self::put_rate(sync_ops, warm(sync_ops), true, profile.seed)?;
+        // The acceptance shape is a hard failure, not just a gate:
+        // pipelined puts must beat per-op completion or the deferred
+        // protocol is not deferring.
+        if pipelined <= per_op {
+            return Err(MpiErr::Internal(format!(
+                "pipelined puts must beat per-op completion ({pipelined} vs {per_op} put/s)"
+            )));
+        }
+        Ok(ScenarioResult {
+            metrics: vec![
+                Metric::higher("rate_pipelined_puts_per_sec", pipelined, "op/s"),
+                Metric::info("rate_perop_puts_per_sec", per_op, "op/s"),
+                Metric::higher("pipelined_over_perop", pipelined / per_op, "x"),
+                Metric::info(
+                    "origin_rx_rma_packets_per_pipelined_put",
+                    rx_pipelined as f64 / pipe_ops as f64,
+                    "packets",
+                ),
+            ],
+        })
     }
 }
 
@@ -1683,6 +1816,31 @@ mod tests {
         }
         let ratio = r.metrics.iter().find(|m| m.name == "shared_over_exclusive_4").unwrap();
         assert!(ratio.value > 0.0);
+    }
+
+    #[test]
+    fn rma_flush_scenario_smoke_shows_pipelining_win() {
+        let r = RmaFlush.run(&Profile::smoke(29)).unwrap();
+        let pipelined =
+            r.metrics.iter().find(|m| m.name == "rate_pipelined_puts_per_sec").unwrap().value;
+        let per_op = r.metrics.iter().find(|m| m.name == "rate_perop_puts_per_sec").unwrap().value;
+        assert!(
+            pipelined > per_op,
+            "pipelined puts must beat per-op completion ({pipelined} vs {per_op})"
+        );
+        let ratio = r.metrics.iter().find(|m| m.name == "pipelined_over_perop").unwrap();
+        assert!(ratio.value > 1.0);
+        // Batching: well under one ack packet per pipelined put.
+        let acks = r
+            .metrics
+            .iter()
+            .find(|m| m.name == "origin_rx_rma_packets_per_pipelined_put")
+            .unwrap();
+        assert!(
+            acks.value < 0.5,
+            "deferred puts must be batch-acknowledged, got {} rx packets/put",
+            acks.value
+        );
     }
 
     #[test]

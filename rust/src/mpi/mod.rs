@@ -13,6 +13,7 @@ pub mod partitioned;
 pub mod persistent;
 pub mod probe;
 pub mod rma;
+pub mod rma_track;
 pub mod datatype;
 pub mod group;
 pub mod info;

@@ -15,11 +15,30 @@
 //!
 //! Wire protocol: RMA packets share the fabric with point-to-point but
 //! carry [`RMA_CTX_BIT`] in the context id; the progress engine routes
-//! them to `handle_rma_packet` instead of the matching engine. Every
-//! origin operation is acknowledged (PUT/ACC → ACK, GET → DATA, any
-//! target-side rejection → NACK carrying the reason), so a returned
-//! operation is also remotely complete, and `fence` reduces to a misuse
-//! allreduce plus a barrier.
+//! them to `handle_rma_packet` instead of the matching engine.
+//!
+//! Completion model (deferred since ISSUE 5): `put`/`accumulate` are
+//! **pipelined** — the origin transmits and returns, tracking the op in
+//! the window's [`OpTracker`]; the target applies the op and coalesces
+//! outcomes into `ACK_BATCH` packets ([`crate::mpi::rma_track`]) that
+//! the origin's progress engine drains — no data-op call site blocks on
+//! its own acknowledgment. `get` stays synchronous (the caller needs the
+//! bytes; its wait loop drains batched acks as a side effect). The real
+//! completion points are `win_flush`/`win_flush_all`, `win_unlock`, and
+//! `win_fence` (plus `synchronize_enqueue` for the enqueue shapes): each
+//! sends a `FLUSH_REQ` carrying the origin's cumulative issued-op count
+//! per route, blocks until every prior op is target-visible, and
+//! surfaces any NACK collected since the last completion point as
+//! [`MpiErr::Rma`] — a sticky *first* error per (process, target), the
+//! MPI unit of RMA completion: a completion point completes (and
+//! reports for) *all* of this process's ops to that target, so
+//! concurrent same-target epochs share one error scope.
+//!
+//! Target-side enforcement: every data op arrives tagged with its
+//! origin's hold token (the `win_lock` grant covering it; `0` claims a
+//! fence epoch). The target NACKs ops covered by neither a granted lock
+//! nor an open fence epoch — origin-side epoch discipline is no longer
+//! the only line of defense.
 //!
 //! Epoch discipline: origin operations are only legal inside an epoch —
 //! either a *fence* epoch (after the first `win_fence`) or a *passive*
@@ -49,6 +68,7 @@ use crate::fabric::addr::EpAddr;
 use crate::fabric::wire::{rma_op, Envelope, Packet, NO_INDEX};
 use crate::mpi::comm::Comm;
 use crate::mpi::datatype::{Datatype, Op};
+use crate::mpi::rma_track::{self, AckBatcher, AckEntry, Emit, OpTracker, Route};
 use crate::mpi::win_lock::LockTable;
 use crate::mpi::world::Proc;
 use crate::vci::Vci;
@@ -101,7 +121,9 @@ fn rop_from_code(c: u8) -> Op {
     }
 }
 
-/// RMA packet header, serialized at the front of the payload.
+/// RMA packet header, serialized at the front of the payload. `hold` is
+/// the origin's covering hold token for data ops (0 = fence-epoch
+/// claim); the target enforces coverage against it.
 struct RmaHeader {
     opcode: u8,
     dt: u8,
@@ -109,9 +131,10 @@ struct RmaHeader {
     win_id: u32,
     offset: u64,
     token: u64,
+    hold: u64,
 }
 
-const HDR_LEN: usize = 1 + 1 + 1 + 4 + 8 + 8;
+const HDR_LEN: usize = 1 + 1 + 1 + 4 + 8 + 8 + 8;
 
 impl RmaHeader {
     fn encode(&self, body: &[u8]) -> Vec<u8> {
@@ -122,6 +145,7 @@ impl RmaHeader {
         out.extend_from_slice(&self.win_id.to_le_bytes());
         out.extend_from_slice(&self.offset.to_le_bytes());
         out.extend_from_slice(&self.token.to_le_bytes());
+        out.extend_from_slice(&self.hold.to_le_bytes());
         out.extend_from_slice(body);
         out
     }
@@ -134,27 +158,41 @@ impl RmaHeader {
             win_id: u32::from_le_bytes(buf[3..7].try_into().unwrap()),
             offset: u64::from_le_bytes(buf[7..15].try_into().unwrap()),
             token: u64::from_le_bytes(buf[15..23].try_into().unwrap()),
+            hold: u64::from_le_bytes(buf[23..31].try_into().unwrap()),
         };
         (h, &buf[HDR_LEN..])
     }
 }
 
 /// Target-side window state registered with the process: the exposed
-/// memory plus the passive-target lock table (driven by the progress
-/// engine; grant metadata is the requester's reply endpoint).
+/// memory, the passive-target lock table (driven by the progress engine;
+/// grant metadata is the requester's reply endpoint), the ack batcher
+/// for deferred data ops, and whether a fence epoch has been opened here
+/// (the coverage check for hold-token-0 ops).
 pub(crate) struct WinTarget {
     pub buf: Mutex<Vec<u8>>,
     pub locks: Mutex<LockTable<EpAddr>>,
+    pub acks: Mutex<AckBatcher<EpAddr>>,
+    pub fenced: AtomicBool,
 }
 
-/// Origin-side results of in-flight RMA ops: the response payload, or
-/// the target's NACK reason. Keyed by (window id, token) — tokens are
-/// allocated per-window, so concurrent operations on two windows (e.g. a
-/// host `get` racing a `put_enqueue` on a progress lane) must not collide
-/// in this proc-global map.
+/// Origin-side in-flight RMA state, proc-global so the progress engine
+/// can resolve incoming responses without a window handle in scope:
+///
+/// * `done` — synchronous responses (GET data, lock grants, flush acks,
+///   NACKs), keyed by (window id, token); tokens are allocated
+///   per-window, so concurrent operations on two windows must not
+///   collide here.
+/// * `trackers` — each live window's [`OpTracker`], keyed by window id:
+///   where `ACK_BATCH` entries land.
+/// * `enqueue_flush` — windows touched by `put_enqueue` per GPU stream
+///   id: `synchronize_enqueue` completes these (the §4.3 "whichever
+///   comes first" contract).
 #[derive(Default)]
 pub(crate) struct RmaResults {
     pub done: Mutex<HashMap<(u32, u64), std::result::Result<Vec<u8>, String>>>,
+    pub trackers: Mutex<HashMap<u32, Arc<Mutex<OpTracker>>>>,
+    pub enqueue_flush: Mutex<HashMap<u64, HashMap<(u32, u32), Window>>>,
 }
 
 /// Resolved origin route for one RMA operation: which local VCI issues it
@@ -207,6 +245,9 @@ struct WinInner {
     /// Passive-target holds (see [`PassiveState`]); shared across window
     /// clones like the fence state.
     passive: Mutex<PassiveState>,
+    /// Deferred data-op accounting (shared with the proc-global registry
+    /// so `ACK_BATCH` handling reaches it without a window handle).
+    tracker: Arc<Mutex<OpTracker>>,
 }
 
 impl WinInner {
@@ -275,8 +316,15 @@ impl Proc {
             .collect();
         self.windows().lock().unwrap().insert(
             id,
-            Arc::new(WinTarget { buf: Mutex::new(local), locks: Mutex::new(LockTable::new()) }),
+            Arc::new(WinTarget {
+                buf: Mutex::new(local),
+                locks: Mutex::new(LockTable::new()),
+                acks: Mutex::new(AckBatcher::new()),
+                fenced: AtomicBool::new(false),
+            }),
         );
+        let tracker = Arc::new(Mutex::new(OpTracker::new()));
+        self.rma_results().trackers.lock().unwrap().insert(id, tracker.clone());
         // Windows must be usable as soon as any rank returns.
         self.barrier(comm)?;
         Ok(Window {
@@ -288,6 +336,7 @@ impl Proc {
                 fenced: AtomicBool::new(false),
                 unfenced_ops: AtomicU64::new(0),
                 passive: Mutex::new(PassiveState::default()),
+                tracker,
             }),
         })
     }
@@ -301,15 +350,27 @@ impl Proc {
     /// usable (clone it before a speculative free), so callers can
     /// fence/unlock and retry.
     pub fn win_free(&self, win: Window) -> Result<Vec<u8>> {
-        let mut open = [0u8; 16];
+        let deferred = {
+            let t = win.inner.tracker.lock().unwrap();
+            t.outstanding_total() + t.errs_pending()
+        };
+        let mut open = [0u8; 24];
         open[..8].copy_from_slice(&win.inner.unfenced_ops.load(Ordering::Acquire).to_le_bytes());
-        open[8..].copy_from_slice(&win.inner.total_passive_holds().to_le_bytes());
+        open[8..16].copy_from_slice(&win.inner.total_passive_holds().to_le_bytes());
+        open[16..].copy_from_slice(&deferred.to_le_bytes());
         self.allreduce(&mut open, &Datatype::U64, Op::Sum, &win.inner.comm)?;
         let unfenced = u64::from_le_bytes(open[..8].try_into().unwrap());
-        let locks = u64::from_le_bytes(open[8..].try_into().unwrap());
+        let locks = u64::from_le_bytes(open[8..16].try_into().unwrap());
+        let deferred = u64::from_le_bytes(open[16..].try_into().unwrap());
         if locks > 0 {
             return Err(MpiErr::Rma(format!(
                 "win_free on window {} with {locks} held or pending passive lock(s) across the communicator; call win_unlock first",
+                win.inner.id
+            )));
+        }
+        if deferred > 0 {
+            return Err(MpiErr::Rma(format!(
+                "win_free on window {} with {deferred} deferred operation(s) outstanding or unsurfaced error(s) across the communicator; complete them with win_flush or win_fence first",
                 win.inner.id
             )));
         }
@@ -326,20 +387,41 @@ impl Proc {
             .unwrap()
             .remove(&win.inner.id)
             .ok_or_else(|| MpiErr::Arg(format!("window {} not registered here", win.inner.id)))?;
+        self.rma_results().trackers.lock().unwrap().remove(&win.inner.id);
+        // Drop stale synchronize_enqueue flush obligations for this
+        // window (a later synchronize would probe a freed window).
+        self.rma_results()
+            .enqueue_flush
+            .lock()
+            .unwrap()
+            .values_mut()
+            .for_each(|m| m.retain(|(w, _), _| *w != win.inner.id));
         self.barrier(&win.inner.comm)?;
         let t = Arc::try_unwrap(t)
             .map_err(|_| MpiErr::Internal("window buffer still referenced at free".into()))?;
         Ok(t.buf.into_inner().unwrap())
     }
 
-    /// `MPI_Win_fence`: separates RMA epochs. Because every origin op is
-    /// remotely acknowledged before returning, completion only needs a
-    /// misuse allreduce plus a barrier. Fencing while any rank holds a
-    /// passive lock is a state-machine violation; the hold count is
-    /// allreduced (the `win_free` pattern) so the fence fails on *every*
-    /// rank — a local-only check would error on the offender and strand
-    /// compliant ranks inside the barrier.
+    /// `MPI_Win_fence`: separates RMA epochs and is a *completion point*
+    /// for the deferred data ops of the closing epoch — it flushes every
+    /// target with outstanding ops (blocking until they are
+    /// target-visible), then runs the misuse allreduce plus the barrier.
+    /// Any NACK collected during the epoch surfaces as [`MpiErr::Rma`]
+    /// *after* the barrier, so a rank whose op was rejected still
+    /// completes the collective and never strands its peers. Fencing
+    /// while any rank holds a passive lock is a state-machine violation;
+    /// the hold count is allreduced (the `win_free` pattern) so the
+    /// fence fails on *every* rank — a local-only check would error on
+    /// the offender and strand compliant ranks inside the barrier.
     pub fn win_fence(&self, win: &Window) -> Result<()> {
+        // Complete the closing epoch's deferred ops first. Their sticky
+        // errors stay in the tracker until after the barrier — a misuse
+        // refusal below must not consume (and thereby drop) a NACK that
+        // the retried fence is expected to surface.
+        let targets = win.inner.tracker.lock().unwrap().targets_open();
+        for t in &targets {
+            self.flush_target_complete(win, *t)?;
+        }
         let mut holds = win.inner.total_passive_holds().to_le_bytes();
         self.allreduce(&mut holds, &Datatype::U64, Op::Sum, &win.inner.comm)?;
         let holds = u64::from_le_bytes(holds);
@@ -349,10 +431,32 @@ impl Proc {
                 win.inner.id
             )));
         }
+        // Open the fence epoch on the *target side* before entering the
+        // barrier: no origin can issue until its own fence returns (after
+        // the barrier), by which point every target has set its flag — an
+        // op racing the flag would be spuriously NACKed otherwise.
+        if let Some(t) = self.windows().lock().unwrap().get(&win.inner.id) {
+            t.fenced.store(true, Ordering::Release);
+        }
         self.barrier(&win.inner.comm)?;
         win.inner.fenced.store(true, Ordering::Release);
         win.inner.unfenced_ops.store(0, Ordering::Release);
-        Ok(())
+        // The fence completed on every rank: consume the closing epoch's
+        // sticky errors (all targets — the fence is their completion
+        // point) and surface the first.
+        let mut sticky: Option<String> = None;
+        {
+            let mut t = win.inner.tracker.lock().unwrap();
+            for target in &targets {
+                if let Some(e) = t.take_err(*target) {
+                    sticky.get_or_insert(e);
+                }
+            }
+        }
+        match sticky {
+            Some(e) => Err(MpiErr::Rma(e)),
+            None => Ok(()),
+        }
     }
 
     /// Read this process's exposed window memory (between epochs).
@@ -389,29 +493,44 @@ impl Proc {
         }
     }
 
-    fn rma_op(
+    /// Epoch discipline shared by every origin data op, returning the
+    /// hold token the op travels with. Passive arm first: an op covered
+    /// by a held lock is tagged with that hold's wire token (the calling
+    /// thread's own hold when it has one — the usual serial-context
+    /// pairing — else any hold on the target, so progress lanes issue
+    /// covered ops under a host-acquired lock) and is closed by
+    /// `win_unlock`, never counting toward the fence epoch. Otherwise an
+    /// open fence epoch covers the op with token 0.
+    fn op_hold(&self, win: &Window, target: u32) -> Result<u64> {
+        {
+            let ps = win.inner.passive.lock().unwrap();
+            if let Some(v) = ps.held.get(&target).filter(|v| !v.is_empty()) {
+                let me = std::thread::current().id();
+                let h = v.iter().rfind(|h| h.owner == me).or_else(|| v.last());
+                return Ok(h.expect("non-empty hold stack").token);
+            }
+        }
+        if win.inner.fenced.load(Ordering::Acquire) {
+            win.inner.unfenced_ops.fetch_add(1, Ordering::AcqRel);
+            Ok(0)
+        } else {
+            Err(MpiErr::Rma(format!(
+                "RMA operation on window {} outside any epoch (no fence epoch open, no lock \
+                 held on rank {target}); call win_fence or win_lock first",
+                win.inner.id
+            )))
+        }
+    }
+
+    /// Synchronously acknowledged op (GET: the caller needs the bytes).
+    fn rma_op_sync(
         &self,
         win: &Window,
-        target: u32,
         header: RmaHeader,
         body: &[u8],
         expect_bytes: usize,
         route: RmaRoute,
     ) -> Result<Vec<u8>> {
-        // Epoch discipline, passive arm first: an op covered by a held
-        // lock completes (remote ack below) before returning and is closed
-        // by win_unlock, so it never counts toward the fence epoch.
-        if !win.inner.passive_holds_on(target) {
-            if win.inner.fenced.load(Ordering::Acquire) {
-                win.inner.unfenced_ops.fetch_add(1, Ordering::AcqRel);
-            } else {
-                return Err(MpiErr::Rma(format!(
-                    "RMA operation on window {} outside any epoch (no fence epoch open, no lock \
-                     held on rank {target}); call win_fence or win_lock first",
-                    win.inner.id
-                )));
-            }
-        }
         let data = self.rma_send_await(win, header, body, route)?;
         if data.len() != expect_bytes {
             return Err(MpiErr::Internal(format!(
@@ -420,6 +539,148 @@ impl Proc {
             )));
         }
         Ok(data)
+    }
+
+    /// Deferred op (PUT/ACC): register with the window's [`OpTracker`]
+    /// *before* transmitting (an ack racing the registration must find
+    /// the token), transmit, return — completion is the next flush
+    /// point's business. A failed transmit un-registers the op (nothing
+    /// reached the target; no ack will come).
+    fn rma_op_deferred(
+        &self,
+        win: &Window,
+        target: u32,
+        header: RmaHeader,
+        body: &[u8],
+        route: RmaRoute,
+    ) -> Result<()> {
+        let rk = Route {
+            src_vci: route.src_vci,
+            dst_rank: route.dst_ep.rank,
+            dst_ep: route.dst_ep.ep,
+        };
+        let token = header.token;
+        win.inner.tracker.lock().unwrap().issue(token, target, rk);
+        let vci = self.vci(route.src_vci);
+        let cs = self.session_for_vci(route.src_vci);
+        let env = Envelope {
+            ctx_id: RMA_CTX_BIT | win.inner.id,
+            src_rank: win.inner.comm.rank(),
+            tag: 0,
+            src_idx: NO_INDEX,
+            dst_idx: NO_INDEX,
+        };
+        let packet = Packet::eager(env, vci.addr(), header.encode(body));
+        match self.transmit_retry(vci, &cs, route.dst_ep, packet) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                win.inner.tracker.lock().unwrap().abort(token);
+                Err(e)
+            }
+        }
+    }
+
+    /// Complete every deferred op issued to `target`: send a `FLUSH_REQ`
+    /// on each route with outstanding ops (carrying the cumulative
+    /// issued count the target must have processed before answering),
+    /// await the acks, then drain until every op in flight at entry has
+    /// been batch-acknowledged. Deliberately does *not* consume the
+    /// target's sticky error: completion and error surfacing are
+    /// separate steps, so a caller that errors out after completing
+    /// (misuse check, failed release) leaves the NACK in the tracker for
+    /// the next completion point instead of silently dropping it.
+    pub(crate) fn flush_target_complete(&self, win: &Window, target: u32) -> Result<()> {
+        // Every op in flight to `target` at entry must be acknowledged
+        // before this returns.
+        let mut remaining = win.inner.tracker.lock().unwrap().inflight_tokens(target);
+        while !remaining.is_empty() {
+            // One flush round-trip per route still carrying snapshot ops.
+            // The answer guarantees the target has processed (and batch-
+            // acknowledged) at least the watermark; the await spin drains
+            // this route's acks as a side effect.
+            let routes = win.inner.tracker.lock().unwrap().routes_outstanding(target);
+            for r in &routes {
+                let required = win.inner.tracker.lock().unwrap().issued_on(target, *r);
+                let token = win.next_token();
+                let h = RmaHeader {
+                    opcode: rma_op::FLUSH_REQ,
+                    dt: 0,
+                    rop: 0,
+                    win_id: win.inner.id,
+                    offset: 0,
+                    token,
+                    hold: 0,
+                };
+                let route = RmaRoute {
+                    src_vci: r.src_vci,
+                    dst_ep: EpAddr { rank: r.dst_rank, ep: r.dst_ep },
+                };
+                self.rma_send_await(win, h, &required.to_le_bytes(), route)?;
+            }
+            // Cross-route acks arrive on *their* routes; drain those too.
+            for r in &routes {
+                let vci = self.vci(r.src_vci);
+                let cs = self.session_for_vci(r.src_vci);
+                self.progress_vci(vci, &cs);
+            }
+            // Normally one round completes everything. The count
+            // watermark can be satisfied once while an op is still
+            // displaced (another thread issuing on this route under
+            // transmit backpressure slips a later op in front of it) —
+            // looping re-probes at the now-higher watermark, which
+            // fences the straggler; every round costs a real round-trip,
+            // so this cannot degenerate into a busy spin.
+            {
+                let t = win.inner.tracker.lock().unwrap();
+                remaining.retain(|tok| t.any_inflight(&[*tok]));
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Proc::flush_target_complete`] plus the error-surfacing step:
+    /// take the target's sticky first NACK and return it as
+    /// [`MpiErr::Rma`] — the shape `win_flush` wants.
+    pub(crate) fn flush_target(&self, win: &Window, target: u32) -> Result<()> {
+        self.flush_target_complete(win, target)?;
+        match win.inner.tracker.lock().unwrap().take_err(target) {
+            Some(e) => Err(MpiErr::Rma(e)),
+            None => Ok(()),
+        }
+    }
+
+    /// Complete the deferred RMA registered on GPU stream `gpu_stream`
+    /// by `put_enqueue` — called from `synchronize_enqueue` after the
+    /// stream drains, making it a completion point for enqueued window
+    /// ops ("synchronize_enqueue or flush, whichever comes first").
+    /// `surface_nacks = false` completes the ops but leaves their sticky
+    /// errors in the trackers — the caller already has an error to
+    /// report, and consuming a NACK it cannot surface would silently
+    /// drop it (it surfaces at the window's next completion point
+    /// instead, or blocks `win_free`).
+    pub(crate) fn flush_enqueued_windows(
+        &self,
+        gpu_stream: u64,
+        surface_nacks: bool,
+    ) -> Result<()> {
+        let wins = self.rma_results().enqueue_flush.lock().unwrap().remove(&gpu_stream);
+        let Some(wins) = wins else { return Ok(()) };
+        let mut first: Option<MpiErr> = None;
+        for ((_, target), win) in wins {
+            if let Err(e) = self.flush_target_complete(&win, target) {
+                first.get_or_insert(e);
+                continue;
+            }
+            if surface_nacks {
+                if let Some(e) = win.inner.tracker.lock().unwrap().take_err(target) {
+                    first.get_or_insert(MpiErr::Rma(e));
+                }
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// The one wire-send path every origin-side RMA message takes — data
@@ -463,10 +724,18 @@ impl Proc {
                 win.size_at(target)
             )));
         }
+        let hold = self.op_hold(win, target)?;
         let token = win.next_token();
-        let h = RmaHeader { opcode: rma_op::PUT, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, target, h, data, 0, route)?;
-        Ok(())
+        let h = RmaHeader {
+            opcode: rma_op::PUT,
+            dt: 0,
+            rop: 0,
+            win_id: win.inner.id,
+            offset: offset as u64,
+            token,
+            hold,
+        };
+        self.rma_op_deferred(win, target, h, data, route)
     }
 
     /// Core get over a resolved route (shared with the stream-aware path).
@@ -484,9 +753,18 @@ impl Proc {
                 win.size_at(target)
             )));
         }
+        let hold = self.op_hold(win, target)?;
         let token = win.next_token();
-        let h = RmaHeader { opcode: rma_op::GET, dt: 0, rop: 0, win_id: win.inner.id, offset: offset as u64, token };
-        self.rma_op(win, target, h, &(len as u64).to_le_bytes(), len, route)
+        let h = RmaHeader {
+            opcode: rma_op::GET,
+            dt: 0,
+            rop: 0,
+            win_id: win.inner.id,
+            offset: offset as u64,
+            token,
+            hold,
+        };
+        self.rma_op_sync(win, h, &(len as u64).to_le_bytes(), len, route)
     }
 
     /// Core accumulate over a resolved route (shared with the stream-aware
@@ -508,6 +786,7 @@ impl Proc {
         if offset + data.len() > win.size_at(target) {
             return Err(MpiErr::Arg("accumulate exceeds target window".into()));
         }
+        let hold = self.op_hold(win, target)?;
         let token = win.next_token();
         let h = RmaHeader {
             opcode: rma_op::ACC,
@@ -516,9 +795,9 @@ impl Proc {
             win_id: win.inner.id,
             offset: offset as u64,
             token,
+            hold,
         };
-        self.rma_op(win, target, h, data, 0, route)?;
-        Ok(())
+        self.rma_op_deferred(win, target, h, data, route)
     }
 
     /// `MPI_Put`: write `data` into the target window at `offset`
@@ -582,7 +861,8 @@ impl Proc {
         body: &[u8],
     ) -> Result<Vec<u8>> {
         let route = self.passive_route(win, target)?;
-        let h = RmaHeader { opcode, dt: 0, rop: 0, win_id: win.inner.id, offset: 0, token };
+        let h =
+            RmaHeader { opcode, dt: 0, rop: 0, win_id: win.inner.id, offset: 0, token, hold: 0 };
         self.rma_send_await(win, h, body, route)
     }
 
@@ -633,19 +913,40 @@ impl Proc {
 
     /// `MPI_Win_unlock`: close one passive hold on `target` — the calling
     /// thread's own hold when it has one, else any (shared holds are
-    /// symmetric). Unlock completes every operation issued under the
-    /// lock: host-path ops are already remotely acknowledged, and ops
-    /// registered through the enqueue path are drained first by
-    /// synchronizing the window communicator's GPU stream, so nothing
-    /// issued under this lock can execute after the wire release (a lane
-    /// failure surfaces here, with the hold still intact). Unlocking
-    /// without a held lock is a state-machine violation
-    /// ([`MpiErr::Rma`]).
+    /// symmetric). Unlock is a *completion point*: ops registered through
+    /// the enqueue path are drained first by synchronizing the window
+    /// communicator's GPU stream, then every deferred data op issued to
+    /// `target` is flushed (blocking until target-visible) **while the
+    /// lock is still held** — the target's coverage check would NACK a
+    /// straggler arriving after the release. The wire release follows;
+    /// any NACK collected during the epoch surfaces as [`MpiErr::Rma`]
+    /// *after* a successful release, so a rejected op never leaves the
+    /// lock held (queued waiters are not stranded behind a failed
+    /// epoch). Unlocking without a held lock is a state-machine
+    /// violation ([`MpiErr::Rma`]).
     pub fn win_unlock(&self, win: &Window, target: u32) -> Result<()> {
         win.inner.comm.check_rank(target)?;
         if win.comm().local_stream().is_some_and(|s| s.is_gpu()) {
-            self.synchronize_enqueue(win.comm())?;
+            // Drain the GPU stream (the lane must have issued every
+            // enqueued op before the release) and complete the windows
+            // it touched, but do NOT consume window NACKs here — the
+            // contract is that an epoch's NACK surfaces only *after* a
+            // successful release, and `synchronize_enqueue` would
+            // surface it now with the hold still in place. A lane error
+            // still aborts (its op may never have been issued).
+            let gpu = crate::stream::enqueue::enqueue_target(win.comm())?;
+            gpu.synchronize()?;
+            if let Some(e) = self.progress().take_error(gpu.id()) {
+                return Err(e);
+            }
+            self.flush_enqueued_windows(gpu.id(), false)?;
         }
+        // Complete the epoch's deferred ops under the hold. A transport-
+        // level flush failure aborts the unlock with the hold intact.
+        // The sticky error is NOT consumed here: every early error
+        // return below must leave it in the tracker for the completion
+        // point that eventually succeeds.
+        self.flush_target_complete(win, target)?;
         let hold = {
             let mut ps = win.inner.passive.lock().unwrap();
             let me = std::thread::current().id();
@@ -681,12 +982,19 @@ impl Proc {
             hold
         };
         match self.lock_rpc(win, target, rma_op::UNLOCK, hold.token, &[]) {
-            Ok(_) => Ok(()),
+            // The epoch closed: consume and surface its first NACK now,
+            // exactly once — the next epoch on this window starts clean.
+            Ok(_) => match win.inner.tracker.lock().unwrap().take_err(target) {
+                Some(e) => Err(MpiErr::Rma(e)),
+                None => Ok(()),
+            },
             Err(e) => {
                 // The wire release failed (target NACK or transport
                 // error): restore the origin-side hold so the two lock
                 // views don't silently diverge — a later win_free still
-                // refuses, and the caller can retry the unlock.
+                // refuses, and the caller can retry the unlock (which
+                // still surfaces the epoch's sticky error: it was never
+                // consumed).
                 win.inner.passive.lock().unwrap().held.entry(target).or_default().push(hold);
                 Err(e)
             }
@@ -715,11 +1023,14 @@ impl Proc {
     }
 
     /// `MPI_Win_flush`: complete all operations issued to `target` inside
-    /// the current passive epoch, without releasing the lock. Every
-    /// origin operation in this runtime is remotely acknowledged before
-    /// it returns, so there is nothing left to drain — the call validates
-    /// the epoch (a held lock is required) and progresses the issuing VCI
-    /// once, keeping the call shape of a deferred-completion transport.
+    /// the current passive epoch, without releasing the lock. This is a
+    /// *real* completion point: a `FLUSH_REQ` probes every route with
+    /// outstanding ops (carrying the issued-op watermark the target must
+    /// reach before answering), the call blocks until every prior op is
+    /// target-visible and batch-acknowledged, and any NACK collected
+    /// since the last completion point surfaces as [`MpiErr::Rma`] (then
+    /// clears — the epoch continues clean under the same hold). Requires
+    /// a held lock, per MPI.
     pub fn win_flush(&self, win: &Window, target: u32) -> Result<()> {
         win.inner.comm.check_rank(target)?;
         if !win.inner.passive_holds_on(target) {
@@ -728,11 +1039,7 @@ impl Proc {
                 win.inner.id
             )));
         }
-        let route = self.passive_route(win, target)?;
-        let vci = self.vci(route.src_vci);
-        let cs = self.session_for_vci(route.src_vci);
-        self.progress_vci(vci, &cs);
-        Ok(())
+        self.flush_target(win, target)
     }
 
     /// `MPI_Win_flush_all`: [`Proc::win_flush`] over every target this
@@ -769,81 +1076,175 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
     // called while a window mutex is held: transmit can progress this VCI
     // and re-enter the handler.
     let respond = |dst: EpAddr, opcode: u8, token: u64, out: Vec<u8>| {
-        let rh = RmaHeader { opcode, dt: 0, rop: 0, win_id: h.win_id, offset: 0, token };
+        let rh = RmaHeader { opcode, dt: 0, rop: 0, win_id: h.win_id, offset: 0, token, hold: 0 };
         let renv =
             Envelope { ctx_id: env.ctx_id, src_rank: 0, tag: 0, src_idx: NO_INDEX, dst_idx: NO_INDEX };
         let packet = Packet::eager(renv, vci.addr(), rh.encode(&out));
         let _ = proc.transmit_retry(vci, cs, dst, packet);
     };
+    // Transmit a set of batcher emissions (decided under the batcher
+    // mutex, sent outside it).
+    let send_emits = |emits: Vec<Emit<EpAddr>>| {
+        for e in emits {
+            match e {
+                Emit::Batch { ep, entries } => {
+                    respond(ep, rma_op::ACK_BATCH, 0, rma_track::encode_batch(&entries))
+                }
+                Emit::FlushAck { ep, token } => respond(ep, rma_op::FLUSH_ACK, token, Vec::new()),
+            }
+        }
+    };
+    // Coverage check for incoming data ops: a nonzero hold token must
+    // name a *granted* lock held by the sender; token 0 claims the fence
+    // epoch, which must actually be open on this (the target's) side.
+    let coverage = |win: &WinTarget| -> Option<String> {
+        if h.hold != 0 {
+            if win.locks.lock().unwrap().is_held((env.src_rank, h.hold)) {
+                None
+            } else {
+                Some(format!(
+                    "operation from rank {} not covered: hold token {} names no granted lock \
+                     on window {}",
+                    env.src_rank, h.hold, h.win_id
+                ))
+            }
+        } else if win.fenced.load(Ordering::Acquire) {
+            None
+        } else {
+            Some(format!(
+                "operation from rank {} not covered: no fence epoch open on window {} and no \
+                 hold token supplied",
+                env.src_rank, h.win_id
+            ))
+        }
+    };
     match h.opcode {
-        rma_op::PUT | rma_op::ACC | rma_op::GET => {
+        rma_op::PUT | rma_op::ACC => {
+            // Deferred data op: apply (or reject), record the outcome in
+            // the ack batcher, and emit whatever the batcher decides —
+            // a full batch, a satisfied parked flush, usually nothing.
             let reg = proc.windows().lock().unwrap();
             let Some(win) = reg.get(&h.win_id).cloned() else {
-                return; // window freed — drop (failure-injection path)
+                drop(reg);
+                // Unknown window: a single-entry NACK batch, so the
+                // origin's tracker still drains (a silent drop would
+                // leave the op outstanding forever at the next flush).
+                let entry = AckEntry {
+                    token: h.token,
+                    err: Some(format!("window {} not registered at target", h.win_id)),
+                };
+                respond(reply_ep, rma_op::ACK_BATCH, 0, rma_track::encode_batch(&[entry]));
+                return;
             };
             drop(reg);
-            // The target validates independently of the origin — a
-            // malformed operation must NACK, never panic the progress
-            // context or scribble past the window.
-            let mut response = Vec::new();
-            let mut reject: Option<String> = None;
-            {
+            // The target validates independently of the origin — an
+            // uncovered or malformed operation must NACK, never panic
+            // the progress context or scribble past the window.
+            let mut reject: Option<String> = coverage(&win);
+            if reject.is_none() {
                 let mut buf = win.buf.lock().unwrap();
                 let off = h.offset as usize;
                 let buf_len = buf.len();
                 let in_bounds =
                     move |len: usize| off.checked_add(len).map_or(false, |end| end <= buf_len);
-                match h.opcode {
-                    rma_op::PUT => {
-                        if in_bounds(body.len()) {
-                            buf[off..off + body.len()].copy_from_slice(body);
-                        } else {
-                            reject = Some(format!(
-                                "put of {} bytes at {off} exceeds target window of {} bytes",
-                                body.len(),
-                                buf.len()
-                            ));
-                        }
+                if h.opcode == rma_op::PUT {
+                    if in_bounds(body.len()) {
+                        buf[off..off + body.len()].copy_from_slice(body);
+                    } else {
+                        reject = Some(format!(
+                            "put of {} bytes at {off} exceeds target window of {} bytes",
+                            body.len(),
+                            buf.len()
+                        ));
                     }
-                    rma_op::ACC => {
-                        if in_bounds(body.len()) {
-                            let dt = dt_from_code(h.dt);
-                            let op = rop_from_code(h.rop);
-                            if let Err(e) = op.apply(&dt, &mut buf[off..off + body.len()], body) {
-                                reject = Some(format!("accumulate rejected at target: {e}"));
-                            }
-                        } else {
-                            reject = Some(format!(
-                                "accumulate of {} bytes at {off} exceeds target window of {} bytes",
-                                body.len(),
-                                buf.len()
-                            ));
-                        }
+                } else if in_bounds(body.len()) {
+                    let dt = dt_from_code(h.dt);
+                    let op = rop_from_code(h.rop);
+                    if let Err(e) = op.apply(&dt, &mut buf[off..off + body.len()], body) {
+                        reject = Some(format!("accumulate rejected at target: {e}"));
                     }
-                    _ => {
-                        if body.len() < 8 {
-                            reject = Some("malformed get request".into());
-                        } else {
-                            let len = u64::from_le_bytes(body[..8].try_into().unwrap()) as usize;
-                            if in_bounds(len) {
-                                response = buf[off..off + len].to_vec();
-                            } else {
-                                reject = Some(format!(
-                                    "get of {len} bytes at {off} exceeds target window of {} bytes",
-                                    buf.len()
-                                ));
-                            }
-                        }
+                } else {
+                    reject = Some(format!(
+                        "accumulate of {} bytes at {off} exceeds target window of {} bytes",
+                        body.len(),
+                        buf.len()
+                    ));
+                }
+            }
+            let emits = win
+                .acks
+                .lock()
+                .unwrap()
+                .record(env.src_rank, reply_ep, AckEntry { token: h.token, err: reject });
+            send_emits(emits);
+        }
+        rma_op::GET => {
+            let reg = proc.windows().lock().unwrap();
+            let Some(win) = reg.get(&h.win_id).cloned() else {
+                return; // window freed — the synchronous caller times out via failure injection
+            };
+            drop(reg);
+            let mut response = Vec::new();
+            let mut reject: Option<String> = coverage(&win);
+            if reject.is_none() {
+                let buf = win.buf.lock().unwrap();
+                if body.len() < 8 {
+                    reject = Some("malformed get request".into());
+                } else {
+                    let off = h.offset as usize;
+                    let len = u64::from_le_bytes(body[..8].try_into().unwrap()) as usize;
+                    if off.checked_add(len).map_or(false, |end| end <= buf.len()) {
+                        response = buf[off..off + len].to_vec();
+                    } else {
+                        reject = Some(format!(
+                            "get of {len} bytes at {off} exceeds target window of {} bytes",
+                            buf.len()
+                        ));
                     }
                 }
             }
             let (opcode, out) = match reject {
                 Some(reason) => (rma_op::NACK, reason.into_bytes()),
-                None => {
-                    (if h.opcode == rma_op::GET { rma_op::DATA } else { rma_op::ACK }, response)
-                }
+                None => (rma_op::DATA, response),
             };
             respond(reply_ep, opcode, h.token, out);
+        }
+        rma_op::FLUSH_REQ => {
+            let reg = proc.windows().lock().unwrap();
+            let Some(win) = reg.get(&h.win_id).cloned() else {
+                drop(reg);
+                respond(
+                    reply_ep,
+                    rma_op::NACK,
+                    h.token,
+                    format!("flush for unknown window {}", h.win_id).into_bytes(),
+                );
+                return;
+            };
+            drop(reg);
+            let Some(required) = body.get(..8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+            else {
+                respond(reply_ep, rma_op::NACK, h.token, b"malformed flush request".to_vec());
+                return;
+            };
+            // Answered once this route's processed count reaches the
+            // origin's issued watermark; parked until then (woken by the
+            // data op that satisfies it).
+            let emits =
+                win.acks.lock().unwrap().flush(env.src_rank, reply_ep, h.token, required);
+            send_emits(emits);
+        }
+        rma_op::ACK_BATCH => {
+            // Origin side: batched completions land in the window's op
+            // tracker. A stale batch for a freed window is dropped.
+            let Some(entries) = rma_track::decode_batch(body) else { return };
+            let tracker = proc.rma_results().trackers.lock().unwrap().get(&h.win_id).cloned();
+            if let Some(tracker) = tracker {
+                let mut t = tracker.lock().unwrap();
+                for e in entries {
+                    t.ack(e);
+                }
+            }
         }
         rma_op::LOCK_REQ => {
             // The lock protocol NACKs instead of dropping on every
@@ -909,7 +1310,8 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 Err(reason) => respond(reply_ep, rma_op::NACK, h.token, reason.into_bytes()),
             }
         }
-        rma_op::ACK | rma_op::DATA | rma_op::LOCK_GRANT | rma_op::UNLOCK_ACK => {
+        rma_op::ACK | rma_op::DATA | rma_op::LOCK_GRANT | rma_op::UNLOCK_ACK
+        | rma_op::FLUSH_ACK => {
             proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Ok(body.to_vec()));
         }
         rma_op::NACK => {
@@ -1245,7 +1647,7 @@ mod tests {
         let send_raw = |opcode: u8, win_id: u32, token: u64, body: &[u8]| {
             let vci = p.vci(0);
             let cs = p.session_for_vci(0);
-            let h = RmaHeader { opcode, dt: 0, rop: 0, win_id, offset: 0, token };
+            let h = RmaHeader { opcode, dt: 0, rop: 0, win_id, offset: 0, token, hold: 0 };
             let env = Envelope {
                 ctx_id: RMA_CTX_BIT | win_id,
                 src_rank: 0,
@@ -1294,6 +1696,196 @@ mod tests {
         send_raw(rma_op::UNLOCK, win.id(), 995, &[]);
         assert!(take(win.id(), 995).is_ok(), "the real hold releases cleanly");
         p.win_free(win).unwrap();
+    }
+
+    /// Forge one raw RMA data packet (bypassing every origin-side check)
+    /// and pre-register its token so the batched NACK has somewhere to
+    /// land — the shape of the target-side-enforcement tests.
+    fn inject_raw_put(
+        p: &crate::mpi::world::Proc,
+        win: &Window,
+        offset: u64,
+        hold: u64,
+        body: &[u8],
+    ) -> u64 {
+        let token = win.next_token();
+        win.inner
+            .tracker
+            .lock()
+            .unwrap()
+            .issue(token, 0, Route { src_vci: 0, dst_rank: 0, dst_ep: 0 });
+        let h = RmaHeader {
+            opcode: rma_op::PUT,
+            dt: 0,
+            rop: 0,
+            win_id: win.inner.id,
+            offset,
+            token,
+            hold,
+        };
+        let env = Envelope {
+            ctx_id: RMA_CTX_BIT | win.inner.id,
+            src_rank: 0,
+            tag: 0,
+            src_idx: NO_INDEX,
+            dst_idx: NO_INDEX,
+        };
+        let vci = p.vci(0);
+        let cs = p.session_for_vci(0);
+        let pkt = Packet::eager(env, vci.addr(), h.encode(body));
+        p.transmit_retry(vci, &cs, EpAddr { rank: 0, ep: 0 }, pkt).unwrap();
+        token
+    }
+
+    #[test]
+    fn deferred_puts_batch_acks_on_the_wire() {
+        // The pipelining claim, observable at the packet level: N puts
+        // produce ~N/ACK_BATCH_OPS ack packets at the origin (plus one
+        // flush ack), not one ack per op as the old protocol did.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        const OPS: u64 = 40;
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 64], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let rx = || p.vci(0).ep().stats().snapshot().rx_rma_packets;
+                let before = rx();
+                for i in 0..OPS {
+                    p.put(&win, 1, 0, &[i as u8; 8])?;
+                }
+                p.win_fence(&win)?; // completion point
+                let delta = rx() - before;
+                let batches = OPS / crate::mpi::rma_track::ACK_BATCH_OPS as u64;
+                assert!(
+                    delta >= batches,
+                    "origin must receive at least the full batches ({delta} < {batches})"
+                );
+                assert!(
+                    delta <= batches + 2,
+                    "acks must be batched, not per-op ({delta} packets for {OPS} puts)"
+                );
+            } else {
+                p.win_fence(&win)?;
+                assert_eq!(
+                    &p.win_read_local(&win)?[..8],
+                    &[(OPS - 1) as u8; 8],
+                    "last put visible after the fence"
+                );
+            }
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn uncovered_data_op_is_nacked_by_the_target() {
+        // Target-side hold enforcement: the origin-side epoch check is
+        // bypassed with a raw packet, and the target must NACK an op
+        // covered by neither a fence epoch nor a granted lock — origin
+        // discipline is no longer the only line of defense. The NACK
+        // surfaces at the next completion point as MpiErr::Rma.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 16], p.world_comm()).unwrap();
+        // No fence, no lock: hold token 0 claims a fence epoch that is
+        // not open on the target side.
+        inject_raw_put(p, &win, 0, 0, &[7u8; 4]);
+        let err = p.win_fence(&win);
+        match err {
+            Err(MpiErr::Rma(msg)) => assert!(msg.contains("not covered"), "{msg}"),
+            other => panic!("expected Rma(not covered), got {other:?}"),
+        }
+        assert_eq!(p.win_read_local(&win).unwrap(), vec![0u8; 16], "rejected op wrote nothing");
+        // A hold token naming no granted lock is equally uncovered (the
+        // window is fenced now, so only the bogus-hold path is exercised).
+        inject_raw_put(p, &win, 0, 0xDEAD_BEEF, &[7u8; 4]);
+        let err = p.win_fence(&win);
+        match err {
+            Err(MpiErr::Rma(msg)) => assert!(msg.contains("names no granted lock"), "{msg}"),
+            other => panic!("expected Rma(no granted lock), got {other:?}"),
+        }
+        // Subsequent epochs are clean.
+        p.put(&win, 0, 0, &[9u8; 4]).unwrap();
+        p.win_fence(&win).unwrap();
+        let buf = p.win_free(win).unwrap();
+        assert_eq!(&buf[..4], &[9u8; 4]);
+    }
+
+    #[test]
+    fn target_nack_mid_pipeline_surfaces_at_unlock_and_next_epoch_is_clean() {
+        // A bounds-violating op in the middle of a pipelined burst (the
+        // origin-side check is bypassed with a raw packet carrying the
+        // epoch's real hold token): the surrounding good ops land, the
+        // error surfaces exactly once at the unlock, the lock is still
+        // released (waiters are not stranded behind a failed epoch), and
+        // the next epoch on the same window starts clean.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; 32], p.world_comm()).unwrap();
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        p.put(&win, 0, 0, &[1u8; 8]).unwrap();
+        let hold = win.inner.passive.lock().unwrap().held[&0][0].token;
+        inject_raw_put(p, &win, 1_000, hold, &[0xBAu8; 8]);
+        p.put(&win, 0, 8, &[2u8; 8]).unwrap();
+        let err = p.win_unlock(&win, 0);
+        match err {
+            Err(MpiErr::Rma(msg)) => assert!(msg.contains("exceeds"), "{msg}"),
+            other => panic!("expected the mid-pipeline NACK at unlock, got {other:?}"),
+        }
+        // The hold was released despite the error: a flush now reports
+        // the *missing lock*, not a stale epoch failure.
+        let err = p.win_flush(&win, 0);
+        assert!(matches!(err, Err(MpiErr::Rma(ref m)) if m.contains("without a held lock")));
+        let local = p.win_read_local(&win).unwrap();
+        assert_eq!(&local[..8], &[1u8; 8]);
+        assert_eq!(&local[8..16], &[2u8; 8]);
+        // Next epoch: clean flush, clean unlock.
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        p.put(&win, 0, 16, &[3u8; 8]).unwrap();
+        p.win_flush(&win, 0).unwrap();
+        p.win_unlock(&win, 0).unwrap();
+        let buf = p.win_free(win).unwrap();
+        assert_eq!(&buf[16..24], &[3u8; 8]);
+    }
+
+    #[test]
+    fn win_flush_blocks_until_puts_are_target_visible() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 256], p.world_comm())?;
+            if p.rank() == 0 {
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                for i in 0..20u8 {
+                    p.put(&win, 1, i as usize * 8, &[i; 8])?;
+                }
+                p.win_flush(&win, 1)?;
+                assert_eq!(
+                    win.inner.tracker.lock().unwrap().outstanding(1),
+                    0,
+                    "flush returned with ops still in flight"
+                );
+                // Target-visible: synchronous read-back sees every slot.
+                for i in 0..20u8 {
+                    assert_eq!(p.get(&win, 1, i as usize * 8, 8)?, vec![i; 8]);
+                }
+                p.win_unlock(&win, 1)?;
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+                let local = p.win_read_local(&win)?;
+                for i in 0..20u8 {
+                    assert_eq!(&local[i as usize * 8..i as usize * 8 + 8], &[i; 8]);
+                }
+            }
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

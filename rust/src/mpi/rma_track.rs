@@ -1,0 +1,444 @@
+//! Deferred-completion accounting for one-sided data operations.
+//!
+//! Since ISSUE 5, `put`/`accumulate` are no longer synchronously
+//! acknowledged: the origin transmits and returns, and completion is
+//! driven by the progress engine ("MPI Progress For All",
+//! arXiv:2405.13807) with `win_flush`/`win_unlock`/`win_fence` as the
+//! observable completion points (the flush-based contract of
+//! arXiv:2402.12274). Two state machines implement that, both kept free
+//! of wire/runtime types so they are unit- and property-testable in
+//! isolation (the `LockTable` discipline):
+//!
+//! * [`OpTracker`] — **origin side**, one per window: which op tokens are
+//!   in flight, how many ops were ever issued per (target, [`Route`])
+//!   (the count a flush request carries), and the per-target *sticky
+//!   first error* — a target NACK collected since the last completion
+//!   point, surfaced as `MpiErr::Rma` at the next one and then cleared,
+//!   so one epoch's failure never bleeds into the next. The error scope
+//!   is the (process, target) pair — MPI's unit of RMA completion:
+//!   `win_flush`/`win_unlock` complete *all* of the process's ops to
+//!   that target, so concurrent same-target epochs from multiple
+//!   threads share one completion scope, and whichever completion point
+//!   runs first consumes (and reports) the error.
+//! * [`AckBatcher`] — **target side**, one per window registration:
+//!   outcomes of processed data ops accumulate per (origin, reply
+//!   endpoint) and go out as one `ACK_BATCH` packet per
+//!   [`ACK_BATCH_OPS`] ops instead of one ack per op. A `FLUSH_REQ`
+//!   carries the origin's cumulative issued count for its route; the
+//!   batcher answers (pending batch + `FLUSH_ACK`) once it has processed
+//!   that many ops, *parking* early flushes — data ops issued from
+//!   several origin threads on one route may outrun the MPSC ring's
+//!   per-producer ordering, so a count watermark, not arrival order, is
+//!   the completion criterion.
+//!
+//! The wire body of an `ACK_BATCH` is produced/consumed by
+//! [`encode_batch`]/[`decode_batch`].
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Target-side ack coalescing factor: one `ACK_BATCH` packet per this
+/// many processed data ops (plus a final partial batch at each flush).
+pub const ACK_BATCH_OPS: usize = 8;
+
+/// Route identity of one origin data op: which local VCI issued it and
+/// which remote endpoint received it. Flush requests ride the same
+/// route(s) as the ops they complete, so conventional (implicit-pool)
+/// and stream-routed windows each keep their traffic on their own
+/// endpoints — the §5.1 / §4.3 routing split stays observable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Route {
+    pub src_vci: u16,
+    pub dst_rank: u32,
+    pub dst_ep: u16,
+}
+
+/// Target-recorded outcome of one deferred data op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AckEntry {
+    pub token: u64,
+    /// `None` = applied; `Some` = NACK reason (bounds violation, datatype
+    /// rejection, uncovered op, unknown window).
+    pub err: Option<String>,
+}
+
+/// Serialize a batch of ack entries into an `ACK_BATCH` wire body.
+pub fn encode_batch(entries: &[AckEntry]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + entries.len() * 9);
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        out.extend_from_slice(&e.token.to_le_bytes());
+        match &e.err {
+            None => out.push(0),
+            Some(msg) => {
+                out.push(1);
+                let bytes = msg.as_bytes();
+                out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+        }
+    }
+    out
+}
+
+/// Parse an `ACK_BATCH` wire body; `None` on a malformed buffer (the
+/// origin drops it rather than panicking its progress context).
+pub fn decode_batch(buf: &[u8]) -> Option<Vec<AckEntry>> {
+    fn take<'a>(buf: &'a [u8], at: &mut usize, n: usize) -> Option<&'a [u8]> {
+        let end = at.checked_add(n)?;
+        let s = buf.get(*at..end)?;
+        *at = end;
+        Some(s)
+    }
+    let mut at = 0usize;
+    let count = u32::from_le_bytes(take(buf, &mut at, 4)?.try_into().ok()?) as usize;
+    let mut out = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let token = u64::from_le_bytes(take(buf, &mut at, 8)?.try_into().ok()?);
+        let err = match take(buf, &mut at, 1)?[0] {
+            0 => None,
+            1 => {
+                let len = u32::from_le_bytes(take(buf, &mut at, 4)?.try_into().ok()?) as usize;
+                Some(String::from_utf8_lossy(take(buf, &mut at, len)?).into_owned())
+            }
+            _ => return None,
+        };
+        out.push(AckEntry { token, err });
+    }
+    if at == buf.len() {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// Origin-side per-window tracker of deferred data ops (see module docs).
+#[derive(Default)]
+pub struct OpTracker {
+    /// In-flight op tokens → (target comm rank, route).
+    inflight: HashMap<u64, (u32, Route)>,
+    /// Cumulative ops ever issued per (target, route) — monotone across
+    /// epochs; the watermark a flush request carries.
+    issued: HashMap<(u32, Route), u64>,
+    /// Sticky first error per target since the last completion point.
+    errs: HashMap<u32, String>,
+}
+
+impl OpTracker {
+    pub fn new() -> OpTracker {
+        OpTracker::default()
+    }
+
+    /// Register a deferred op *before* it is transmitted — an ack racing
+    /// the registration would otherwise be dropped as unknown and the
+    /// op counted outstanding forever.
+    pub fn issue(&mut self, token: u64, target: u32, route: Route) {
+        self.inflight.insert(token, (target, route));
+        *self.issued.entry((target, route)).or_insert(0) += 1;
+    }
+
+    /// Un-register an op whose transmit failed (nothing reached the
+    /// target, so no ack will ever come). Retracting the issued count is
+    /// the least-bad option: a flush request already in flight with the
+    /// pre-abort watermark can park unsatisfiably at the target — but a
+    /// transmit failure means the fabric survived ~10M backpressure
+    /// retries without the peer draining, i.e. the runtime is already in
+    /// a failure-injection regime where that flush could never have
+    /// completed anyway; keeping the count (or the token) would instead
+    /// hang *every* future flush on the route.
+    pub fn abort(&mut self, token: u64) {
+        if let Some((target, route)) = self.inflight.remove(&token) {
+            if let Some(n) = self.issued.get_mut(&(target, route)) {
+                *n -= 1;
+            }
+        }
+    }
+
+    /// Apply one batched ack entry. Returns whether the token was known
+    /// (unknown tokens — e.g. a stale batch after `win_free` — are
+    /// ignored by the caller).
+    pub fn ack(&mut self, entry: AckEntry) -> bool {
+        let Some((target, _)) = self.inflight.remove(&entry.token) else {
+            return false;
+        };
+        if let Some(err) = entry.err {
+            self.errs.entry(target).or_insert(err);
+        }
+        true
+    }
+
+    /// In-flight ops addressed to `target`.
+    pub fn outstanding(&self, target: u32) -> u64 {
+        self.inflight.values().filter(|(t, _)| *t == target).count() as u64
+    }
+
+    /// In-flight ops across every target.
+    pub fn outstanding_total(&self) -> u64 {
+        self.inflight.len() as u64
+    }
+
+    /// Sticky errors not yet surfaced at a completion point.
+    pub fn errs_pending(&self) -> u64 {
+        self.errs.len() as u64
+    }
+
+    /// Routes with at least one in-flight op to `target` — the routes a
+    /// flush must probe.
+    pub fn routes_outstanding(&self, target: u32) -> Vec<Route> {
+        let mut out: Vec<Route> = Vec::new();
+        for (t, r) in self.inflight.values() {
+            if *t == target && !out.contains(r) {
+                out.push(*r);
+            }
+        }
+        out
+    }
+
+    /// Cumulative issued count for (target, route) — the flush watermark.
+    pub fn issued_on(&self, target: u32, route: Route) -> u64 {
+        self.issued.get(&(target, route)).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of the in-flight tokens addressed to `target` (what a
+    /// flush must see drained before returning).
+    pub fn inflight_tokens(&self, target: u32) -> Vec<u64> {
+        self.inflight.iter().filter(|(_, (t, _))| *t == target).map(|(k, _)| *k).collect()
+    }
+
+    /// Is any of `tokens` still in flight?
+    pub fn any_inflight(&self, tokens: &[u64]) -> bool {
+        tokens.iter().any(|t| self.inflight.contains_key(t))
+    }
+
+    /// Targets with open deferred state: outstanding ops or an unsurfaced
+    /// sticky error — what `win_fence` must complete.
+    pub fn targets_open(&self) -> Vec<u32> {
+        let mut out: Vec<u32> = self.inflight.values().map(|(t, _)| *t).collect();
+        out.extend(self.errs.keys().copied());
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Take (and clear) the sticky error for `target` — the completion
+    /// point consuming its epoch's failure.
+    pub fn take_err(&mut self, target: u32) -> Option<String> {
+        self.errs.remove(&target)
+    }
+}
+
+/// One emission decided by the [`AckBatcher`]: a wire packet the target's
+/// progress context must send (outside the batcher's lock — transmitting
+/// can re-enter the progress engine).
+#[derive(Debug)]
+pub enum Emit<E> {
+    /// An `ACK_BATCH` to the origin endpoint `ep`.
+    Batch { ep: E, entries: Vec<AckEntry> },
+    /// A `FLUSH_ACK` answering flush token `token`.
+    FlushAck { ep: E, token: u64 },
+}
+
+struct ParkedFlush<E> {
+    origin: u32,
+    ep: E,
+    required: u64,
+    token: u64,
+}
+
+/// Target-side per-window ack batcher + flush watermarks (see module
+/// docs). `E` is the reply-endpoint metadata — `EpAddr` in the runtime,
+/// a plain id in the property tests.
+pub struct AckBatcher<E> {
+    /// Outcomes awaiting batch emission, per (origin rank, reply ep).
+    pending: HashMap<(u32, E), Vec<AckEntry>>,
+    /// Data ops ever processed per (origin rank, reply ep) — compared
+    /// against the flush watermark.
+    processed: HashMap<(u32, E), u64>,
+    /// Flushes that arrived before their watermark was reached.
+    parked: Vec<ParkedFlush<E>>,
+}
+
+impl<E: Copy + Eq + Hash> Default for AckBatcher<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Copy + Eq + Hash> AckBatcher<E> {
+    pub fn new() -> AckBatcher<E> {
+        AckBatcher { pending: HashMap::new(), processed: HashMap::new(), parked: Vec::new() }
+    }
+
+    /// Record the outcome of one processed data op; returns the packets
+    /// to emit now — a full batch when [`ACK_BATCH_OPS`] outcomes have
+    /// accumulated, plus any parked flush this op's count satisfies.
+    pub fn record(&mut self, origin: u32, ep: E, entry: AckEntry) -> Vec<Emit<E>> {
+        let key = (origin, ep);
+        *self.processed.entry(key).or_insert(0) += 1;
+        let pending = self.pending.entry(key).or_default();
+        pending.push(entry);
+        let mut out = Vec::new();
+        if pending.len() >= ACK_BATCH_OPS {
+            out.push(Emit::Batch { ep, entries: std::mem::take(pending) });
+        }
+        self.wake_parked(&mut out);
+        out
+    }
+
+    /// A flush request arrives: `required` is the origin's cumulative
+    /// issued count for this route. Answered immediately when the
+    /// processed count has caught up, parked otherwise (woken by a later
+    /// [`AckBatcher::record`]).
+    pub fn flush(&mut self, origin: u32, ep: E, token: u64, required: u64) -> Vec<Emit<E>> {
+        self.parked.push(ParkedFlush { origin, ep, required, token });
+        let mut out = Vec::new();
+        self.wake_parked(&mut out);
+        out
+    }
+
+    fn wake_parked(&mut self, out: &mut Vec<Emit<E>>) {
+        let mut i = 0;
+        while i < self.parked.len() {
+            let p = &self.parked[i];
+            let done = self.processed.get(&(p.origin, p.ep)).copied().unwrap_or(0);
+            if done >= p.required {
+                let p = self.parked.swap_remove(i);
+                if let Some(pending) = self.pending.get_mut(&(p.origin, p.ep)) {
+                    if !pending.is_empty() {
+                        out.push(Emit::Batch { ep: p.ep, entries: std::mem::take(pending) });
+                    }
+                }
+                out.push(Emit::FlushAck { ep: p.ep, token: p.token });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Outcomes awaiting emission for (origin, ep) — test observability.
+    pub fn pending_for(&self, origin: u32, ep: E) -> usize {
+        self.pending.get(&(origin, ep)).map_or(0, |v| v.len())
+    }
+
+    /// Parked (unanswered) flush requests — test observability.
+    pub fn parked_flushes(&self) -> usize {
+        self.parked.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn route(v: u16) -> Route {
+        Route { src_vci: v, dst_rank: 1, dst_ep: v }
+    }
+
+    #[test]
+    fn batch_body_roundtrips() {
+        let entries = vec![
+            AckEntry { token: 7, err: None },
+            AckEntry { token: 9, err: Some("out of bounds".into()) },
+            AckEntry { token: u64::MAX, err: None },
+        ];
+        assert_eq!(decode_batch(&encode_batch(&entries)).unwrap(), entries);
+        assert_eq!(decode_batch(&encode_batch(&[])).unwrap(), Vec::new());
+        // Malformed buffers are rejected, not panicked on.
+        assert!(decode_batch(&[1, 2, 3]).is_none());
+        let mut truncated = encode_batch(&entries);
+        truncated.pop();
+        assert!(decode_batch(&truncated).is_none());
+        let mut trailing = encode_batch(&entries);
+        trailing.push(0);
+        assert!(decode_batch(&trailing).is_none());
+    }
+
+    #[test]
+    fn tracker_counts_and_sticky_errors() {
+        let mut t = OpTracker::new();
+        t.issue(1, 0, route(0));
+        t.issue(2, 0, route(0));
+        t.issue(3, 1, route(1));
+        assert_eq!(t.outstanding(0), 2);
+        assert_eq!(t.outstanding_total(), 3);
+        assert_eq!(t.issued_on(0, route(0)), 2);
+        assert_eq!(t.routes_outstanding(0), vec![route(0)]);
+        assert!(t.any_inflight(&t.inflight_tokens(0)));
+        assert!(t.ack(AckEntry { token: 1, err: None }));
+        assert!(t.ack(AckEntry { token: 2, err: Some("boom".into()) }));
+        assert!(!t.ack(AckEntry { token: 99, err: None }), "stale token ignored");
+        assert_eq!(t.outstanding(0), 0);
+        // Issued counts stay monotone after completion (flush watermark).
+        assert_eq!(t.issued_on(0, route(0)), 2);
+        assert_eq!(t.errs_pending(), 1);
+        assert_eq!(t.take_err(0).as_deref(), Some("boom"));
+        assert_eq!(t.take_err(0), None, "completion point cleared the epoch's error");
+        // First error wins within an epoch.
+        t.issue(4, 0, route(0));
+        t.issue(5, 0, route(0));
+        t.ack(AckEntry { token: 4, err: Some("first".into()) });
+        t.ack(AckEntry { token: 5, err: Some("second".into()) });
+        assert_eq!(t.take_err(0).as_deref(), Some("first"));
+    }
+
+    #[test]
+    fn tracker_abort_unwinds_issue() {
+        let mut t = OpTracker::new();
+        t.issue(1, 2, route(0));
+        t.abort(1);
+        assert_eq!(t.outstanding(2), 0);
+        assert_eq!(t.issued_on(2, route(0)), 0, "aborted op must not raise the flush watermark");
+        assert!(t.targets_open().is_empty());
+    }
+
+    #[test]
+    fn batcher_emits_every_batch_size() {
+        let mut b: AckBatcher<u8> = AckBatcher::new();
+        for i in 0..ACK_BATCH_OPS as u64 - 1 {
+            assert!(b.record(0, 7, AckEntry { token: i, err: None }).is_empty());
+        }
+        let out = b.record(0, 7, AckEntry { token: 99, err: None });
+        assert_eq!(out.len(), 1);
+        let Emit::Batch { ep, entries } = &out[0] else { panic!("expected batch") };
+        assert_eq!(*ep, 7);
+        assert_eq!(entries.len(), ACK_BATCH_OPS);
+        assert_eq!(b.pending_for(0, 7), 0);
+    }
+
+    #[test]
+    fn flush_parks_until_watermark_then_drains_partial_batch() {
+        let mut b: AckBatcher<u8> = AckBatcher::new();
+        b.record(0, 1, AckEntry { token: 1, err: None });
+        // Origin has issued 3 ops; only 1 processed — the flush parks.
+        assert!(b.flush(0, 1, 100, 3).is_empty());
+        assert_eq!(b.parked_flushes(), 1);
+        assert!(b.record(0, 1, AckEntry { token: 2, err: None }).is_empty());
+        // The 3rd op satisfies the watermark: partial batch + flush ack.
+        let out = b.record(0, 1, AckEntry { token: 3, err: Some("late".into()) });
+        assert_eq!(out.len(), 2);
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == 3));
+        assert!(matches!(&out[1], Emit::FlushAck { ep: 1, token: 100 }));
+        assert_eq!(b.parked_flushes(), 0);
+        // A flush whose watermark is already met answers immediately.
+        let out = b.flush(0, 1, 101, 3);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(&out[0], Emit::FlushAck { token: 101, .. }));
+    }
+
+    #[test]
+    fn batcher_isolates_origins_and_routes() {
+        let mut b: AckBatcher<u8> = AckBatcher::new();
+        b.record(0, 1, AckEntry { token: 1, err: None });
+        b.record(0, 2, AckEntry { token: 2, err: None });
+        b.record(3, 1, AckEntry { token: 1, err: None });
+        // Each (origin, ep) pair accumulates independently.
+        assert_eq!(b.pending_for(0, 1), 1);
+        assert_eq!(b.pending_for(0, 2), 1);
+        assert_eq!(b.pending_for(3, 1), 1);
+        // A flush on (0, ep 1) is blind to the other buffers.
+        let out = b.flush(0, 1, 50, 1);
+        assert_eq!(out.len(), 2, "batch for (0,1) + flush ack");
+        assert_eq!(b.pending_for(0, 2), 1);
+        assert_eq!(b.pending_for(3, 1), 1);
+    }
+}

@@ -170,6 +170,15 @@ impl<M> LockTable<M> {
         self.holders.len()
     }
 
+    /// Is `key` among the current holders? The target-side coverage check
+    /// for incoming data ops: a deferred op arrives tagged with its
+    /// origin's hold token, and the token must name a granted, unreleased
+    /// lock — otherwise the op is NACKed instead of applied (closing the
+    /// origin-side-discipline-only gap).
+    pub fn is_held(&self, key: LockKey) -> bool {
+        self.holders.iter().any(|&(k, _)| k == key)
+    }
+
     /// Requests queued behind the current holders.
     pub fn queued(&self) -> usize {
         self.queue.len()
@@ -263,6 +272,20 @@ mod tests {
         assert_eq!(t.release(k(0, 1)).unwrap().len(), 1);
         assert_eq!(t.holders(), 1);
         assert_eq!(t.queued(), 0);
+    }
+
+    #[test]
+    fn is_held_tracks_grants_not_queued_waiters() {
+        let mut t: LockTable<()> = LockTable::new();
+        assert!(!t.is_held(k(0, 1)));
+        t.request(k(0, 1), LockType::Exclusive, ()).unwrap();
+        assert!(t.is_held(k(0, 1)));
+        // A queued waiter's token covers nothing yet.
+        t.request(k(1, 1), LockType::Exclusive, ()).unwrap();
+        assert!(!t.is_held(k(1, 1)));
+        t.release(k(0, 1)).unwrap();
+        assert!(!t.is_held(k(0, 1)));
+        assert!(t.is_held(k(1, 1)), "the grant woke the waiter");
     }
 
     #[test]

@@ -153,13 +153,24 @@ impl Proc {
     /// `cudaStreamSynchronize` with the enqueue error contract: block
     /// until everything enqueued on the communicator's GPU stream has
     /// executed, then surface the first failure recorded for the stream
-    /// (clearing it), if any.
+    /// (clearing it), if any. Also a *completion point* for deferred
+    /// one-sided ops registered on this stream by
+    /// [`Proc::put_enqueue`](crate::stream::rma): the windows they
+    /// touched are flushed here — enqueue RMA completes at
+    /// `synchronize_enqueue` or an explicit `win_flush`/`win_unlock`,
+    /// whichever comes first.
     pub fn synchronize_enqueue(&self, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
         gpu.synchronize()?;
-        match self.progress().take_error(gpu.id()) {
+        let lane_err = self.progress().take_error(gpu.id());
+        // The windows are completed either way; their NACKs are only
+        // *consumed* when this call can surface them — with a lane error
+        // to report instead, a consumed NACK would be dropped, so it
+        // stays sticky for the window's next completion point.
+        let flush = self.flush_enqueued_windows(gpu.id(), lane_err.is_none());
+        match lane_err {
             Some(e) => Err(e),
-            None => Ok(()),
+            None => flush,
         }
     }
 

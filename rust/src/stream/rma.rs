@@ -106,7 +106,13 @@ impl Proc {
     /// communicator's GPU stream (payload snapshotted at call time, like
     /// `MPIX_Send_enqueue`). Arguments are validated at call time; a
     /// runtime failure of the asynchronous operation surfaces at
-    /// [`Proc::synchronize_enqueue`].
+    /// [`Proc::synchronize_enqueue`]. The put itself is *deferred* (the
+    /// lane transmits and moves on, so enqueued puts pipeline on the
+    /// wire); the window is registered against the GPU stream and
+    /// flushed by `synchronize_enqueue` — or earlier by
+    /// `win_flush`/`win_unlock` — so the §4.3 contract "enqueue ops
+    /// complete at synchronize_enqueue or flush, whichever comes first"
+    /// holds.
     pub fn put_enqueue(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<()> {
         let gpu = enqueue_target(win.comm())?;
         win.comm().check_rank(target)?;
@@ -117,6 +123,15 @@ impl Proc {
                 win.size_at(target)
             )));
         }
+        // Registered before the op runs: synchronize_enqueue drains the
+        // GPU stream first, so by flush time the lane has issued the put.
+        self.rma_results()
+            .enqueue_flush
+            .lock()
+            .unwrap()
+            .entry(gpu.id())
+            .or_default()
+            .insert((win.id(), target), win.clone());
         let p = self.clone();
         let w = win.clone();
         let d = data.to_vec();
@@ -394,6 +409,45 @@ mod tests {
         p.put_enqueue(&win, 0, 0, b"late").unwrap();
         let err = p.synchronize_enqueue(&c);
         assert!(matches!(err, Err(MpiErr::Rma(_))), "expected epoch error, got {err:?}");
+        p.win_free(win).unwrap();
+        drop(c);
+        p.stream_free(s).unwrap();
+        dev.destroy_stream(&gs).unwrap();
+    }
+
+    #[test]
+    fn put_enqueue_completes_at_synchronize_enqueue() {
+        // The deferred puts issued by the lane are target-visible the
+        // moment synchronize_enqueue returns — no fence, no unlock:
+        // synchronize is itself a completion point for the windows this
+        // stream touched ("synchronize_enqueue or flush, whichever
+        // comes first").
+        let cfg = Config { implicit_pool: 1, explicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(1).config(cfg).build().unwrap();
+        let p = w.proc(0);
+        let dev = p.gpu();
+        let gs = dev.create_stream();
+        let mut info = Info::new();
+        info.set("type", "cudaStream_t");
+        info.set_hex_u64("value", gs.id());
+        let s = p.stream_create(&info).unwrap();
+        let c = p.stream_comm_create(p.world_comm(), Some(&s)).unwrap();
+        let win = p.win_create(vec![0u8; 32], &c).unwrap();
+        p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+        for i in 0..5u8 {
+            p.put_enqueue(&win, 0, i as usize * 4, &[i + 1; 4]).unwrap();
+        }
+        p.synchronize_enqueue(&c).unwrap();
+        // Visible now, with the lock still held.
+        let local = p.win_read_local(&win).unwrap();
+        for i in 0..5u8 {
+            assert_eq!(
+                &local[i as usize * 4..i as usize * 4 + 4],
+                &[i + 1; 4],
+                "slot {i} not published at synchronize_enqueue"
+            );
+        }
+        p.win_unlock(&win, 0).unwrap();
         p.win_free(win).unwrap();
         drop(c);
         p.stream_free(s).unwrap();

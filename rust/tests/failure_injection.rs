@@ -312,6 +312,75 @@ fn concurrent_rma_on_two_windows_does_not_cross_tokens() {
     .unwrap();
 }
 
+#[test]
+fn win_free_with_outstanding_deferred_ops_fails_on_every_rank_then_recovers() {
+    // Deferred completion: a put is in flight until a completion point.
+    // Freeing the window with deferred ops outstanding must refuse on
+    // EVERY rank (the check is part of the free's allreduce) and name
+    // the recovery; a fence completes the ops and the free succeeds with
+    // the put applied.
+    let w = World::with_ranks(2).unwrap();
+    w.run(|p| {
+        let win = p.win_create(vec![0u8; 32], p.world_comm())?;
+        p.win_fence(&win)?;
+        if p.rank() == 0 {
+            p.put(&win, 1, 0, &[5u8; 8])?;
+        }
+        let clone = win.clone();
+        let err = p.win_free(win);
+        assert!(
+            matches!(err, Err(MpiErr::Rma(_))),
+            "outstanding deferred ops must refuse the free: {err:?}"
+        );
+        p.win_fence(&clone)?; // completion point
+        let buf = p.win_free(clone)?;
+        if p.rank() == 1 {
+            assert_eq!(&buf[..8], &[5u8; 8], "the deferred put completed before the free");
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn pipelined_epochs_hand_off_consistent_snapshots_under_contention() {
+    // Two threads alternate exclusive write epochs (4 pipelined puts,
+    // no explicit flush — the unlock is the completion point) with
+    // shared read epochs on the same window. Every read under a shared
+    // lock must observe a uniform snapshot of SOME completed epoch: a
+    // torn mix would mean the unlock released the lock before its
+    // pipelined puts were target-visible.
+    let w = World::with_ranks(1).unwrap();
+    let p = w.proc(0);
+    let win = p.win_create(vec![0u8; 64], p.world_comm()).unwrap();
+    std::thread::scope(|s| {
+        for t in 0..2u8 {
+            let p = p.clone();
+            let win = win.clone();
+            s.spawn(move || {
+                use mpix::mpi::rma::LockType;
+                for round in 0..20u8 {
+                    p.win_lock(&win, 0, LockType::Exclusive).unwrap();
+                    let stamp = t.wrapping_mul(100).wrapping_add(round).wrapping_add(1);
+                    for slot in 0..4usize {
+                        p.put(&win, 0, slot * 16, &[stamp; 16]).unwrap();
+                    }
+                    p.win_unlock(&win, 0).unwrap();
+                    p.win_lock(&win, 0, LockType::Shared).unwrap();
+                    let got = p.get(&win, 0, 0, 64).unwrap();
+                    let first = got[0];
+                    assert!(
+                        got.iter().all(|&b| b == first),
+                        "torn epoch visible after unlock: {got:?}"
+                    );
+                    p.win_unlock(&win, 0).unwrap();
+                }
+            });
+        }
+    });
+    p.win_free(win).unwrap();
+}
+
 // ----------------------------------------------------------------------
 // Partitioned misuse & races
 // ----------------------------------------------------------------------

@@ -34,6 +34,25 @@ impl Rng {
     }
 }
 
+/// Case-count knob for the seeded property suites: per-PR CI runs the
+/// defaults; the nightly `property-stress` job sets `PALLAS_PROP_ITERS`
+/// (e.g. 2000) to sweep far more randomized schedules.
+fn prop_cases(default_cases: u64) -> u64 {
+    std::env::var("PALLAS_PROP_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(default_cases)
+}
+
+/// Persist a delta-debugged minimal repro where the `property-stress`
+/// workflow can upload it as an artifact; returns the path for the panic
+/// message. Best-effort — a read-only FS must not mask the real failure.
+fn dump_repro(name: &str, contents: &str) -> String {
+    let dir =
+        std::env::var("PALLAS_PROP_REPRO_DIR").unwrap_or_else(|_| "target/prop-repro".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/{name}.txt");
+    let _ = std::fs::write(&path, contents);
+    path
+}
+
 // ----------------------------------------------------------------------
 // Matching order
 // ----------------------------------------------------------------------
@@ -409,7 +428,7 @@ fn shrink_matching_case(nstreams: u8, ntags: u8, schedule: Vec<MatchEv>) -> Vec<
 #[test]
 fn prop_matching_fifo_per_source_tag_with_shrinking() {
     let mut rng = Rng::new(0xF1F0_0D1E);
-    for case in 0..16 {
+    for case in 0..prop_cases(16) {
         let nstreams = 2 + rng.below(3) as u8; // 2..=4 sender streams
         let ntags = 1 + rng.below(3) as u8; // 1..=3 tags
         let npairs = nstreams as usize * ntags as usize;
@@ -442,9 +461,13 @@ fn prop_matching_fifo_per_source_tag_with_shrinking() {
         }
         if let Err(msg) = run_matching_case(nstreams, ntags, &schedule) {
             let minimal = shrink_matching_case(nstreams, ntags, schedule);
+            let path = dump_repro(
+                "matching-fifo",
+                &format!("{nstreams} streams x {ntags} tags\n{msg}\n{minimal:?}\n"),
+            );
             panic!(
                 "case {case} ({nstreams} streams x {ntags} tags): {msg}\n\
-                 minimal failing schedule ({} events): {minimal:?}",
+                 minimal failing schedule ({} events, saved to {path}): {minimal:?}",
                 minimal.len()
             );
         }
@@ -631,7 +654,7 @@ fn shrink_lock_case(nstreams: u8, schedule: Vec<LockEv>) -> Vec<LockEv> {
 #[test]
 fn prop_lock_table_fifo_and_exclusion_with_shrinking() {
     let mut rng = Rng::new(0x10C4_7AB1);
-    for case in 0..24 {
+    for case in 0..prop_cases(24) {
         let nstreams = 2 + rng.below(3) as u8; // 2..=4 contending streams
         let len = 8 + rng.below(48) as usize;
         let mut schedule = Vec::with_capacity(len);
@@ -645,12 +668,421 @@ fn prop_lock_table_fifo_and_exclusion_with_shrinking() {
         }
         if let Err(msg) = run_lock_case(nstreams, &schedule) {
             let minimal = shrink_lock_case(nstreams, schedule);
+            let path =
+                dump_repro("lock-table", &format!("{nstreams} streams\n{msg}\n{minimal:?}\n"));
             panic!(
                 "case {case} ({nstreams} streams): {msg}\n\
-                 minimal failing schedule ({} events): {minimal:?}",
+                 minimal failing schedule ({} events, saved to {path}): {minimal:?}",
                 minimal.len()
             );
         }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Deferred-completion tracker + ack batcher — seeded, shrinking
+// ----------------------------------------------------------------------
+
+use mpix::mpi::rma_track::{AckBatcher, AckEntry, Emit, OpTracker, Route};
+
+/// One step of a randomized deferred-completion schedule: 2–4 origin
+/// threads (sharing two issue routes, like host + lane traffic on two
+/// VCIs) interleave pipelined puts and completion points against 1–2
+/// targets, while `Deliver`/`Drain` events move the target's processing
+/// and the origin's ack absorption to arbitrary interleaving points —
+/// including the cross-thread same-route reordering that makes the
+/// count-watermark (not arrival order) the flush criterion.
+#[derive(Clone, Copy, Debug)]
+enum DeferEv {
+    /// Thread issues a deferred put; `bad` ops are NACKed when the
+    /// target processes them.
+    Put { thread: u8, target: u8, bad: bool },
+    /// The target processes one queued op packet (`pick` selects among
+    /// the non-empty per-(route, thread) wire lanes, deterministically).
+    Deliver { target: u8, pick: u8 },
+    /// The origin absorbs one pending ack emission.
+    Drain,
+    /// A completion point on `target` (the win_flush/win_unlock shape):
+    /// flush requests at the current per-route watermarks, then drive
+    /// deliveries and drains until every prior op is acknowledged.
+    Flush { target: u8 },
+}
+
+/// Drive one schedule through an [`OpTracker`] + per-target
+/// [`AckBatcher`] pair over a modeled wire (FIFO per (target, route,
+/// producer) — the MPSC ring's per-producer guarantee, and nothing
+/// more) and verify the deferred-completion contract:
+///
+/// 1. **Flush completeness** — a completion point returns only after
+///    every op issued to its target beforehand is target-processed and
+///    acknowledged (no token from the flush-time snapshot survives).
+/// 2. **No ack lost / duplicated** — every issued op is acknowledged
+///    exactly once; the final drain leaves nothing in flight.
+/// 3. **Epoch-scoped sticky errors** — a completion point reports an
+///    error iff a bad op was issued to that target since the previous
+///    completion point, and consuming it leaves the next epoch clean.
+fn run_defer_case(nthreads: u8, ntargets: u8, schedule: &[DeferEv]) -> Result<(), String> {
+    use std::collections::{HashMap, HashSet, VecDeque};
+
+    #[derive(Clone, Copy)]
+    enum Wire {
+        Op { token: u64, bad: bool },
+        Flush { token: u64, required: u64 },
+    }
+
+    // Two issue routes shared by the threads (thread parity), mirroring
+    // host-path + lane-path traffic: route id doubles as the batcher's
+    // reply-endpoint metadata.
+    let route_id = |thread: u8| thread % 2;
+    let mk_route = |target: u8, thread: u8| Route {
+        src_vci: route_id(thread) as u16,
+        dst_rank: target as u32,
+        dst_ep: route_id(thread) as u16,
+    };
+    // The flusher transmits on the op route but is its own producer lane
+    // (per-producer FIFO does not order it behind other threads' ops).
+    let flusher_lane = nthreads;
+
+    let mut tracker = OpTracker::new();
+    let mut batchers: Vec<AckBatcher<u8>> = (0..ntargets).map(|_| AckBatcher::new()).collect();
+    // Wire lanes: (target, route, producer) -> FIFO of packets.
+    let mut lanes: HashMap<(u8, u8, u8), VecDeque<Wire>> = HashMap::new();
+    // Ack emissions in flight back to the origin (order-preserving).
+    let mut acks: VecDeque<Emit<u8>> = VecDeque::new();
+    let mut flush_done: HashSet<u64> = HashSet::new();
+
+    let mut next_token = 1u64;
+    let mut next_flush = 1u64 << 32; // disjoint from op tokens
+    let mut issued = 0u64;
+    let mut acked = 0u64;
+    let mut bad_of: HashMap<u64, bool> = HashMap::new();
+    let mut bad_pending: Vec<u64> = vec![0; ntargets as usize];
+
+    // Apply one ack emission at the origin.
+    fn absorb(
+        em: Emit<u8>,
+        tracker: &mut OpTracker,
+        flush_done: &mut HashSet<u64>,
+        bad_of: &HashMap<u64, bool>,
+        acked: &mut u64,
+    ) -> Result<(), String> {
+        match em {
+            Emit::Batch { entries, .. } => {
+                for e in entries {
+                    let was_bad = *bad_of.get(&e.token).ok_or("ack for a never-issued token")?;
+                    if e.err.is_some() != was_bad {
+                        return Err(format!(
+                            "token {} acked with err={:?} but bad={was_bad}",
+                            e.token, e.err
+                        ));
+                    }
+                    if !tracker.ack(e) {
+                        return Err("duplicate or unknown ack (token not in flight)".into());
+                    }
+                    *acked += 1;
+                }
+            }
+            Emit::FlushAck { token, .. } => {
+                if !flush_done.insert(token) {
+                    return Err("duplicate flush ack".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // Deliver one packet from lane `key` into the target's batcher.
+    fn deliver(
+        key: (u8, u8, u8),
+        lanes: &mut HashMap<(u8, u8, u8), VecDeque<Wire>>,
+        batchers: &mut [AckBatcher<u8>],
+        acks: &mut VecDeque<Emit<u8>>,
+    ) {
+        let Some(q) = lanes.get_mut(&key) else { return };
+        let Some(pkt) = q.pop_front() else { return };
+        if q.is_empty() {
+            lanes.remove(&key);
+        }
+        let (target, route) = (key.0, key.1);
+        let emits = match pkt {
+            Wire::Op { token, bad } => batchers[target as usize].record(
+                0,
+                route,
+                AckEntry { token, err: bad.then(|| "injected failure".to_string()) },
+            ),
+            Wire::Flush { token, required } => {
+                batchers[target as usize].flush(0, route, token, required)
+            }
+        };
+        acks.extend(emits);
+    }
+
+    // Sorted non-empty lanes for a target — the deterministic pick space.
+    fn lane_keys(
+        target: u8,
+        lanes: &HashMap<(u8, u8, u8), VecDeque<Wire>>,
+    ) -> Vec<(u8, u8, u8)> {
+        let mut keys: Vec<(u8, u8, u8)> =
+            lanes.keys().copied().filter(|k| k.0 == target).collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    // One completion point, driven to quiescence for `target`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_flush(
+        target: u8,
+        flusher_lane: u8,
+        next_flush: &mut u64,
+        tracker: &mut OpTracker,
+        batchers: &mut [AckBatcher<u8>],
+        lanes: &mut HashMap<(u8, u8, u8), VecDeque<Wire>>,
+        acks: &mut VecDeque<Emit<u8>>,
+        flush_done: &mut HashSet<u64>,
+        bad_of: &HashMap<u64, bool>,
+        acked: &mut u64,
+    ) -> Result<Option<String>, String> {
+        let tgt = target as u32;
+        let snapshot = tracker.inflight_tokens(tgt);
+        let mut awaiting = Vec::new();
+        for r in tracker.routes_outstanding(tgt) {
+            let required = tracker.issued_on(tgt, r);
+            let token = *next_flush;
+            *next_flush += 1;
+            lanes
+                .entry((target, r.src_vci as u8, flusher_lane))
+                .or_default()
+                .push_back(Wire::Flush { token, required });
+            awaiting.push(token);
+        }
+        let mut guard = 0u32;
+        while !awaiting.iter().all(|t| flush_done.contains(t))
+            || tracker.any_inflight(&snapshot)
+        {
+            guard += 1;
+            if guard > 1_000_000 {
+                return Err("flush livelock (watermark never satisfied)".into());
+            }
+            let keys = lane_keys(target, lanes);
+            if keys.is_empty() && acks.is_empty() {
+                return Err(format!(
+                    "flush stuck: nothing left to deliver but {} op(s) unacknowledged",
+                    snapshot.iter().filter(|t| tracker.any_inflight(&[**t])).count()
+                ));
+            }
+            for k in keys {
+                deliver(k, lanes, batchers, acks);
+            }
+            while let Some(em) = acks.pop_front() {
+                absorb(em, tracker, flush_done, bad_of, acked)?;
+            }
+        }
+        if tracker.outstanding(tgt) != 0 {
+            return Err("flush returned with ops still in flight".into());
+        }
+        Ok(tracker.take_err(tgt))
+    }
+
+    for ev in schedule {
+        match *ev {
+            DeferEv::Put { thread, target, bad } => {
+                if thread >= nthreads || target >= ntargets {
+                    continue; // shrink artifacts keep sub-schedules valid
+                }
+                let token = next_token;
+                next_token += 1;
+                tracker.issue(token, target as u32, mk_route(target, thread));
+                lanes
+                    .entry((target, route_id(thread), thread))
+                    .or_default()
+                    .push_back(Wire::Op { token, bad });
+                issued += 1;
+                bad_of.insert(token, bad);
+                if bad {
+                    bad_pending[target as usize] += 1;
+                }
+            }
+            DeferEv::Deliver { target, pick } => {
+                let keys = lane_keys(target, &lanes);
+                if keys.is_empty() {
+                    continue;
+                }
+                let k = keys[pick as usize % keys.len()];
+                deliver(k, &mut lanes, &mut batchers, &mut acks);
+            }
+            DeferEv::Drain => {
+                if let Some(em) = acks.pop_front() {
+                    absorb(em, &mut tracker, &mut flush_done, &bad_of, &mut acked)?;
+                }
+            }
+            DeferEv::Flush { target } => {
+                if target >= ntargets {
+                    continue;
+                }
+                let err = run_flush(
+                    target,
+                    flusher_lane,
+                    &mut next_flush,
+                    &mut tracker,
+                    &mut batchers,
+                    &mut lanes,
+                    &mut acks,
+                    &mut flush_done,
+                    &bad_of,
+                    &mut acked,
+                )?;
+                let expect = bad_pending[target as usize] > 0;
+                if err.is_some() != expect {
+                    return Err(format!(
+                        "sticky error leaked across epochs: completion point on target \
+                         {target} reported {err:?} but {} bad op(s) belonged to this epoch",
+                        bad_pending[target as usize]
+                    ));
+                }
+                bad_pending[target as usize] = 0;
+            }
+        }
+    }
+
+    // Final completion point per target: everything must drain.
+    for target in 0..ntargets {
+        let err = run_flush(
+            target,
+            flusher_lane,
+            &mut next_flush,
+            &mut tracker,
+            &mut batchers,
+            &mut lanes,
+            &mut acks,
+            &mut flush_done,
+            &bad_of,
+            &mut acked,
+        )?;
+        if err.is_some() != (bad_pending[target as usize] > 0) {
+            return Err("final completion point mis-reported its epoch's errors".into());
+        }
+    }
+    if tracker.outstanding_total() != 0 {
+        return Err("ops still in flight after every completion point".into());
+    }
+    if acked != issued {
+        return Err(format!("{issued} op(s) issued but {acked} acknowledged — acks lost"));
+    }
+    if tracker.errs_pending() != 0 {
+        return Err("unsurfaced sticky errors left behind".into());
+    }
+    Ok(())
+}
+
+/// Delta-debugging shrink, same shape as `shrink_matching_case`.
+fn shrink_defer_case(nthreads: u8, ntargets: u8, schedule: Vec<DeferEv>) -> Vec<DeferEv> {
+    let mut cur = schedule;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            if run_defer_case(nthreads, ntargets, &cand).is_err() {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            return cur;
+        }
+        chunk /= 2;
+    }
+}
+
+/// Randomized interleavings of pipelined puts, deliveries, ack drains
+/// and completion points across 2–4 origin threads and 1–2 targets:
+/// flush returns only after every prior op is target-visible, no ack is
+/// lost or duplicated, and sticky errors land on the op's epoch and not
+/// a neighbor's — with failing schedules shrunk to a minimal repro (the
+/// PR 3/4 property style; `PALLAS_PROP_ITERS` scales the sweep).
+#[test]
+fn prop_deferred_completion_flush_acks_and_epoch_errors_with_shrinking() {
+    let mut rng = Rng::new(0xACED_F1A5);
+    for case in 0..prop_cases(20) {
+        let nthreads = 2 + rng.below(3) as u8; // 2..=4 origin threads
+        let ntargets = 1 + rng.below(2) as u8; // 1..=2 targets
+        let len = 12 + rng.below(72) as usize;
+        let mut schedule = Vec::with_capacity(len);
+        for _ in 0..len {
+            schedule.push(match rng.below(10) {
+                0..=3 => DeferEv::Put {
+                    thread: rng.below(nthreads as u64) as u8,
+                    target: rng.below(ntargets as u64) as u8,
+                    bad: rng.below(8) == 0,
+                },
+                4..=6 => DeferEv::Deliver {
+                    target: rng.below(ntargets as u64) as u8,
+                    pick: rng.below(8) as u8,
+                },
+                7..=8 => DeferEv::Drain,
+                _ => DeferEv::Flush { target: rng.below(ntargets as u64) as u8 },
+            });
+        }
+        if let Err(msg) = run_defer_case(nthreads, ntargets, &schedule) {
+            let minimal = shrink_defer_case(nthreads, ntargets, schedule);
+            let path = dump_repro(
+                "deferred-completion",
+                &format!("{nthreads} threads x {ntargets} targets\n{msg}\n{minimal:?}\n"),
+            );
+            panic!(
+                "case {case} ({nthreads} threads x {ntargets} targets): {msg}\n\
+                 minimal failing schedule ({} events, saved to {path}): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+/// End-to-end mirror of the model property: 2–4 real origin threads
+/// interleave put/get/flush/unlock epochs against one self-target
+/// window (each thread owns a disjoint region), seeded per thread.
+/// After every flush the issuing thread's last put must read back
+/// (target visibility with the lock still held); teardown finds nothing
+/// outstanding.
+#[test]
+fn prop_concurrent_put_get_flush_unlock_epochs() {
+    let mut rng = Rng::new(0xD3F3_77ED);
+    for _ in 0..prop_cases(6) {
+        let nthreads = 2 + rng.below(3) as usize;
+        let epochs = 4 + rng.below(8);
+        let seed = rng.next();
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        let win = p.win_create(vec![0u8; nthreads * 256], p.world_comm()).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let p = p.clone();
+                let win = win.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (t as u64 + 1));
+                    let base = t * 256;
+                    for e in 0..epochs {
+                        p.win_lock(&win, 0, LockType::Shared).unwrap();
+                        let burst = 1 + rng.below(6);
+                        let mut last_slot = 0usize;
+                        let mut last = 0u8;
+                        for i in 0..burst {
+                            last = (e * 31 + i + 1) as u8;
+                            last_slot = base + (i as usize % 4) * 32;
+                            p.put(&win, 0, last_slot, &[last; 32]).unwrap();
+                        }
+                        p.win_flush(&win, 0).unwrap();
+                        let got = p.get(&win, 0, last_slot, 32).unwrap();
+                        assert_eq!(got, vec![last; 32], "flush did not publish the last put");
+                        p.win_unlock(&win, 0).unwrap();
+                    }
+                });
+            }
+        });
+        p.win_free(win).unwrap();
     }
 }
 
