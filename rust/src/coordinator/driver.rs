@@ -15,7 +15,8 @@
 //! 1-core testbed it provides the *calibration constants* the virtual-time
 //! replay in [`crate::sim`] uses (see DESIGN.md §5).
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::{Config, EnqueueMode};
@@ -23,7 +24,7 @@ use crate::error::{MpiErr, Result};
 use crate::mpi::comm::Comm;
 use crate::mpi::info::Info;
 use crate::mpi::world::{Proc, World};
-use crate::stream::ANY_INDEX;
+use crate::stream::{MpixStream, ANY_INDEX};
 
 /// Which Fig.-3 configuration to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +71,24 @@ pub struct MsgrateResult {
     /// Mean nanoseconds per message per thread (the DES calibration
     /// constant).
     pub ns_per_msg: f64,
+    /// Contended lock acquisitions attributed to endpoints during the
+    /// timed phase, summed across every endpoint of both ranks (see
+    /// [`crate::fabric::endpoint::EpStats::lock_waits`]).
+    pub lock_waits: u64,
+}
+
+/// Zero every endpoint counter on `p`'s rank (both the implicit pool and
+/// the explicit stream pool) so a following measurement window starts
+/// clean.
+fn reset_ep_stats(p: &Proc) {
+    for i in 0..p.vci_count() {
+        p.vci(i as u16).ep().stats().reset();
+    }
+}
+
+/// Sum `lock_waits` over `p`'s endpoints in `range` (VCI indices).
+fn sum_lock_waits(p: &Proc, range: std::ops::Range<usize>) -> u64 {
+    range.map(|i| p.vci(i as u16).ep().stats().snapshot().lock_waits).sum()
 }
 
 /// Run the Figure-3 microbenchmark live: `threads` thread pairs exchange
@@ -85,6 +104,7 @@ pub fn msgrate_live(
     let cfg = mode.config(threads);
     let world = World::builder().ranks(2).config(cfg).build()?;
     let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+    let waits_total = AtomicU64::new(0);
 
     world.run(|p| {
         // --- setup: one communicator per thread (outside the timing) ---
@@ -104,6 +124,9 @@ pub fn msgrate_live(
                 }
             }
         }
+        // Setup traffic (dups, stream-comm collectives) is not part of
+        // the measurement: zero the endpoint counters on both ranks.
+        reset_ep_stats(p);
         p.barrier(p.world_comm())?;
 
         // --- timed phase ---
@@ -121,6 +144,7 @@ pub fn msgrate_live(
         if p.rank() == 0 {
             *elapsed_slot.lock().unwrap() = Some(dt);
         }
+        waits_total.fetch_add(sum_lock_waits(p, 0..p.vci_count()), Ordering::Relaxed);
 
         // --- teardown ---
         drop(comms);
@@ -143,6 +167,124 @@ pub fn msgrate_live(
         elapsed,
         rate,
         ns_per_msg: elapsed.as_nanos() as f64 / msgs as f64,
+        lock_waits: waits_total.load(Ordering::Relaxed),
+    })
+}
+
+/// Result of a thread-mapped message-rate run ([`msgrate_live_thread_mapped`]).
+#[derive(Debug, Clone)]
+pub struct ThreadMappedResult {
+    pub threads: usize,
+    pub total_msgs: u64,
+    pub elapsed: Duration,
+    /// Total messages per second across all threads.
+    pub rate: f64,
+    /// Mean nanoseconds per message per thread (the replay calibration
+    /// constant).
+    pub ns_per_msg: f64,
+    /// Contended lock acquisitions attributed to *explicit-pool*
+    /// endpoints during the timed phase, summed across both ranks. With
+    /// every thread on its own dedicated VCI this must be exactly 0 —
+    /// the lock-free hot-path claim the `msgrate/thread-mapped` scenario
+    /// gates on.
+    pub explicit_lock_waits: u64,
+    /// Same sum over the implicit pool (context: the cold fallback path
+    /// is allowed to contend).
+    pub implicit_lock_waits: u64,
+}
+
+/// The Figure-3 microbenchmark driven through **thread-mapped streams**:
+/// each worker binds its stream with [`Proc::stream_for_current_thread`]
+/// from inside its own OS thread (instead of the main thread creating
+/// streams up front), then runs the same windowed isend/irecv loop as
+/// [`msgrate_live`]. Stream-comm creation is collective, so the main
+/// thread performs it — in deterministic order — once every worker has
+/// registered its stream; workers drop their comms before exiting so
+/// thread-exit reclamation returns every VCI lease to the pool.
+pub fn msgrate_live_thread_mapped(
+    threads: usize,
+    msgs: u64,
+    window: usize,
+    size: usize,
+) -> Result<ThreadMappedResult> {
+    let cfg = MsgrateMode::Stream.config(threads);
+    let implicit = cfg.implicit_pool;
+    let world = World::builder().ranks(2).config(cfg).build()?;
+    let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+    let explicit_waits = AtomicU64::new(0);
+    let implicit_waits = AtomicU64::new(0);
+
+    world.run(|p| {
+        // Rendezvous points: workers register streams -> main builds the
+        // comms (collective) -> workers run traffic.
+        let ready = Barrier::new(threads + 1);
+        let go = Barrier::new(threads + 1);
+        let streams: Vec<Mutex<Option<MpixStream>>> =
+            (0..threads).map(|_| Mutex::new(None)).collect();
+        let comms: Vec<Mutex<Option<Comm>>> = (0..threads).map(|_| Mutex::new(None)).collect();
+        let t0_cell: Mutex<Option<Instant>> = Mutex::new(None);
+
+        std::thread::scope(|sc| -> Result<()> {
+            for i in 0..threads {
+                let p = p.clone();
+                let (ready, go, streams, comms) = (&ready, &go, &streams, &comms);
+                sc.spawn(move || {
+                    let s = p.stream_for_current_thread().expect("thread-mapped stream");
+                    *streams[i].lock().unwrap() = Some(s);
+                    ready.wait();
+                    go.wait();
+                    // The worker owns its comm for the traffic phase and
+                    // drops it before exiting, so the stream's only
+                    // surviving handle at thread exit is the registry's —
+                    // reclamation then frees the lease.
+                    let c = comms[i].lock().unwrap().take().expect("comm distributed");
+                    thread_body(&p, &c, i as i32, msgs, window, size);
+                });
+            }
+            ready.wait();
+            // Collective creation in worker order on the main thread;
+            // both ranks iterate identically, so the collectives match.
+            for i in 0..threads {
+                let s = streams[i].lock().unwrap().clone().expect("stream registered");
+                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                *comms[i].lock().unwrap() = Some(c);
+                // Drop the main thread's handle: only the registry and the
+                // comm keep the stream alive from here on.
+                *streams[i].lock().unwrap() = None;
+                drop(s);
+            }
+            p.barrier(p.world_comm())?;
+            reset_ep_stats(p);
+            *t0_cell.lock().unwrap() = Some(Instant::now());
+            go.wait();
+            Ok(())
+        })?;
+        // Workers joined (and their TLS guards reclaimed the streams);
+        // sync both sides so the clock covers full delivery.
+        p.barrier(p.world_comm())?;
+        let dt = t0_cell.lock().unwrap().expect("timed phase started").elapsed();
+        if p.rank() == 0 {
+            *elapsed_slot.lock().unwrap() = Some(dt);
+        }
+        explicit_waits
+            .fetch_add(sum_lock_waits(p, implicit..p.vci_count()), Ordering::Relaxed);
+        implicit_waits.fetch_add(sum_lock_waits(p, 0..implicit), Ordering::Relaxed);
+        Ok(())
+    })?;
+
+    let elapsed = elapsed_slot
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
+    let total = threads as u64 * msgs;
+    Ok(ThreadMappedResult {
+        threads,
+        total_msgs: total,
+        elapsed,
+        rate: total as f64 / elapsed.as_secs_f64(),
+        ns_per_msg: elapsed.as_nanos() as f64 / msgs as f64,
+        explicit_lock_waits: explicit_waits.load(Ordering::Relaxed),
+        implicit_lock_waits: implicit_waits.load(Ordering::Relaxed),
     })
 }
 
@@ -444,6 +586,19 @@ mod tests {
             assert_eq!(r.total_msgs, 400);
             assert!(r.rate > 0.0, "{}: rate must be positive", r.mode);
         }
+    }
+
+    #[test]
+    fn thread_mapped_msgrate_completes_without_hot_path_waits() {
+        let r = msgrate_live_thread_mapped(2, 200, 16, 8).unwrap();
+        assert_eq!(r.total_msgs, 400);
+        assert!(r.rate > 0.0);
+        // Both threads run on dedicated VCIs: the lock-free hot path must
+        // never block on an instrumented mutex.
+        assert_eq!(
+            r.explicit_lock_waits, 0,
+            "dedicated-VCI traffic took a contended lock on the hot path"
+        );
     }
 
     #[test]

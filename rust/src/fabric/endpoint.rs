@@ -30,6 +30,14 @@ pub struct EpStats {
     /// Lets tests and the `rma/*` scenarios attribute window traffic to an
     /// endpoint even when the packets carry no payload (lock grants).
     pub rx_rma_packets: AtomicU64,
+    /// *Contended* mutex acquisitions attributed to this endpoint's VCI: a
+    /// `try_lock` on the communication path failed and the caller had to
+    /// block. Distinct from the thread-local lock-ops tally (which counts
+    /// every acquisition): a dedicated-VCI stream may legitimately take
+    /// uncontended locks on sharded state, but it must never *wait* — the
+    /// `msgrate/thread-mapped` scenario gates on this reading 0 across the
+    /// explicit pool.
+    pub lock_waits: AtomicU64,
 }
 
 /// Point-in-time copy of an endpoint's counters — the form benchmark
@@ -42,6 +50,7 @@ pub struct EpStatsSnapshot {
     pub rx_bytes: u64,
     pub backpressure_events: u64,
     pub rx_rma_packets: u64,
+    pub lock_waits: u64,
 }
 
 impl EpStats {
@@ -54,7 +63,14 @@ impl EpStats {
             rx_bytes: self.rx_bytes.load(Ordering::Relaxed),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
             rx_rma_packets: self.rx_rma_packets.load(Ordering::Relaxed),
+            lock_waits: self.lock_waits.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record one contended acquisition (see [`EpStats::lock_waits`]).
+    #[inline]
+    pub fn note_lock_wait(&self) {
+        self.lock_waits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Zero every counter — the per-scenario reset hook the benchmark
@@ -67,6 +83,27 @@ impl EpStats {
         self.rx_bytes.store(0, Ordering::Relaxed);
         self.backpressure_events.store(0, Ordering::Relaxed);
         self.rx_rma_packets.store(0, Ordering::Relaxed);
+        self.lock_waits.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Lock a mutex on the communication path, attributing any *wait* to the
+/// issuing VCI's endpoint: an immediate `try_lock` success is free, a
+/// contended acquisition bumps [`EpStats::lock_waits`] before blocking.
+/// Pass `None` off the hot path (setup/teardown, implicit-pool pokes).
+pub(crate) fn lock_counted<'a, T>(
+    m: &'a std::sync::Mutex<T>,
+    stats: Option<&EpStats>,
+) -> std::sync::MutexGuard<'a, T> {
+    match m.try_lock() {
+        Ok(g) => g,
+        Err(std::sync::TryLockError::WouldBlock) => {
+            if let Some(s) = stats {
+                s.note_lock_wait();
+            }
+            m.lock().expect("mutex poisoned")
+        }
+        Err(std::sync::TryLockError::Poisoned(_)) => panic!("mutex poisoned"),
     }
 }
 
@@ -79,6 +116,7 @@ impl EpStatsSnapshot {
         self.rx_bytes += other.rx_bytes;
         self.backpressure_events += other.backpressure_events;
         self.rx_rma_packets += other.rx_rma_packets;
+        self.lock_waits += other.lock_waits;
     }
 }
 
@@ -254,6 +292,34 @@ mod tests {
         assert_eq!(snap.rx_rma_packets, 1);
         ep.stats().reset();
         assert_eq!(ep.stats().snapshot().rx_rma_packets, 0);
+    }
+
+    #[test]
+    fn lock_counted_attributes_only_contended_acquisitions() {
+        let stats = EpStats::default();
+        let m = std::sync::Mutex::new(0u32);
+        // Uncontended: no wait recorded.
+        *lock_counted(&m, Some(&stats)) += 1;
+        assert_eq!(stats.snapshot().lock_waits, 0);
+        // Contended: another thread blocks while this one holds the mutex.
+        let held = m.lock().unwrap();
+        let entering = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let t = s.spawn(|| {
+                entering.store(true, Ordering::SeqCst);
+                *lock_counted(&m, Some(&stats)) += 1;
+            });
+            while !entering.load(Ordering::SeqCst) {
+                std::hint::spin_loop();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            drop(held);
+            t.join().unwrap();
+        });
+        assert_eq!(stats.snapshot().lock_waits, 1);
+        assert_eq!(*m.lock().unwrap(), 2);
+        stats.reset();
+        assert_eq!(stats.snapshot().lock_waits, 0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Replaces the repository's free-standing bench reporters with one
 //! scenario registry: every workload — pt2pt ping-pong, multi-stream
-//! message-rate scaling per lock mode, stream-comm alltoall, the GPU
+//! message-rate scaling per lock mode (including the thread-mapped
+//! binding path), stream-comm alltoall, the GPU
 //! enqueue pipeline and its lane sweep, one-sided RMA latency,
 //! message-rate scaling, passive-target (lock/unlock) contention and
 //! deferred-completion flush pipelining, partitioned pt2pt scaling and
@@ -67,6 +68,7 @@ impl Registry {
                 Box::new(scenario::MsgRate { mode: MsgrateMode::GlobalCs }),
                 Box::new(scenario::MsgRate { mode: MsgrateMode::PerVci }),
                 Box::new(scenario::MsgRate { mode: MsgrateMode::Stream }),
+                Box::new(scenario::MsgRateThreadMapped),
                 Box::new(scenario::StreamAlltoall),
                 Box::new(scenario::EnqueuePipeline),
                 Box::new(scenario::EnqueueLanes { streams: 4 }),
@@ -183,6 +185,7 @@ mod tests {
             "msgrate/global-cs",
             "msgrate/per-vci",
             "msgrate/stream",
+            "msgrate/thread-mapped",
             "stream/alltoall",
             "enqueue/pipeline",
             "enqueue/hostfunc-vs-lanes",
@@ -202,7 +205,7 @@ mod tests {
         let reg = Registry::standard();
         assert_eq!(reg.select(&[]).len(), reg.names().len());
         let msgrate = reg.select(&["msgrate".to_string()]);
-        assert_eq!(msgrate.len(), 3);
+        assert_eq!(msgrate.len(), 4, "msgrate prefix selects global-cs + per-vci + stream + thread-mapped");
         let glob = reg.select(&["ablation/*".to_string()]);
         assert_eq!(glob.len(), 5);
         let rma = reg.select(&["rma".to_string()]);

@@ -14,7 +14,7 @@
 //!     {
 //!       "scenario": "msgrate/stream",
 //!       "elapsed_ms": 123.4,
-//!       "params": { "mode": "stream", "streams": "1,2,4,8" },
+//!       "params": { "mode": "stream", "streams": "1,2,4,8,16" },
 //!       "metrics": {
 //!         "rate_4_msgs_per_sec": {
 //!           "value": 1.2e7, "unit": "msg/s",

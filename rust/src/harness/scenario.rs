@@ -20,7 +20,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{Config, EnqueueMode};
-use crate::coordinator::driver::{enqueue_pipeline, msgrate_live, n_to_1_live, MsgrateMode};
+use crate::coordinator::driver::{
+    enqueue_pipeline, msgrate_live, msgrate_live_thread_mapped, n_to_1_live, MsgrateMode,
+};
 use crate::error::{MpiErr, Result};
 use crate::harness::stats::{Metric, Rng, Summary};
 use crate::mpi::info::Info;
@@ -200,8 +202,10 @@ impl Scenario for PingPong {
 // msgrate/{global-cs,per-vci,stream}
 // ----------------------------------------------------------------------
 
-/// Stream counts swept by the message-rate scenarios.
-pub const MSGRATE_STREAMS: [usize; 4] = [1, 2, 4, 8];
+/// Stream counts swept by the message-rate scenarios. 16 is the point
+/// of the sweep: per-thread/per-VCI routing must keep scaling past 8
+/// streams while the global critical section flatlines.
+pub const MSGRATE_STREAMS: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// Multi-stream 8-byte message rate for one critical-section regime:
 /// live single-stream calibration + calibrated virtual-time replay over
@@ -255,7 +259,7 @@ impl Scenario for MsgRate {
     fn params(&self) -> Vec<(String, String)> {
         vec![
             ("mode".into(), self.mode.as_str().into()),
-            ("streams".into(), "1,2,4,8".into()),
+            ("streams".into(), "1,2,4,8,16".into()),
             ("msg_bytes".into(), "8".into()),
             ("source".into(), "live calibration + virtual-time replay".into()),
         ]
@@ -272,26 +276,160 @@ impl Scenario for MsgRate {
         let mut metrics =
             vec![Metric::info("calibrated_ns_per_msg", cal.t_stream_ns, "ns")];
         let mut rate1 = 0.0;
-        let mut rate_last = 0.0;
+        let mut rate8 = 0.0;
+        let mut rate16 = 0.0;
         for &n in &MSGRATE_STREAMS {
             let pt = match self.mode {
                 MsgrateMode::GlobalCs => sim_global(&cal, n, sim_msgs),
                 MsgrateMode::PerVci => sim_pervci(&cal, n, sim_msgs, n),
                 MsgrateMode::Stream => sim_stream(&cal, n, sim_msgs),
             };
-            if n == 1 {
-                rate1 = pt.rate;
+            match n {
+                1 => rate1 = pt.rate,
+                8 => rate8 = pt.rate,
+                16 => rate16 = pt.rate,
+                _ => {}
             }
-            rate_last = pt.rate;
             metrics.push(Metric::higher(format!("rate_{n}_msgs_per_sec"), pt.rate, "msg/s"));
         }
         if rate1 > 0.0 {
-            metrics.push(Metric::info("scaling_8_over_1", rate_last / rate1, "x"));
+            metrics.push(Metric::info("scaling_16_over_1", rate16 / rate1, "x"));
+        }
+        if rate8 > 0.0 {
+            metrics.push(Metric::info("scaling_16_over_8", rate16 / rate8, "x"));
+        }
+        // Scaling past 8 streams is the whole point of per-VCI/per-thread
+        // routing; the global critical section is expected (and allowed)
+        // to flatline here.
+        if !matches!(self.mode, MsgrateMode::GlobalCs) && rate16 <= rate8 {
+            return Err(MpiErr::Internal(format!(
+                "{} stopped scaling past 8 streams: rate_16 {:.0} <= rate_8 {:.0}",
+                self.mode.as_str(),
+                rate16,
+                rate8
+            )));
         }
         // Live multi-stream functional point (absolute value is
-        // host-bound; recorded as context, never gated).
+        // host-bound; recorded as context, never gated). `lock_waits`
+        // surfaces the endpoint contention counters in the report:
+        // dedicated-VCI hot paths should record none.
         let live = msgrate_live(self.mode, 2, profile.scale(4_000, 1_000), 64, 8)?;
         metrics.push(Metric::info("live_rate_2_streams_msgs_per_sec", live.rate, "msg/s"));
+        metrics.push(Metric::info("live_lock_waits_2_streams", live.lock_waits as f64, "waits"));
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+// ----------------------------------------------------------------------
+// msgrate/thread-mapped
+// ----------------------------------------------------------------------
+
+/// The Figure-3 sweep driven through **thread-mapped streams**: workers
+/// are real OS threads that each bind a dedicated-VCI stream with
+/// `Proc::stream_for_current_thread` instead of receiving a
+/// main-thread-created handle. Calibration runs the thread-mapped path
+/// itself (registry lookup included), the 1..16-stream shape comes from
+/// the calibrated virtual-time replay, and a live 4-thread point proves
+/// the layer-3 claim directly: the dedicated-VCI hot path records
+/// **zero** contended lock acquisitions.
+pub struct MsgRateThreadMapped;
+
+impl MsgRateThreadMapped {
+    /// Min-of-runs single-thread calibration through the thread-mapped
+    /// binding path (scheduler noise only ever inflates a run).
+    fn calibrate(msgs: u64, runs: u64, lock_iters: u64) -> Result<Calibration> {
+        let mut best = f64::INFINITY;
+        for _ in 0..runs {
+            best = best.min(msgrate_live_thread_mapped(1, msgs, 256, 8)?.ns_per_msg);
+        }
+        let lock_ns = measure_lock_ns(lock_iters);
+        Ok(Calibration {
+            t_global_ns: best,
+            t_pervci_ns: best,
+            t_stream_ns: best,
+            lock_ns,
+            atomic_ns: 0.0,
+            handover_ns: lock_ns * HANDOVER_MULTIPLIER,
+        })
+    }
+}
+
+impl Scenario for MsgRateThreadMapped {
+    fn name(&self) -> String {
+        "msgrate/thread-mapped".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("mode".into(), "thread-mapped".into()),
+            ("streams".into(), "1,2,4,8,16".into()),
+            ("msg_bytes".into(), "8".into()),
+            ("source".into(), "live calibration + virtual-time replay".into()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let _ = msgrate_live_thread_mapped(1, profile.scale(2_000, 500), 256, 8)?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let cal_t = Self::calibrate(
+            profile.scale(20_000, 2_500),
+            profile.scale(4, 2),
+            profile.scale(1_000_000, 200_000),
+        )?;
+        let cal_g = calibrate_single_mode(
+            MsgrateMode::GlobalCs,
+            profile.scale(20_000, 2_500),
+            profile.scale(4, 2),
+            profile.scale(1_000_000, 200_000),
+        )?;
+        let sim_msgs = profile.scale(20_000, 5_000);
+        let mut metrics =
+            vec![Metric::info("calibrated_ns_per_msg", cal_t.t_stream_ns, "ns")];
+        let mut rate16 = 0.0;
+        for &n in &MSGRATE_STREAMS {
+            let pt = sim_stream(&cal_t, n, sim_msgs);
+            if n == 16 {
+                rate16 = pt.rate;
+            }
+            metrics.push(Metric::higher(format!("rate_{n}_msgs_per_sec"), pt.rate, "msg/s"));
+        }
+        let g16 = sim_global(&cal_g, 16, sim_msgs).rate;
+        // The acceptance shape is a hard failure, not just a gate:
+        // per-thread routing must keep scaling past 8 streams while the
+        // global critical section flatlines.
+        if rate16 < 1.5 * g16 {
+            return Err(MpiErr::Internal(format!(
+                "thread-mapped replay must hold >= 1.5x global-CS at 16 streams \
+                 ({rate16} vs {g16} msg/s)"
+            )));
+        }
+        metrics.push(Metric::higher("thread_over_global_16", rate16 / g16, "x"));
+        // Live multi-thread point: real OS threads binding their own
+        // streams. The dedicated-VCI hot path must record zero contended
+        // lock acquisitions — the critical-section audit's proof
+        // obligation, gated both here (hard) and in the baseline (the
+        // `live_explicit_lock_waits` floor is 0, so any wait regresses).
+        let live = msgrate_live_thread_mapped(4, profile.scale(4_000, 1_000), 64, 8)?;
+        if live.explicit_lock_waits != 0 {
+            return Err(MpiErr::Internal(format!(
+                "dedicated-VCI hot path recorded {} contended lock acquisitions (expected 0)",
+                live.explicit_lock_waits
+            )));
+        }
+        metrics.push(Metric::info("live_rate_4_threads_msgs_per_sec", live.rate, "msg/s"));
+        metrics.push(Metric::lower(
+            "live_explicit_lock_waits",
+            live.explicit_lock_waits as f64,
+            "waits",
+        ));
+        metrics.push(Metric::info(
+            "live_implicit_lock_waits",
+            live.implicit_lock_waits as f64,
+            "waits",
+        ));
         Ok(ScenarioResult { metrics })
     }
 }
@@ -837,7 +975,7 @@ impl Scenario for RmaMsgRate {
     fn params(&self) -> Vec<(String, String)> {
         vec![
             ("modes".into(), "global-cs,per-vci".into()),
-            ("streams".into(), "1,2,4,8".into()),
+            ("streams".into(), "1,2,4,8,16".into()),
             ("msg_bytes".into(), "8".into()),
             ("source".into(), "live calibration + virtual-time replay".into()),
         ]
@@ -871,12 +1009,18 @@ impl Scenario for RmaMsgRate {
         ];
         let mut g4 = 0.0;
         let mut v4 = 0.0;
+        let mut g16 = 0.0;
+        let mut v16 = 0.0;
         for &n in &MSGRATE_STREAMS {
             let g = sim_global(&cal_g, n, sim_msgs).rate;
             let v = sim_pervci(&cal_v, n, sim_msgs, n).rate;
             if n == 4 {
                 g4 = g;
                 v4 = v;
+            }
+            if n == 16 {
+                g16 = g;
+                v16 = v;
             }
             metrics.push(Metric::info(format!("rate_global_{n}_msgs_per_sec"), g, "msg/s"));
             metrics.push(Metric::higher(format!("rate_pervci_{n}_msgs_per_sec"), v, "msg/s"));
@@ -888,7 +1032,16 @@ impl Scenario for RmaMsgRate {
                 "per-VCI RMA replay must beat global-CS at 4 streams ({v4} vs {g4} msg/s)"
             )));
         }
+        // And the margin must *widen* where global-cs flatlines: at 16
+        // streams per-VCI routing has to hold at least 1.5x.
+        if v16 < 1.5 * g16 {
+            return Err(MpiErr::Internal(format!(
+                "per-VCI RMA replay must hold >= 1.5x global-CS at 16 streams \
+                 ({v16} vs {g16} msg/s)"
+            )));
+        }
         metrics.push(Metric::higher("pervci_over_global_4", v4 / g4, "x"));
+        metrics.push(Metric::higher("pervci_over_global_16", v16 / g16, "x"));
         Ok(ScenarioResult { metrics })
     }
 }
@@ -899,7 +1052,7 @@ impl Scenario for RmaMsgRate {
 
 /// Passive-target synchronization (§4.3 lock/unlock): full
 /// lock→put→unlock epoch latency over a 2-rank window, plus a
-/// shared-vs-exclusive contention sweep — 1/2/4/8 origin streams
+/// shared-vs-exclusive contention sweep — 1/2/4/8/16 origin streams
 /// (threads) hammering one target window. Exclusive writers serialize
 /// through the target's FIFO lock table (each epoch waits for the
 /// previous holder's release round-trip); shared readers admit
@@ -962,7 +1115,7 @@ impl RmaPassive {
         let world = World::builder().ranks(2).config(Config::default()).build()?;
         let rate: Mutex<Option<f64>> = Mutex::new(None);
         world.run(|p| {
-            let win = p.win_create(vec![0u8; 8 * Self::REGION_STRIDE], p.world_comm())?;
+            let win = p.win_create(vec![0u8; 16 * Self::REGION_STRIDE], p.world_comm())?;
             if p.rank() == 0 {
                 let t0 = Instant::now();
                 let results: Vec<Result<()>> = std::thread::scope(|s| {
@@ -1017,7 +1170,7 @@ impl Scenario for RmaPassive {
     fn params(&self) -> Vec<(String, String)> {
         vec![
             ("payload_bytes".into(), Self::PAYLOAD.to_string()),
-            ("streams".into(), "1,2,4,8".into()),
+            ("streams".into(), "1,2,4,8,16".into()),
             ("modes".into(), "exclusive,shared".into()),
         ]
     }
@@ -1134,6 +1287,81 @@ impl RmaFlush {
         })?;
         out.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
     }
+
+    /// Stride separating the window regions the sweep threads write:
+    /// cache-line padded so concurrent origins never touch adjacent
+    /// lines (same rationale as [`RmaPassive::REGION_STRIDE`]).
+    const SWEEP_STRIDE: usize = 256;
+
+    /// Puts per shared-lock epoch in the multi-origin sweep: enough to
+    /// amortize the flush round-trip, small enough that a 16-thread
+    /// smoke run stays in the seconds range.
+    const SWEEP_BURST: usize = 4;
+
+    /// Aggregate pipelined put rate with `streams` origin threads of
+    /// rank 0 running concurrent shared-lock epochs against rank 1's
+    /// window: lock(shared) → [`Self::SWEEP_BURST`] puts into a
+    /// disjoint region → one `win_flush` → unlock. Shared epochs admit
+    /// concurrently at the target, so this measures the deferred
+    /// protocol under multi-threaded origins. Returns (puts/sec,
+    /// lock-wait count recorded on rank 0's endpoints during the sweep).
+    fn shared_flush_rate(streams: usize, epochs: u64, seed: u64) -> Result<(f64, u64)> {
+        let world = World::builder().ranks(2).config(Config::default()).build()?;
+        let out: Mutex<Option<(f64, u64)>> = Mutex::new(None);
+        world.run(|p| {
+            let win =
+                p.win_create(vec![0u8; 16 * Self::SWEEP_STRIDE], p.world_comm())?;
+            if p.rank() == 0 {
+                let waits = |p: &crate::mpi::world::Proc| -> u64 {
+                    (0..p.vci_count())
+                        .map(|i| p.vci(i as u16).ep().stats().snapshot().lock_waits)
+                        .sum()
+                };
+                let waits_before = waits(p);
+                let t0 = Instant::now();
+                let results: Vec<Result<()>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..streams)
+                        .map(|t| {
+                            let p = p.clone();
+                            let win = win.clone();
+                            s.spawn(move || -> Result<()> {
+                                let slot = t * Self::SWEEP_STRIDE;
+                                let mut payload = vec![0u8; Self::PAYLOAD];
+                                Rng::new(seed ^ t as u64).fill(&mut payload);
+                                for _ in 0..epochs {
+                                    p.win_lock(&win, 1, LockType::Shared)?;
+                                    for b in 0..Self::SWEEP_BURST {
+                                        p.put(&win, 1, slot + b * Self::PAYLOAD, &payload)?;
+                                    }
+                                    p.win_flush(&win, 1)?;
+                                    p.win_unlock(&win, 1)?;
+                                }
+                                Ok(())
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("flush sweep thread panicked"))
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+                let total = (streams as u64 * epochs * Self::SWEEP_BURST as u64) as f64;
+                let rate = total / t0.elapsed().as_secs_f64();
+                let lock_waits = waits(p) - waits_before;
+                *out.lock().unwrap() = Some((rate, lock_waits));
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        out.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
+    }
 }
 
 impl Scenario for RmaFlush {
@@ -1145,6 +1373,7 @@ impl Scenario for RmaFlush {
         vec![
             ("payload_bytes".into(), Self::PAYLOAD.to_string()),
             ("modes".into(), "pipelined,per-op".into()),
+            ("sweep_streams".into(), "1,2,4,8,16".into()),
             ("ack_batch_ops".into(), crate::mpi::rma_track::ACK_BATCH_OPS.to_string()),
         ]
     }
@@ -1169,18 +1398,34 @@ impl Scenario for RmaFlush {
                 "pipelined puts must beat per-op completion ({pipelined} vs {per_op} put/s)"
             )));
         }
-        Ok(ScenarioResult {
-            metrics: vec![
-                Metric::higher("rate_pipelined_puts_per_sec", pipelined, "op/s"),
-                Metric::info("rate_perop_puts_per_sec", per_op, "op/s"),
-                Metric::higher("pipelined_over_perop", pipelined / per_op, "x"),
-                Metric::info(
-                    "origin_rx_rma_packets_per_pipelined_put",
-                    rx_pipelined as f64 / pipe_ops as f64,
-                    "packets",
-                ),
-            ],
-        })
+        let mut metrics = vec![
+            Metric::higher("rate_pipelined_puts_per_sec", pipelined, "op/s"),
+            Metric::info("rate_perop_puts_per_sec", per_op, "op/s"),
+            Metric::higher("pipelined_over_perop", pipelined / per_op, "x"),
+            Metric::info(
+                "origin_rx_rma_packets_per_pipelined_put",
+                rx_pipelined as f64 / pipe_ops as f64,
+                "packets",
+            ),
+        ];
+        // Multi-origin shared-lock sweep: live thread counts up to 16.
+        // Absolute rates are host-bound (info only, like every live
+        // multi-thread point); the lock-wait tally surfaces the endpoint
+        // contention counters in this scenario's JSON.
+        let epochs = profile.scale(40, 8);
+        let mut sweep_waits = 0u64;
+        for &n in &MSGRATE_STREAMS {
+            let (rate, lock_waits) =
+                Self::shared_flush_rate(n, epochs, profile.seed ^ n as u64)?;
+            sweep_waits += lock_waits;
+            metrics.push(Metric::info(
+                format!("rate_shared_flush_{n}_puts_per_sec"),
+                rate,
+                "op/s",
+            ));
+        }
+        metrics.push(Metric::info("shared_flush_sweep_lock_waits", sweep_waits as f64, "waits"));
+        Ok(ScenarioResult { metrics })
     }
 }
 
@@ -1782,6 +2027,25 @@ mod tests {
         let r1 = r.metrics.iter().find(|m| m.name == "rate_1_msgs_per_sec").unwrap().value;
         let r4 = r.metrics.iter().find(|m| m.name == "rate_4_msgs_per_sec").unwrap().value;
         assert!(r4 > r1, "lock-free replay must scale with streams ({r4} vs {r1})");
+        let r8 = r.metrics.iter().find(|m| m.name == "rate_8_msgs_per_sec").unwrap().value;
+        let r16 = r.metrics.iter().find(|m| m.name == "rate_16_msgs_per_sec").unwrap().value;
+        assert!(r16 > r8, "lock-free replay must keep scaling past 8 streams ({r16} vs {r8})");
+    }
+
+    #[test]
+    fn msgrate_thread_mapped_scenario_smoke() {
+        let r = MsgRateThreadMapped.run(&Profile::smoke(31)).unwrap();
+        let r8 = r.metrics.iter().find(|m| m.name == "rate_8_msgs_per_sec").unwrap().value;
+        let r16 = r.metrics.iter().find(|m| m.name == "rate_16_msgs_per_sec").unwrap().value;
+        assert!(r16 > r8, "thread-mapped replay must keep scaling past 8 streams");
+        let ratio = r.metrics.iter().find(|m| m.name == "thread_over_global_16").unwrap();
+        assert!(ratio.value >= 1.5, "thread_over_global_16 {} must hold 1.5x", ratio.value);
+        let waits =
+            r.metrics.iter().find(|m| m.name == "live_explicit_lock_waits").unwrap();
+        assert_eq!(
+            waits.value, 0.0,
+            "dedicated-VCI hot path must record zero contended lock acquisitions"
+        );
     }
 
     #[test]
@@ -1800,7 +2064,7 @@ mod tests {
         let r = RmaPassive.run(&Profile::smoke(23)).unwrap();
         let p50 = r.metrics.iter().find(|m| m.name == "lock_put_unlock_p50_ns").unwrap();
         assert!(p50.value > 0.0, "epoch latency must be measured");
-        for n in [1, 2, 4, 8] {
+        for n in MSGRATE_STREAMS {
             let e = r
                 .metrics
                 .iter()
@@ -1841,6 +2105,14 @@ mod tests {
             "deferred puts must be batch-acknowledged, got {} rx packets/put",
             acks.value
         );
+        for n in MSGRATE_STREAMS {
+            let m = r
+                .metrics
+                .iter()
+                .find(|m| m.name == format!("rate_shared_flush_{n}_puts_per_sec"))
+                .unwrap();
+            assert!(m.value > 0.0, "shared-flush sweep point {n} must be measured");
+        }
     }
 
     #[test]

@@ -257,12 +257,24 @@ impl Proc {
     // Communicator management (collective)
     // ------------------------------------------------------------------
 
-    /// Agree on a fresh context id over `comm` (rank 0 allocates).
+    /// Agree on a fresh context id over `comm` (rank 0 allocates). An
+    /// exhausted id space on rank 0 is broadcast as a sentinel (valid
+    /// bases are < 2^31) so every rank fails the collective together
+    /// instead of ranks != 0 hanging in the broadcast.
     pub(crate) fn agree_ctx_block(&self, comm: &Comm, n: u32) -> Result<u32> {
-        let mut base = if comm.rank() == 0 { self.world().alloc_ctx_block(n) } else { 0u32 };
+        let mut base = if comm.rank() == 0 {
+            self.world().alloc_ctx_block(n).unwrap_or(u32::MAX)
+        } else {
+            0u32
+        };
         let mut bytes = base.to_le_bytes();
         self.bcast(&mut bytes, 0, comm)?;
         base = u32::from_le_bytes(bytes);
+        if base == u32::MAX {
+            return Err(MpiErr::Internal(format!(
+                "context-id space exhausted: rank 0 could not allocate {n} ids"
+            )));
+        }
         Ok(base)
     }
 

@@ -65,6 +65,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
+use crate::fabric::endpoint::{lock_counted, EpStats};
 use crate::fabric::wire::{rma_op, Envelope, Packet, NO_INDEX};
 use crate::mpi::comm::Comm;
 use crate::mpi::datatype::{Datatype, Op};
@@ -176,23 +177,145 @@ pub(crate) struct WinTarget {
     pub fenced: AtomicBool,
 }
 
+/// Target-side window registry, replicated per VCI: one shard per VCI so
+/// the handlers progressing different streams (data ops, get replies,
+/// the lock protocol) never contend on a single map lock. Window
+/// install/remove — collective `win_create`/`win_free` — are the slow
+/// path and write every shard; the hot lookup touches only the shard of
+/// the VCI the packet arrived on.
+pub(crate) struct WinRegistry {
+    shards: Vec<Mutex<HashMap<u32, Arc<WinTarget>>>>,
+}
+
+impl WinRegistry {
+    pub fn new(nvcis: usize) -> Self {
+        WinRegistry {
+            shards: (0..nvcis.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Slow path (`win_create`): replicate the target into every shard.
+    pub fn install(&self, id: u32, win: Arc<WinTarget>) {
+        for s in &self.shards {
+            s.lock().unwrap().insert(id, win.clone());
+        }
+    }
+
+    /// Slow path (`win_free`): drop the window from every shard,
+    /// returning the (now otherwise unreferenced) target.
+    pub fn remove(&self, id: u32) -> Option<Arc<WinTarget>> {
+        let mut out = None;
+        for s in &self.shards {
+            if let Some(t) = s.lock().unwrap().remove(&id) {
+                out = Some(t);
+            }
+        }
+        out
+    }
+
+    /// Hot path: resolve a window through the shard owned by `vci`. A
+    /// contended shard acquisition — which distinct VCIs can no longer
+    /// cause — is attributed to `stats`.
+    pub fn get(&self, vci: u16, id: u32, stats: Option<&EpStats>) -> Option<Arc<WinTarget>> {
+        let shard = &self.shards[vci as usize % self.shards.len()];
+        lock_counted(shard, stats).get(&id).cloned()
+    }
+
+    /// VCI-agnostic lookup for cold callers (fence arming, local reads):
+    /// every shard replicates the same entries, so shard 0 suffices.
+    pub fn get_any(&self, id: u32) -> Option<Arc<WinTarget>> {
+        self.shards[0].lock().unwrap().get(&id).cloned()
+    }
+
+    /// Per-shard entry counts — the replication invariant (all equal)
+    /// checked by the stream-lifecycle property test.
+    pub fn shard_counts(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+}
+
 /// Origin-side in-flight RMA state, proc-global so the progress engine
 /// can resolve incoming responses without a window handle in scope:
 ///
 /// * `done` — synchronous responses (GET data, lock grants, flush acks,
 ///   NACKs), keyed by (window id, token); tokens are allocated
 ///   per-window, so concurrent operations on two windows must not
-///   collide here.
-/// * `trackers` — each live window's [`OpTracker`], keyed by window id:
-///   where `ACK_BATCH` entries land.
+///   collide here. Sharded by the VCI the response arrives on — which is
+///   the origin's issuing VCI, because responses target the request's
+///   `reply_ep` — so awaiters on different streams spin on disjoint
+///   locks.
+/// * `trackers` — each live window's [`OpTracker`] handle, replicated
+///   per VCI like [`WinRegistry`]: where `ACK_BATCH` entries land.
 /// * `enqueue_flush` — windows touched by `put_enqueue` per GPU stream
 ///   id: `synchronize_enqueue` completes these (the §4.3 "whichever
-///   comes first" contract).
-#[derive(Default)]
+///   comes first" contract). Deliberately *not* sharded: it is touched
+///   once per enqueue registration and once per synchronize, both on the
+///   GPU-lane (cold) path, never per message.
 pub(crate) struct RmaResults {
-    pub done: Mutex<HashMap<(u32, u64), std::result::Result<Vec<u8>, String>>>,
-    pub trackers: Mutex<HashMap<u32, Arc<Mutex<OpTracker>>>>,
+    done: Vec<Mutex<HashMap<(u32, u64), std::result::Result<Vec<u8>, String>>>>,
+    trackers: Vec<Mutex<HashMap<u32, Arc<Mutex<OpTracker>>>>>,
     pub enqueue_flush: Mutex<HashMap<u64, HashMap<(u32, u32), Window>>>,
+}
+
+impl RmaResults {
+    pub fn new(nvcis: usize) -> Self {
+        let n = nvcis.max(1);
+        RmaResults {
+            done: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            trackers: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            enqueue_flush: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn done_shard(&self, vci: u16) -> &Mutex<HashMap<(u32, u64), std::result::Result<Vec<u8>, String>>> {
+        &self.done[vci as usize % self.done.len()]
+    }
+
+    /// Handler side: record a response that arrived on `vci`.
+    pub fn insert_done(
+        &self,
+        vci: u16,
+        key: (u32, u64),
+        outcome: std::result::Result<Vec<u8>, String>,
+        stats: Option<&EpStats>,
+    ) {
+        lock_counted(self.done_shard(vci), stats).insert(key, outcome);
+    }
+
+    /// Awaiter side: take the response for an op issued on `vci` (the
+    /// same shard the handler fills — replies land on the issuing VCI).
+    pub fn take_done(
+        &self,
+        vci: u16,
+        key: (u32, u64),
+        stats: Option<&EpStats>,
+    ) -> Option<std::result::Result<Vec<u8>, String>> {
+        lock_counted(self.done_shard(vci), stats).remove(&key)
+    }
+
+    /// Slow path (`win_create`): replicate the tracker into every shard.
+    pub fn install_tracker(&self, id: u32, tracker: Arc<Mutex<OpTracker>>) {
+        for s in &self.trackers {
+            s.lock().unwrap().insert(id, tracker.clone());
+        }
+    }
+
+    /// Slow path (`win_free`).
+    pub fn remove_tracker(&self, id: u32) {
+        for s in &self.trackers {
+            s.lock().unwrap().remove(&id);
+        }
+    }
+
+    /// Hot path (`ACK_BATCH`): the window's tracker via `vci`'s shard.
+    pub fn tracker(&self, vci: u16, id: u32, stats: Option<&EpStats>) -> Option<Arc<Mutex<OpTracker>>> {
+        lock_counted(&self.trackers[vci as usize % self.trackers.len()], stats).get(&id).cloned()
+    }
+
+    /// Per-shard tracker counts — replication invariant for tests.
+    pub fn tracker_shard_counts(&self) -> Vec<usize> {
+        self.trackers.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
 }
 
 /// Resolved origin route for one RMA operation: which local VCI issues it
@@ -314,7 +437,7 @@ impl Proc {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
-        self.windows().lock().unwrap().insert(
+        self.windows().install(
             id,
             Arc::new(WinTarget {
                 buf: Mutex::new(local),
@@ -324,7 +447,7 @@ impl Proc {
             }),
         );
         let tracker = Arc::new(Mutex::new(OpTracker::new()));
-        self.rma_results().trackers.lock().unwrap().insert(id, tracker.clone());
+        self.rma_results().install_tracker(id, tracker.clone());
         // Windows must be usable as soon as any rank returns.
         self.barrier(comm)?;
         Ok(Window {
@@ -383,11 +506,9 @@ impl Proc {
         self.barrier(&win.inner.comm)?;
         let t = self
             .windows()
-            .lock()
-            .unwrap()
-            .remove(&win.inner.id)
+            .remove(win.inner.id)
             .ok_or_else(|| MpiErr::Arg(format!("window {} not registered here", win.inner.id)))?;
-        self.rma_results().trackers.lock().unwrap().remove(&win.inner.id);
+        self.rma_results().remove_tracker(win.inner.id);
         // Drop stale synchronize_enqueue flush obligations for this
         // window (a later synchronize would probe a freed window).
         self.rma_results()
@@ -435,7 +556,7 @@ impl Proc {
         // barrier: no origin can issue until its own fence returns (after
         // the barrier), by which point every target has set its flag — an
         // op racing the flag would be spuriously NACKed otherwise.
-        if let Some(t) = self.windows().lock().unwrap().get(&win.inner.id) {
+        if let Some(t) = self.windows().get_any(win.inner.id) {
             t.fenced.store(true, Ordering::Release);
         }
         self.barrier(&win.inner.comm)?;
@@ -463,10 +584,7 @@ impl Proc {
     pub fn win_read_local(&self, win: &Window) -> Result<Vec<u8>> {
         let t = self
             .windows()
-            .lock()
-            .unwrap()
-            .get(&win.inner.id)
-            .cloned()
+            .get_any(win.inner.id)
             .ok_or_else(|| MpiErr::Arg("window not registered".into()))?;
         let out = t.buf.lock().unwrap().clone();
         Ok(out)
@@ -474,7 +592,10 @@ impl Proc {
 
     /// Spin for the response to an in-flight RMA operation (ACK / DATA /
     /// GRANT / UNLOCK-ACK / NACK), progressing the issuing VCI. Shared by
-    /// the data-op path and the lock protocol.
+    /// the data-op path and the lock protocol. The response is taken from
+    /// the issuing VCI's `done` shard — responses come back on the VCI
+    /// that issued the request (its address is the wire `reply_ep`), so
+    /// awaiters on different streams spin on disjoint shard locks.
     fn rma_await(
         &self,
         win: &Window,
@@ -484,7 +605,7 @@ impl Proc {
     ) -> Result<Vec<u8>> {
         loop {
             if let Some(outcome) =
-                self.rma_results().done.lock().unwrap().remove(&(win.inner.id, token))
+                self.rma_results().take_done(vci.idx(), (win.inner.id, token), cs.waits())
             {
                 return outcome.map_err(MpiErr::Rma);
             }
@@ -560,9 +681,9 @@ impl Proc {
             dst_ep: route.dst_ep.ep,
         };
         let token = header.token;
-        win.inner.tracker.lock().unwrap().issue(token, target, rk);
         let vci = self.vci(route.src_vci);
         let cs = self.session_for_vci(route.src_vci);
+        lock_counted(&win.inner.tracker, cs.waits()).issue(token, target, rk);
         let env = Envelope {
             ctx_id: RMA_CTX_BIT | win.inner.id,
             src_rank: win.inner.comm.rank(),
@@ -1094,12 +1215,15 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             }
         }
     };
+    // Contention on any target-side mutex below is attributed to the
+    // endpoint of the VCI this packet arrived on.
+    let stats = Some(vci.ep().stats());
     // Coverage check for incoming data ops: a nonzero hold token must
     // name a *granted* lock held by the sender; token 0 claims the fence
     // epoch, which must actually be open on this (the target's) side.
     let coverage = |win: &WinTarget| -> Option<String> {
         if h.hold != 0 {
-            if win.locks.lock().unwrap().is_held((env.src_rank, h.hold)) {
+            if lock_counted(&win.locks, stats).is_held((env.src_rank, h.hold)) {
                 None
             } else {
                 Some(format!(
@@ -1123,9 +1247,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             // Deferred data op: apply (or reject), record the outcome in
             // the ack batcher, and emit whatever the batcher decides —
             // a full batch, a satisfied parked flush, usually nothing.
-            let reg = proc.windows().lock().unwrap();
-            let Some(win) = reg.get(&h.win_id).cloned() else {
-                drop(reg);
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
                 // Unknown window: a single-entry NACK batch, so the
                 // origin's tracker still drains (a silent drop would
                 // leave the op outstanding forever at the next flush).
@@ -1136,13 +1258,12 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 respond(reply_ep, rma_op::ACK_BATCH, 0, rma_track::encode_batch(&[entry]));
                 return;
             };
-            drop(reg);
             // The target validates independently of the origin — an
             // uncovered or malformed operation must NACK, never panic
             // the progress context or scribble past the window.
             let mut reject: Option<String> = coverage(&win);
             if reject.is_none() {
-                let mut buf = win.buf.lock().unwrap();
+                let mut buf = lock_counted(&win.buf, stats);
                 let off = h.offset as usize;
                 let buf_len = buf.len();
                 let in_bounds =
@@ -1171,23 +1292,18 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                     ));
                 }
             }
-            let emits = win
-                .acks
-                .lock()
-                .unwrap()
+            let emits = lock_counted(&win.acks, stats)
                 .record(env.src_rank, reply_ep, AckEntry { token: h.token, err: reject });
             send_emits(emits);
         }
         rma_op::GET => {
-            let reg = proc.windows().lock().unwrap();
-            let Some(win) = reg.get(&h.win_id).cloned() else {
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
                 return; // window freed — the synchronous caller times out via failure injection
             };
-            drop(reg);
             let mut response = Vec::new();
             let mut reject: Option<String> = coverage(&win);
             if reject.is_none() {
-                let buf = win.buf.lock().unwrap();
+                let buf = lock_counted(&win.buf, stats);
                 if body.len() < 8 {
                     reject = Some("malformed get request".into());
                 } else {
@@ -1210,9 +1326,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             respond(reply_ep, opcode, h.token, out);
         }
         rma_op::FLUSH_REQ => {
-            let reg = proc.windows().lock().unwrap();
-            let Some(win) = reg.get(&h.win_id).cloned() else {
-                drop(reg);
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
                 respond(
                     reply_ep,
                     rma_op::NACK,
@@ -1221,7 +1335,6 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 );
                 return;
             };
-            drop(reg);
             let Some(required) = body.get(..8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
             else {
                 respond(reply_ep, rma_op::NACK, h.token, b"malformed flush request".to_vec());
@@ -1230,17 +1343,16 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             // Answered once this route's processed count reaches the
             // origin's issued watermark; parked until then (woken by the
             // data op that satisfies it).
-            let emits =
-                win.acks.lock().unwrap().flush(env.src_rank, reply_ep, h.token, required);
+            let emits = lock_counted(&win.acks, stats).flush(env.src_rank, reply_ep, h.token, required);
             send_emits(emits);
         }
         rma_op::ACK_BATCH => {
             // Origin side: batched completions land in the window's op
             // tracker. A stale batch for a freed window is dropped.
             let Some(entries) = rma_track::decode_batch(body) else { return };
-            let tracker = proc.rma_results().trackers.lock().unwrap().get(&h.win_id).cloned();
+            let tracker = proc.rma_results().tracker(vci.idx(), h.win_id, stats);
             if let Some(tracker) = tracker {
-                let mut t = tracker.lock().unwrap();
+                let mut t = lock_counted(&tracker, stats);
                 for e in entries {
                     t.ack(e);
                 }
@@ -1251,9 +1363,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             // malformed request: a lock requester spins until it hears
             // back, so silence would hang the origin, not just lose data.
             let key = (env.src_rank, h.token);
-            let reg = proc.windows().lock().unwrap();
-            let Some(win) = reg.get(&h.win_id).cloned() else {
-                drop(reg);
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
                 respond(
                     reply_ep,
                     rma_op::NACK,
@@ -1262,7 +1372,6 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 );
                 return;
             };
-            drop(reg);
             let Some(kind) = body.first().copied().and_then(LockType::from_wire) else {
                 respond(
                     reply_ep,
@@ -1273,7 +1382,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 return;
             };
             // Decide under the table mutex, transmit outside it.
-            let outcome = win.locks.lock().unwrap().request(key, kind, reply_ep);
+            let outcome = lock_counted(&win.locks, stats).request(key, kind, reply_ep);
             match outcome {
                 Ok(Some(g)) => respond(g.meta, rma_op::LOCK_GRANT, g.key.1, Vec::new()),
                 Ok(None) => {} // queued; granted at a later release
@@ -1284,9 +1393,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
         }
         rma_op::UNLOCK => {
             let key = (env.src_rank, h.token);
-            let reg = proc.windows().lock().unwrap();
-            let Some(win) = reg.get(&h.win_id).cloned() else {
-                drop(reg);
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
                 respond(
                     reply_ep,
                     rma_op::NACK,
@@ -1295,8 +1402,7 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                 );
                 return;
             };
-            drop(reg);
-            let outcome = win.locks.lock().unwrap().release(key);
+            let outcome = lock_counted(&win.locks, stats).release(key);
             match outcome {
                 Ok(granted) => {
                     respond(reply_ep, rma_op::UNLOCK_ACK, h.token, Vec::new());
@@ -1312,11 +1418,11 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
         }
         rma_op::ACK | rma_op::DATA | rma_op::LOCK_GRANT | rma_op::UNLOCK_ACK
         | rma_op::FLUSH_ACK => {
-            proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Ok(body.to_vec()));
+            proc.rma_results().insert_done(vci.idx(), (h.win_id, h.token), Ok(body.to_vec()), stats);
         }
         rma_op::NACK => {
             let reason = String::from_utf8_lossy(body).into_owned();
-            proc.rma_results().done.lock().unwrap().insert((h.win_id, h.token), Err(reason));
+            proc.rma_results().insert_done(vci.idx(), (h.win_id, h.token), Err(reason), stats);
         }
         _ => {}
     }
@@ -1661,9 +1767,7 @@ mod tests {
         let take = |win_id: u32, token: u64| {
             for _ in 0..8 {
                 p.poke();
-                if let Some(out) =
-                    p.rma_results().done.lock().unwrap().remove(&(win_id, token))
-                {
+                if let Some(out) = p.rma_results().take_done(0, (win_id, token), None) {
                     return out;
                 }
             }

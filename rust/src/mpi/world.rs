@@ -7,7 +7,7 @@
 //! no shared-memory shortcut on the message path), so the concurrency
 //! behaviour under test is preserved.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{Config, CsMode};
@@ -39,11 +39,27 @@ impl WorldShared {
         &self.config
     }
 
-    /// Allocate a block of `n` consecutive context ids.
-    pub fn alloc_ctx_block(&self, n: u32) -> u32 {
-        let base = self.ctx_alloc.fetch_add(n, Ordering::Relaxed);
-        assert!(base.checked_add(n).map(|e| e < 1 << 31).unwrap_or(false), "context-id space exhausted");
-        base
+    /// Allocate a block of `n` consecutive context ids. Fails (like the
+    /// VCI pool does on endpoint exhaustion) when the 31-bit id space is
+    /// spent — a compare-exchange loop rather than `fetch_add` so a failed
+    /// allocation does not burn ids or wrap the counter for later callers.
+    pub fn alloc_ctx_block(&self, n: u32) -> Result<u32> {
+        let mut base = self.ctx_alloc.load(Ordering::Relaxed);
+        loop {
+            let end = base
+                .checked_add(n)
+                .filter(|&e| e < 1 << 31)
+                .ok_or_else(|| {
+                    MpiErr::Internal(format!(
+                        "context-id space exhausted: cannot allocate {n} ids starting at {base}"
+                    ))
+                })?;
+            match self.ctx_alloc.compare_exchange_weak(base, end, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return Ok(base),
+                Err(cur) => base = cur,
+            }
+        }
     }
 }
 
@@ -55,22 +71,27 @@ pub struct ProcShared {
     global_cs: Mutex<()>,
     /// Round-robin counter for the sender-any hashing policy.
     rr: AtomicU32,
-    /// Explicit-pool allocator.
+    /// Explicit-pool allocator. Also owns the per-slot shared flags: they
+    /// are published inside `alloc`/`free` under the pool mutex, so a lease
+    /// and its CsMode demotion are always observed together (paper §3.1:
+    /// "a per-endpoint critical section is necessary" when endpoints are
+    /// shared between streams).
     pool: VciPool,
-    /// Per-explicit-slot shared flag: a shared VCI demotes its streams to
-    /// PerVci locking (paper §3.1: "a per-endpoint critical section is
-    /// necessary" when endpoints are shared between streams).
-    shared_flags: Vec<AtomicBool>,
     /// Stream-id allocator (per process).
     next_stream_id: AtomicU32,
+    /// Thread-mapped stream registry: calling thread -> its lazily created
+    /// stream (`Proc::stream_for_current_thread`). Touched only on
+    /// create/free/thread-exit, never on the message path.
+    thread_streams: Mutex<std::collections::HashMap<std::thread::ThreadId, crate::stream::MpixStream>>,
     gpu: OnceLock<Arc<GpuDevice>>,
     world_comm: OnceLock<Comm>,
     /// Sharded enqueue progress subsystem (lazily built on first enqueue;
     /// also carries per-stream sticky errors for the HostFunc mode).
     progress: OnceLock<Arc<crate::stream::progress::ProgressRouter>>,
-    /// RMA window registry (target side): win id -> exposed memory.
-    windows: Mutex<std::collections::HashMap<u32, Arc<crate::mpi::rma::WinTarget>>>,
-    /// RMA origin-side in-flight op results.
+    /// RMA window registry (target side), replicated per VCI: handlers on
+    /// different streams look up windows without sharing a map lock.
+    windows: crate::mpi::rma::WinRegistry,
+    /// RMA origin-side in-flight op state, sharded per VCI.
     rma_results: crate::mpi::rma::RmaResults,
 }
 
@@ -195,13 +216,13 @@ impl WorldBuilder {
                     global_cs: Mutex::new(()),
                     rr: AtomicU32::new(0),
                     pool: VciPool::new(cfg.implicit_pool, cfg.explicit_pool, cfg.stream_share_endpoints),
-                    shared_flags: (0..cfg.explicit_pool).map(|_| AtomicBool::new(false)).collect(),
                     next_stream_id: AtomicU32::new(1),
+                    thread_streams: Mutex::new(std::collections::HashMap::new()),
                     gpu: OnceLock::new(),
                     world_comm: OnceLock::new(),
                     progress: OnceLock::new(),
-                    windows: Mutex::new(std::collections::HashMap::new()),
-                    rma_results: crate::mpi::rma::RmaResults::default(),
+                    windows: crate::mpi::rma::WinRegistry::new(eps),
+                    rma_results: crate::mpi::rma::RmaResults::new(eps),
                 });
                 let group = Group::new((0..self.ranks as u32).collect()).expect("identity group");
                 let wc = Comm::new(0, r as u32, group, CommKind::Regular);
@@ -261,45 +282,92 @@ impl Proc {
         self.shared.next_stream_id.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Force a VCI's shared flag (test hook; production publication
+    /// happens inside the pool's `alloc`/`free` under its mutex).
+    #[cfg(test)]
     pub(crate) fn mark_vci_shared(&self, idx: u16, shared: bool) {
-        let slot = idx as usize - self.config().implicit_pool;
-        self.shared.shared_flags[slot].store(shared, Ordering::Release);
+        self.shared.pool.set_shared(idx, shared);
     }
 
     /// Critical-section mode governing operations on `vci`.
+    ///
+    /// Hot-path audit: for a dedicated explicit-pool VCI this is one
+    /// lock-free atomic read (`VciPool::is_shared`) resolving to
+    /// `LockFree` — no mutex is reachable from here.
     pub(crate) fn mode_for_vci(&self, idx: u16) -> CsMode {
         let cfg = self.config();
         if (idx as usize) < cfg.implicit_pool {
             cfg.cs_mode
+        } else if self.shared.pool.is_shared(idx) {
+            CsMode::PerVci
         } else {
-            let slot = idx as usize - cfg.implicit_pool;
-            if self.shared.shared_flags[slot].load(Ordering::Acquire) {
-                CsMode::PerVci
-            } else {
-                CsMode::LockFree
-            }
+            CsMode::LockFree
         }
     }
 
-    /// Open a critical-section session for an operation on `vci`.
+    /// Open a critical-section session for an operation on `vci`. Any
+    /// contended acquisition under the session (global CS in Global mode,
+    /// step locks in PerVci mode) is attributed to this VCI's endpoint via
+    /// [`crate::fabric::endpoint::EpStats::lock_waits`].
     pub(crate) fn session_for_vci(&self, idx: u16) -> CsSession<'_> {
-        CsSession::enter(self.mode_for_vci(idx), &self.shared.global_cs)
+        CsSession::enter_counted(
+            self.mode_for_vci(idx),
+            &self.shared.global_cs,
+            Some(self.shared.vcis[idx as usize].ep().stats()),
+        )
     }
 
     /// Session covering the implicit pool (used by the periodic global
-    /// progress of blocking waits; see `Proc::wait`).
+    /// progress of blocking waits; see `Proc::wait`). Cold by
+    /// construction: a dedicated-VCI stream only lands here after its
+    /// spin budget expires, so contention is not attributed to any
+    /// explicit endpoint.
     pub(crate) fn session_for_implicit(&self) -> CsSession<'_> {
         CsSession::enter(self.config().cs_mode, &self.shared.global_cs)
     }
 
-    pub(crate) fn windows(
-        &self,
-    ) -> &Mutex<std::collections::HashMap<u32, Arc<crate::mpi::rma::WinTarget>>> {
+    pub(crate) fn windows(&self) -> &crate::mpi::rma::WinRegistry {
         &self.shared.windows
+    }
+
+    pub(crate) fn thread_streams(
+        &self,
+    ) -> &Mutex<std::collections::HashMap<std::thread::ThreadId, crate::stream::MpixStream>> {
+        &self.shared.thread_streams
     }
 
     pub(crate) fn rma_results(&self) -> &crate::mpi::rma::RmaResults {
         &self.shared.rma_results
+    }
+
+    // ------------------------------------------------------------------
+    // Diagnostics (stable hooks for stress/property tests and tooling)
+    // ------------------------------------------------------------------
+
+    /// How many explicit-pool VCIs are currently leased to streams.
+    /// Diagnostic: lets lifecycle stress tests assert no lease is lost
+    /// or leaked across create/free/thread-exit churn.
+    pub fn explicit_vcis_in_use(&self) -> usize {
+        self.shared.pool.in_use()
+    }
+
+    /// Is `idx` currently published as shared (demoting its streams to
+    /// `PerVci`)? Lock-free read of the pool's per-slot flag.
+    pub fn vci_is_shared(&self, idx: u16) -> bool {
+        self.shared.pool.is_shared(idx)
+    }
+
+    /// Per-VCI shard sizes of the target-side window registry.
+    /// Diagnostic: the registry replicates every window into each shard,
+    /// so all entries must be equal at any quiescent point.
+    pub fn win_registry_shard_counts(&self) -> Vec<usize> {
+        self.shared.windows.shard_counts()
+    }
+
+    /// Per-VCI shard sizes of the origin-side RMA op-tracker registry
+    /// (same replication invariant as [`Proc::win_registry_shard_counts`]).
+    pub fn rma_tracker_shard_counts(&self) -> Vec<usize> {
+        self.shared.rma_results.tracker_shard_counts()
     }
 
     /// The simulated GPU device attached to this process (created lazily).
@@ -409,8 +477,25 @@ mod tests {
     #[test]
     fn ctx_block_allocation_unique() {
         let w = World::with_ranks(1).unwrap();
-        let a = w.shared.alloc_ctx_block(3);
-        let b = w.shared.alloc_ctx_block(1);
+        let a = w.shared.alloc_ctx_block(3).unwrap();
+        let b = w.shared.alloc_ctx_block(1).unwrap();
         assert!(b >= a + 3);
+    }
+
+    #[test]
+    fn ctx_block_exhaustion_is_an_error_not_a_panic() {
+        let w = World::with_ranks(1).unwrap();
+        w.shared.ctx_alloc.store((1 << 31) - 2, Ordering::Relaxed);
+        assert!(w.shared.alloc_ctx_block(1).is_ok(), "one id left");
+        let err = w.shared.alloc_ctx_block(1).unwrap_err();
+        assert!(matches!(err, MpiErr::Internal(_)), "exhaustion must surface as MpiErr: {err}");
+        // A failed allocation must not consume ids: smaller requests that
+        // still fit keep failing identically (the counter did not move).
+        assert!(w.shared.alloc_ctx_block(1).is_err());
+        assert_eq!(w.shared.ctx_alloc.load(Ordering::Relaxed), (1 << 31) - 1);
+        // Overflow-sized requests are rejected too, without wrapping.
+        w.shared.ctx_alloc.store(5, Ordering::Relaxed);
+        assert!(w.shared.alloc_ctx_block(u32::MAX).is_err());
+        assert_eq!(w.shared.alloc_ctx_block(2).unwrap(), 5);
     }
 }

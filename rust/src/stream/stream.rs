@@ -27,6 +27,10 @@ pub struct StreamInner {
     /// all the operations using the stream have been completed").
     pending: Arc<AtomicU64>,
     gpu: Option<GpuStream>,
+    /// `Some(thread)` when this stream was created by
+    /// [`Proc::stream_for_current_thread`] and lives in the process's
+    /// thread registry under that thread's id.
+    thread: Option<std::thread::ThreadId>,
 }
 
 impl StreamInner {
@@ -61,6 +65,12 @@ impl StreamInner {
     pub fn is_gpu(&self) -> bool {
         self.gpu.is_some()
     }
+
+    /// Is this a thread-mapped stream (created via
+    /// [`Proc::stream_for_current_thread`])?
+    pub fn is_thread_mapped(&self) -> bool {
+        self.thread.is_some()
+    }
 }
 
 /// User-facing MPIX stream handle.
@@ -82,6 +92,17 @@ impl MpixStream {
         self.inner.is_gpu()
     }
 
+    /// Does this stream share its endpoint with other streams (and so run
+    /// `PerVci` instead of lock-free)?
+    pub fn is_shared(&self) -> bool {
+        self.inner.is_shared()
+    }
+
+    /// Was this stream created by [`Proc::stream_for_current_thread`]?
+    pub fn is_thread_mapped(&self) -> bool {
+        self.inner.is_thread_mapped()
+    }
+
     pub fn gpu_stream(&self) -> Option<&GpuStream> {
         self.inner.gpu_stream()
     }
@@ -90,6 +111,47 @@ impl MpixStream {
     pub fn pending_ops(&self) -> u64 {
         self.inner.pending_ops()
     }
+
+    /// The calling OS thread's stream on `proc` — shorthand for
+    /// [`Proc::stream_for_current_thread`].
+    pub fn for_current_thread(proc: &Proc) -> Result<MpixStream> {
+        proc.stream_for_current_thread()
+    }
+}
+
+thread_local! {
+    /// Reclamation guards for this thread's thread-mapped streams, one
+    /// per process the thread created a stream on. Dropped at thread
+    /// exit, releasing the registry entry (and the VCI lease, when the
+    /// exiting thread held the last handle).
+    static THREAD_STREAM_GUARDS: std::cell::RefCell<Vec<ThreadStreamGuard>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+struct ThreadStreamGuard {
+    proc: std::sync::Weak<crate::mpi::world::ProcShared>,
+    /// Captured at registration: `thread::current()` is not reliable
+    /// inside TLS destructors.
+    thread: std::thread::ThreadId,
+}
+
+impl Drop for ThreadStreamGuard {
+    fn drop(&mut self) {
+        if let Some(shared) = self.proc.upgrade() {
+            Proc { shared }.reclaim_thread_stream(self.thread);
+        }
+    }
+}
+
+/// Arm thread-exit reclamation for (this thread, `proc`), once.
+fn register_thread_guard(proc: &Proc, thread: std::thread::ThreadId) {
+    THREAD_STREAM_GUARDS.with(|g| {
+        let mut g = g.borrow_mut();
+        let ptr = std::sync::Arc::as_ptr(&proc.shared);
+        if !g.iter().any(|e| std::ptr::eq(e.proc.as_ptr(), ptr)) {
+            g.push(ThreadStreamGuard { proc: std::sync::Arc::downgrade(&proc.shared), thread });
+        }
+    });
 }
 
 impl std::fmt::Debug for MpixStream {
@@ -126,8 +188,11 @@ impl Proc {
             }
             None => None,
         };
+        // The pool publishes the slot's shared flag inside `alloc` while
+        // holding its mutex — the CsMode demotion of a shared lease is
+        // visible before the lease (or any earlier lease on the same
+        // slot) can issue another operation.
         let lease = self.pool().alloc()?;
-        self.mark_vci_shared(lease.idx, lease.shared);
         Ok(MpixStream {
             inner: Arc::new(StreamInner {
                 id: self.next_stream_id(),
@@ -135,8 +200,60 @@ impl Proc {
                 lease,
                 pending: Arc::new(AtomicU64::new(0)),
                 gpu,
+                thread: None,
             }),
         })
+    }
+
+    /// The calling OS thread's stream (thread-mapped streams): lazily
+    /// creates a CPU stream on first use, then returns the same stream on
+    /// every later call from this thread — the ergonomic thread→stream
+    /// path for MPI+threads code ("any runtime execution contexts outside
+    /// MPI ... can be associated to an MPIX stream"; an OS thread is
+    /// exactly such a serial context).
+    ///
+    /// Endpoint exhaustion does *not* fail: when the explicit pool has no
+    /// free endpoint the lease falls back to round-robin sharing — even
+    /// without `Config::stream_share_endpoints` — and the stream runs
+    /// PerVci instead of LockFree. The thread cannot retry as a different
+    /// execution context, so a shared (slower, still correct) endpoint
+    /// beats `NoEndpoints`. Only an empty explicit pool errors.
+    ///
+    /// The stream is reclaimed by `stream_free` (any handle), or
+    /// automatically at thread exit when the thread held the last handle.
+    pub fn stream_for_current_thread(&self) -> Result<MpixStream> {
+        let tid = std::thread::current().id();
+        if let Some(s) = self.thread_streams().lock().unwrap().get(&tid) {
+            return Ok(s.clone());
+        }
+        let lease = self.pool().alloc_for_thread()?;
+        let stream = MpixStream {
+            inner: Arc::new(StreamInner {
+                id: self.next_stream_id(),
+                rank: self.rank(),
+                lease,
+                pending: Arc::new(AtomicU64::new(0)),
+                gpu: None,
+                thread: Some(tid),
+            }),
+        };
+        // Only this thread inserts under its own id, so the gap since the
+        // lookup above cannot have been filled.
+        self.thread_streams().lock().unwrap().insert(tid, stream.clone());
+        register_thread_guard(self, tid);
+        Ok(stream)
+    }
+
+    /// Thread-exit reclamation for a thread-mapped stream: drop the
+    /// registry entry and, when the exiting thread held the last handle,
+    /// release the lease. Best effort — residual traffic or surviving
+    /// user handles leave the lease to the remaining holders (there is
+    /// nobody to report an error to from a TLS destructor).
+    pub(crate) fn reclaim_thread_stream(&self, thread: std::thread::ThreadId) {
+        let entry = self.thread_streams().lock().unwrap().remove(&thread);
+        if let Some(stream) = entry {
+            let _ = self.stream_free(stream);
+        }
     }
 
     /// `MPIX_Stream_free` (§3.1).
@@ -161,8 +278,17 @@ impl Proc {
                 stream.id()
             )));
         }
-        // Attached communicators (or user clones) hold extra Arcs.
-        if Arc::strong_count(&stream.inner) > 1 {
+        // Attached communicators (or user clones) hold extra Arcs. For a
+        // thread-mapped stream the registry's own handle is expected and
+        // does not count as a user.
+        let registry_extra = match stream.inner.thread {
+            Some(tid) => {
+                let reg = self.thread_streams().lock().unwrap();
+                reg.get(&tid).is_some_and(|s| Arc::ptr_eq(&s.inner, &stream.inner)) as usize
+            }
+            None => 0,
+        };
+        if Arc::strong_count(&stream.inner) > 1 + registry_extra {
             return Err(MpiErr::StreamBusy(format!(
                 "stream {} is still attached to a communicator or cloned handle",
                 stream.id()
@@ -179,10 +305,18 @@ impl Proc {
             )));
         }
         drop(cs);
-        let freed = self.pool().free(idx)?;
-        if freed {
-            self.mark_vci_shared(idx, false);
+        // Unregister before releasing the lease so a stream re-created
+        // for the same thread never observes its stale registry entry.
+        if let Some(tid) = stream.inner.thread {
+            let mut reg = self.thread_streams().lock().unwrap();
+            if reg.get(&tid).is_some_and(|s| Arc::ptr_eq(&s.inner, &stream.inner)) {
+                reg.remove(&tid);
+            }
         }
+        // The pool clears the slot's shared flag under its mutex when the
+        // last user leaves — no post-free flag write, no window where a
+        // recycled lease could observe the stale demotion.
+        self.pool().free(idx)?;
         // Drop per-stream progress bookkeeping (lane assignment, sticky
         // error, op counts) for GPU-backed streams so stream churn does
         // not grow the router's maps without bound.
@@ -270,6 +404,88 @@ mod tests {
         info.set("type", "cudaStream_t");
         info.set_hex_u64("value", 999); // unknown stream
         assert!(matches!(p.stream_create(&info), Err(MpiErr::Stream(_))));
+    }
+
+    #[test]
+    fn thread_mapped_stream_is_stable_per_thread() {
+        let w = world(2);
+        let p = w.proc(0);
+        let a = p.stream_for_current_thread().unwrap();
+        let b = p.stream_for_current_thread().unwrap();
+        assert_eq!(a.id(), b.id(), "same thread, same stream");
+        assert_eq!(a.vci_idx(), b.vci_idx());
+        assert!(a.inner.is_thread_mapped());
+        // A different thread gets its own stream (and endpoint).
+        let p2 = p.clone();
+        let a_vci = a.vci_idx();
+        std::thread::spawn(move || {
+            let c = p2.stream_for_current_thread().unwrap();
+            assert_ne!(c.vci_idx(), a_vci, "second thread gets its own endpoint");
+        })
+        .join()
+        .unwrap();
+        // The spawned thread's exit reclaimed its stream.
+        assert_eq!(p.pool().in_use(), 1);
+        // Explicit free works from any handle; drops the registry entry.
+        drop(b);
+        p.stream_free(a).unwrap();
+        assert_eq!(p.pool().in_use(), 0);
+        // A later call creates a fresh stream, not the freed one.
+        let c = p.stream_for_current_thread().unwrap();
+        assert!(c.inner.is_thread_mapped());
+        p.stream_free(c).unwrap();
+    }
+
+    #[test]
+    fn thread_mapped_falls_back_to_sharing_on_exhaustion() {
+        let w = world(1);
+        let p = w.proc(0);
+        let s = p.stream_create(&Info::null()).unwrap();
+        // Plain create refuses; the thread-mapped path shares instead.
+        assert!(matches!(p.stream_create(&Info::null()), Err(MpiErr::NoEndpoints(_))));
+        let t = p.stream_for_current_thread().unwrap();
+        assert_eq!(t.vci_idx(), s.vci_idx());
+        assert!(t.inner.is_shared());
+        // The demotion was published with the lease.
+        assert_eq!(p.mode_for_vci(t.vci_idx()), crate::config::CsMode::PerVci);
+        p.stream_free(t).unwrap();
+        p.stream_free(s).unwrap();
+        assert_eq!(p.mode_for_vci(1), crate::config::CsMode::LockFree, "flag reset with the slot");
+    }
+
+    #[test]
+    fn thread_exit_reclaims_even_with_traffic_history() {
+        let w = World::builder()
+            .ranks(2)
+            .config(Config { explicit_pool: 1, ..Default::default() })
+            .build()
+            .unwrap();
+        w.run(|p| {
+            let peer = 1 - p.rank();
+            let h = std::thread::spawn({
+                let p = p.clone();
+                move || -> crate::error::Result<()> {
+                    let s = p.stream_for_current_thread()?;
+                    let sc = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                    let mut buf = [0u8; 4];
+                    let r = p.irecv(&mut buf, peer as i32, 7, &sc)?;
+                    let s_req = p.isend(&p.rank().to_le_bytes(), peer, 7, &sc)?;
+                    p.wait(s_req)?;
+                    p.wait(r)?;
+                    assert_eq!(u32::from_le_bytes(buf), peer);
+                    drop(sc);
+                    Ok(())
+                }
+            });
+            h.join().unwrap()?;
+            // The worker thread exited: its stream must have been
+            // reclaimed, freeing the single explicit endpoint.
+            assert_eq!(p.pool().in_use(), 0);
+            let s = p.stream_create(&Info::null())?;
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::cell::Cell;
 use std::sync::{Mutex, MutexGuard};
 
 use crate::config::CsMode;
+use crate::fabric::endpoint::{lock_counted, EpStats};
 
 thread_local! {
     static LOCK_OPS: Cell<u64> = const { Cell::new(0) };
@@ -57,21 +58,39 @@ pub struct CsSession<'p> {
     mode: CsMode,
     global: &'p Mutex<()>,
     guard: std::cell::RefCell<Option<MutexGuard<'p, ()>>>,
+    /// Contention attribution: the issuing VCI's endpoint counters, so
+    /// every *blocked* acquisition under this session lands in that
+    /// endpoint's [`EpStats::lock_waits`]. `None` off the hot path.
+    waits: Option<&'p EpStats>,
 }
 
 impl<'p> CsSession<'p> {
     pub fn enter(mode: CsMode, global: &'p Mutex<()>) -> CsSession<'p> {
+        Self::enter_counted(mode, global, None)
+    }
+
+    /// [`CsSession::enter`] with contention attribution to `waits`.
+    pub fn enter_counted(
+        mode: CsMode,
+        global: &'p Mutex<()>,
+        waits: Option<&'p EpStats>,
+    ) -> CsSession<'p> {
         let guard = if mode == CsMode::Global {
             count_lock();
-            Some(global.lock().expect("global CS poisoned"))
+            Some(lock_counted(global, waits))
         } else {
             None
         };
-        CsSession { mode, global, guard: std::cell::RefCell::new(guard) }
+        CsSession { mode, global, guard: std::cell::RefCell::new(guard), waits }
     }
 
     pub fn mode(&self) -> CsMode {
         self.mode
+    }
+
+    /// The endpoint stats this session attributes contention to.
+    pub(crate) fn waits(&self) -> Option<&'p EpStats> {
+        self.waits
     }
 
     /// Release the global CS (if held), yield the CPU, re-acquire. The
@@ -81,7 +100,7 @@ impl<'p> CsSession<'p> {
             *self.guard.borrow_mut() = None;
             std::thread::yield_now();
             count_lock();
-            *self.guard.borrow_mut() = Some(self.global.lock().expect("global CS poisoned"));
+            *self.guard.borrow_mut() = Some(lock_counted(self.global, self.waits));
         } else {
             std::thread::yield_now();
         }
@@ -112,7 +131,7 @@ impl StepLock {
         match cs.mode {
             CsMode::PerVci => {
                 count_lock();
-                Some(self.inner.lock().expect("step lock poisoned"))
+                Some(lock_counted(&self.inner, cs.waits()))
             }
             CsMode::Global => {
                 debug_assert!(cs.holds_global(), "Global mode sub-step without the session guard");
@@ -168,6 +187,40 @@ mod tests {
         assert!(step.acquire(&cs).is_some());
         let cs = CsSession::enter(CsMode::LockFree, &m);
         assert!(step.acquire(&cs).is_none());
+    }
+
+    #[test]
+    fn counted_sessions_attribute_contention_to_endpoint_stats() {
+        let m = Mutex::new(());
+        let stats = EpStats::default();
+        // Uncontended global enter + per-vci step: zero waits.
+        {
+            let cs = CsSession::enter_counted(CsMode::Global, &m, Some(&stats));
+            assert!(cs.holds_global());
+            cs.yield_cs();
+        }
+        {
+            let step = StepLock::new();
+            let cs = CsSession::enter_counted(CsMode::PerVci, &m, Some(&stats));
+            let _g = step.acquire(&cs);
+        }
+        assert_eq!(stats.snapshot().lock_waits, 0, "uncontended acquisitions are free");
+        // Contended global enter: the other thread owns the CS.
+        let held = m.lock().unwrap();
+        let entering = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let t = s.spawn(|| {
+                entering.store(true, std::sync::atomic::Ordering::SeqCst);
+                let _cs = CsSession::enter_counted(CsMode::Global, &m, Some(&stats));
+            });
+            while !entering.load(std::sync::atomic::Ordering::SeqCst) {
+                std::hint::spin_loop();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            drop(held);
+            t.join().unwrap();
+        });
+        assert_eq!(stats.snapshot().lock_waits, 1, "blocked enter must be attributed");
     }
 
     #[test]

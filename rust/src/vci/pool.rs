@@ -11,6 +11,7 @@
 //! multiple MPIX streams ... in a round-robin fashion"), in which case a
 //! per-endpoint critical section becomes necessary again.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::error::{MpiErr, Result};
@@ -22,6 +23,12 @@ pub struct VciPool {
     explicit: usize,
     inner: Mutex<PoolState>,
     share: bool,
+    /// Per-slot shared flag, *written only while `inner` is held* so the
+    /// flag is published atomically with the lease it describes: no thread
+    /// can observe a shared lease before the flag says PerVci, closing the
+    /// alloc→mark window that used to exist in `stream_create`. Reads are
+    /// lock-free (`is_shared`) because `mode_for_vci` sits on the hot path.
+    shared: Vec<AtomicBool>,
 }
 
 struct PoolState {
@@ -51,6 +58,7 @@ impl VciPool {
             explicit,
             inner: Mutex::new(PoolState { free, users: vec![0; explicit], rr: 0 }),
             share,
+            shared: (0..explicit).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -68,6 +76,7 @@ impl VciPool {
         if let Some(idx) = st.free.pop() {
             let slot = idx as usize - self.implicit;
             st.users[slot] = 1;
+            self.shared[slot].store(false, Ordering::Release);
             return Ok(VciLease { idx, shared: false });
         }
         if self.explicit == 0 {
@@ -81,11 +90,40 @@ impl VciPool {
                 self.explicit
             )));
         }
-        // Round-robin sharing over the reserved pool.
+        Ok(self.share_slot(&mut st))
+    }
+
+    /// Allocate with an unconditional sharing fallback: take a dedicated
+    /// slot when one is free, otherwise round-robin onto a leased endpoint
+    /// *even when `stream_share_endpoints` is off*. This is the documented
+    /// `for_current_thread` behavior — a thread asking for "my stream" gets
+    /// a (PerVci-demoted) shared lease instead of `NoEndpoints`, because
+    /// the caller has no way to retry with a different thread.
+    pub fn alloc_for_thread(&self) -> Result<VciLease> {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(idx) = st.free.pop() {
+            let slot = idx as usize - self.implicit;
+            st.users[slot] = 1;
+            self.shared[slot].store(false, Ordering::Release);
+            return Ok(VciLease { idx, shared: false });
+        }
+        if self.explicit == 0 {
+            return Err(MpiErr::NoEndpoints(
+                "explicit VCI pool size is 0 — set Config::explicit_pool before creating streams".into(),
+            ));
+        }
+        Ok(self.share_slot(&mut st))
+    }
+
+    /// Round-robin sharing over the reserved pool. The shared flag is
+    /// stored while the pool mutex is still held — the demotion to PerVci
+    /// is visible before the lease escapes.
+    fn share_slot(&self, st: &mut PoolState) -> VciLease {
         let slot = st.rr % self.explicit;
         st.rr += 1;
         st.users[slot] += 1;
-        Ok(VciLease { idx: (self.implicit + slot) as u16, shared: true })
+        self.shared[slot].store(true, Ordering::Release);
+        VciLease { idx: (self.implicit + slot) as u16, shared: true }
     }
 
     /// Release a reserved VCI. Returns `true` when the endpoint became
@@ -102,6 +140,10 @@ impl VciPool {
         st.users[slot] -= 1;
         if st.users[slot] == 0 {
             st.free.push(idx);
+            // Last user gone: the endpoint reverts to lock-free for its
+            // next lease. A once-shared endpoint stays PerVci until then —
+            // remaining leaseholders were promised a critical section.
+            self.shared[slot].store(false, Ordering::Release);
             Ok(true)
         } else {
             Ok(false)
@@ -112,6 +154,23 @@ impl VciPool {
     pub fn in_use(&self) -> usize {
         let st = self.inner.lock().unwrap();
         st.users.iter().filter(|&&u| u > 0).count()
+    }
+
+    /// Is this explicit-pool VCI currently shared between streams?
+    /// Lock-free read — this backs `mode_for_vci` on every operation.
+    pub fn is_shared(&self, idx: u16) -> bool {
+        (idx as usize)
+            .checked_sub(self.implicit)
+            .and_then(|s| self.shared.get(s))
+            .map(|f| f.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Force a slot's shared flag (test hook; production paths publish the
+    /// flag inside `alloc`/`free` under the pool mutex).
+    pub fn set_shared(&self, idx: u16, shared: bool) {
+        let slot = idx as usize - self.implicit;
+        self.shared[slot].store(shared, Ordering::Release);
     }
 }
 
@@ -152,9 +211,46 @@ mod tests {
         assert!(!a.shared && !b.shared);
         assert!(c.shared && d.shared, "overflow allocations are shared");
         assert_ne!(c.idx, d.idx, "round-robin must spread shared streams");
+        // The demotion flag is already published when the lease lands.
+        assert!(p.is_shared(c.idx) && p.is_shared(d.idx));
         // Shared frees only release the endpoint at the last user.
         let first_free = p.free(c.idx).unwrap();
         assert!(!first_free || p.in_use() < 2);
+    }
+
+    #[test]
+    fn shared_flag_published_with_lease_and_cleared_on_last_free() {
+        let p = VciPool::new(0, 1, true);
+        let a = p.alloc().unwrap();
+        assert!(!a.shared && !p.is_shared(a.idx), "fresh lease is dedicated");
+        let b = p.alloc().unwrap();
+        assert!(b.shared && p.is_shared(a.idx), "overflow demotes the slot");
+        // One user left: the slot stays PerVci (the survivor was promised
+        // a critical section while it was shared).
+        assert!(!p.free(b.idx).unwrap());
+        assert!(p.is_shared(a.idx));
+        // Last user gone: the flag resets with the slot, under the lock.
+        assert!(p.free(a.idx).unwrap());
+        assert!(!p.is_shared(a.idx));
+        let c = p.alloc().unwrap();
+        assert!(!c.shared && !p.is_shared(c.idx), "recycled slot starts dedicated again");
+    }
+
+    #[test]
+    fn thread_fallback_shares_without_config_opt_in() {
+        // share = false: plain alloc exhausts, but the thread-mapped path
+        // falls back to a (shared, PerVci) lease instead of NoEndpoints.
+        let p = VciPool::new(1, 1, false);
+        let a = p.alloc_for_thread().unwrap();
+        assert!(!a.shared);
+        assert!(matches!(p.alloc(), Err(MpiErr::NoEndpoints(_))));
+        let b = p.alloc_for_thread().unwrap();
+        assert_eq!(b.idx, a.idx);
+        assert!(b.shared, "fallback lease is explicitly shared");
+        assert!(p.is_shared(a.idx), "demotion covers the original lease too");
+        // Zero explicit pool still fails — there is nothing to share.
+        let empty = VciPool::new(1, 0, false);
+        assert!(matches!(empty.alloc_for_thread(), Err(MpiErr::NoEndpoints(_))));
     }
 
     #[test]
@@ -190,6 +286,14 @@ mod tests {
         assert_eq!(st.free.len(), zero_slots, "free list must cover exactly the zero-user slots");
         drop(st);
         assert_eq!(p.in_use(), explicit - zero_slots);
+        for slot in 0..explicit {
+            if model[slot] == 0 {
+                assert!(
+                    !p.is_shared((implicit + slot) as u16),
+                    "zero-user slot {slot} must not be flagged shared"
+                );
+            }
+        }
     }
 
     #[test]
@@ -215,6 +319,12 @@ mod tests {
                             // slot is taken (and only with share enabled).
                             assert_eq!(lease.shared, was_full, "shared flag vs pool occupancy");
                             assert!(share || !lease.shared);
+                            assert_eq!(
+                                p.is_shared(lease.idx),
+                                lease.shared
+                                    || live.iter().any(|l| l.idx == lease.idx && l.shared),
+                                "published flag must match the lease at handoff"
+                            );
                             live.push(lease);
                         }
                         Err(MpiErr::NoEndpoints(_)) => {

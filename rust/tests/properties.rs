@@ -1207,3 +1207,152 @@ fn prop_fig3_shape_stable_under_calibration_noise() {
         assert!(s20 > v20, "stream must beat per-vci at scale");
     }
 }
+
+// ----------------------------------------------------------------------
+// Stream lifecycle under concurrency (thread-mapped + explicit)
+// ----------------------------------------------------------------------
+
+/// Seeded schedules hammering the stream registry from 2-4 worker
+/// threads per rank: `stream_for_current_thread`, explicit
+/// `stream_create`/`stream_free`, symmetric pt2pt and passive-RMA
+/// traffic, all interleaved. Invariants: the thread-mapped binding is
+/// stable per thread, a shared lease's flag is visible through the
+/// pool, no lease is lost (the explicit pool drains to zero once the
+/// workers exit and their TLS guards reclaim), and the per-VCI window/
+/// tracker registry shards stay replicated in lockstep.
+///
+/// The implicit pool runs PerVci (conventional traffic from many
+/// threads funnels through VCI 0, which needs serialization); the
+/// explicit leases the workers grab still resolve to LockFree while
+/// dedicated and demote to PerVci when the pool runs out and shares.
+#[test]
+fn prop_stream_lifecycle_under_concurrency() {
+    use mpix::error::{MpiErr, Result};
+    use mpix::mpi::rma::LockType;
+    use mpix::stream::MpixStream;
+
+    let cases = prop_cases(4);
+    for case in 0..cases {
+        let seed = 0x57AE_A11C ^ case.wrapping_mul(0x9E37_79B9);
+        let mut setup = Rng::new(seed);
+        let explicit = 1 + setup.below(4) as usize; // 1..=4 dedicated VCIs
+        let threads = 2 + setup.below(3) as usize; // 2..=4 workers per rank
+        let steps = 4 + setup.below(4); // 4..=7 ops per worker
+        let cfg = Config {
+            implicit_pool: 1,
+            explicit_pool: explicit,
+            cs_mode: CsMode::PerVci,
+            ..Default::default()
+        };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        let repro = format!("case {case}: explicit={explicit} threads={threads} steps={steps}");
+        w.run(move |p| {
+            let peer = 1 - p.rank();
+            let win = p.win_create(vec![0u8; threads * 256], p.world_comm())?;
+            // Install is the slow path writing every per-VCI replica:
+            // all shards must already agree on the new window.
+            let wc = p.win_registry_shard_counts();
+            assert!(wc.iter().all(|&c| c == wc[0]), "{repro}: win shards diverged {wc:?}");
+            let repro = &repro;
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let p = p.clone();
+                        let win = win.clone();
+                        s.spawn(move || -> Result<()> {
+                            // Rank-independent schedule: both ranks run the
+                            // same op sequence, so pt2pt and RMA traffic
+                            // pairs up symmetrically.
+                            let mut rng = Rng::new(seed ^ (t as u64 + 1).wrapping_mul(0x85EB_CA6B));
+                            let mut held: Vec<MpixStream> = Vec::new();
+                            for step in 0..steps {
+                                match rng.below(5) {
+                                    0 => {
+                                        let a = p.stream_for_current_thread()?;
+                                        let b = p.stream_for_current_thread()?;
+                                        assert_eq!(
+                                            a.id(),
+                                            b.id(),
+                                            "{repro}: thread-mapped binding not stable"
+                                        );
+                                        assert!(a.is_thread_mapped());
+                                        if a.is_shared() {
+                                            assert!(
+                                                p.vci_is_shared(a.vci_idx()),
+                                                "{repro}: shared lease with unpublished flag"
+                                            );
+                                        }
+                                    }
+                                    1 => match p.stream_create(&Info::null()) {
+                                        Ok(st) => held.push(st),
+                                        Err(MpiErr::NoEndpoints(_)) => {}
+                                        Err(e) => return Err(e),
+                                    },
+                                    2 => {
+                                        if let Some(st) = held.pop() {
+                                            p.stream_free(st)?;
+                                        }
+                                    }
+                                    3 => {
+                                        let tag = (t * 100 + step as usize) as i32;
+                                        let data = [step as u8; 16];
+                                        let mut buf = [0u8; 16];
+                                        let sr = p.isend(&data, peer, tag, p.world_comm())?;
+                                        p.recv(&mut buf, peer as i32, tag, p.world_comm())?;
+                                        p.wait(sr)?;
+                                        assert_eq!(buf, data, "{repro}: pt2pt payload");
+                                    }
+                                    _ => {
+                                        // Disjoint 256-byte region per thread
+                                        // on the peer's window.
+                                        let slot = t * 256;
+                                        let payload = [t as u8 + 1; 32];
+                                        p.win_lock(&win, peer, LockType::Shared)?;
+                                        p.put(&win, peer, slot, &payload)?;
+                                        let _ = p.get(&win, peer, slot, 32)?;
+                                        p.win_unlock(&win, peer)?;
+                                    }
+                                }
+                            }
+                            for st in held {
+                                p.stream_free(st)?;
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            });
+            for r in results {
+                r?;
+            }
+            p.barrier(p.world_comm())?;
+            // No lost leases: explicit creates were freed by their owner
+            // and thread-mapped leases were reclaimed by the TLS guard at
+            // worker exit, so the pool drains and every shared flag clears.
+            assert_eq!(p.explicit_vcis_in_use(), 0, "{repro}: leaked explicit VCI leases");
+            for idx in 1..=(explicit as u16) {
+                assert!(!p.vci_is_shared(idx), "{repro}: stale shared flag on VCI {idx}");
+            }
+            let wc = p.win_registry_shard_counts();
+            let tc = p.rma_tracker_shard_counts();
+            assert!(
+                wc.iter().all(|&c| c == wc[0]) && tc.iter().all(|&c| c == tc[0]),
+                "{repro}: registry shards diverged (windows {wc:?}, trackers {tc:?})"
+            );
+            p.win_free(win)?;
+            assert!(
+                p.win_registry_shard_counts().iter().all(|&c| c == 0),
+                "{repro}: window survived win_free in some shard"
+            );
+            Ok(())
+        })
+        .unwrap_or_else(|e| {
+            let path = dump_repro(
+                "stream_lifecycle",
+                &format!("seed={seed:#x} explicit={explicit} threads={threads} steps={steps}\n{e}"),
+            );
+            panic!("stream lifecycle case {case} failed ({e}); repro at {path}");
+        });
+    }
+}
