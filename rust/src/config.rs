@@ -109,6 +109,47 @@ impl std::str::FromStr for EnqueueMode {
     }
 }
 
+/// Target-side RMA ack-coalescing policy (ISSUE 7): how many deferred
+/// data-op outcomes a window's [`crate::mpi::rma_track::AckBatcher`]
+/// coalesces into one `ACK_BATCH` packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AckBatch {
+    /// Fixed batch size (1..=[`MAX_ACK_BATCH`]; 1 = ack every op). The
+    /// default, `Fixed(`[`crate::mpi::rma_track::ACK_BATCH_OPS`]`)`,
+    /// reproduces the pre-ISSUE-7 hard-coded behaviour.
+    Fixed(usize),
+    /// Adaptive: coalesce under bursts, ack per op when the observed
+    /// inter-op gap says the origin is latency-bound (see
+    /// [`crate::mpi::rma_track::BatchPolicy::Adaptive`]).
+    Adaptive,
+}
+
+/// Upper bound on a fixed ack batch: past this, a single batch body
+/// outgrows any plausible ring budget and flushes stall pathologically.
+pub const MAX_ACK_BATCH: usize = 1024;
+
+impl AckBatch {
+    pub fn as_str(&self) -> String {
+        match self {
+            AckBatch::Fixed(n) => n.to_string(),
+            AckBatch::Adaptive => "adaptive".into(),
+        }
+    }
+}
+
+impl std::str::FromStr for AckBatch {
+    type Err = MpiErr;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "adaptive" => Ok(AckBatch::Adaptive),
+            _ => s
+                .parse::<usize>()
+                .map(AckBatch::Fixed)
+                .map_err(|_| MpiErr::Arg(format!("unknown ack-batch policy '{s}'"))),
+        }
+    }
+}
+
 /// Full runtime configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -152,6 +193,9 @@ pub struct Config {
     /// Spin-yield threshold for progress loops (iterations before
     /// `thread::yield_now`). Single-core hosts need frequent yields.
     pub spin_before_yield: u32,
+    /// Target-side RMA ack-coalescing policy, applied to every window a
+    /// rank registers (replaces the pre-ISSUE-7 hard-coded 8-op batch).
+    pub rma_ack_batch: AckBatch,
 }
 
 impl Default for Config {
@@ -170,6 +214,7 @@ impl Default for Config {
             hostfunc_switch_ns: 0,
             wire_latency_ns: 0,
             spin_before_yield: 64,
+            rma_ack_batch: AckBatch::Fixed(crate::mpi::rma_track::ACK_BATCH_OPS),
         }
     }
 }
@@ -192,7 +237,28 @@ impl Config {
         if self.enqueue_lanes == 0 {
             return Err(MpiErr::Arg("enqueue_lanes must be >= 1".into()));
         }
+        match self.rma_ack_batch {
+            AckBatch::Fixed(0) => {
+                return Err(MpiErr::Arg("rma_ack_batch must be Fixed(>= 1) or Adaptive".into()));
+            }
+            AckBatch::Fixed(n) if n > MAX_ACK_BATCH => {
+                return Err(MpiErr::Arg(format!(
+                    "rma_ack_batch Fixed({n}) exceeds MAX_ACK_BATCH ({MAX_ACK_BATCH})"
+                )));
+            }
+            _ => {}
+        }
         Ok(())
+    }
+
+    /// Start a validated builder. The builder is the one path that checks
+    /// cross-knob invariants at *call time* (`build()` runs
+    /// [`Config::validate`]), instead of deferring the error to
+    /// `World::build`. The `fig3_*` / [`Config::bench_streams`] presets
+    /// stay infallible struct constructors; compose them with the builder
+    /// via [`ConfigBuilder::from_config`] when tweaking a preset.
+    pub fn builder() -> ConfigBuilder {
+        ConfigBuilder { cfg: Config::default() }
     }
 
     /// Paper configuration for the red Fig. 3 curve: global critical
@@ -235,6 +301,99 @@ impl Config {
             max_endpoints: (n + 8).max(64),
             ..Default::default()
         }
+    }
+}
+
+/// Builder over [`Config`] whose `build()` validates every invariant in
+/// one place (ISSUE 7 config audit): pool sizing vs the endpoint cap,
+/// ring-capacity shape, `enqueue_lanes >= 1`, and the
+/// [`Config::rma_ack_batch`] bounds all fail *here*, at construction,
+/// rather than at `World::build`.
+#[derive(Debug, Clone)]
+pub struct ConfigBuilder {
+    cfg: Config,
+}
+
+impl ConfigBuilder {
+    /// Seed the builder from an existing configuration (e.g. a preset).
+    pub fn from_config(cfg: Config) -> Self {
+        ConfigBuilder { cfg }
+    }
+
+    pub fn implicit_pool(mut self, n: usize) -> Self {
+        self.cfg.implicit_pool = n;
+        self
+    }
+
+    pub fn explicit_pool(mut self, n: usize) -> Self {
+        self.cfg.explicit_pool = n;
+        self
+    }
+
+    pub fn max_endpoints(mut self, n: usize) -> Self {
+        self.cfg.max_endpoints = n;
+        self
+    }
+
+    pub fn cs_mode(mut self, m: CsMode) -> Self {
+        self.cfg.cs_mode = m;
+        self
+    }
+
+    pub fn hash_policy(mut self, p: HashPolicy) -> Self {
+        self.cfg.hash_policy = p;
+        self
+    }
+
+    pub fn eager_threshold(mut self, bytes: usize) -> Self {
+        self.cfg.eager_threshold = bytes;
+        self
+    }
+
+    pub fn ep_ring_capacity(mut self, packets: usize) -> Self {
+        self.cfg.ep_ring_capacity = packets;
+        self
+    }
+
+    pub fn stream_share_endpoints(mut self, share: bool) -> Self {
+        self.cfg.stream_share_endpoints = share;
+        self
+    }
+
+    pub fn enqueue_mode(mut self, m: EnqueueMode) -> Self {
+        self.cfg.enqueue_mode = m;
+        self
+    }
+
+    pub fn enqueue_lanes(mut self, n: usize) -> Self {
+        self.cfg.enqueue_lanes = n;
+        self
+    }
+
+    pub fn hostfunc_switch_ns(mut self, ns: u64) -> Self {
+        self.cfg.hostfunc_switch_ns = ns;
+        self
+    }
+
+    pub fn wire_latency_ns(mut self, ns: u64) -> Self {
+        self.cfg.wire_latency_ns = ns;
+        self
+    }
+
+    pub fn spin_before_yield(mut self, iters: u32) -> Self {
+        self.cfg.spin_before_yield = iters;
+        self
+    }
+
+    pub fn rma_ack_batch(mut self, policy: AckBatch) -> Self {
+        self.cfg.rma_ack_batch = policy;
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<Config> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -305,5 +464,54 @@ mod tests {
         assert!(CsMode::from_str("bogus").is_err());
         assert_eq!(HashPolicy::from_str("per-comm").unwrap(), HashPolicy::PerComm);
         assert!(HashPolicy::from_str("??").is_err());
+    }
+
+    #[test]
+    fn ack_batch_parsing_and_bounds() {
+        use std::str::FromStr;
+        assert_eq!(AckBatch::from_str("adaptive").unwrap(), AckBatch::Adaptive);
+        assert_eq!(AckBatch::from_str("8").unwrap(), AckBatch::Fixed(8));
+        assert!(AckBatch::from_str("sometimes").is_err());
+        assert_eq!(AckBatch::Adaptive.as_str(), "adaptive");
+        assert_eq!(AckBatch::Fixed(3).as_str(), "3");
+
+        let zero = Config { rma_ack_batch: AckBatch::Fixed(0), ..Default::default() };
+        assert!(zero.validate().is_err());
+        let huge = Config { rma_ack_batch: AckBatch::Fixed(MAX_ACK_BATCH + 1), ..Default::default() };
+        assert!(huge.validate().is_err());
+        let adaptive = Config { rma_ack_batch: AckBatch::Adaptive, ..Default::default() };
+        adaptive.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        let c = Config::builder()
+            .explicit_pool(4)
+            .enqueue_lanes(2)
+            .rma_ack_batch(AckBatch::Adaptive)
+            .build()
+            .unwrap();
+        assert_eq!(c.explicit_pool, 4);
+        assert_eq!(c.enqueue_lanes, 2);
+        assert_eq!(c.rma_ack_batch, AckBatch::Adaptive);
+
+        assert!(Config::builder().enqueue_lanes(0).build().is_err());
+        assert!(Config::builder().rma_ack_batch(AckBatch::Fixed(0)).build().is_err());
+        assert!(Config::builder().implicit_pool(80).explicit_pool(80).build().is_err());
+
+        let seeded = ConfigBuilder::from_config(Config::bench_streams(16))
+            .rma_ack_batch(AckBatch::Fixed(1))
+            .build()
+            .unwrap();
+        assert_eq!(seeded.explicit_pool, 16);
+        assert_eq!(seeded.rma_ack_batch, AckBatch::Fixed(1));
+    }
+
+    #[test]
+    fn default_ack_batch_matches_pre_issue7_constant() {
+        assert_eq!(
+            Config::default().rma_ack_batch,
+            AckBatch::Fixed(crate::mpi::rma_track::ACK_BATCH_OPS)
+        );
     }
 }

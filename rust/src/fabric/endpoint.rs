@@ -38,6 +38,14 @@ pub struct EpStats {
     /// `msgrate/thread-mapped` scenario gates on this reading 0 across the
     /// explicit pool.
     pub lock_waits: AtomicU64,
+    /// Outbound small puts that shipped inside an aggregated `PUT_AGG`
+    /// packet instead of as loose `PUT`s (message aggregation on the
+    /// split-phase `rput` path) — attributed to the issuing VCI's
+    /// endpoint, so the `rma/flush` gate can assert aggregation engaged.
+    pub tx_aggregated_ops: AtomicU64,
+    /// Adaptive ack-policy mode switches decided by this endpoint's
+    /// window registrations (target side; 0 under a fixed policy).
+    pub ack_mode_switches: AtomicU64,
 }
 
 /// Point-in-time copy of an endpoint's counters — the form benchmark
@@ -51,6 +59,8 @@ pub struct EpStatsSnapshot {
     pub backpressure_events: u64,
     pub rx_rma_packets: u64,
     pub lock_waits: u64,
+    pub tx_aggregated_ops: u64,
+    pub ack_mode_switches: u64,
 }
 
 impl EpStats {
@@ -64,6 +74,8 @@ impl EpStats {
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
             rx_rma_packets: self.rx_rma_packets.load(Ordering::Relaxed),
             lock_waits: self.lock_waits.load(Ordering::Relaxed),
+            tx_aggregated_ops: self.tx_aggregated_ops.load(Ordering::Relaxed),
+            ack_mode_switches: self.ack_mode_switches.load(Ordering::Relaxed),
         }
     }
 
@@ -71,6 +83,18 @@ impl EpStats {
     #[inline]
     pub fn note_lock_wait(&self) {
         self.lock_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` puts shipped inside one aggregated packet.
+    #[inline]
+    pub fn note_tx_aggregated(&self, n: u64) {
+        self.tx_aggregated_ops.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` adaptive ack-policy mode switches.
+    #[inline]
+    pub fn note_ack_mode_switches(&self, n: u64) {
+        self.ack_mode_switches.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Zero every counter — the per-scenario reset hook the benchmark
@@ -84,6 +108,8 @@ impl EpStats {
         self.backpressure_events.store(0, Ordering::Relaxed);
         self.rx_rma_packets.store(0, Ordering::Relaxed);
         self.lock_waits.store(0, Ordering::Relaxed);
+        self.tx_aggregated_ops.store(0, Ordering::Relaxed);
+        self.ack_mode_switches.store(0, Ordering::Relaxed);
     }
 }
 
@@ -117,6 +143,8 @@ impl EpStatsSnapshot {
         self.backpressure_events += other.backpressure_events;
         self.rx_rma_packets += other.rx_rma_packets;
         self.lock_waits += other.lock_waits;
+        self.tx_aggregated_ops += other.tx_aggregated_ops;
+        self.ack_mode_switches += other.ack_mode_switches;
     }
 }
 

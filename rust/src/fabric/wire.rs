@@ -66,6 +66,22 @@ pub mod rma_op {
     pub const FLUSH_REQ: u8 = 11;
     /// Target-side answer to a satisfied [`FLUSH_REQ`].
     pub const FLUSH_ACK: u8 = 12;
+    /// Aggregated origin write: several small same-route [`PUT`]s
+    /// coalesced into one wire packet (message aggregation on the
+    /// split-phase `rput` path). The body is a count-prefixed sequence of
+    /// (offset, op token, length, bytes) sub-ops sharing the header's
+    /// hold token; the target applies and acknowledges each sub-op
+    /// individually through the same [`ACK_BATCH`] machinery as loose
+    /// [`PUT`]s.
+    pub const PUT_AGG: u8 = 13;
+    /// One-way origin demand: emit any parked partial [`ACK_BATCH`] for
+    /// this origin's route *now*. Sent by a blocked split-phase `wait`
+    /// whose op's ack is coalescing in the target batcher — the
+    /// latency-bound half of the adaptive protocol. Unlike
+    /// [`FLUSH_REQ`] there is no reply and no watermark: same-route
+    /// FIFO already guarantees the demanded op was recorded before the
+    /// demand is serviced, so the forced batch carries its completion.
+    pub const ACK_REQ: u8 = 14;
 }
 
 /// Matching envelope. `src_idx`/`dst_idx` are [`NO_INDEX`] for ordinary
@@ -195,6 +211,8 @@ mod tests {
             rma_op::ACK_BATCH,
             rma_op::FLUSH_REQ,
             rma_op::FLUSH_ACK,
+            rma_op::PUT_AGG,
+            rma_op::ACK_REQ,
         ];
         let mut dedup = ops.to_vec();
         dedup.sort_unstable();

@@ -19,7 +19,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{Config, EnqueueMode};
+use crate::config::{AckBatch, Config, EnqueueMode};
 use crate::coordinator::driver::{
     enqueue_pipeline, msgrate_live, msgrate_live_thread_mapped, n_to_1_live, MsgrateMode,
 };
@@ -1362,6 +1362,134 @@ impl RmaFlush {
         })?;
         out.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
     }
+
+    /// Ops per adaptive-ack behavioral probe: 64 = 8 full
+    /// aggregation buffers (`AGG_MAX_OPS` = [`crate::mpi::rma_track::ACK_BATCH_OPS`]
+    /// ops each), so the burst case divides evenly into `PUT_AGG`
+    /// packets and batch-of-8 acks.
+    const ACK_PROBE_OPS: u64 = 64;
+
+    /// Inter-op sleep of the paced probe: comfortably above
+    /// [`crate::mpi::rma_track::ADAPTIVE_GAP_NS`] so the target's
+    /// batcher classifies the origin as latency-bound and switches to
+    /// per-op acks.
+    const ACK_PACE_US: u64 = 120;
+
+    /// Split-phase vs blocking completion on the latency path: rank 0
+    /// completes each put before issuing the next, once as
+    /// `{put; win_flush}` and once as `{rput; wait}`, same exclusive
+    /// epoch, same adaptive-ack window. The blocking pair pays a full
+    /// flush round-trip per op (the target parks the watermark, drains
+    /// batches, and replies `FLUSH_ACK`); the split-phase wait settles
+    /// through the one-way `ACK_REQ` demand — one fewer packet per op
+    /// and no parked watermark — which is the gated win. Returns
+    /// (put+flush puts/sec, rput+wait puts/sec).
+    fn split_phase_rates(ops: u64, warm: u64, seed: u64) -> Result<(f64, f64)> {
+        let cfg = Config { rma_ack_batch: AckBatch::Adaptive, ..Default::default() };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let out: Mutex<Option<(f64, f64)>> = Mutex::new(None);
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; Self::SLOTS * Self::PAYLOAD], p.world_comm())?;
+            if p.rank() == 0 {
+                let mut payload = vec![0u8; Self::PAYLOAD];
+                Rng::new(seed ^ 0x5b17).fill(&mut payload);
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                for i in 0..warm {
+                    let off = (i as usize % Self::SLOTS) * Self::PAYLOAD;
+                    p.put(&win, 1, off, &payload)?;
+                    p.win_flush(&win, 1)?;
+                    let mut r = p.rput(&win, 1, off, &payload)?;
+                    r.wait(p)?;
+                }
+                let t0 = Instant::now();
+                for i in 0..ops {
+                    p.put(&win, 1, (i as usize % Self::SLOTS) * Self::PAYLOAD, &payload)?;
+                    p.win_flush(&win, 1)?;
+                }
+                let put_flush = ops as f64 / t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                for i in 0..ops {
+                    let mut r =
+                        p.rput(&win, 1, (i as usize % Self::SLOTS) * Self::PAYLOAD, &payload)?;
+                    r.wait(p)?;
+                }
+                let rput_wait = ops as f64 / t1.elapsed().as_secs_f64();
+                p.win_unlock(&win, 1)?;
+                *out.lock().unwrap() = Some((put_flush, rput_wait));
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        out.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
+    }
+
+    /// Ack shape of one exclusive epoch of [`Self::ACK_PROBE_OPS`]
+    /// adaptive rputs. `pace_us == 0` issues every rput back to back
+    /// and waits at the end — the burst case: rputs coalesce into
+    /// `PUT_AGG` packets and the target batcher, seeing sub-gap
+    /// arrivals, acks in batches of
+    /// [`crate::mpi::rma_track::ACK_BATCH_OPS`]. Otherwise each op is
+    /// waited and then paced by `pace_us` — the latency case: the
+    /// batcher switches to per-op acks and the lone staged op ships as
+    /// a loose `PUT`. Returns (ops per RMA packet
+    /// received at the origin inside the epoch, fabric-total
+    /// aggregated-tx ops, fabric-total ack-mode switches).
+    fn rput_acks(pace_us: u64, seed: u64) -> Result<(f64, u64, u64)> {
+        let ops = Self::ACK_PROBE_OPS;
+        let cfg = Config { rma_ack_batch: AckBatch::Adaptive, ..Default::default() };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let out: Mutex<Option<f64>> = Mutex::new(None);
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; Self::SLOTS * Self::PAYLOAD], p.world_comm())?;
+            if p.rank() == 0 {
+                let mut payload = vec![0u8; Self::PAYLOAD];
+                Rng::new(seed ^ 0xacc5).fill(&mut payload);
+                let rx_rma = |p: &crate::mpi::world::Proc| -> u64 {
+                    (0..p.vci_count())
+                        .map(|i| p.vci(i as u16).ep().stats().snapshot().rx_rma_packets)
+                        .sum()
+                };
+                p.win_lock(&win, 1, LockType::Exclusive)?;
+                let rx_before = rx_rma(p);
+                if pace_us == 0 {
+                    let mut reqs = Vec::with_capacity(ops as usize);
+                    for i in 0..ops {
+                        let off = (i as usize % Self::SLOTS) * Self::PAYLOAD;
+                        reqs.push(p.rput(&win, 1, off, &payload)?);
+                    }
+                    for r in &mut reqs {
+                        r.wait(p)?;
+                    }
+                } else {
+                    for i in 0..ops {
+                        let off = (i as usize % Self::SLOTS) * Self::PAYLOAD;
+                        let mut r = p.rput(&win, 1, off, &payload)?;
+                        r.wait(p)?;
+                        std::thread::sleep(std::time::Duration::from_micros(pace_us));
+                    }
+                }
+                let rx = rx_rma(p) - rx_before;
+                p.win_unlock(&win, 1)?;
+                *out.lock().unwrap() = Some(ops as f64 / rx.max(1) as f64);
+                p.send(&[1u8], 1, 9, p.world_comm())?;
+            } else {
+                let mut b = [0u8; 1];
+                p.recv(&mut b, 0, 9, p.world_comm())?;
+            }
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        let ratio = out
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| MpiErr::Internal("no ack ratio recorded".into()))?;
+        let totals = world.fabric().stats_totals();
+        Ok((ratio, totals.tx_aggregated_ops, totals.ack_mode_switches))
+    }
 }
 
 impl Scenario for RmaFlush {
@@ -1375,6 +1503,8 @@ impl Scenario for RmaFlush {
             ("modes".into(), "pipelined,per-op".into()),
             ("sweep_streams".into(), "1,2,4,8,16".into()),
             ("ack_batch_ops".into(), crate::mpi::rma_track::ACK_BATCH_OPS.to_string()),
+            ("ack_probe_ops".into(), Self::ACK_PROBE_OPS.to_string()),
+            ("ack_probe_pace_us".into(), Self::ACK_PACE_US.to_string()),
         ]
     }
 
@@ -1425,6 +1555,48 @@ impl Scenario for RmaFlush {
             ));
         }
         metrics.push(Metric::info("shared_flush_sweep_lock_waits", sweep_waits as f64, "waits"));
+        // Split-phase payoff: {rput; wait} completes through the
+        // one-way ACK_REQ demand and must beat {put; win_flush}'s
+        // blocking watermark round-trip on the same adaptive window.
+        let (put_flush, rput_wait) =
+            Self::split_phase_rates(sync_ops, warm(sync_ops), profile.seed)?;
+        if rput_wait <= put_flush {
+            return Err(MpiErr::Internal(format!(
+                "split-phase rput+wait must beat put+win_flush ({rput_wait} vs {put_flush} put/s)"
+            )));
+        }
+        metrics.push(Metric::info("rate_put_flush_puts_per_sec", put_flush, "op/s"));
+        metrics.push(Metric::info("rate_rput_wait_puts_per_sec", rput_wait, "op/s"));
+        metrics.push(Metric::higher("rput_wait_over_put_flush", rput_wait / put_flush, "x"));
+        // Adaptive ack shape, both regimes. Burst: the batcher must
+        // coalesce (>= 4 ops per received ack packet) and the origin
+        // must have aggregated rputs into PUT_AGG packets. Paced: the
+        // batcher must fall back to ~per-op acks (<= 2 ops per
+        // packet). Behavioral probes with fixed op counts — shape
+        // failures are protocol bugs, so they hard-fail rather than
+        // gate on a ratio.
+        let (burst_ratio, burst_agg, _) = Self::rput_acks(0, profile.seed)?;
+        let (paced_ratio, _, paced_switches) =
+            Self::rput_acks(Self::ACK_PACE_US, profile.seed)?;
+        if burst_ratio < 4.0 {
+            return Err(MpiErr::Internal(format!(
+                "adaptive batching must coalesce bursts (got {burst_ratio} ops/ack, need >= 4)"
+            )));
+        }
+        if burst_agg == 0 {
+            return Err(MpiErr::Internal(
+                "burst rputs must aggregate into PUT_AGG packets (tx_aggregated_ops == 0)".into(),
+            ));
+        }
+        if paced_ratio > 2.0 {
+            return Err(MpiErr::Internal(format!(
+                "paced rputs must see ~per-op acks (got {paced_ratio} ops/ack, need <= 2)"
+            )));
+        }
+        metrics.push(Metric::higher("burst_ops_per_ack", burst_ratio, "op/ack"));
+        metrics.push(Metric::info("paced_ops_per_ack", paced_ratio, "op/ack"));
+        metrics.push(Metric::info("burst_tx_aggregated_ops", burst_agg as f64, "ops"));
+        metrics.push(Metric::info("paced_ack_mode_switches", paced_switches as f64, "switches"));
         Ok(ScenarioResult { metrics })
     }
 }

@@ -80,14 +80,17 @@ pub mod xla_compat;
 
 /// Convenient re-exports for examples and applications.
 pub mod prelude {
-    pub use crate::config::{Config, CsMode, HashPolicy};
+    pub use crate::config::{AckBatch, Config, ConfigBuilder, CsMode, HashPolicy};
     pub use crate::error::{MpiErr, Result};
     pub use crate::gpu::{DevicePtr, GpuDevice, GpuStream};
     pub use crate::mpi::comm::Comm;
     pub use crate::mpi::datatype::Datatype;
     pub use crate::mpi::info::Info;
     pub use crate::mpi::request::Request;
+    pub use crate::mpi::rma::Window;
+    pub use crate::mpi::rma_req::RmaRequest;
     pub use crate::mpi::status::Status;
+    pub use crate::mpi::waitable::Waitable;
     pub use crate::mpi::world::{Proc, World};
     pub use crate::mpi::{ANY_SOURCE, ANY_TAG};
     pub use crate::stream::{MpixStream, ANY_INDEX};

@@ -13,6 +13,7 @@ pub mod partitioned;
 pub mod persistent;
 pub mod probe;
 pub mod rma;
+pub mod rma_req;
 pub mod rma_track;
 pub mod datatype;
 pub mod group;
@@ -21,6 +22,7 @@ pub mod matching;
 pub mod pt2pt;
 pub mod request;
 pub mod status;
+pub mod waitable;
 pub mod win_lock;
 pub mod world;
 

@@ -269,6 +269,31 @@ impl Proc {
         Ok(())
     }
 
+    /// Nonblocking counterpart of [`Proc::pwait_send`] (the
+    /// [`Waitable::test`](crate::mpi::waitable::Waitable) face of a
+    /// partitioned send): `true` once every partition has been triggered
+    /// *and* its send completed. Untriggered partitions read as `false`
+    /// rather than the error `pwait_send` raises — "not done yet" is a
+    /// poll answer, not a misuse. Does not re-arm; completion stays with
+    /// `pwait_send`.
+    pub fn ptest_send(&self, ps: &PartitionedSend) -> Result<bool> {
+        let inner = &ps.inner;
+        for part in 0..inner.parts {
+            if !inner.ready[part].load(Ordering::Acquire) {
+                return Ok(false);
+            }
+        }
+        for part in 0..inner.parts {
+            let guard = inner.reqs[part].lock().unwrap();
+            if let Some(r) = guard.as_ref() {
+                if self.test(r)?.is_none() {
+                    return Ok(false);
+                }
+            }
+        }
+        Ok(true)
+    }
+
     /// `MPI_Precv_init` (+ implicit start): posts one receive per
     /// partition into equal slices of `buf`.
     pub fn precv_init(
@@ -343,6 +368,19 @@ impl Proc {
             }
         }
         Ok(())
+    }
+
+    /// Nonblocking counterpart of [`Proc::pwait_recv`]: `true` once every
+    /// partition has landed (already-waited partitions count as landed).
+    pub fn ptest_recv(&self, pr: &PartitionedRecv) -> Result<bool> {
+        for slot in pr.reqs.iter() {
+            if let Some(r) = slot.as_ref() {
+                if self.test(r)?.is_none() {
+                    return Ok(false);
+                }
+            }
+        }
+        Ok(true)
     }
 }
 

@@ -63,13 +63,14 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::config::AckBatch;
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
 use crate::fabric::endpoint::{lock_counted, EpStats};
 use crate::fabric::wire::{rma_op, Envelope, Packet, NO_INDEX};
 use crate::mpi::comm::Comm;
 use crate::mpi::datatype::{Datatype, Op};
-use crate::mpi::rma_track::{self, AckBatcher, AckEntry, Emit, OpTracker, Route};
+use crate::mpi::rma_track::{self, AckBatcher, AckEntry, BatchPolicy, Emit, OpTracker, Route};
 use crate::mpi::win_lock::LockTable;
 use crate::mpi::world::Proc;
 use crate::vci::Vci;
@@ -353,9 +354,36 @@ struct PassiveState {
     pending: u64,
 }
 
-struct WinInner {
-    id: u32,
-    comm: Comm,
+/// Per-op byte ceiling for message aggregation: an `rput` at or under
+/// this size is *staged* rather than transmitted, to be coalesced with
+/// same-route successors into one `PUT_AGG` packet.
+pub(crate) const AGG_MAX_BYTES_PER_OP: usize = 256;
+/// Staged ops per route before the buffer ships.
+pub(crate) const AGG_MAX_OPS: usize = 8;
+/// Staged payload bytes per route before the buffer ships.
+pub(crate) const AGG_MAX_BYTES: usize = 1024;
+
+/// One staged small `rput` awaiting aggregation.
+struct AggOp {
+    offset: u64,
+    token: u64,
+    data: Vec<u8>,
+}
+
+/// Aggregation buffer for one (target, issuing VCI) route: small watched
+/// puts accumulate here (already issued in the tracker, so flush
+/// watermarks count them) until an op count / byte cap, a flush, a read,
+/// or a hold change drains the route.
+struct AggBuf {
+    dst_ep: EpAddr,
+    hold: u64,
+    bytes: usize,
+    ops: Vec<AggOp>,
+}
+
+pub(crate) struct WinInner {
+    pub(crate) id: u32,
+    pub(crate) comm: Comm,
     /// Per-rank window sizes (allgathered at creation).
     sizes: Vec<usize>,
     token: AtomicU64,
@@ -370,7 +398,9 @@ struct WinInner {
     passive: Mutex<PassiveState>,
     /// Deferred data-op accounting (shared with the proc-global registry
     /// so `ACK_BATCH` handling reaches it without a window handle).
-    tracker: Arc<Mutex<OpTracker>>,
+    pub(crate) tracker: Arc<Mutex<OpTracker>>,
+    /// Message-aggregation staging, keyed by (target, issuing VCI).
+    agg: Mutex<HashMap<(u32, u16), AggBuf>>,
 }
 
 impl WinInner {
@@ -392,7 +422,7 @@ impl WinInner {
 /// idempotent-hostile like MPI — a second free of the same window errors.
 #[derive(Clone)]
 pub struct Window {
-    inner: Arc<WinInner>,
+    pub(crate) inner: Arc<WinInner>,
 }
 
 impl Window {
@@ -412,6 +442,29 @@ impl Window {
     pub(crate) fn next_token(&self) -> u64 {
         self.inner.token.fetch_add(1, Ordering::Relaxed)
     }
+
+    /// Weak handle to the shared window state — held by `RmaRequest` so
+    /// an outstanding request handle never keeps freed window state alive
+    /// (and never blocks `win_free`'s exclusive-buffer reclaim).
+    pub(crate) fn downgrade(&self) -> std::sync::Weak<WinInner> {
+        Arc::downgrade(&self.inner)
+    }
+
+    /// Rebuild a window handle from upgraded shared state (the
+    /// `RmaRequest` wait path).
+    pub(crate) fn from_inner(inner: Arc<WinInner>) -> Window {
+        Window { inner }
+    }
+}
+
+/// Monotonic nanoseconds since first use — the arrival clock feeding the
+/// adaptive ack batcher's inter-op gap classifier
+/// ([`AckBatcher::record_at`]).
+pub(crate) fn now_ns() -> u64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }
 
 impl Proc {
@@ -420,8 +473,10 @@ impl Proc {
     }
 
     /// The §5.1 prototype route: both sides use `win_id % implicit_pool`,
-    /// ignoring any stream attachment.
-    fn rma_route_implicit(&self, win: &Window, target: u32) -> Result<RmaRoute> {
+    /// ignoring any stream attachment. `pub(crate)`: the split-phase
+    /// request-handle entry points (`rput`/`rget`/`raccumulate`) resolve
+    /// through it too.
+    pub(crate) fn rma_route_implicit(&self, win: &Window, target: u32) -> Result<RmaRoute> {
         let vci = self.rma_vci(win.inner.id);
         Ok(RmaRoute { src_vci: vci, dst_ep: EpAddr { rank: win.inner.comm.world_rank(target)?, ep: vci } })
     }
@@ -437,12 +492,19 @@ impl Proc {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
             .collect();
+        // The target-side ack-coalescing policy comes from this rank's
+        // configuration ([`crate::config::Config::rma_ack_batch`]); the
+        // default reproduces the pre-ISSUE-7 fixed 8-op batch.
+        let policy = match self.config().rma_ack_batch {
+            AckBatch::Fixed(n) => BatchPolicy::Fixed(n),
+            AckBatch::Adaptive => BatchPolicy::Adaptive,
+        };
         self.windows().install(
             id,
             Arc::new(WinTarget {
                 buf: Mutex::new(local),
                 locks: Mutex::new(LockTable::new()),
-                acks: Mutex::new(AckBatcher::new()),
+                acks: Mutex::new(AckBatcher::with_policy(policy)),
                 fenced: AtomicBool::new(false),
             }),
         );
@@ -460,6 +522,7 @@ impl Proc {
                 unfenced_ops: AtomicU64::new(0),
                 passive: Mutex::new(PassiveState::default()),
                 tracker,
+                agg: Mutex::new(HashMap::new()),
             }),
         })
     }
@@ -475,7 +538,7 @@ impl Proc {
     pub fn win_free(&self, win: Window) -> Result<Vec<u8>> {
         let deferred = {
             let t = win.inner.tracker.lock().unwrap();
-            t.outstanding_total() + t.errs_pending()
+            t.outstanding_total() + t.errs_pending() + t.completion_errs_pending()
         };
         let mut open = [0u8; 24];
         open[..8].copy_from_slice(&win.inner.unfenced_ops.load(Ordering::Acquire).to_le_bytes());
@@ -666,7 +729,9 @@ impl Proc {
     /// *before* transmitting (an ack racing the registration must find
     /// the token), transmit, return — completion is the next flush
     /// point's business. A failed transmit un-registers the op (nothing
-    /// reached the target; no ack will come).
+    /// reached the target; no ack will come). `watched` ops
+    /// ([`OpTracker::issue_watched`]) park their outcome for a
+    /// split-phase request handle instead of the sticky-error path.
     fn rma_op_deferred(
         &self,
         win: &Window,
@@ -674,6 +739,7 @@ impl Proc {
         header: RmaHeader,
         body: &[u8],
         route: RmaRoute,
+        watched: bool,
     ) -> Result<()> {
         let rk = Route {
             src_vci: route.src_vci,
@@ -683,7 +749,14 @@ impl Proc {
         let token = header.token;
         let vci = self.vci(route.src_vci);
         let cs = self.session_for_vci(route.src_vci);
-        lock_counted(&win.inner.tracker, cs.waits()).issue(token, target, rk);
+        {
+            let mut t = lock_counted(&win.inner.tracker, cs.waits());
+            if watched {
+                t.issue_watched(token, target, rk);
+            } else {
+                t.issue(token, target, rk);
+            }
+        }
         let env = Envelope {
             ctx_id: RMA_CTX_BIT | win.inner.id,
             src_rank: win.inner.comm.rank(),
@@ -711,6 +784,10 @@ impl Proc {
     /// (misuse check, failed release) leaves the NACK in the tracker for
     /// the next completion point instead of silently dropping it.
     pub(crate) fn flush_target_complete(&self, win: &Window, target: u32) -> Result<()> {
+        // Staged aggregation buffers count toward the flush watermark
+        // (their tokens are issued) but have not reached the wire — ship
+        // them before probing, or the watermark could never be met.
+        self.agg_drain_target(win, target)?;
         // Every op in flight to `target` at entry must be acknowledged
         // before this returns.
         let mut remaining = win.inner.tracker.lock().unwrap().inflight_tokens(target);
@@ -755,6 +832,41 @@ impl Proc {
                 let t = win.inner.tracker.lock().unwrap();
                 remaining.retain(|tok| t.any_inflight(&[*tok]));
             }
+        }
+        Ok(())
+    }
+
+    /// One-way ack demand (`ACK_REQ`) on every route still carrying ops
+    /// to `target`: ask the target to emit its parked partial batches
+    /// now. This is the cheap poke a split-phase `wait` fires when its
+    /// op's ack is coalescing in the target batcher — one extra
+    /// transmit, no reply awaited, no watermark round-trip (contrast
+    /// [`Proc::flush_target_complete`], which costs a full `FLUSH_REQ`/
+    /// `FLUSH_ACK` exchange). Same-route FIFO guarantees the demanded
+    /// op was recorded before the demand is serviced.
+    pub(crate) fn rma_ack_demand(&self, win: &Window, target: u32) -> Result<()> {
+        let routes = win.inner.tracker.lock().unwrap().routes_outstanding(target);
+        for r in &routes {
+            let vci = self.vci(r.src_vci);
+            let cs = self.session_for_vci(r.src_vci);
+            let h = RmaHeader {
+                opcode: rma_op::ACK_REQ,
+                dt: 0,
+                rop: 0,
+                win_id: win.inner.id,
+                offset: 0,
+                token: 0,
+                hold: 0,
+            };
+            let env = Envelope {
+                ctx_id: RMA_CTX_BIT | win.inner.id,
+                src_rank: win.inner.comm.rank(),
+                tag: 0,
+                src_idx: NO_INDEX,
+                dst_idx: NO_INDEX,
+            };
+            let packet = Packet::eager(env, vci.addr(), h.encode(&[]));
+            self.transmit_retry(vci, &cs, EpAddr { rank: r.dst_rank, ep: r.dst_ep }, packet)?;
         }
         Ok(())
     }
@@ -856,7 +968,7 @@ impl Proc {
             token,
             hold,
         };
-        self.rma_op_deferred(win, target, h, data, route)
+        self.rma_op_deferred(win, target, h, data, route, false)
     }
 
     /// Core get over a resolved route (shared with the stream-aware path).
@@ -874,6 +986,10 @@ impl Proc {
                 win.size_at(target)
             )));
         }
+        // A synchronous read must observe this origin's staged writes:
+        // ship any aggregation buffers headed to `target` first (per-route
+        // FIFO then orders them ahead of the GET at the target).
+        self.agg_drain_target(win, target)?;
         let hold = self.op_hold(win, target)?;
         let token = win.next_token();
         let h = RmaHeader {
@@ -918,7 +1034,274 @@ impl Proc {
             token,
             hold,
         };
-        self.rma_op_deferred(win, target, h, data, route)
+        self.rma_op_deferred(win, target, h, data, route, false)
+    }
+
+    /// Core split-phase put (shared by `rput`, `stream_rput`, and the
+    /// enqueue lane): issues a *watched* op and returns its token for an
+    /// `RmaRequest`. Small payloads (≤ [`AGG_MAX_BYTES_PER_OP`]) are
+    /// staged for message aggregation — coalesced with same-route
+    /// successors into one `PUT_AGG` packet — instead of transmitted
+    /// immediately; the token is watched-issued at *stage* time so flush
+    /// watermarks count staged ops and `win_free` refuses while one is
+    /// unshipped.
+    pub(crate) fn rma_rput_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        route: RmaRoute,
+    ) -> Result<u64> {
+        if offset + data.len() > win.size_at(target) {
+            return Err(MpiErr::Arg(format!(
+                "rput of {} bytes at {offset} exceeds target window of {} bytes",
+                data.len(),
+                win.size_at(target)
+            )));
+        }
+        let hold = self.op_hold(win, target)?;
+        let token = win.next_token();
+        let rk = Route {
+            src_vci: route.src_vci,
+            dst_rank: route.dst_ep.rank,
+            dst_ep: route.dst_ep.ep,
+        };
+        if data.len() > AGG_MAX_BYTES_PER_OP {
+            // Too big to aggregate: ship any staged predecessors on this
+            // route first (per-route FIFO keeps same-range writes from
+            // one origin thread applying in program order), then a loose
+            // watched PUT.
+            self.agg_drain_route(win, target, route.src_vci)?;
+            let h = RmaHeader {
+                opcode: rma_op::PUT,
+                dt: 0,
+                rop: 0,
+                win_id: win.inner.id,
+                offset: offset as u64,
+                token,
+                hold,
+            };
+            self.rma_op_deferred(win, target, h, data, route, true)?;
+            return Ok(token);
+        }
+        let key = (target, route.src_vci);
+        // A buffer staged under a different hold (the epoch changed) or a
+        // different destination endpoint cannot absorb this op — ship it.
+        let stale = {
+            let mut agg = win.inner.agg.lock().unwrap();
+            match agg.get(&key) {
+                Some(b) if b.hold != hold || b.dst_ep != route.dst_ep => agg.remove(&key),
+                _ => None,
+            }
+        };
+        if let Some(buf) = stale {
+            self.agg_transmit(win, route.src_vci, buf)?;
+        }
+        {
+            let cs = self.session_for_vci(route.src_vci);
+            lock_counted(&win.inner.tracker, cs.waits()).issue_watched(token, target, rk);
+        }
+        let full = {
+            let mut agg = win.inner.agg.lock().unwrap();
+            let buf = agg.entry(key).or_insert_with(|| AggBuf {
+                dst_ep: route.dst_ep,
+                hold,
+                bytes: 0,
+                ops: Vec::new(),
+            });
+            buf.bytes += data.len();
+            buf.ops.push(AggOp { offset: offset as u64, token, data: data.to_vec() });
+            if buf.ops.len() >= AGG_MAX_OPS || buf.bytes >= AGG_MAX_BYTES {
+                agg.remove(&key)
+            } else {
+                None
+            }
+        };
+        if let Some(buf) = full {
+            self.agg_transmit(win, route.src_vci, buf)?;
+        }
+        Ok(token)
+    }
+
+    /// Core split-phase get: registers a watched read and transmits the
+    /// `GET` without awaiting the reply — the `RmaRequest` polls the
+    /// `done` shard and finalizes the read when waited. Staged writes to
+    /// `target` are shipped first so the read observes this origin's
+    /// pending `rput`s (per-route FIFO at the target).
+    pub(crate) fn rma_rget_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        len: usize,
+        route: RmaRoute,
+    ) -> Result<u64> {
+        if offset + len > win.size_at(target) {
+            return Err(MpiErr::Arg(format!(
+                "rget of {len} bytes at {offset} exceeds target window of {} bytes",
+                win.size_at(target)
+            )));
+        }
+        self.agg_drain_target(win, target)?;
+        let hold = self.op_hold(win, target)?;
+        let token = win.next_token();
+        let vci = self.vci(route.src_vci);
+        let cs = self.session_for_vci(route.src_vci);
+        lock_counted(&win.inner.tracker, cs.waits()).issue_read(token, target);
+        let h = RmaHeader {
+            opcode: rma_op::GET,
+            dt: 0,
+            rop: 0,
+            win_id: win.inner.id,
+            offset: offset as u64,
+            token,
+            hold,
+        };
+        let env = Envelope {
+            ctx_id: RMA_CTX_BIT | win.inner.id,
+            src_rank: win.inner.comm.rank(),
+            tag: 0,
+            src_idx: NO_INDEX,
+            dst_idx: NO_INDEX,
+        };
+        let packet = Packet::eager(env, vci.addr(), h.encode(&(len as u64).to_le_bytes()));
+        match self.transmit_retry(vci, &cs, route.dst_ep, packet) {
+            Ok(()) => Ok(token),
+            Err(e) => {
+                win.inner.tracker.lock().unwrap().abort_read(token);
+                Err(e)
+            }
+        }
+    }
+
+    /// Core split-phase accumulate: a watched deferred ACC (never
+    /// aggregated — accumulates are read-modify-write, so coalescing
+    /// heuristics stay put-only). Staged same-route puts ship first to
+    /// preserve one-thread program order on overlapping ranges.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn rma_racc_via(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        dt: &Datatype,
+        op: Op,
+        route: RmaRoute,
+    ) -> Result<u64> {
+        if data.len() % dt.size() != 0 {
+            return Err(MpiErr::Datatype("accumulate data not a whole number of elements".into()));
+        }
+        if offset + data.len() > win.size_at(target) {
+            return Err(MpiErr::Arg("accumulate exceeds target window".into()));
+        }
+        self.agg_drain_route(win, target, route.src_vci)?;
+        let hold = self.op_hold(win, target)?;
+        let token = win.next_token();
+        let h = RmaHeader {
+            opcode: rma_op::ACC,
+            dt: dt_code(dt)?,
+            rop: rop_code(op),
+            win_id: win.inner.id,
+            offset: offset as u64,
+            token,
+            hold,
+        };
+        self.rma_op_deferred(win, target, h, data, route, true)?;
+        Ok(token)
+    }
+
+    /// Ship one staged aggregation buffer: a single op travels as a loose
+    /// `PUT` (no aggregation overhead), two or more as one `PUT_AGG`
+    /// packet whose body is a count-prefixed sequence of
+    /// (offset, token, length, bytes) sub-ops sharing the buffer's hold.
+    /// A transmit failure aborts every staged token (nothing reached the
+    /// target; no ack will come).
+    fn agg_transmit(&self, win: &Window, src_vci: u16, buf: AggBuf) -> Result<()> {
+        let vci = self.vci(src_vci);
+        let cs = self.session_for_vci(src_vci);
+        let env = Envelope {
+            ctx_id: RMA_CTX_BIT | win.inner.id,
+            src_rank: win.inner.comm.rank(),
+            tag: 0,
+            src_idx: NO_INDEX,
+            dst_idx: NO_INDEX,
+        };
+        let payload = if buf.ops.len() == 1 {
+            let op = &buf.ops[0];
+            let h = RmaHeader {
+                opcode: rma_op::PUT,
+                dt: 0,
+                rop: 0,
+                win_id: win.inner.id,
+                offset: op.offset,
+                token: op.token,
+                hold: buf.hold,
+            };
+            h.encode(&op.data)
+        } else {
+            let mut body = Vec::with_capacity(4 + 20 * buf.ops.len() + buf.bytes);
+            body.extend_from_slice(&(buf.ops.len() as u32).to_le_bytes());
+            for op in &buf.ops {
+                body.extend_from_slice(&op.offset.to_le_bytes());
+                body.extend_from_slice(&op.token.to_le_bytes());
+                body.extend_from_slice(&(op.data.len() as u32).to_le_bytes());
+                body.extend_from_slice(&op.data);
+            }
+            let h = RmaHeader {
+                opcode: rma_op::PUT_AGG,
+                dt: 0,
+                rop: 0,
+                win_id: win.inner.id,
+                offset: 0,
+                token: 0,
+                hold: buf.hold,
+            };
+            h.encode(&body)
+        };
+        let packet = Packet::eager(env, vci.addr(), payload);
+        match self.transmit_retry(vci, &cs, buf.dst_ep, packet) {
+            Ok(()) => {
+                if buf.ops.len() >= 2 {
+                    vci.ep().stats().note_tx_aggregated(buf.ops.len() as u64);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                let mut t = win.inner.tracker.lock().unwrap();
+                for op in &buf.ops {
+                    t.abort(op.token);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Ship the staged aggregation buffer (if any) for one
+    /// (target, issuing VCI) route.
+    fn agg_drain_route(&self, win: &Window, target: u32, src_vci: u16) -> Result<()> {
+        let buf = win.inner.agg.lock().unwrap().remove(&(target, src_vci));
+        match buf {
+            Some(b) => self.agg_transmit(win, src_vci, b),
+            None => Ok(()),
+        }
+    }
+
+    /// Ship every staged buffer headed to `target`, on any route —
+    /// completion points and synchronous reads must not leave writes
+    /// parked in the staging area.
+    pub(crate) fn agg_drain_target(&self, win: &Window, target: u32) -> Result<()> {
+        let bufs: Vec<(u16, AggBuf)> = {
+            let mut agg = win.inner.agg.lock().unwrap();
+            let keys: Vec<(u32, u16)> =
+                agg.keys().filter(|(t, _)| *t == target).copied().collect();
+            keys.into_iter().filter_map(|k| agg.remove(&k).map(|b| (k.1, b))).collect()
+        };
+        for (vci, b) in bufs {
+            self.agg_transmit(win, vci, b)?;
+        }
+        Ok(())
     }
 
     /// `MPI_Put`: write `data` into the target window at `offset`
@@ -1183,6 +1566,34 @@ impl Proc {
     }
 }
 
+/// One decoded `PUT_AGG` sub-op, borrowing the packet body.
+struct AggSub<'a> {
+    offset: u64,
+    token: u64,
+    data: &'a [u8],
+}
+
+/// Decode a `PUT_AGG` body: u32 LE count, then per sub-op u64 offset,
+/// u64 token, u32 length, payload bytes. `None` on any truncation (or an
+/// implausible count — a forged packet must not drive allocation).
+fn decode_put_agg(body: &[u8]) -> Option<Vec<AggSub<'_>>> {
+    let count = u32::from_le_bytes(body.get(..4)?.try_into().ok()?) as usize;
+    if count == 0 || count > 4096 {
+        return None;
+    }
+    let mut subs = Vec::with_capacity(count);
+    let mut at = 4usize;
+    for _ in 0..count {
+        let offset = u64::from_le_bytes(body.get(at..at + 8)?.try_into().ok()?);
+        let token = u64::from_le_bytes(body.get(at + 8..at + 16)?.try_into().ok()?);
+        let len = u32::from_le_bytes(body.get(at + 16..at + 20)?.try_into().ok()?) as usize;
+        let data = body.get(at + 20..at + 20 + len)?;
+        at += 20 + len;
+        subs.push(AggSub { offset, token, data });
+    }
+    Some(subs)
+}
+
 /// Progress-engine hook: handle an RMA packet (target side or origin-side
 /// response). Called by `pt2pt::dispatch` for packets with
 /// [`RMA_CTX_BIT`].
@@ -1292,9 +1703,79 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
                     ));
                 }
             }
-            let emits = lock_counted(&win.acks, stats)
-                .record(env.src_rank, reply_ep, AckEntry { token: h.token, err: reject });
+            let (emits, switched) = {
+                let mut acks = lock_counted(&win.acks, stats);
+                let before = acks.ack_mode_switches();
+                let emits = acks.record_at(
+                    env.src_rank,
+                    reply_ep,
+                    AckEntry { token: h.token, err: reject },
+                    now_ns(),
+                );
+                (emits, acks.ack_mode_switches() - before)
+            };
+            if switched > 0 {
+                vci.ep().stats().note_ack_mode_switches(switched);
+            }
             send_emits(emits);
+        }
+        rma_op::PUT_AGG => {
+            // Aggregated deferred writes: one packet, several sub-ops,
+            // each applied and acknowledged individually through the same
+            // batching machinery as loose PUTs.
+            let Some(subs) = decode_put_agg(body) else {
+                // Only a forged packet decodes malformed (the encoder
+                // lives in this file); without sub-tokens there is
+                // nothing to NACK per op.
+                return;
+            };
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
+                // Unknown window: NACK every sub-op so the origin's
+                // tracker still drains.
+                let entries: Vec<AckEntry> = subs
+                    .iter()
+                    .map(|s| AckEntry {
+                        token: s.token,
+                        err: Some(format!("window {} not registered at target", h.win_id)),
+                    })
+                    .collect();
+                respond(reply_ep, rma_op::ACK_BATCH, 0, rma_track::encode_batch(&entries));
+                return;
+            };
+            // One coverage verdict per packet: every sub-op shares the
+            // header's hold token.
+            let cover = coverage(&win);
+            for s in subs {
+                let mut reject = cover.clone();
+                if reject.is_none() {
+                    let mut buf = lock_counted(&win.buf, stats);
+                    let off = s.offset as usize;
+                    if off.checked_add(s.data.len()).is_some_and(|end| end <= buf.len()) {
+                        buf[off..off + s.data.len()].copy_from_slice(s.data);
+                    } else {
+                        reject = Some(format!(
+                            "put of {} bytes at {off} exceeds target window of {} bytes",
+                            s.data.len(),
+                            buf.len()
+                        ));
+                    }
+                }
+                let (emits, switched) = {
+                    let mut acks = lock_counted(&win.acks, stats);
+                    let before = acks.ack_mode_switches();
+                    let emits = acks.record_at(
+                        env.src_rank,
+                        reply_ep,
+                        AckEntry { token: s.token, err: reject },
+                        now_ns(),
+                    );
+                    (emits, acks.ack_mode_switches() - before)
+                };
+                if switched > 0 {
+                    vci.ep().stats().note_ack_mode_switches(switched);
+                }
+                send_emits(emits);
+            }
         }
         rma_op::GET => {
             let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else {
@@ -1344,6 +1825,15 @@ pub(crate) fn handle_rma_packet(proc: &Proc, vci: &Arc<Vci>, cs: &CsSession<'_>,
             // origin's issued watermark; parked until then (woken by the
             // data op that satisfies it).
             let emits = lock_counted(&win.acks, stats).flush(env.src_rank, reply_ep, h.token, required);
+            send_emits(emits);
+        }
+        rma_op::ACK_REQ => {
+            // A blocked split-phase wait demands its parked partial
+            // batch. One-way: an unknown (freed) window just drops it —
+            // the origin's wait notices the free through its local
+            // tracker registry, never through a reply.
+            let Some(win) = proc.windows().get(vci.idx(), h.win_id, stats) else { return };
+            let emits = lock_counted(&win.acks, stats).demand(env.src_rank, reply_ep);
             send_emits(emits);
         }
         rma_op::ACK_BATCH => {

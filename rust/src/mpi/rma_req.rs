@@ -1,0 +1,575 @@
+//! Split-phase RMA request handles (`MPI_Rput` / `MPI_Rget` /
+//! `MPI_Raccumulate`, arXiv 2402.12274 §4).
+//!
+//! [`Proc::put`](crate::mpi::world::Proc) completes *locally* on return
+//! and becomes target-visible only at the next completion point
+//! (`win_flush`, `win_unlock`, `win_fence`). The request-handle variants
+//! here return an [`RmaRequest`] instead: a waitable tied to **that one
+//! operation's** target-side outcome, threaded through the deferred
+//! tracker's per-op completion tokens
+//! ([`OpTracker::issue_watched`](crate::mpi::rma_track::OpTracker))
+//! rather than count watermarks. Waiting on a single op costs two
+//! packets in the adaptive steady state (the op, its `ACK_BATCH`) where
+//! `put` + `win_flush` costs four (op, `FLUSH_REQ`, `ACK_BATCH`,
+//! `FLUSH_ACK`) — the `rma/flush` scenario gates that ratio.
+//!
+//! # Lifecycle
+//!
+//! A handle is consumed by its first successful [`RmaRequest::wait`];
+//! waiting twice is a caller bug and reports `MpiErr::Rma` rather than
+//! hanging or silently succeeding. [`RmaRequest::test`] never consumes —
+//! it polls, and a `true` result means a subsequent `wait` returns
+//! immediately. Dropping an unwaited handle reverts the op to ordinary
+//! deferred semantics (`OpTracker::unwatch` /
+//! `OpTracker::abort_read`): a target-side failure is never lost, it
+//! re-surfaces at the window's next completion point.
+//!
+//! The handle holds the window **weakly**: it neither blocks `win_free`
+//! nor keeps freed state alive. Waiting after `win_free` finds the
+//! proc-global tracker registry entry gone and reports `MpiErr::Rma` —
+//! it cannot hang on an ack that will never be routed.
+
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::Comm;
+use crate::mpi::datatype::{Datatype, Op};
+use crate::mpi::rma::{WinInner, Window};
+use crate::mpi::world::Proc;
+
+/// How long a `wait` spins on progress before escalating from the cheap
+/// one-way `ACK_REQ` demand (fired on entry) to a full flush round-trip.
+/// The demand settles the common parked-ack case in one extra packet;
+/// the flush fallback only exists for ops displaced on their route
+/// (transmit backpressure), so the budget can be generous.
+const WAIT_POKE_BUDGET_US: u128 = 100;
+
+/// What the lane-executed closure of an enqueued rput hands back to the
+/// caller-held outer handle: the inner (stream-routed) request, or the
+/// call-time error the issue hit on the lane.
+pub(crate) type EnqueuedSlot = Arc<Mutex<Option<Result<RmaRequest>>>>;
+
+enum ReqKind {
+    /// Watched deferred write: completes via `ACK_BATCH` →
+    /// `OpTracker::completions`.
+    Put,
+    /// Watched deferred accumulate — same completion path as `Put`.
+    Acc,
+    /// Split-phase read: completes via the `DATA` reply in
+    /// `RmaResults::done`; the bytes park in the handle until
+    /// [`RmaRequest::take_data`].
+    Get,
+    /// Stream-ordered rput (`rput_enqueue`): the lane fills `slot` with
+    /// the inner request when the op actually issues; waiting first
+    /// drains the GPU stream, then delegates to the inner handle.
+    Enqueued { comm: Comm, slot: EnqueuedSlot },
+}
+
+enum ReqState {
+    Pending,
+    /// A read completed via `test`; the outcome (and any data, in
+    /// `got`) is parked for the consuming `wait`.
+    Ready(Option<String>),
+    Consumed,
+}
+
+/// Waitable handle to one split-phase RMA operation. See the module docs
+/// for lifecycle rules (single consuming wait, non-consuming test,
+/// error-preserving drop).
+pub struct RmaRequest {
+    win: Weak<WinInner>,
+    win_id: u32,
+    target: u32,
+    src_vci: u16,
+    token: u64,
+    kind: ReqKind,
+    state: ReqState,
+    /// Read payload, parked between completion and [`take_data`].
+    ///
+    /// [`take_data`]: RmaRequest::take_data
+    got: Option<Vec<u8>>,
+}
+
+impl RmaRequest {
+    pub(crate) fn write(win: &Window, target: u32, src_vci: u16, token: u64, acc: bool) -> Self {
+        RmaRequest {
+            win: win.downgrade(),
+            win_id: win.id(),
+            target,
+            src_vci,
+            token,
+            kind: if acc { ReqKind::Acc } else { ReqKind::Put },
+            state: ReqState::Pending,
+            got: None,
+        }
+    }
+
+    pub(crate) fn read(win: &Window, target: u32, src_vci: u16, token: u64) -> Self {
+        RmaRequest {
+            win: win.downgrade(),
+            win_id: win.id(),
+            target,
+            src_vci,
+            token,
+            kind: ReqKind::Get,
+            state: ReqState::Pending,
+            got: None,
+        }
+    }
+
+    pub(crate) fn enqueued(win: &Window, comm: Comm, slot: EnqueuedSlot) -> Self {
+        RmaRequest {
+            win: win.downgrade(),
+            win_id: win.id(),
+            target: 0,
+            src_vci: 0,
+            token: 0,
+            kind: ReqKind::Enqueued { comm, slot },
+            state: ReqState::Pending,
+            got: None,
+        }
+    }
+
+    /// The bytes an `rget` fetched. `Some` exactly once, after the
+    /// handle completed successfully (via `wait`, or `test` → `true`).
+    pub fn take_data(&mut self) -> Option<Vec<u8>> {
+        self.got.take()
+    }
+
+    /// Block until this operation is target-visible (writes) or its data
+    /// has arrived (reads). Consumes the handle's completion: a second
+    /// `wait` is an `MpiErr::Rma` error, never a hang.
+    pub fn wait(&mut self, p: &Proc) -> Result<()> {
+        match std::mem::replace(&mut self.state, ReqState::Consumed) {
+            ReqState::Consumed => Err(MpiErr::Rma(format!(
+                "request for window {} (op token {}) waited more than once",
+                self.win_id, self.token
+            ))),
+            ReqState::Ready(err) => match err {
+                Some(e) => Err(MpiErr::Rma(e)),
+                None => Ok(()),
+            },
+            ReqState::Pending => self.wait_pending(p),
+        }
+    }
+
+    /// Nonblocking completion poll: one progress pass, then check.
+    /// Returns `Ok(true)` once complete — and keeps returning `Ok(true)`;
+    /// the consuming step stays with `wait`.
+    pub fn test(&mut self, p: &Proc) -> Result<bool> {
+        match self.state {
+            ReqState::Ready(_) | ReqState::Consumed => return Ok(true),
+            ReqState::Pending => {}
+        }
+        if let ReqKind::Enqueued { slot, .. } = &self.kind {
+            // Before the lane has run, the op does not exist yet. Once
+            // it has, poll the inner handle in place (leave it in the
+            // slot so a later wait still finds it).
+            let slot = Arc::clone(slot);
+            let mut guard = slot.lock().unwrap();
+            return match guard.as_mut() {
+                None => Ok(false),
+                Some(Ok(inner)) => inner.test(p),
+                Some(Err(_)) => Ok(true), // wait will surface the error
+            };
+        }
+        let Some(tracker) = p.rma_results().tracker(self.src_vci, self.win_id, None) else {
+            return Err(self.freed_err());
+        };
+        // A staged (aggregation-buffered) rput cannot complete until it
+        // reaches the wire; draining is a send, so a nonblocking test
+        // may do it.
+        if let Some(inner) = self.win.upgrade() {
+            let w = Window::from_inner(inner);
+            p.agg_drain_target(&w, self.target)?;
+        }
+        {
+            let vci = p.vci(self.src_vci);
+            let cs = p.session_for_vci(self.src_vci);
+            p.progress_vci(vci, &cs);
+        }
+        match self.kind {
+            ReqKind::Get => {
+                match p.rma_results().take_done(self.src_vci, (self.win_id, self.token), None) {
+                    None => Ok(false),
+                    Some(outcome) => {
+                        tracker.lock().unwrap().complete_read(self.token);
+                        match outcome {
+                            Ok(bytes) => {
+                                self.got = Some(bytes);
+                                self.state = ReqState::Ready(None);
+                            }
+                            Err(e) => self.state = ReqState::Ready(Some(e)),
+                        }
+                        Ok(true)
+                    }
+                }
+            }
+            // Peek only — the completion stays parked for wait (or gets
+            // re-routed by drop), so no outcome can be lost here.
+            _ => Ok(tracker.lock().unwrap().has_completion(self.token)),
+        }
+    }
+
+    fn freed_err(&self) -> MpiErr {
+        MpiErr::Rma(format!(
+            "wait on a request for window {}, which has been freed",
+            self.win_id
+        ))
+    }
+
+    fn wait_pending(&mut self, p: &Proc) -> Result<()> {
+        if let ReqKind::Enqueued { comm, slot } = &self.kind {
+            let comm = comm.clone();
+            let slot = Arc::clone(slot);
+            // Drain the stream so the lane has executed our closure (and
+            // everything enqueued before it — stream order).
+            let gpu = crate::stream::enqueue::enqueue_target(&comm)?;
+            gpu.synchronize()?;
+            return match slot.lock().unwrap().take() {
+                Some(Ok(mut inner)) => {
+                    let r = inner.wait(p);
+                    if r.is_ok() {
+                        self.got = inner.take_data();
+                    }
+                    r
+                }
+                Some(Err(e)) => Err(e),
+                None => Err(MpiErr::Rma(
+                    "enqueued rput was never issued (an earlier failure on its stream may have aborted the lane)".into(),
+                )),
+            };
+        }
+        // The proc-global registry is the authority on window liveness —
+        // a Weak that still upgrades may just be another outstanding
+        // handle. Checked every iteration: win_free during the wait must
+        // turn into an error, not an ack that never comes.
+        let Some(tracker) = p.rma_results().tracker(self.src_vci, self.win_id, None) else {
+            return Err(self.freed_err());
+        };
+        match self.kind {
+            ReqKind::Get => loop {
+                if let Some(outcome) =
+                    p.rma_results().take_done(self.src_vci, (self.win_id, self.token), None)
+                {
+                    tracker.lock().unwrap().complete_read(self.token);
+                    return match outcome {
+                        Ok(bytes) => {
+                            self.got = Some(bytes);
+                            Ok(())
+                        }
+                        Err(e) => Err(MpiErr::Rma(e)),
+                    };
+                }
+                if p.rma_results().tracker(self.src_vci, self.win_id, None).is_none() {
+                    return Err(self.freed_err());
+                }
+                let vci = p.vci(self.src_vci);
+                let cs = p.session_for_vci(self.src_vci);
+                p.progress_vci(vci, &cs);
+                cs.yield_cs();
+            },
+            ReqKind::Put | ReqKind::Acc => {
+                let win = self.win.upgrade().map(Window::from_inner);
+                if let Some(w) = &win {
+                    // Ship any staged aggregation buffer holding this op.
+                    p.agg_drain_target(w, self.target)?;
+                }
+                if !tracker.lock().unwrap().has_completion(self.token) {
+                    if let Some(w) = &win {
+                        // The ack may be coalescing in a partial target
+                        // batch — under the fixed policy, or in adaptive
+                        // burst mode (a tight rput;wait loop issues ops
+                        // one RTT apart, which the gap classifier reads
+                        // as a burst). Demand it now with a one-way
+                        // ACK_REQ: the latency-path steady state is then
+                        // 3 packets per op (PUT, ACK_REQ, ACK_BATCH)
+                        // against put + win_flush's 4 plus a blocking
+                        // flush round-trip. If the target is acking
+                        // per-op already, the demand finds an empty
+                        // batch and emits nothing.
+                        p.rma_ack_demand(w, self.target)?;
+                    }
+                }
+                let start = Instant::now();
+                let mut poked = false;
+                loop {
+                    if let Some(outcome) = tracker.lock().unwrap().take_completion(self.token) {
+                        return match outcome {
+                            Some(e) => Err(MpiErr::Rma(e)),
+                            None => Ok(()),
+                        };
+                    }
+                    if p.rma_results().tracker(self.src_vci, self.win_id, None).is_none() {
+                        return Err(self.freed_err());
+                    }
+                    {
+                        let vci = p.vci(self.src_vci);
+                        let cs = p.session_for_vci(self.src_vci);
+                        p.progress_vci(vci, &cs);
+                        cs.yield_cs();
+                    }
+                    if !poked && start.elapsed().as_micros() > WAIT_POKE_BUDGET_US {
+                        poked = true;
+                        match &win {
+                            // Fallback when the cheap demand above did
+                            // not settle it (e.g. the op displaced under
+                            // transmit backpressure): one full flush
+                            // round forces everything out. Route FIFO
+                            // puts the ACK_BATCH ahead of the FLUSH_ACK,
+                            // so after this the completion is present.
+                            Some(w) => self.poke(p, w)?,
+                            None => {
+                                return Err(MpiErr::Rma(format!(
+                                    "wait on window {}: all window handles were dropped before the \
+                                     request completed, so its parked ack cannot be flushed",
+                                    self.win_id
+                                )))
+                            }
+                        }
+                    }
+                }
+            }
+            ReqKind::Enqueued { .. } => unreachable!("handled above"),
+        }
+    }
+
+    /// One flush round-trip to force a parked partial ack batch out.
+    /// Deliberately `flush_target_complete` (watermark only) and never
+    /// `flush_target`, which would consume sticky errors belonging to
+    /// unrelated unwatched ops.
+    fn poke(&self, p: &Proc, win: &Window) -> Result<()> {
+        p.flush_target_complete(win, self.target)
+    }
+}
+
+impl Drop for RmaRequest {
+    fn drop(&mut self) {
+        match &self.kind {
+            // The inner handle (if the lane ever issued it) lives in the
+            // Arc'd slot and cleans up via its own drop.
+            ReqKind::Enqueued { .. } => return,
+            ReqKind::Put | ReqKind::Acc | ReqKind::Get => {}
+        }
+        let live = match self.state {
+            ReqState::Pending => true,
+            // An errored read outcome parked by `test` dies with the
+            // handle — like an ignored error return, the caller opted
+            // out. Writes never park errors in the handle (test peeks).
+            ReqState::Ready(_) | ReqState::Consumed => false,
+        };
+        if !live {
+            return;
+        }
+        if let Some(inner) = self.win.upgrade() {
+            let mut t = inner.tracker.lock().unwrap();
+            match self.kind {
+                ReqKind::Get => t.abort_read(self.token),
+                // Revert to deferred semantics; a parked errored outcome
+                // re-routes to the sticky per-target error so it still
+                // surfaces at the next completion point.
+                _ => t.unwatch(self.token),
+            }
+        }
+    }
+}
+
+impl Proc {
+    /// Split-phase put: returns a handle that completes when **this**
+    /// write is visible at `target` — no window-wide flush required.
+    pub fn rput(&self, win: &Window, target: u32, offset: usize, data: &[u8]) -> Result<RmaRequest> {
+        win.comm().check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        let src_vci = route.src_vci;
+        let token = self.rma_rput_via(win, target, offset, data, route)?;
+        Ok(RmaRequest::write(win, target, src_vci, token, false))
+    }
+
+    /// Split-phase get: the handle completes when the data has arrived;
+    /// fetch it with [`RmaRequest::take_data`].
+    pub fn rget(&self, win: &Window, target: u32, offset: usize, len: usize) -> Result<RmaRequest> {
+        win.comm().check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        let src_vci = route.src_vci;
+        let token = self.rma_rget_via(win, target, offset, len, route)?;
+        Ok(RmaRequest::read(win, target, src_vci, token))
+    }
+
+    /// Split-phase accumulate — completion semantics of [`Proc::rput`].
+    pub fn raccumulate(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+        dt: &Datatype,
+        op: Op,
+    ) -> Result<RmaRequest> {
+        win.comm().check_rank(target)?;
+        let route = self.rma_route_implicit(win, target)?;
+        let src_vci = route.src_vci;
+        let token = self.rma_racc_via(win, target, offset, data, dt, op, route)?;
+        Ok(RmaRequest::write(win, target, src_vci, token, true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn rput_wait_roundtrip_is_target_visible() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 64], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let mut req = p.rput(&win, 1, 0, &[7, 8, 9, 10])?;
+                // The wait alone makes this write target-visible; the
+                // fence below only closes the epoch.
+                req.wait(p)?;
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 1 {
+                assert_eq!(&p.win_read_local(&win)?[..4], &[7, 8, 9, 10]);
+            }
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn small_rputs_aggregate_into_one_packet() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 64], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                // 8 one-byte rputs fill an aggregation buffer exactly
+                // (AGG_MAX_OPS) and ship as one PUT_AGG packet.
+                let mut reqs = Vec::new();
+                for i in 0..8u8 {
+                    reqs.push(p.rput(&win, 1, i as usize, &[i + 1])?);
+                }
+                for mut r in reqs {
+                    r.wait(p)?;
+                }
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 1 {
+                assert_eq!(&p.win_read_local(&win)?[..8], &[1, 2, 3, 4, 5, 6, 7, 8]);
+            }
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+        let stats = w.fabric().stats_totals();
+        assert!(
+            stats.tx_aggregated_ops >= 8,
+            "8 tiny same-route rputs should have shipped aggregated, saw {}",
+            stats.tx_aggregated_ops
+        );
+    }
+
+    #[test]
+    fn double_wait_errors_instead_of_hanging() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 16], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let mut req = p.rput(&win, 1, 0, &[1, 2])?;
+                req.wait(p)?;
+                match req.wait(p) {
+                    Err(MpiErr::Rma(msg)) => {
+                        assert!(msg.contains("more than once"), "{msg}")
+                    }
+                    other => panic!("double wait should be an RMA error, got {other:?}"),
+                }
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn wait_after_win_free_errors_instead_of_hanging() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 16], p.world_comm())?;
+            p.win_fence(&win)?;
+            let req = if p.rank() == 0 { Some(p.rput(&win, 1, 0, &[5])?) } else { None };
+            // The fence completes the op (its Ok outcome parks for the
+            // handle); freeing then tears the tracker out of the
+            // registry, which is what the late wait must notice.
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            if let Some(mut req) = req {
+                match req.wait(p) {
+                    Err(MpiErr::Rma(msg)) => assert!(msg.contains("freed"), "{msg}"),
+                    other => {
+                        panic!("wait after win_free should be an RMA error, got {other:?}")
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn rget_observes_pending_rput_to_same_range() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 32], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                // The small rput stages in the aggregation buffer; the
+                // overlapping rget must drain it first (same-route FIFO
+                // then orders the GET behind the PUT at the target).
+                let mut wreq = p.rput(&win, 1, 4, &[0xAB, 0xCD])?;
+                let mut rreq = p.rget(&win, 1, 4, 2)?;
+                rreq.wait(p)?;
+                assert_eq!(rreq.take_data().unwrap(), vec![0xAB, 0xCD]);
+                wreq.wait(p)?;
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn test_polls_without_consuming() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 16], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let mut req = p.rput(&win, 1, 0, &[9])?;
+                // Poll the nonblocking path. Under the fixed default
+                // policy the lone op's ack can stay parked in a partial
+                // target batch, so cap the polling and let wait() (whose
+                // flush poke forces the batch out) settle it either way.
+                let start = std::time::Instant::now();
+                while !req.test(p)? {
+                    if start.elapsed().as_millis() > 50 {
+                        break;
+                    }
+                }
+                req.wait(p)?;
+                assert!(req.test(p)?, "test after the consuming wait stays true");
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+}

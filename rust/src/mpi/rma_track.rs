@@ -31,15 +31,52 @@
 //!   per-producer ordering, so a count watermark, not arrival order, is
 //!   the completion criterion.
 //!
+//! Since ISSUE 7 both machines also carry the *split-phase* request
+//! state (the MPI_Rput/MPI_Rget shape of arXiv:2402.12274):
+//!
+//! * the tracker can **watch** individual tokens
+//!   ([`OpTracker::issue_watched`]) — a watched op's ack is routed into a
+//!   per-token completion slot consumed by exactly one `RmaRequest::wait`
+//!   instead of the target-scoped sticky error, and split-phase reads
+//!   ([`OpTracker::issue_read`]) are accounted without touching the flush
+//!   watermarks (a `GET` reply never flows through the batcher, so
+//!   counting it there would park every later flush unsatisfiably);
+//! * the batcher's coalescing factor is now a [`BatchPolicy`]: fixed, or
+//!   **adaptive** — coalescing up to [`ACK_BATCH_OPS`] under bursts and
+//!   dropping to per-op acks when the observed inter-op arrival gap
+//!   exceeds [`ADAPTIVE_GAP_NS`] (a latency-bound origin is waiting on
+//!   each ack; holding it hostage to a batch that may never fill costs a
+//!   full flush round-trip).
+//!
 //! The wire body of an `ACK_BATCH` is produced/consumed by
 //! [`encode_batch`]/[`decode_batch`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
 
 /// Target-side ack coalescing factor: one `ACK_BATCH` packet per this
 /// many processed data ops (plus a final partial batch at each flush).
 pub const ACK_BATCH_OPS: usize = 8;
+
+/// Adaptive-policy threshold: an inter-op arrival gap above this many
+/// nanoseconds classifies the origin as latency-bound (acks emit per op);
+/// gaps at or below it classify it as bursting (acks coalesce). 50 µs
+/// sits an order of magnitude above an in-process RMA round-trip and an
+/// order below any deliberately paced latency workload.
+pub const ADAPTIVE_GAP_NS: u64 = 50_000;
+
+/// Ack-coalescing policy of one [`AckBatcher`] (selected per window from
+/// [`crate::config::Config::rma_ack_batch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Emit one `ACK_BATCH` per `n` processed ops (`n` ≥ 1; `1` = ack
+    /// every op synchronously with its processing).
+    Fixed(usize),
+    /// Start coalescing at [`ACK_BATCH_OPS`]; switch to per-op acks when
+    /// the observed inter-op gap exceeds [`ADAPTIVE_GAP_NS`], and back
+    /// once ops arrive back-to-back again.
+    Adaptive,
+}
 
 /// Route identity of one origin data op: which local VCI issued it and
 /// which remote endpoint received it. Flush requests ride the same
@@ -122,6 +159,20 @@ pub struct OpTracker {
     issued: HashMap<(u32, Route), u64>,
     /// Sticky first error per target since the last completion point.
     errs: HashMap<u32, String>,
+    /// Tokens with a live split-phase request handle: their acks land in
+    /// `completions`, not the target's sticky error.
+    watched: HashSet<u64>,
+    /// Acked watched ops awaiting their one `RmaRequest::wait`/`test`:
+    /// token → (target comm rank, outcome), where `None` = applied and
+    /// `Some` = the target's NACK reason. The target rank is kept so
+    /// [`OpTracker::unwatch`] can re-route an abandoned errored outcome
+    /// into the sticky-error path.
+    completions: HashMap<u64, (u32, Option<String>)>,
+    /// Split-phase reads (rget) in flight: token → target. Counted as
+    /// outstanding (so `win_free` refuses while one is unconsumed) but
+    /// invisible to the flush watermarks — `GET` replies bypass the
+    /// target's [`AckBatcher`].
+    reads: HashMap<u64, u32>,
 }
 
 impl OpTracker {
@@ -135,6 +186,33 @@ impl OpTracker {
     pub fn issue(&mut self, token: u64, target: u32, route: Route) {
         self.inflight.insert(token, (target, route));
         *self.issued.entry((target, route)).or_insert(0) += 1;
+    }
+
+    /// [`OpTracker::issue`] plus a completion watch: the op's ack will be
+    /// recorded under `token` for a split-phase request handle instead of
+    /// feeding the target's sticky error. Watch and issue are one atomic
+    /// step (under the tracker's lock) so an ack can never observe the
+    /// token issued-but-unwatched.
+    pub fn issue_watched(&mut self, token: u64, target: u32, route: Route) {
+        self.issue(token, target, route);
+        self.watched.insert(token);
+    }
+
+    /// Register a split-phase read. Not an [`OpTracker::issue`]: reads
+    /// complete through the synchronous `DATA`/`NACK` reply path, so they
+    /// must not raise the flush watermark.
+    pub fn issue_read(&mut self, token: u64, target: u32) {
+        self.reads.insert(token, target);
+    }
+
+    /// Un-register a read whose transmit failed.
+    pub fn abort_read(&mut self, token: u64) {
+        self.reads.remove(&token);
+    }
+
+    /// Resolve a split-phase read: its handle consumed the reply.
+    pub fn complete_read(&mut self, token: u64) {
+        self.reads.remove(&token);
     }
 
     /// Un-register an op whose transmit failed (nothing reached the
@@ -151,20 +229,53 @@ impl OpTracker {
             if let Some(n) = self.issued.get_mut(&(target, route)) {
                 *n -= 1;
             }
+            self.watched.remove(&token);
         }
     }
 
     /// Apply one batched ack entry. Returns whether the token was known
     /// (unknown tokens — e.g. a stale batch after `win_free` — are
-    /// ignored by the caller).
+    /// ignored by the caller). A watched token's outcome is parked for
+    /// its request handle — exactly one of {completion slot, sticky
+    /// error} sees each NACK, never both.
     pub fn ack(&mut self, entry: AckEntry) -> bool {
         let Some((target, _)) = self.inflight.remove(&entry.token) else {
             return false;
         };
-        if let Some(err) = entry.err {
+        if self.watched.remove(&entry.token) {
+            self.completions.insert(entry.token, (target, entry.err));
+        } else if let Some(err) = entry.err {
             self.errs.entry(target).or_insert(err);
         }
         true
+    }
+
+    /// Consume the parked outcome of a watched op — the one
+    /// `RmaRequest::wait` completion. `None` = not (yet) acked.
+    pub fn take_completion(&mut self, token: u64) -> Option<Option<String>> {
+        self.completions.remove(&token).map(|(_, err)| err)
+    }
+
+    /// Stop watching a token — its request handle was dropped unwaited.
+    /// The op reverts to ordinary deferred semantics: a future ack feeds
+    /// the target's sticky error, and an already-parked errored outcome
+    /// is re-routed there now — dropping a handle never loses an error
+    /// (it surfaces at the window's next completion point instead).
+    pub fn unwatch(&mut self, token: u64) {
+        self.watched.remove(&token);
+        if let Some((target, Some(err))) = self.completions.remove(&token) {
+            self.errs.entry(target).or_insert(err);
+        }
+    }
+
+    /// Non-consuming poll of a watched op's outcome (`RmaRequest::test`).
+    pub fn has_completion(&self, token: u64) -> bool {
+        self.completions.contains_key(&token)
+    }
+
+    /// Is `token` still in flight (watched write) or an unconsumed read?
+    pub fn is_pending(&self, token: u64) -> bool {
+        self.inflight.contains_key(&token) || self.reads.contains_key(&token)
     }
 
     /// In-flight ops addressed to `target`.
@@ -172,14 +283,23 @@ impl OpTracker {
         self.inflight.values().filter(|(t, _)| *t == target).count() as u64
     }
 
-    /// In-flight ops across every target.
+    /// In-flight ops across every target, plus unconsumed split-phase
+    /// reads — the "deferred operations outstanding" count `win_free`
+    /// refuses on.
     pub fn outstanding_total(&self) -> u64 {
-        self.inflight.len() as u64
+        (self.inflight.len() + self.reads.len()) as u64
     }
 
     /// Sticky errors not yet surfaced at a completion point.
     pub fn errs_pending(&self) -> u64 {
         self.errs.len() as u64
+    }
+
+    /// Errored watched completions nobody has consumed — like sticky
+    /// errors, these make `win_free` refuse: an abandoned failed handle
+    /// is an unsurfaced error, not a completed op.
+    pub fn completion_errs_pending(&self) -> u64 {
+        self.completions.values().filter(|(_, e)| e.is_some()).count() as u64
     }
 
     /// Routes with at least one in-flight op to `target` — the routes a
@@ -256,6 +376,18 @@ pub struct AckBatcher<E> {
     processed: HashMap<(u32, E), u64>,
     /// Flushes that arrived before their watermark was reached.
     parked: Vec<ParkedFlush<E>>,
+    /// Coalescing policy (window-wide; see [`BatchPolicy`]).
+    policy: BatchPolicy,
+    /// Adaptive state: arrival time of the previous recorded op.
+    last_arrival_ns: Option<u64>,
+    /// Adaptive state: currently coalescing (true) or per-op (false).
+    /// Starts coalescing — the first op has no gap to classify, and a
+    /// latency-bound origin only pays the cost once before the first
+    /// measured gap flips the mode.
+    burst_mode: bool,
+    /// Times the adaptive classifier changed mode — the
+    /// `ack_mode_switches` observability counter.
+    mode_switches: u64,
 }
 
 impl<E: Copy + Eq + Hash> Default for AckBatcher<E> {
@@ -265,24 +397,72 @@ impl<E: Copy + Eq + Hash> Default for AckBatcher<E> {
 }
 
 impl<E: Copy + Eq + Hash> AckBatcher<E> {
+    /// A batcher with the pre-ISSUE-7 behaviour: fixed
+    /// [`ACK_BATCH_OPS`]-op coalescing.
     pub fn new() -> AckBatcher<E> {
-        AckBatcher { pending: HashMap::new(), processed: HashMap::new(), parked: Vec::new() }
+        AckBatcher::with_policy(BatchPolicy::Fixed(ACK_BATCH_OPS))
+    }
+
+    pub fn with_policy(policy: BatchPolicy) -> AckBatcher<E> {
+        AckBatcher {
+            pending: HashMap::new(),
+            processed: HashMap::new(),
+            parked: Vec::new(),
+            policy,
+            last_arrival_ns: None,
+            burst_mode: true,
+            mode_switches: 0,
+        }
     }
 
     /// Record the outcome of one processed data op; returns the packets
-    /// to emit now — a full batch when [`ACK_BATCH_OPS`] outcomes have
-    /// accumulated, plus any parked flush this op's count satisfies.
+    /// to emit now — a full batch when the policy's coalescing cap is
+    /// reached, plus any parked flush this op's count satisfies.
+    /// Timestamp-free form for fixed policies (and the model-level
+    /// property tests); an adaptive batcher fed through here classifies
+    /// every gap as zero, i.e. stays coalescing.
     pub fn record(&mut self, origin: u32, ep: E, entry: AckEntry) -> Vec<Emit<E>> {
+        let now = self.last_arrival_ns.unwrap_or(0);
+        self.record_at(origin, ep, entry, now)
+    }
+
+    /// [`AckBatcher::record`] with the op's arrival time (monotone ns) —
+    /// what the adaptive policy classifies inter-op gaps from.
+    pub fn record_at(&mut self, origin: u32, ep: E, entry: AckEntry, now_ns: u64) -> Vec<Emit<E>> {
+        let cap = match self.policy {
+            BatchPolicy::Fixed(n) => n.max(1),
+            BatchPolicy::Adaptive => {
+                if let Some(prev) = self.last_arrival_ns {
+                    let burst = now_ns.saturating_sub(prev) <= ADAPTIVE_GAP_NS;
+                    if burst != self.burst_mode {
+                        self.burst_mode = burst;
+                        self.mode_switches += 1;
+                    }
+                }
+                self.last_arrival_ns = Some(now_ns);
+                if self.burst_mode {
+                    ACK_BATCH_OPS
+                } else {
+                    1
+                }
+            }
+        };
         let key = (origin, ep);
         *self.processed.entry(key).or_insert(0) += 1;
         let pending = self.pending.entry(key).or_default();
         pending.push(entry);
         let mut out = Vec::new();
-        if pending.len() >= ACK_BATCH_OPS {
+        if pending.len() >= cap {
             out.push(Emit::Batch { ep, entries: std::mem::take(pending) });
         }
         self.wake_parked(&mut out);
         out
+    }
+
+    /// Times the adaptive classifier has switched mode (0 under a fixed
+    /// policy) — exported per-endpoint as `EpStats::ack_mode_switches`.
+    pub fn ack_mode_switches(&self) -> u64 {
+        self.mode_switches
     }
 
     /// A flush request arrives: `required` is the origin's cumulative
@@ -315,6 +495,20 @@ impl<E: Copy + Eq + Hash> AckBatcher<E> {
         }
     }
 
+    /// An `ACK_REQ` arrives: a blocked origin `wait` demands its route's
+    /// parked partial batch *now*. Emits the pending entries (nothing if
+    /// the batch already went out at cap), with no flush-ack and no
+    /// watermark — the demand is one-way, and same-route FIFO guarantees
+    /// the op the origin is waiting on was recorded before the demand.
+    pub fn demand(&mut self, origin: u32, ep: E) -> Vec<Emit<E>> {
+        match self.pending.get_mut(&(origin, ep)) {
+            Some(pending) if !pending.is_empty() => {
+                vec![Emit::Batch { ep, entries: std::mem::take(pending) }]
+            }
+            _ => Vec::new(),
+        }
+    }
+
     /// Outcomes awaiting emission for (origin, ep) — test observability.
     pub fn pending_for(&self, origin: u32, ep: E) -> usize {
         self.pending.get(&(origin, ep)).map_or(0, |v| v.len())
@@ -332,6 +526,33 @@ mod tests {
 
     fn route(v: u16) -> Route {
         Route { src_vci: v, dst_rank: 1, dst_ep: v }
+    }
+
+    #[test]
+    fn demand_forces_the_partial_batch_out() {
+        let mut b: AckBatcher<u8> = AckBatcher::with_policy(BatchPolicy::Fixed(8));
+        assert!(b.record(0, 1, AckEntry { token: 1, err: None }).is_empty());
+        assert!(b.record(0, 1, AckEntry { token: 2, err: None }).is_empty());
+        // A demand only drains its own (origin, ep) lane.
+        assert!(b.demand(0, 2).is_empty());
+        assert!(b.demand(1, 1).is_empty());
+        let out = b.demand(0, 1);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            Emit::Batch { ep, entries } => {
+                assert_eq!(*ep, 1);
+                assert_eq!(entries.iter().map(|e| e.token).collect::<Vec<_>>(), vec![1, 2]);
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // Emptied: demanding again emits nothing, and the processed
+        // count (flush watermarks) is untouched by demands.
+        assert!(b.demand(0, 1).is_empty());
+        let out = b.flush(0, 1, 77, 2);
+        assert!(
+            matches!(out.as_slice(), [Emit::FlushAck { ep: 1, token: 77 }]),
+            "flush after demand answers from the processed count, got {out:?}"
+        );
     }
 
     #[test]
@@ -423,6 +644,112 @@ mod tests {
         let out = b.flush(0, 1, 101, 3);
         assert_eq!(out.len(), 1);
         assert!(matches!(&out[0], Emit::FlushAck { token: 101, .. }));
+    }
+
+    #[test]
+    fn watched_tokens_complete_per_op_not_via_sticky_errors() {
+        let mut t = OpTracker::new();
+        t.issue_watched(1, 0, route(0));
+        t.issue_watched(2, 0, route(0));
+        t.issue(3, 0, route(0));
+        assert!(t.is_pending(1));
+        assert_eq!(t.issued_on(0, route(0)), 3, "watched ops raise the flush watermark");
+        assert!(t.ack(AckEntry { token: 1, err: None }));
+        assert!(t.ack(AckEntry { token: 2, err: Some("denied".into()) }));
+        assert!(t.ack(AckEntry { token: 3, err: Some("sticky".into()) }));
+        assert!(!t.is_pending(1));
+        // The watched NACK went to its completion slot, not the target's
+        // sticky error — no double-reporting.
+        assert_eq!(t.errs_pending(), 1);
+        assert_eq!(t.completion_errs_pending(), 1);
+        assert!(t.has_completion(1));
+        assert_eq!(t.take_completion(1), Some(None));
+        assert_eq!(t.take_completion(1), None, "completion consumed exactly once");
+        assert_eq!(t.take_completion(2), Some(Some("denied".into())));
+        assert_eq!(t.completion_errs_pending(), 0);
+        assert_eq!(t.take_err(0).as_deref(), Some("sticky"));
+        // An aborted watched op leaves no watch behind.
+        t.issue_watched(9, 0, route(0));
+        t.abort(9);
+        assert!(!t.is_pending(9));
+        assert!(!t.ack(AckEntry { token: 9, err: None }));
+        assert!(!t.has_completion(9));
+        // unwatch BEFORE the ack: the outcome reverts to the sticky path.
+        t.issue_watched(10, 2, route(0));
+        t.unwatch(10);
+        assert!(t.ack(AckEntry { token: 10, err: Some("late nack".into()) }));
+        assert!(!t.has_completion(10));
+        assert_eq!(t.take_err(2).as_deref(), Some("late nack"));
+        // unwatch AFTER the ack: the parked error re-routes, not drops.
+        t.issue_watched(11, 2, route(0));
+        assert!(t.ack(AckEntry { token: 11, err: Some("parked nack".into()) }));
+        t.unwatch(11);
+        assert_eq!(t.completion_errs_pending(), 0);
+        assert_eq!(t.take_err(2).as_deref(), Some("parked nack"));
+    }
+
+    #[test]
+    fn reads_count_outstanding_but_not_flush_watermarks() {
+        let mut t = OpTracker::new();
+        t.issue_read(5, 1);
+        assert!(t.is_pending(5));
+        assert_eq!(t.outstanding_total(), 1, "unconsumed read blocks win_free");
+        assert_eq!(t.outstanding(1), 0, "reads are invisible to flush accounting");
+        assert_eq!(t.issued_on(1, route(0)), 0);
+        assert!(t.routes_outstanding(1).is_empty());
+        t.complete_read(5);
+        assert!(!t.is_pending(5));
+        assert_eq!(t.outstanding_total(), 0);
+        t.issue_read(6, 1);
+        t.abort_read(6);
+        assert_eq!(t.outstanding_total(), 0);
+    }
+
+    #[test]
+    fn fixed_policy_overrides_the_default_cap() {
+        let mut b: AckBatcher<u8> = AckBatcher::with_policy(BatchPolicy::Fixed(2));
+        assert!(b.record(0, 1, AckEntry { token: 1, err: None }).is_empty());
+        let out = b.record(0, 1, AckEntry { token: 2, err: None });
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == 2));
+        // Fixed(1) acks every op; a fixed policy never counts switches.
+        let mut b1: AckBatcher<u8> = AckBatcher::with_policy(BatchPolicy::Fixed(1));
+        let out = b1.record_at(0, 1, AckEntry { token: 1, err: None }, 0);
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == 1));
+        let out = b1.record_at(0, 1, AckEntry { token: 2, err: None }, ADAPTIVE_GAP_NS * 10);
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == 1));
+        assert_eq!(b1.ack_mode_switches(), 0);
+    }
+
+    #[test]
+    fn adaptive_policy_switches_on_observed_gap_and_back() {
+        let mut b: AckBatcher<u8> = AckBatcher::with_policy(BatchPolicy::Adaptive);
+        // Burst: back-to-back arrivals coalesce at the full cap.
+        let mut t = 0u64;
+        for i in 0..ACK_BATCH_OPS as u64 - 1 {
+            t += 100;
+            assert!(b.record_at(0, 1, AckEntry { token: i, err: None }, t).is_empty());
+        }
+        t += 100;
+        let out = b.record_at(0, 1, AckEntry { token: 90, err: None }, t);
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == ACK_BATCH_OPS));
+        assert_eq!(b.ack_mode_switches(), 0);
+        // A latency-bound gap flips to per-op acks: the op acks alone.
+        t += ADAPTIVE_GAP_NS + 1;
+        let out = b.record_at(0, 1, AckEntry { token: 91, err: None }, t);
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == 1));
+        assert_eq!(b.ack_mode_switches(), 1);
+        // Back-to-back arrivals flip it back to coalescing.
+        t += 100;
+        assert!(b.record_at(0, 1, AckEntry { token: 92, err: None }, t).is_empty());
+        assert_eq!(b.ack_mode_switches(), 2);
+        assert_eq!(b.pending_for(0, 1), 1);
+        // Timestamp-free record() classifies a zero gap: stays coalescing.
+        for i in 0..ACK_BATCH_OPS as u64 - 2 {
+            assert!(b.record(0, 1, AckEntry { token: 100 + i, err: None }).is_empty());
+        }
+        let out = b.record(0, 1, AckEntry { token: 99, err: None });
+        assert!(matches!(&out[0], Emit::Batch { entries, .. } if entries.len() == ACK_BATCH_OPS));
+        assert_eq!(b.ack_mode_switches(), 2);
     }
 
     #[test]

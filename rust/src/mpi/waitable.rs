@@ -1,0 +1,242 @@
+//! One waitable abstraction over every request-shaped completion in the
+//! runtime.
+//!
+//! Before this module each request kind completed through its own named
+//! entry point: point-to-point requests via `Proc::wait`/`Proc::test`,
+//! partitioned operations via `pwait_send`/`pwait_recv`, GPU enqueue
+//! work via `synchronize_enqueue`/`waitall_enqueue`, and split-phase RMA
+//! via [`RmaRequest::wait`]. Those names all remain (several are MPI/
+//! MPIX API surface), but they are now views over one trait:
+//! [`Waitable`], with [`Proc::wait_all`] / [`Proc::wait_any`] combining
+//! *mixed* kinds — e.g. a pt2pt receive, an rput handle, and an enqueue
+//! gate in one set.
+//!
+//! Contract: `wait` blocks until the operation completes and surfaces
+//! its error; `test` is a nonblocking poll (one progress pass) that
+//! returns `Ok(true)` once a subsequent `wait` would return without
+//! blocking on the network. `test` never consumes a completion — only
+//! `wait` does, where the kind consumes at all (pt2pt requests and
+//! enqueue gates are reusable; an [`RmaRequest`] errors on double wait).
+//!
+//! One kind bends the nonblocking rule: [`EnqueueGate::test`]
+//! synchronizes its GPU stream (the prototype stream has no async query
+//! primitive), documented on the type.
+//!
+//! [`EnqueueGate::test`]: crate::stream::enqueue::EnqueueGate
+
+use std::time::Instant;
+
+use crate::error::{MpiErr, Result};
+use crate::mpi::partitioned::{PartitionedRecv, PartitionedSend};
+use crate::mpi::request::Request;
+use crate::mpi::rma_req::RmaRequest;
+use crate::mpi::world::Proc;
+
+/// A completion that can be blocked on (`wait`) or polled (`test`).
+/// See the module docs for the exact contract.
+pub trait Waitable {
+    /// Block until the operation completes; surface its error.
+    fn wait(&mut self, p: &Proc) -> Result<()>;
+    /// Nonblocking poll: `Ok(true)` once `wait` would not block.
+    fn test(&mut self, p: &Proc) -> Result<bool>;
+}
+
+/// Point-to-point requests. `wait` here discards the [`Status`]
+/// (`Proc::wait` remains the way to get it) and leaves the request in
+/// its completed state rather than consuming it — repeated waits return
+/// the same outcome.
+///
+/// [`Status`]: crate::mpi::status::Status
+impl Waitable for Request {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        // `Proc::wait` consumes its request, which a `&mut` trait object
+        // cannot; poll via the non-consuming `Proc::test` instead, with
+        // the same periodic cross-VCI poke `Proc::wait` performs so two
+        // ranks blocked on unrelated traffic cannot deadlock.
+        let budget = p.config().spin_before_yield.max(1);
+        let mut spins = 0u32;
+        loop {
+            if p.test(self)?.is_some() {
+                return Ok(());
+            }
+            spins += 1;
+            if spins >= budget {
+                spins = 0;
+                p.poke();
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        Ok(p.test(self)?.is_some())
+    }
+}
+
+/// Split-phase RMA handles — the trait simply forwards to the inherent
+/// methods (which carry the full semantics: single consuming wait,
+/// freed-window detection, error-preserving drop).
+impl Waitable for RmaRequest {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        RmaRequest::wait(self, p)
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        RmaRequest::test(self, p)
+    }
+}
+
+/// Partitioned sends: `wait` is [`Proc::pwait_send`] (completes every
+/// partition and re-arms for the next round), `test` is
+/// [`Proc::ptest_send`] (`false` while any partition is untriggered or
+/// in flight).
+impl Waitable for PartitionedSend {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        p.pwait_send(self)
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        p.ptest_send(self)
+    }
+}
+
+/// Partitioned receives: `wait` is [`Proc::pwait_recv`], `test` is
+/// [`Proc::ptest_recv`].
+impl Waitable for PartitionedRecv {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        p.pwait_recv(self)
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        p.ptest_recv(self)
+    }
+}
+
+/// How long `wait_any` polls nonblockingly before falling back to a
+/// blocking wait on the first still-pending element.
+const WAIT_ANY_POLL_BUDGET_MS: u128 = 1;
+
+impl Proc {
+    /// Wait for **every** waitable in the set — mixed kinds welcome.
+    /// All elements are waited even after a failure (no operation is
+    /// left half-completed); the *first* error is reported.
+    pub fn wait_all(&self, reqs: &mut [&mut dyn Waitable]) -> Result<()> {
+        let mut first_err = None;
+        for r in reqs.iter_mut() {
+            if let Err(e) = r.wait(self) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Wait until **some** waitable in the set completes and return its
+    /// index. Polls `test` for a bounded interval, then blocks on the
+    /// first still-pending element — kinds whose acks can park
+    /// indefinitely under a nonblocking poll (an [`RmaRequest`] under
+    /// fixed-size ack batching) complete through that element's own
+    /// `wait`, so this never spins forever. Errors on an empty set.
+    pub fn wait_any(&self, reqs: &mut [&mut dyn Waitable]) -> Result<usize> {
+        if reqs.is_empty() {
+            return Err(MpiErr::Arg("wait_any on an empty request set".into()));
+        }
+        let start = Instant::now();
+        loop {
+            for (i, r) in reqs.iter_mut().enumerate() {
+                if r.test(self)? {
+                    return Ok(i);
+                }
+            }
+            if start.elapsed().as_millis() > WAIT_ANY_POLL_BUDGET_MS {
+                reqs[0].wait(self)?;
+                return Ok(0);
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::world::World;
+
+    #[test]
+    fn wait_all_over_mixed_kinds() {
+        // One set holding a pt2pt receive, a partitioned send, and an
+        // RMA rput handle — the satellite's point: no per-kind waitall.
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            let win = p.win_create(vec![0u8; 32], p.world_comm())?;
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let pbuf = vec![3u8; 16];
+                let mut ps = p.psend_init(&pbuf, 2, 1, 4, p.world_comm())?;
+                p.pready(&ps, 0)?;
+                p.pready(&ps, 1)?;
+                let mut rma = p.rput(&win, 1, 0, &[1, 2, 3, 4])?;
+                let mut rx = [0u8; 2];
+                let mut req = p.irecv(&mut rx, 1, 9, p.world_comm())?;
+                p.wait_all(&mut [&mut req, &mut ps, &mut rma])?;
+                assert_eq!(rx, [7, 7]);
+            } else {
+                p.send(&[7u8, 7], 0, 9, p.world_comm())?;
+                let mut buf = vec![0u8; 16];
+                let mut pr = p.precv_init(&mut buf, 2, 0, 4, p.world_comm())?;
+                p.wait_all(&mut [&mut pr])?;
+                assert!(buf.iter().all(|&b| b == 3));
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 1 {
+                assert_eq!(&p.win_read_local(&win)?[..4], &[1, 2, 3, 4]);
+            }
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn wait_any_returns_a_completed_index() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                // One receive that completes immediately (message already
+                // sent) and one that never will inside this test.
+                let mut fast = [0u8; 3];
+                let mut never = [0u8; 3];
+                let mut r_fast = p.irecv(&mut fast, 1, 1, p.world_comm())?;
+                let mut r_never = p.irecv(&mut never, 1, 2, p.world_comm())?;
+                let idx = p.wait_any(&mut [&mut r_never, &mut r_fast])?;
+                assert_eq!(idx, 1, "only the tag-1 receive can have completed");
+                assert_eq!(fast, [5, 5, 5]);
+                // Release the tag-2 send, then resolve the second receive
+                // so teardown is clean.
+                p.send(&[0u8], 1, 3, p.world_comm())?;
+                p.wait_all(&mut [&mut r_never])?;
+                assert_eq!(never, [9, 9, 9]);
+            } else {
+                p.send(&[5u8, 5, 5], 0, 1, p.world_comm())?;
+                let mut ack = [0u8; 1];
+                p.recv(&mut ack, 0, 3, p.world_comm())?;
+                p.send(&[9u8, 9, 9], 0, 2, p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn wait_any_on_empty_set_is_an_error() {
+        let w = World::with_ranks(1).unwrap();
+        let p = w.proc(0);
+        assert!(matches!(p.wait_any(&mut []), Err(MpiErr::Arg(_))));
+        // wait_all over nothing is trivially complete.
+        p.wait_all(&mut []).unwrap();
+    }
+}

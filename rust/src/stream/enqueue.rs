@@ -38,14 +38,22 @@ use crate::mpi::comm::Comm;
 use crate::mpi::datatype::Datatype;
 use crate::mpi::matching::{RecvDest, ANY_SOURCE, ANY_TAG};
 use crate::mpi::request::Request;
+use crate::mpi::waitable::Waitable;
 use crate::mpi::world::Proc;
 use crate::stream::progress::LaneOp;
 
 /// Handle returned by `MPIX_Isend_enqueue` / `MPIX_Irecv_enqueue`; resolved
-/// by `MPIX_Wait_enqueue` / `MPIX_Waitall_enqueue` *on the same stream*.
+/// by `MPIX_Wait_enqueue` / `MPIX_Waitall_enqueue` *on the same stream*, or
+/// host-side through its [`Waitable`] implementation (`wait`/`test`,
+/// mixable with any other request kind via
+/// [`Proc::wait_all`](crate::mpi::waitable)).
 pub struct EnqueuedRequest {
     slot: Arc<Mutex<SlotState>>,
     stream_id: u32,
+    /// The GPU stream the initiating op was enqueued on — lets the
+    /// host-side `Waitable::wait` drain the stream when the op has not
+    /// been initiated yet.
+    gpu: GpuStream,
 }
 
 enum SlotState {
@@ -159,19 +167,24 @@ impl Proc {
     /// touched are flushed here — enqueue RMA completes at
     /// `synchronize_enqueue` or an explicit `win_flush`/`win_unlock`,
     /// whichever comes first.
+    ///
+    /// Documented alias (the pre-[`Waitable`] name, kept as MPIX API
+    /// surface): exactly `self.enqueue_gate(comm)?.wait(self)` — the
+    /// real completion logic lives in [`EnqueueGate`]'s `Waitable`
+    /// implementation.
     pub fn synchronize_enqueue(&self, comm: &Comm) -> Result<()> {
-        let gpu = enqueue_target(comm)?;
-        gpu.synchronize()?;
-        let lane_err = self.progress().take_error(gpu.id());
-        // The windows are completed either way; their NACKs are only
-        // *consumed* when this call can surface them — with a lane error
-        // to report instead, a consumed NACK would be dropped, so it
-        // stays sticky for the window's next completion point.
-        let flush = self.flush_enqueued_windows(gpu.id(), lane_err.is_none());
-        match lane_err {
-            Some(e) => Err(e),
-            None => flush,
-        }
+        self.enqueue_gate(comm)?.wait(self)
+    }
+
+    /// The communicator's enqueue completion point as a [`Waitable`]:
+    /// waiting the gate is `synchronize_enqueue` (GPU-stream drain, lane
+    /// error surfacing, enqueued-window flush). The gate is reusable —
+    /// each `wait` covers everything enqueued up to that moment.
+    pub fn enqueue_gate(&self, comm: &Comm) -> Result<EnqueueGate> {
+        // Validate eagerly (same contract as every enqueue entry point):
+        // a non-GPU-stream communicator fails here, not at the wait.
+        enqueue_target(comm)?;
+        Ok(EnqueueGate { comm: comm.clone() })
     }
 
     /// `MPIX_Send_enqueue` from a host buffer (snapshotted at call time).
@@ -246,7 +259,7 @@ impl Proc {
                 }
             }),
         )?;
-        Ok(EnqueuedRequest { slot, stream_id })
+        Ok(EnqueuedRequest { slot, stream_id, gpu })
     }
 
     /// `MPIX_Irecv_enqueue` into device memory.
@@ -288,7 +301,7 @@ impl Proc {
                 }
             }),
         )?;
-        Ok(EnqueuedRequest { slot, stream_id })
+        Ok(EnqueuedRequest { slot, stream_id, gpu })
     }
 
     /// `MPIX_Wait_enqueue`: enqueue the completion of an i-enqueue
@@ -321,6 +334,14 @@ impl Proc {
     /// same local stream — enforced, per the paper. Submits **one** batched
     /// engine op covering every request (a single trigger/gate pair on the
     /// GPU stream), instead of N sequential `wait_enqueue` round-trips.
+    ///
+    /// Kept as a documented MPIX-surface alias of the unified waitable
+    /// layer: it is the *stream-ordered* counterpart of
+    /// [`Proc::wait_all`](crate::mpi::waitable) over the same requests —
+    /// completion runs **on the GPU stream** (after everything enqueued
+    /// before it) through the same per-request completion core the
+    /// host-side `Waitable` impl uses, with the same first-error
+    /// semantics.
     pub fn waitall_enqueue(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
         let stream = comm.local_stream().unwrap();
@@ -358,6 +379,67 @@ impl Proc {
                 }
             }),
         )
+    }
+}
+
+/// A reusable waitable over a stream communicator's enqueue completion
+/// point — see [`Proc::enqueue_gate`]. **Nonblocking-poll exception:**
+/// the prototype GPU stream has no async query primitive, so `test`
+/// performs the full `wait` and returns `Ok(true)`; in a mixed
+/// [`Proc::wait_any`](crate::mpi::waitable) set the gate therefore
+/// completes eagerly.
+pub struct EnqueueGate {
+    comm: Comm,
+}
+
+impl Waitable for EnqueueGate {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        let gpu = enqueue_target(&self.comm)?;
+        gpu.synchronize()?;
+        let lane_err = p.progress().take_error(gpu.id());
+        // The windows are completed either way; their NACKs are only
+        // *consumed* when this call can surface them — with a lane error
+        // to report instead, a consumed NACK would be dropped, so it
+        // stays sticky for the window's next completion point.
+        let flush = p.flush_enqueued_windows(gpu.id(), lane_err.is_none());
+        match lane_err {
+            Some(e) => Err(e),
+            None => flush,
+        }
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        self.wait(p)?;
+        Ok(true)
+    }
+}
+
+/// Host-side completion of an i-enqueue handle, for mixing with other
+/// request kinds in [`Proc::wait_all`](crate::mpi::waitable) /
+/// `wait_any`. Unlike [`Proc::wait_enqueue`] — which enqueues the
+/// completion *onto the GPU stream* and reports failures at the
+/// stream's next completion point — `wait` completes on the calling
+/// thread and surfaces the operation's error directly. Waiting a handle
+/// twice (by either route) reports `MpiErr::Request`.
+impl Waitable for EnqueuedRequest {
+    fn wait(&mut self, p: &Proc) -> Result<()> {
+        if matches!(*self.slot.lock().unwrap(), SlotState::NotStarted) {
+            // The stream has not reached the initiating op yet; drain it
+            // so the slot settles into Started or Failed.
+            self.gpu.synchronize()?;
+        }
+        let state = std::mem::replace(&mut *self.slot.lock().unwrap(), SlotState::Done);
+        let dev = p.gpu();
+        complete_one(p, &dev, state)
+    }
+
+    fn test(&mut self, p: &Proc) -> Result<bool> {
+        let guard = self.slot.lock().unwrap();
+        match &*guard {
+            SlotState::NotStarted => Ok(false),
+            SlotState::Failed(_) | SlotState::Done => Ok(true),
+            SlotState::Started { req, .. } => Ok(p.test(req)?.is_some()),
+        }
     }
 }
 

@@ -22,6 +22,13 @@
 //!   argument validation and the usual per-stream sticky-error contract
 //!   (failures surface at
 //!   [`Proc::synchronize_enqueue`](crate::mpi::world::Proc)).
+//! * [`Proc::stream_rput`] / [`Proc::stream_rget`] /
+//!   [`Proc::rput_enqueue`] — the split-phase variants: same routing as
+//!   above, but each returns an [`RmaRequest`] handle that completes
+//!   (via `wait`/`test`) when *that* operation is target-visible,
+//!   without flushing the rest of the epoch. For `rput_enqueue` the
+//!   handle completes host-side after the GPU stream reaches the
+//!   operation, and carries any issue-time failure of the lane op.
 //!
 //! Target-side progress needs no new machinery: RMA packets carry
 //! [`crate::mpi::rma::RMA_CTX_BIT`] and are serviced by whichever VCI they
@@ -41,11 +48,14 @@
 //! so every lane op registered under the lock executes while the lock is
 //! still held.
 
+use std::sync::{Arc, Mutex};
+
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
 use crate::gpu::DevicePtr;
 use crate::mpi::datatype::{Datatype, Op};
 use crate::mpi::rma::{RmaRoute, Window};
+use crate::mpi::rma_req::{EnqueuedSlot, RmaRequest};
 use crate::mpi::world::Proc;
 use crate::stream::enqueue::enqueue_target;
 
@@ -100,6 +110,39 @@ impl Proc {
     ) -> Result<()> {
         let route = self.stream_rma_route(win, target)?;
         self.rma_acc_via(win, target, offset, data, dt, op, route)
+    }
+
+    /// `MPIX_Stream_rput`: split-phase [`Proc::stream_put`]. The put is
+    /// issued (and possibly aggregated) on the stream's VCI immediately;
+    /// the returned handle completes when the target has applied *this*
+    /// operation, independent of any other traffic in the epoch.
+    pub fn stream_rput(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+    ) -> Result<RmaRequest> {
+        let route = self.stream_rma_route(win, target)?;
+        let src_vci = route.src_vci;
+        let token = self.rma_rput_via(win, target, offset, data, route)?;
+        Ok(RmaRequest::write(win, target, src_vci, token, false))
+    }
+
+    /// `MPIX_Stream_rget`: split-phase [`Proc::stream_get`]. The data
+    /// lands in the handle — retrieve it with
+    /// [`RmaRequest::take_data`] after `wait` returns.
+    pub fn stream_rget(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        len: usize,
+    ) -> Result<RmaRequest> {
+        let route = self.stream_rma_route(win, target)?;
+        let src_vci = route.src_vci;
+        let token = self.rma_rget_via(win, target, offset, len, route)?;
+        Ok(RmaRequest::read(win, target, src_vci, token))
     }
 
     /// `MPIX_Put_enqueue`: register a stream-routed put on the window
@@ -162,6 +205,60 @@ impl Proc {
                 dev.write_sync(dst, &data)
             }),
         )
+    }
+
+    /// `MPIX_Rput_enqueue`: split-phase [`Proc::put_enqueue`]. The put is
+    /// registered on the communicator's GPU stream like `put_enqueue`,
+    /// but the returned handle is waitable host-side: its `wait` drains
+    /// the GPU stream up to the operation, then blocks until the target
+    /// has applied the put. Unlike `put_enqueue`, an issue-time failure
+    /// of the lane op surfaces at the *handle's* `wait` rather than as a
+    /// stream sticky error, so one bad operation does not poison the
+    /// lane. `synchronize_enqueue` remains a valid completion point for
+    /// the data movement (the window stays registered for flush) — but
+    /// only the handle reports this op's individual outcome.
+    pub fn rput_enqueue(
+        &self,
+        win: &Window,
+        target: u32,
+        offset: usize,
+        data: &[u8],
+    ) -> Result<RmaRequest> {
+        let gpu = enqueue_target(win.comm())?;
+        win.comm().check_rank(target)?;
+        if offset + data.len() > win.size_at(target) {
+            return Err(MpiErr::Arg(format!(
+                "rput_enqueue of {} bytes at {offset} exceeds target window of {} bytes",
+                data.len(),
+                win.size_at(target)
+            )));
+        }
+        // Same flush registration as put_enqueue: even if the handle is
+        // never waited, synchronize_enqueue still completes the put.
+        self.rma_results()
+            .enqueue_flush
+            .lock()
+            .unwrap()
+            .entry(gpu.id())
+            .or_default()
+            .insert((win.id(), target), win.clone());
+        let slot: EnqueuedSlot = Arc::new(Mutex::new(None));
+        let p = self.clone();
+        let w = win.clone();
+        let d = data.to_vec();
+        let lane_slot = Arc::clone(&slot);
+        self.enqueue_op(
+            &gpu,
+            true,
+            Box::new(move || {
+                // Park the issue outcome (inner handle or error) in the
+                // slot and report success to the lane: the error belongs
+                // to this op's handle, not to the stream.
+                *lane_slot.lock().unwrap() = Some(p.stream_rput(&w, target, offset, &d));
+                Ok(())
+            }),
+        )?;
+        Ok(RmaRequest::enqueued(win, win.comm().clone(), slot))
     }
 }
 
@@ -310,6 +407,100 @@ mod tests {
             } else {
                 assert_eq!(&p.win_read_local(&win)?[..8], b"lane-put");
             }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn stream_rput_and_rget_complete_per_op() {
+        // Split-phase stream RMA: the handle completes the individual op
+        // (target-visible at wait, before any fence) and the traffic
+        // stays on the stream endpoints.
+        let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let s = p.stream_create(&Info::null())?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 16], &c)?;
+            p.win_fence(&win)?;
+            let rx_rma = |idx: u16| {
+                p.vci(idx).ep().stats().rx_rma_packets.load(std::sync::atomic::Ordering::Relaxed)
+            };
+            let implicit_before = rx_rma(0);
+            if p.rank() == 0 {
+                let mut wr = p.stream_rput(&win, 1, 0, b"rput-vci")?;
+                wr.wait(p)?;
+                // Read back through the same stream route: the rput must
+                // already be target-visible, no fence in between.
+                let mut rd = p.stream_rget(&win, 1, 0, 8)?;
+                rd.wait(p)?;
+                assert_eq!(rd.take_data().as_deref(), Some(&b"rput-vci"[..]));
+            }
+            assert_eq!(
+                rx_rma(0),
+                implicit_before,
+                "split-phase stream RMA must not touch the implicit pool"
+            );
+            p.win_fence(&win)?;
+            if p.rank() == 1 {
+                assert_eq!(&p.win_read_local(&win)?[..8], b"rput-vci");
+            }
+            p.win_fence(&win)?;
+            p.win_free(win)?;
+            drop(c);
+            p.stream_free(s)?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn rput_enqueue_completes_and_errors_at_the_handle() {
+        let cfg = Config { implicit_pool: 1, explicit_pool: 2, ..Default::default() };
+        let w = World::builder().ranks(2).config(cfg).build().unwrap();
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            let win = p.win_create(vec![0u8; 16], &c)?;
+            if p.rank() == 0 {
+                // Issued before any epoch is open: the lane op fails at
+                // issue time and the failure belongs to this handle —
+                // not to the stream's sticky error.
+                let mut bad = p.rput_enqueue(&win, 1, 0, b"early")?;
+                assert!(matches!(bad.wait(p), Err(MpiErr::Rma(_))));
+                // The lane is not poisoned: the stream still drains clean.
+                p.synchronize_enqueue(&c)?;
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 0 {
+                let mut req = p.rput_enqueue(&win, 1, 4, b"lane-rput")?;
+                req.wait(p)?;
+                // Target-visible at handle wait — before synchronize,
+                // flush, or fence.
+                let mut rd = p.stream_rget(&win, 1, 4, 9)?;
+                rd.wait(p)?;
+                assert_eq!(rd.take_data().as_deref(), Some(&b"lane-rput"[..]));
+                // Everything is already complete: synchronize is a no-op
+                // here, and clears the window's flush registration.
+                p.synchronize_enqueue(&c)?;
+            }
+            p.win_fence(&win)?;
+            if p.rank() == 1 {
+                assert_eq!(&p.win_read_local(&win)?[4..13], b"lane-rput");
+            }
+            // Argument validation stays eager, like put_enqueue.
+            assert!(matches!(p.rput_enqueue(&win, 1, 12, &[0u8; 8]), Err(MpiErr::Arg(_))));
             p.win_fence(&win)?;
             p.win_free(win)?;
             drop(c);

@@ -1,0 +1,137 @@
+//! Textual public-API surface snapshot (`cargo public-api` is not in
+//! the offline toolchain, so this mirrors the idea with a committed
+//! text baseline).
+//!
+//! The snapshot is every `pub ` item line in `src/**/*.rs` — functions,
+//! structs, enums, traits, consts, statics, type aliases, re-exports
+//! and modules — prefixed with its file path, whitespace-normalized and
+//! byte-sorted. `pub(crate)`/`pub(super)` items are excluded by
+//! construction (the prefix match requires a space after `pub`). Only
+//! the first line of a multi-line signature is captured: renaming,
+//! removing or adding an item always shows up; a change buried in a
+//! wrapped argument list may not, which is the accepted precision of a
+//! textual snapshot.
+//!
+//! On an intentional surface change, regenerate and commit the
+//! baseline:
+//!
+//! ```text
+//! PALLAS_API_BLESS=1 cargo test --test api_snapshot
+//! git add rust/api/public_api.txt
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Item-line prefixes that constitute public surface.
+const PREFIXES: &[&str] = &[
+    "pub fn ",
+    "pub unsafe fn ",
+    "pub struct ",
+    "pub enum ",
+    "pub trait ",
+    "pub const ",
+    "pub static ",
+    "pub type ",
+    "pub use ",
+    "pub mod ",
+];
+
+/// All `.rs` files under `dir`, recursively, in sorted order (the
+/// per-file order is irrelevant — the final snapshot is globally
+/// sorted — but determinism keeps failures reproducible).
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir).unwrap().map(|e| e.unwrap().path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Build the normalized snapshot: `path: trimmed-line`, byte-sorted,
+/// duplicates kept (two identical `pub fn new(` lines in one file are
+/// two items), trailing newline.
+fn snapshot(root: &Path) -> String {
+    let mut files = Vec::new();
+    rs_files(&root.join("src"), &mut files);
+    let mut lines = Vec::new();
+    for f in &files {
+        let rel = f.strip_prefix(root).unwrap().to_string_lossy().replace('\\', "/");
+        for raw in fs::read_to_string(f).unwrap().lines() {
+            let t = raw.trim();
+            if PREFIXES.iter().any(|p| t.starts_with(p)) {
+                lines.push(format!("{rel}: {t}"));
+            }
+        }
+    }
+    lines.sort();
+    let mut s = lines.join("\n");
+    s.push('\n');
+    s
+}
+
+/// Multiset line counts, for an order-insensitive diff message.
+fn line_counts(s: &str) -> BTreeMap<&str, i64> {
+    let mut m = BTreeMap::new();
+    for l in s.lines() {
+        *m.entry(l).or_insert(0) += 1;
+    }
+    m
+}
+
+#[test]
+fn public_api_surface_matches_committed_snapshot() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let baseline_path = root.join("api").join("public_api.txt");
+    let current = snapshot(&root);
+    assert!(
+        current.lines().count() > 100,
+        "snapshot extraction collapsed ({} lines) — the matcher is broken, not the API",
+        current.lines().count()
+    );
+    if std::env::var("PALLAS_API_BLESS").is_ok() {
+        fs::create_dir_all(baseline_path.parent().unwrap()).unwrap();
+        fs::write(&baseline_path, &current).unwrap();
+        return;
+    }
+    let committed = fs::read_to_string(&baseline_path).unwrap_or_else(|e| {
+        panic!(
+            "no committed API baseline at {} ({e}); generate one with \
+             PALLAS_API_BLESS=1 cargo test --test api_snapshot",
+            baseline_path.display()
+        )
+    });
+    if current != committed {
+        let cur = line_counts(&current);
+        let old = line_counts(&committed);
+        let mut added = Vec::new();
+        let mut removed = Vec::new();
+        for (l, n) in &cur {
+            for _ in 0..(n - old.get(l).copied().unwrap_or(0)).max(0) {
+                added.push(*l);
+            }
+        }
+        for (l, n) in &old {
+            for _ in 0..(n - cur.get(l).copied().unwrap_or(0)).max(0) {
+                removed.push(*l);
+            }
+        }
+        panic!(
+            "public API surface changed ({} added, {} removed)\n\
+             --- added ---\n{}\n--- removed ---\n{}\n\
+             If this change is intentional, acknowledge it by regenerating the \
+             baseline:\n  PALLAS_API_BLESS=1 cargo test --test api_snapshot\n\
+             and committing rust/api/public_api.txt alongside the code change.",
+            added.len(),
+            removed.len(),
+            added.join("\n"),
+            removed.join("\n"),
+        );
+    }
+}

@@ -1041,6 +1041,424 @@ fn prop_deferred_completion_flush_acks_and_epoch_errors_with_shrinking() {
     }
 }
 
+// ----------------------------------------------------------------------
+// Split-phase request handles over the tracker — seeded, shrinking
+// ----------------------------------------------------------------------
+
+/// One step of a randomized split-phase schedule: one origin issues
+/// watched rputs and split-phase rgets to a single target over 2 routes;
+/// handles are waited (driving deliveries, `ACK_REQ`-style demands and
+/// ack drains until the completion parks) or dropped unwaited, with
+/// completion points interleaved anywhere. `pick` events select among
+/// the currently valid choices deterministically, so delta-debugged
+/// sub-schedules stay valid.
+#[derive(Clone, Copy, Debug)]
+enum SplitEv {
+    /// Issue a watched rput on one of the 2 routes; `bad` ops are
+    /// NACKed when the target processes them.
+    Rput { route: u8, bad: bool },
+    /// Issue a split-phase read — synchronous `DATA` reply path,
+    /// invisible to the flush watermarks.
+    Rget,
+    /// The target processes one queued op packet (`pick` selects among
+    /// the non-empty route lanes); with no wire traffic queued, the
+    /// oldest pending read's reply is consumed instead.
+    Deliver { pick: u8 },
+    /// The origin absorbs one pending ack emission.
+    Drain,
+    /// Wait one live handle to completion (the `RmaRequest::wait`
+    /// shape: deliver, demand the parked partial batch, drain, repeat).
+    Wait { pick: u8 },
+    /// Drop one live handle unwaited (`RmaRequest` drop → `unwatch`):
+    /// a bad op's outcome must re-route to the epoch's sticky error.
+    DropHandle { pick: u8 },
+    /// A completion point (win_flush shape) driven to quiescence.
+    Flush,
+}
+
+/// Drive one schedule through an [`OpTracker`] + [`AckBatcher`] pair
+/// and verify the split-phase contract:
+///
+/// 1. **Exactly-once handles** — every waited handle observes its own
+///    op's outcome exactly once (error iff the op was bad), and a wait
+///    never livelocks: in-order delivery plus one `ACK_REQ` demand
+///    always parks the completion.
+/// 2. **No leak between paths** — a watched op's NACK never feeds the
+///    sticky error; a dropped errored handle's NACK surfaces at the
+///    next completion point, never lost and never early.
+/// 3. **Reads are watermark-invisible** — a flush returns with every
+///    split-phase read still pending.
+/// 4. **Nothing left behind** — after a final flush, every surviving
+///    handle finds its outcome parked, every ack was absorbed exactly
+///    once, and the tracker drains to zero.
+fn run_split_case(schedule: &[SplitEv]) -> Result<(), String> {
+    use std::collections::{HashMap, HashSet, VecDeque};
+
+    enum Wire {
+        Op { token: u64, bad: bool },
+        Flush { token: u64, required: u64 },
+    }
+
+    const TARGET: u32 = 0;
+    let mk_route =
+        |r: u8| Route { src_vci: r as u16, dst_rank: TARGET, dst_ep: r as u16 };
+
+    let mut tracker = OpTracker::new();
+    let mut batcher: AckBatcher<u8> = AckBatcher::new();
+    let mut lanes: [VecDeque<Wire>; 2] = [VecDeque::new(), VecDeque::new()];
+    let mut acks: VecDeque<Emit<u8>> = VecDeque::new();
+    let mut flush_done: HashSet<u64> = HashSet::new();
+    let mut reads: VecDeque<u64> = VecDeque::new();
+    // Live split-phase handles: (token, bad).
+    let mut handles: Vec<(u64, bool)> = Vec::new();
+
+    let mut next_token = 1u64;
+    let mut next_flush = 1u64 << 32; // disjoint from op tokens
+    let mut issued = 0u64;
+    let mut acked = 0u64;
+    let mut bad_of: HashMap<u64, bool> = HashMap::new();
+    let mut bad_dropped_epoch = 0u64;
+
+    // Apply one ack emission at the origin.
+    fn absorb(
+        em: Emit<u8>,
+        tracker: &mut OpTracker,
+        flush_done: &mut HashSet<u64>,
+        bad_of: &HashMap<u64, bool>,
+        acked: &mut u64,
+    ) -> Result<(), String> {
+        match em {
+            Emit::Batch { entries, .. } => {
+                for e in entries {
+                    let was_bad =
+                        *bad_of.get(&e.token).ok_or("ack for a never-issued token")?;
+                    if e.err.is_some() != was_bad {
+                        return Err(format!(
+                            "token {} acked with err={:?} but bad={was_bad}",
+                            e.token, e.err
+                        ));
+                    }
+                    if !tracker.ack(e) {
+                        return Err("duplicate or unknown ack (token not in flight)".into());
+                    }
+                    *acked += 1;
+                }
+            }
+            Emit::FlushAck { token, .. } => {
+                if !flush_done.insert(token) {
+                    return Err("duplicate flush ack".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // Deliver one packet from route lane `r` into the target's batcher.
+    fn deliver(
+        r: usize,
+        lanes: &mut [VecDeque<Wire>; 2],
+        batcher: &mut AckBatcher<u8>,
+        acks: &mut VecDeque<Emit<u8>>,
+    ) -> bool {
+        let Some(pkt) = lanes[r].pop_front() else { return false };
+        let emits = match pkt {
+            Wire::Op { token, bad } => batcher.record(
+                0,
+                r as u8,
+                AckEntry { token, err: bad.then(|| "injected failure".to_string()) },
+            ),
+            Wire::Flush { token, required } => batcher.flush(0, r as u8, token, required),
+        };
+        acks.extend(emits);
+        true
+    }
+
+    // Settle one handle — the production wait loop: in-order delivery,
+    // an ACK_REQ demand forcing the parked partial batch, ack drains.
+    #[allow(clippy::too_many_arguments)]
+    fn settle(
+        token: u64,
+        bad: bool,
+        tracker: &mut OpTracker,
+        batcher: &mut AckBatcher<u8>,
+        lanes: &mut [VecDeque<Wire>; 2],
+        acks: &mut VecDeque<Emit<u8>>,
+        flush_done: &mut HashSet<u64>,
+        bad_of: &HashMap<u64, bool>,
+        acked: &mut u64,
+    ) -> Result<(), String> {
+        let mut guard = 0u32;
+        loop {
+            if let Some(err) = tracker.take_completion(token) {
+                if err.is_some() != bad {
+                    return Err(format!(
+                        "handle for token {token} observed err={err:?} but bad={bad}"
+                    ));
+                }
+                return Ok(());
+            }
+            guard += 1;
+            if guard > 1_000_000 {
+                return Err("wait livelock (completion never parked)".into());
+            }
+            let mut progressed = false;
+            for r in 0..2 {
+                progressed |= deliver(r, lanes, batcher, acks);
+            }
+            for r in 0..2u8 {
+                let emits = batcher.demand(0, r);
+                progressed |= !emits.is_empty();
+                acks.extend(emits);
+            }
+            while let Some(em) = acks.pop_front() {
+                progressed = true;
+                absorb(em, tracker, flush_done, bad_of, acked)?;
+            }
+            if !progressed {
+                return Err(format!(
+                    "wait stuck: token {token} has no completion and nothing left to \
+                     deliver — ack lost"
+                ));
+            }
+        }
+    }
+
+    // One completion point, driven to quiescence.
+    #[allow(clippy::too_many_arguments)]
+    fn run_flush(
+        next_flush: &mut u64,
+        tracker: &mut OpTracker,
+        batcher: &mut AckBatcher<u8>,
+        lanes: &mut [VecDeque<Wire>; 2],
+        acks: &mut VecDeque<Emit<u8>>,
+        flush_done: &mut HashSet<u64>,
+        bad_of: &HashMap<u64, bool>,
+        acked: &mut u64,
+    ) -> Result<Option<String>, String> {
+        let snapshot = tracker.inflight_tokens(TARGET);
+        let mut awaiting = Vec::new();
+        for r in tracker.routes_outstanding(TARGET) {
+            let required = tracker.issued_on(TARGET, r);
+            let token = *next_flush;
+            *next_flush += 1;
+            lanes[r.src_vci as usize].push_back(Wire::Flush { token, required });
+            awaiting.push(token);
+        }
+        let mut guard = 0u32;
+        while !awaiting.iter().all(|t| flush_done.contains(t))
+            || tracker.any_inflight(&snapshot)
+        {
+            guard += 1;
+            if guard > 1_000_000 {
+                return Err("flush livelock (watermark never satisfied)".into());
+            }
+            let mut progressed = false;
+            for r in 0..2 {
+                progressed |= deliver(r, lanes, batcher, acks);
+            }
+            while let Some(em) = acks.pop_front() {
+                progressed = true;
+                absorb(em, tracker, flush_done, bad_of, acked)?;
+            }
+            if !progressed {
+                return Err(
+                    "flush stuck: nothing left to deliver but ops unacknowledged".into()
+                );
+            }
+        }
+        Ok(tracker.take_err(TARGET))
+    }
+
+    for ev in schedule {
+        match *ev {
+            SplitEv::Rput { route, bad } => {
+                let token = next_token;
+                next_token += 1;
+                tracker.issue_watched(token, TARGET, mk_route(route % 2));
+                lanes[(route % 2) as usize].push_back(Wire::Op { token, bad });
+                issued += 1;
+                bad_of.insert(token, bad);
+                handles.push((token, bad));
+            }
+            SplitEv::Rget => {
+                let token = next_token | (1 << 48);
+                next_token += 1;
+                tracker.issue_read(token, TARGET);
+                reads.push_back(token);
+            }
+            SplitEv::Deliver { pick } => {
+                let nonempty: Vec<usize> = (0..2).filter(|&r| !lanes[r].is_empty()).collect();
+                if nonempty.is_empty() {
+                    if let Some(t) = reads.pop_front() {
+                        tracker.complete_read(t);
+                    }
+                    continue;
+                }
+                let r = nonempty[pick as usize % nonempty.len()];
+                deliver(r, &mut lanes, &mut batcher, &mut acks);
+            }
+            SplitEv::Drain => {
+                if let Some(em) = acks.pop_front() {
+                    absorb(em, &mut tracker, &mut flush_done, &bad_of, &mut acked)?;
+                }
+            }
+            SplitEv::Wait { pick } => {
+                if handles.is_empty() {
+                    continue;
+                }
+                let (token, bad) = handles.remove(pick as usize % handles.len());
+                settle(
+                    token,
+                    bad,
+                    &mut tracker,
+                    &mut batcher,
+                    &mut lanes,
+                    &mut acks,
+                    &mut flush_done,
+                    &bad_of,
+                    &mut acked,
+                )?;
+            }
+            SplitEv::DropHandle { pick } => {
+                if handles.is_empty() {
+                    continue;
+                }
+                let (token, bad) = handles.remove(pick as usize % handles.len());
+                tracker.unwatch(token);
+                if bad {
+                    bad_dropped_epoch += 1;
+                }
+            }
+            SplitEv::Flush => {
+                let reads_before = reads.len();
+                let err = run_flush(
+                    &mut next_flush,
+                    &mut tracker,
+                    &mut batcher,
+                    &mut lanes,
+                    &mut acks,
+                    &mut flush_done,
+                    &bad_of,
+                    &mut acked,
+                )?;
+                if err.is_some() != (bad_dropped_epoch > 0) {
+                    return Err(format!(
+                        "completion point reported {err:?} but {bad_dropped_epoch} \
+                         dropped bad op(s) belonged to this epoch"
+                    ));
+                }
+                bad_dropped_epoch = 0;
+                if reads.len() != reads_before {
+                    return Err("flush consumed a split-phase read".into());
+                }
+            }
+        }
+    }
+
+    // Final completion point: after it, every surviving handle must find
+    // its outcome already parked (no further delivery needed), reads
+    // drain, and nothing is left anywhere.
+    let err = run_flush(
+        &mut next_flush,
+        &mut tracker,
+        &mut batcher,
+        &mut lanes,
+        &mut acks,
+        &mut flush_done,
+        &bad_of,
+        &mut acked,
+    )?;
+    if err.is_some() != (bad_dropped_epoch > 0) {
+        return Err("final completion point mis-reported its epoch's errors".into());
+    }
+    for (token, bad) in std::mem::take(&mut handles) {
+        let Some(err) = tracker.take_completion(token) else {
+            return Err(format!("token {token} lost its completion after a full flush"));
+        };
+        if err.is_some() != bad {
+            return Err(format!("handle for token {token} observed err={err:?} but bad={bad}"));
+        }
+    }
+    while let Some(t) = reads.pop_front() {
+        tracker.complete_read(t);
+    }
+    if tracker.outstanding_total() != 0 {
+        return Err("ops still in flight after every handle settled".into());
+    }
+    if acked != issued {
+        return Err(format!("{issued} op(s) issued but {acked} acknowledged — acks lost"));
+    }
+    if tracker.errs_pending() != 0 {
+        return Err("unsurfaced sticky errors left behind".into());
+    }
+    if tracker.completion_errs_pending() != 0 {
+        return Err("abandoned errored completions left behind".into());
+    }
+    Ok(())
+}
+
+/// Delta-debugging shrink, same shape as `shrink_matching_case`.
+fn shrink_split_case(schedule: Vec<SplitEv>) -> Vec<SplitEv> {
+    let mut cur = schedule;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            if run_split_case(&cand).is_err() {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            return cur;
+        }
+        chunk /= 2;
+    }
+}
+
+/// Randomized interleavings of watched rputs, split-phase rgets, waits,
+/// handle drops, deliveries, drains and completion points across 2
+/// routes to one target: every handle sees its own outcome exactly
+/// once, dropped errored handles surface on their epoch (and only
+/// theirs), reads never gate a flush, and nothing is lost or
+/// duplicated — failing schedules shrink to a minimal repro
+/// (`PALLAS_PROP_ITERS` scales the sweep).
+#[test]
+fn prop_split_phase_handles_exactly_once_with_shrinking() {
+    let mut rng = Rng::new(0x5B17_ACED);
+    for case in 0..prop_cases(20) {
+        let len = 12 + rng.below(72) as usize;
+        let mut schedule = Vec::with_capacity(len);
+        for _ in 0..len {
+            schedule.push(match rng.below(12) {
+                0..=3 => SplitEv::Rput {
+                    route: rng.below(2) as u8,
+                    bad: rng.below(6) == 0,
+                },
+                4 => SplitEv::Rget,
+                5..=6 => SplitEv::Deliver { pick: rng.below(8) as u8 },
+                7 => SplitEv::Drain,
+                8..=9 => SplitEv::Wait { pick: rng.below(8) as u8 },
+                10 => SplitEv::DropHandle { pick: rng.below(8) as u8 },
+                _ => SplitEv::Flush,
+            });
+        }
+        if let Err(msg) = run_split_case(&schedule) {
+            let minimal = shrink_split_case(schedule);
+            let path = dump_repro("split-phase", &format!("{msg}\n{minimal:?}\n"));
+            panic!(
+                "case {case}: {msg}\n\
+                 minimal failing schedule ({} events, saved to {path}): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
 /// End-to-end mirror of the model property: 2–4 real origin threads
 /// interleave put/get/flush/unlock epochs against one self-target
 /// window (each thread owns a disjoint region), seeded per thread.
