@@ -150,6 +150,72 @@ impl std::str::FromStr for AckBatch {
     }
 }
 
+/// Asynchronous progress offload (ISSUE 8): who drains a rank's
+/// endpoints when their owner is stuck in compute. Every target-driven
+/// protocol — passive lock grants, ack batches, flush replies, `ACK_REQ`
+/// demands — is normally served only by the target's own progress
+/// engine, so a busy target stalls every origin for exactly its poll
+/// interval ("MPI Progress For All", arXiv 2405.13807).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgressOffload {
+    /// No offload: endpoints are drained only by their owning rank (the
+    /// pre-ISSUE-8 behaviour, and the default).
+    Off,
+    /// One dedicated progress thread per [`crate::mpi::world::World`]
+    /// drains RMA/lock/ack traffic for any endpoint whose owner has not
+    /// run a progress pass within `idle_bound_ns` nanoseconds.
+    Dedicated { idle_bound_ns: u64 },
+    /// Work stealing: whenever a rank's blocking wait exhausts its spin
+    /// budget, it also drains stale sibling endpoints (fixed 200 µs idle
+    /// bound, `STEAL_IDLE_BOUND_NS` in `mpi::offload`). No extra thread.
+    Steal,
+}
+
+/// Default [`ProgressOffload::Dedicated`] idle bound: 100 µs. Long
+/// enough that an owner in an ordinary wait loop is never preempted,
+/// short next to any real compute phase.
+pub const DEFAULT_OFFLOAD_IDLE_BOUND_NS: u64 = 100_000;
+
+/// Upper bound on a dedicated idle bound (10 s): past this the offload
+/// can never engage before any plausible caller gives up.
+pub const MAX_OFFLOAD_IDLE_BOUND_NS: u64 = 10_000_000_000;
+
+impl ProgressOffload {
+    /// Is any offload machinery active under this policy?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self, ProgressOffload::Off)
+    }
+
+    pub fn as_str(&self) -> String {
+        match self {
+            ProgressOffload::Off => "off".into(),
+            ProgressOffload::Dedicated { idle_bound_ns } => format!("dedicated:{idle_bound_ns}"),
+            ProgressOffload::Steal => "steal".into(),
+        }
+    }
+}
+
+impl std::str::FromStr for ProgressOffload {
+    type Err = MpiErr;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(ProgressOffload::Off),
+            "steal" => Ok(ProgressOffload::Steal),
+            "dedicated" => {
+                Ok(ProgressOffload::Dedicated { idle_bound_ns: DEFAULT_OFFLOAD_IDLE_BOUND_NS })
+            }
+            _ => match s.strip_prefix("dedicated:") {
+                Some(ns) => ns
+                    .parse::<u64>()
+                    .map(|idle_bound_ns| ProgressOffload::Dedicated { idle_bound_ns })
+                    .map_err(|_| MpiErr::Arg(format!("bad dedicated idle bound '{ns}'"))),
+                None => Err(MpiErr::Arg(format!("unknown progress-offload policy '{s}'"))),
+            },
+        }
+    }
+}
+
 /// Full runtime configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -196,6 +262,25 @@ pub struct Config {
     /// Target-side RMA ack-coalescing policy, applied to every window a
     /// rank registers (replaces the pre-ISSUE-7 hard-coded 8-op batch).
     pub rma_ack_batch: AckBatch,
+    /// Asynchronous progress offload policy (ISSUE 8). Defaults to
+    /// [`ProgressOffload::Off`] unless the `PALLAS_PROGRESS_OFFLOAD`
+    /// environment variable names a policy (`off` / `steal` /
+    /// `dedicated` / `dedicated:<ns>`) — the hook the CI offload leg
+    /// uses to re-run the whole suite with offload on.
+    pub progress_offload: ProgressOffload,
+}
+
+/// The process-wide default offload policy: `PALLAS_PROGRESS_OFFLOAD`
+/// if set and parseable, else [`ProgressOffload::Off`]. Cached — the
+/// environment is read once.
+fn offload_env_default() -> ProgressOffload {
+    static CACHE: std::sync::OnceLock<ProgressOffload> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("PALLAS_PROGRESS_OFFLOAD")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(ProgressOffload::Off)
+    })
 }
 
 impl Default for Config {
@@ -215,6 +300,7 @@ impl Default for Config {
             wire_latency_ns: 0,
             spin_before_yield: 64,
             rma_ack_batch: AckBatch::Fixed(crate::mpi::rma_track::ACK_BATCH_OPS),
+            progress_offload: offload_env_default(),
         }
     }
 }
@@ -247,6 +333,14 @@ impl Config {
                 )));
             }
             _ => {}
+        }
+        if let ProgressOffload::Dedicated { idle_bound_ns } = self.progress_offload {
+            if idle_bound_ns > MAX_OFFLOAD_IDLE_BOUND_NS {
+                return Err(MpiErr::Arg(format!(
+                    "progress_offload idle bound {idle_bound_ns}ns exceeds \
+                     MAX_OFFLOAD_IDLE_BOUND_NS ({MAX_OFFLOAD_IDLE_BOUND_NS})"
+                )));
+            }
         }
         Ok(())
     }
@@ -390,6 +484,11 @@ impl ConfigBuilder {
         self
     }
 
+    pub fn progress_offload(mut self, policy: ProgressOffload) -> Self {
+        self.cfg.progress_offload = policy;
+        self
+    }
+
     /// Validate and return the configuration.
     pub fn build(self) -> Result<Config> {
         self.cfg.validate()?;
@@ -505,6 +604,40 @@ mod tests {
             .unwrap();
         assert_eq!(seeded.explicit_pool, 16);
         assert_eq!(seeded.rma_ack_batch, AckBatch::Fixed(1));
+    }
+
+    #[test]
+    fn progress_offload_parsing_and_bounds() {
+        use std::str::FromStr;
+        assert_eq!(ProgressOffload::from_str("off").unwrap(), ProgressOffload::Off);
+        assert_eq!(ProgressOffload::from_str("steal").unwrap(), ProgressOffload::Steal);
+        assert_eq!(
+            ProgressOffload::from_str("dedicated").unwrap(),
+            ProgressOffload::Dedicated { idle_bound_ns: DEFAULT_OFFLOAD_IDLE_BOUND_NS }
+        );
+        assert_eq!(
+            ProgressOffload::from_str("dedicated:5000").unwrap(),
+            ProgressOffload::Dedicated { idle_bound_ns: 5000 }
+        );
+        assert!(ProgressOffload::from_str("dedicated:soon").is_err());
+        assert!(ProgressOffload::from_str("maybe").is_err());
+        assert_eq!(ProgressOffload::Dedicated { idle_bound_ns: 7 }.as_str(), "dedicated:7");
+        assert!(!ProgressOffload::Off.enabled());
+        assert!(ProgressOffload::Steal.enabled());
+
+        let over = Config {
+            progress_offload: ProgressOffload::Dedicated {
+                idle_bound_ns: MAX_OFFLOAD_IDLE_BOUND_NS + 1,
+            },
+            ..Default::default()
+        };
+        assert!(over.validate().is_err());
+        let zero = Config {
+            progress_offload: ProgressOffload::Dedicated { idle_bound_ns: 0 },
+            ..Default::default()
+        };
+        zero.validate().unwrap();
+        assert!(Config::builder().progress_offload(ProgressOffload::Steal).build().is_ok());
     }
 
     #[test]

@@ -91,6 +91,27 @@ fn sum_lock_waits(p: &Proc, range: std::ops::Range<usize>) -> u64 {
     range.map(|i| p.vci(i as u16).ep().stats().snapshot().lock_waits).sum()
 }
 
+/// Lock a driver-side rendezvous mutex, mapping poison — some thread
+/// panicked while holding it — to [`MpiErr::Internal`] tagged with the
+/// workload name, instead of cascading a second panic from the
+/// coordinator (which used to bury the original worker backtrace).
+fn lock_or_internal<'a, T>(
+    m: &'a Mutex<T>,
+    workload: &str,
+    what: &str,
+) -> Result<std::sync::MutexGuard<'a, T>> {
+    m.lock().map_err(|_| {
+        MpiErr::Internal(format!("{workload}: {what} mutex poisoned by a panicked thread"))
+    })
+}
+
+/// [`lock_or_internal`] for the final `Mutex::into_inner` read.
+fn into_inner_or_internal<T>(m: Mutex<T>, workload: &str, what: &str) -> Result<T> {
+    m.into_inner().map_err(|_| {
+        MpiErr::Internal(format!("{workload}: {what} mutex poisoned by a panicked thread"))
+    })
+}
+
 /// Run the Figure-3 microbenchmark live: `threads` thread pairs exchange
 /// `msgs` messages of `size` bytes each, windowed `window` deep
 /// (MPI_Isend/MPI_Irecv + waitall, as in the paper's figure caption).
@@ -142,7 +163,7 @@ pub fn msgrate_live(
         p.barrier(p.world_comm())?;
         let dt = t0.elapsed();
         if p.rank() == 0 {
-            *elapsed_slot.lock().unwrap() = Some(dt);
+            *lock_or_internal(&elapsed_slot, "msgrate/live", "elapsed slot")? = Some(dt);
         }
         waits_total.fetch_add(sum_lock_waits(p, 0..p.vci_count()), Ordering::Relaxed);
 
@@ -154,9 +175,7 @@ pub fn msgrate_live(
         Ok(())
     })?;
 
-    let elapsed = elapsed_slot
-        .into_inner()
-        .unwrap()
+    let elapsed = into_inner_or_internal(elapsed_slot, "msgrate/live", "elapsed slot")?
         .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
     let total = threads as u64 * msgs;
     let rate = total as f64 / elapsed.as_secs_f64();
@@ -224,47 +243,69 @@ pub fn msgrate_live_thread_mapped(
         let comms: Vec<Mutex<Option<Comm>>> = (0..threads).map(|_| Mutex::new(None)).collect();
         let t0_cell: Mutex<Option<Instant>> = Mutex::new(None);
 
+        const W: &str = "msgrate/thread-mapped";
         std::thread::scope(|sc| -> Result<()> {
             for i in 0..threads {
                 let p = p.clone();
                 let (ready, go, streams, comms) = (&ready, &go, &streams, &comms);
                 sc.spawn(move || {
                     let s = p.stream_for_current_thread().expect("thread-mapped stream");
-                    *streams[i].lock().unwrap() = Some(s);
+                    if let Ok(mut slot) = streams[i].lock() {
+                        *slot = Some(s);
+                    }
+                    // Keep barrier discipline no matter what: the main
+                    // thread counts on threads+1 arrivals at both points.
                     ready.wait();
                     go.wait();
                     // The worker owns its comm for the traffic phase and
                     // drops it before exiting, so the stream's only
                     // surviving handle at thread exit is the registry's —
-                    // reclamation then frees the lease.
-                    let c = comms[i].lock().unwrap().take().expect("comm distributed");
+                    // reclamation then frees the lease. A poisoned or
+                    // empty slot means setup failed on the main thread
+                    // (which reports the error); skip the traffic rather
+                    // than cascading a second panic over the first.
+                    let Some(c) = comms[i].lock().ok().and_then(|mut slot| slot.take()) else {
+                        return;
+                    };
                     thread_body(&p, &c, i as i32, msgs, window, size);
                 });
             }
             ready.wait();
             // Collective creation in worker order on the main thread;
             // both ranks iterate identically, so the collectives match.
-            for i in 0..threads {
-                let s = streams[i].lock().unwrap().clone().expect("stream registered");
-                let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
-                *comms[i].lock().unwrap() = Some(c);
-                // Drop the main thread's handle: only the registry and the
-                // comm keep the stream alive from here on.
-                *streams[i].lock().unwrap() = None;
-                drop(s);
-            }
-            p.barrier(p.world_comm())?;
-            reset_ep_stats(p);
-            *t0_cell.lock().unwrap() = Some(Instant::now());
+            // Any failure here must still reach `go.wait()` — the workers
+            // are parked on that barrier and would otherwise never join.
+            let setup = (|| -> Result<()> {
+                for i in 0..threads {
+                    let s = lock_or_internal(&streams[i], W, "stream slot")?
+                        .clone()
+                        .ok_or_else(|| {
+                            MpiErr::Internal(format!("{W}: worker {i} registered no stream"))
+                        })?;
+                    let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+                    *lock_or_internal(&comms[i], W, "comm slot")? = Some(c);
+                    // Drop the main thread's handle: only the registry and
+                    // the comm keep the stream alive from here on.
+                    *lock_or_internal(&streams[i], W, "stream slot")? = None;
+                    drop(s);
+                }
+                p.barrier(p.world_comm())?;
+                reset_ep_stats(p);
+                *lock_or_internal(&t0_cell, W, "t0 cell")? = Some(Instant::now());
+                Ok(())
+            })();
             go.wait();
-            Ok(())
+            setup
         })?;
         // Workers joined (and their TLS guards reclaimed the streams);
         // sync both sides so the clock covers full delivery.
         p.barrier(p.world_comm())?;
-        let dt = t0_cell.lock().unwrap().expect("timed phase started").elapsed();
+        let t0 = *lock_or_internal(&t0_cell, W, "t0 cell")?;
+        let dt = t0
+            .ok_or_else(|| MpiErr::Internal(format!("{W}: timed phase never started")))?
+            .elapsed();
         if p.rank() == 0 {
-            *elapsed_slot.lock().unwrap() = Some(dt);
+            *lock_or_internal(&elapsed_slot, W, "elapsed slot")? = Some(dt);
         }
         explicit_waits
             .fetch_add(sum_lock_waits(p, implicit..p.vci_count()), Ordering::Relaxed);
@@ -272,10 +313,9 @@ pub fn msgrate_live_thread_mapped(
         Ok(())
     })?;
 
-    let elapsed = elapsed_slot
-        .into_inner()
-        .unwrap()
-        .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
+    let elapsed =
+        into_inner_or_internal(elapsed_slot, "msgrate/thread-mapped", "elapsed slot")?
+            .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
     let total = threads as u64 * msgs;
     Ok(ThreadMappedResult {
         threads,
@@ -375,7 +415,8 @@ pub fn n_to_1_live(senders: usize, msgs: u64, multiplex: bool) -> Result<Nto1Res
             }
             p.barrier(p.world_comm())?;
             if p.rank() == 1 {
-                *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+                *lock_or_internal(&elapsed_slot, "n-to-1/live", "elapsed slot")? =
+                    Some(t0.elapsed());
             }
             drop(comm);
             for s in streams {
@@ -441,7 +482,8 @@ pub fn n_to_1_live(senders: usize, msgs: u64, multiplex: bool) -> Result<Nto1Res
             }
             p.barrier(p.world_comm())?;
             if p.rank() == 1 {
-                *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+                *lock_or_internal(&elapsed_slot, "n-to-1/live", "elapsed slot")? =
+                    Some(t0.elapsed());
             }
             drop(comms);
             for s in streams {
@@ -451,9 +493,7 @@ pub fn n_to_1_live(senders: usize, msgs: u64, multiplex: bool) -> Result<Nto1Res
         Ok(())
     })?;
 
-    let elapsed = elapsed_slot
-        .into_inner()
-        .unwrap()
+    let elapsed = into_inner_or_internal(elapsed_slot, "n-to-1/live", "elapsed slot")?
         .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
     let total = senders as u64 * msgs;
     Ok(Nto1Result {
@@ -553,7 +593,8 @@ pub fn enqueue_pipeline(
         }
         p.barrier(p.world_comm())?;
         if p.rank() == 0 {
-            *elapsed_slot.lock().unwrap() = Some(t0.elapsed());
+            *lock_or_internal(&elapsed_slot, "enqueue/pipeline", "elapsed slot")? =
+                Some(t0.elapsed());
         }
 
         dev.free(dbuf)?;
@@ -563,9 +604,7 @@ pub fn enqueue_pipeline(
         Ok(())
     })?;
 
-    let elapsed = elapsed_slot
-        .into_inner()
-        .unwrap()
+    let elapsed = into_inner_or_internal(elapsed_slot, "enqueue/pipeline", "elapsed slot")?
         .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
     Ok(PipelineResult {
         variant,

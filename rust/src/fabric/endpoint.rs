@@ -8,10 +8,19 @@
 //! Here an endpoint owns a lock-free inbound MPSC ring (remote producers →
 //! local owner). *Draining* the ring is the single-consumer side and is
 //! what the paper's critical sections protect; in lock-free stream mode the
-//! serial-context guarantee replaces the lock, and debug builds verify the
-//! guarantee with an owner check that panics on concurrent drains.
+//! serial-context guarantee replaces the lock.
+//!
+//! Since ISSUE 8 drain ownership is an explicit, always-on handoff: any
+//! drainer — the owning rank's progress engine or the asynchronous
+//! progress offload — must win [`Endpoint::try_acquire_drain`] before
+//! popping, and a loser gets a typed [`DrainBusy`] instead of the old
+//! debug-only panic (which release builds raced straight past). The CAS
+//! pair also carries the Acquire/Release edge that makes non-overlapping
+//! drains from different threads sound for the single-consumer pop.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::addr::EpAddr;
 use super::queue::{MpscQueue, Pop};
@@ -46,6 +55,14 @@ pub struct EpStats {
     /// Adaptive ack-policy mode switches decided by this endpoint's
     /// window registrations (target side; 0 under a fixed policy).
     pub ack_mode_switches: AtomicU64,
+    /// Packets popped from this endpoint by the progress offload (a
+    /// drainer other than the owning rank's progress engine). 0 with
+    /// `progress_offload = Off`.
+    pub offload_polls: AtomicU64,
+    /// Times the progress offload acquired this endpoint's drain
+    /// ownership because the owner's last progress pass was older than
+    /// the configured idle bound.
+    pub offload_takeovers: AtomicU64,
 }
 
 /// Point-in-time copy of an endpoint's counters — the form benchmark
@@ -61,6 +78,8 @@ pub struct EpStatsSnapshot {
     pub lock_waits: u64,
     pub tx_aggregated_ops: u64,
     pub ack_mode_switches: u64,
+    pub offload_polls: u64,
+    pub offload_takeovers: u64,
 }
 
 impl EpStats {
@@ -76,6 +95,8 @@ impl EpStats {
             lock_waits: self.lock_waits.load(Ordering::Relaxed),
             tx_aggregated_ops: self.tx_aggregated_ops.load(Ordering::Relaxed),
             ack_mode_switches: self.ack_mode_switches.load(Ordering::Relaxed),
+            offload_polls: self.offload_polls.load(Ordering::Relaxed),
+            offload_takeovers: self.offload_takeovers.load(Ordering::Relaxed),
         }
     }
 
@@ -97,6 +118,18 @@ impl EpStats {
         self.ack_mode_switches.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record one packet drained by the progress offload.
+    #[inline]
+    pub fn note_offload_poll(&self) {
+        self.offload_polls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one offload drain-ownership takeover of a stale endpoint.
+    #[inline]
+    pub fn note_offload_takeover(&self) {
+        self.offload_takeovers.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Zero every counter — the per-scenario reset hook the benchmark
     /// harness calls between its warmup and measure phases so reported
     /// traffic covers only the measured window.
@@ -110,6 +143,8 @@ impl EpStats {
         self.lock_waits.store(0, Ordering::Relaxed);
         self.tx_aggregated_ops.store(0, Ordering::Relaxed);
         self.ack_mode_switches.store(0, Ordering::Relaxed);
+        self.offload_polls.store(0, Ordering::Relaxed);
+        self.offload_takeovers.store(0, Ordering::Relaxed);
     }
 }
 
@@ -145,6 +180,74 @@ impl EpStatsSnapshot {
         self.lock_waits += other.lock_waits;
         self.tx_aggregated_ops += other.tx_aggregated_ops;
         self.ack_mode_switches += other.ack_mode_switches;
+        self.offload_polls += other.offload_polls;
+        self.offload_takeovers += other.offload_takeovers;
+    }
+}
+
+/// Typed refusal from [`Endpoint::try_acquire_drain`]: another thread
+/// currently owns the drain. Not an application error — the caller backs
+/// off and retries on its next progress pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainBusy {
+    /// Internal id of the thread holding the drain (diagnostic only; ids
+    /// are process-local and never reused).
+    pub holder: i64,
+}
+
+impl std::fmt::Display for DrainBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "endpoint drain held by thread {}", self.holder)
+    }
+}
+
+impl std::error::Error for DrainBusy {}
+
+const NO_DRAINER: i64 = -1;
+
+/// Exclusive drain ownership of one endpoint, released on drop. Acquired
+/// via [`Endpoint::try_acquire_drain`]; re-entrant acquisitions by the
+/// holding thread return nested guards that leave the outermost one in
+/// charge of the release.
+pub struct DrainGuard<'a> {
+    ep: &'a Endpoint,
+    outermost: bool,
+}
+
+impl DrainGuard<'_> {
+    /// Pop one packet from the inbound ring. Sound by construction: this
+    /// guard is the proof of single-consumer access. Offload drains use
+    /// this (ring only — the stash holds packets the offload already
+    /// declined once).
+    pub fn poll(&self) -> Option<Packet> {
+        match self.ep.inbound.pop() {
+            Pop::Data(p) => Some(p),
+            Pop::Empty | Pop::Inconsistent => None,
+        }
+    }
+
+    /// Owner-side pop: the offload's stash first, then the ring. Both
+    /// checks run under this guard — and the offload can only stash
+    /// *while holding the drain* — so a stashed packet can never be
+    /// overtaken by a younger ring packet (pt2pt FIFO).
+    pub fn poll_owner(&self) -> Option<Packet> {
+        self.ep.pop_stashed().or_else(|| self.poll())
+    }
+
+    /// Park a packet this drainer cannot dispatch (offload context: the
+    /// matching engine above this endpoint is owner-serial). The owner
+    /// re-consumes stashed packets ahead of the ring, so FIFO holds
+    /// within the matched (non-RMA) protocols.
+    pub fn stash(&self, pkt: Packet) {
+        self.ep.stash_packet(pkt);
+    }
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        if self.outermost {
+            self.ep.drainer.store(NO_DRAINER, Ordering::Release);
+        }
     }
 }
 
@@ -154,10 +257,24 @@ pub struct Endpoint {
     inbound: MpscQueue<Packet>,
     ring_capacity: usize,
     stats: EpStats,
-    /// Debug-mode serial-consumer check: thread-id currently draining, or
-    /// -1. Detects violations of the stream serial-context contract.
-    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    /// Serial-consumer ownership: internal id of the thread currently
+    /// draining, or [`NO_DRAINER`]. Always on — release builds included —
+    /// since the progress offload hands drain ownership across threads
+    /// at runtime (it is no longer a debug-only contract check).
     drainer: AtomicI64,
+    /// Nanosecond timestamp (shared [`crate::mpi::rma::now_ns`] epoch) of
+    /// the owner's most recent progress pass. Written only by the owner —
+    /// an offload drain leaves it stale on purpose, so a busy owner keeps
+    /// reading as busy until it really polls again.
+    last_owner_poll_ns: AtomicU64,
+    /// Packets an offload drain popped but must not dispatch (non-RMA
+    /// traffic bound for the owner-serial matching engine). Serialized by
+    /// drain ownership; the mutex is uncontended by construction.
+    stash: Mutex<VecDeque<Packet>>,
+    /// Lock-free occupancy mirror of `stash`, so the owner's hot poll
+    /// path pays one relaxed load — not a mutex — while the stash is
+    /// empty (always, when the offload is off).
+    stash_occupancy: std::sync::atomic::AtomicUsize,
 }
 
 impl Endpoint {
@@ -167,7 +284,10 @@ impl Endpoint {
             inbound: MpscQueue::new(),
             ring_capacity,
             stats: EpStats::default(),
-            drainer: AtomicI64::new(-1),
+            drainer: AtomicI64::new(NO_DRAINER),
+            last_owner_poll_ns: AtomicU64::new(0),
+            stash: Mutex::new(VecDeque::new()),
+            stash_occupancy: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -201,16 +321,81 @@ impl Endpoint {
         }
     }
 
-    /// Owner side: poll one packet. Single-consumer; see module docs.
+    /// Poll one packet from the ring, taking and releasing drain
+    /// ownership around the pop. If another thread holds the drain (the
+    /// progress offload is mid-batch), the caller observes an empty ring
+    /// — never a race, never a panic — and retries on its next pass.
     pub fn poll(&self) -> Option<Packet> {
-        debug_assert!(self.enter_drain(), "concurrent endpoint drain — serial-context violation on {}", self.addr);
-        let out = match self.inbound.pop() {
-            Pop::Data(p) => Some(p),
-            Pop::Empty | Pop::Inconsistent => None,
-        };
-        #[cfg(debug_assertions)]
-        self.exit_drain();
+        match self.try_acquire_drain() {
+            Ok(guard) => guard.poll(),
+            Err(DrainBusy { .. }) => None,
+        }
+    }
+
+    /// Owner-side poll: offload stash first, then the ring, both under
+    /// one drain acquisition (see [`DrainGuard::poll_owner`] for why the
+    /// single guard matters). The owner's progress engine uses this;
+    /// offload and nested-offload drains must use [`Endpoint::poll`] so
+    /// stashed packets are never popped and re-stashed out of order.
+    pub fn poll_owner(&self) -> Option<Packet> {
+        match self.try_acquire_drain() {
+            Ok(guard) => guard.poll_owner(),
+            Err(DrainBusy { .. }) => None,
+        }
+    }
+
+    /// Take exclusive drain ownership of this endpoint, or learn who has
+    /// it. Re-entrant: the holding thread may acquire nested guards (wait
+    /// loops re-enter the progress engine through backpressure retries).
+    pub fn try_acquire_drain(&self) -> std::result::Result<DrainGuard<'_>, DrainBusy> {
+        let me = thread_id_i64();
+        match self.drainer.compare_exchange(NO_DRAINER, me, Ordering::Acquire, Ordering::Relaxed) {
+            Ok(_) => Ok(DrainGuard { ep: self, outermost: true }),
+            Err(cur) if cur == me => Ok(DrainGuard { ep: self, outermost: false }),
+            Err(cur) => Err(DrainBusy { holder: cur }),
+        }
+    }
+
+    /// Owner-freshness stamp, read by the progress offload's staleness
+    /// check. Called by the owning rank's progress engine only.
+    #[inline]
+    pub fn note_owner_poll(&self, now_ns: u64) {
+        self.last_owner_poll_ns.store(now_ns, Ordering::Release);
+    }
+
+    /// When the owner last ran a progress pass (0 = never).
+    #[inline]
+    pub fn last_owner_poll_ns(&self) -> u64 {
+        self.last_owner_poll_ns.load(Ordering::Acquire)
+    }
+
+    /// Park a packet for the owner (see [`DrainGuard::stash`]). The
+    /// caller must hold drain ownership — possibly re-entrantly, which
+    /// is why this also exists guard-free: nested progress passes
+    /// reached through transmit backpressure stash from dispatch, where
+    /// the outer guard is out of reach.
+    pub fn stash_packet(&self, pkt: Packet) {
+        self.stash.lock().unwrap_or_else(|e| e.into_inner()).push_back(pkt);
+        self.stash_occupancy.fetch_add(1, Ordering::Release);
+    }
+
+    /// Pop one packet the offload parked for the owner (FIFO). Owner
+    /// side; see [`DrainGuard::stash`].
+    pub fn pop_stashed(&self) -> Option<Packet> {
+        if self.stash_occupancy.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut q = self.stash.lock().unwrap_or_else(|e| e.into_inner());
+        let out = q.pop_front();
+        if out.is_some() {
+            self.stash_occupancy.fetch_sub(1, Ordering::Release);
+        }
         out
+    }
+
+    /// Stashed-packet count (owner-bound traffic parked by the offload).
+    pub fn stash_len(&self) -> usize {
+        self.stash_occupancy.load(Ordering::Acquire)
     }
 
     /// Record an outbound packet (called by the send path on the *source*
@@ -224,38 +409,15 @@ impl Endpoint {
     pub fn inbound_len(&self) -> usize {
         self.inbound.len_approx()
     }
-
-    #[cfg(debug_assertions)]
-    fn enter_drain(&self) -> bool {
-        let me = thread_id_i64();
-        match self.drainer.compare_exchange(-1, me, Ordering::Acquire, Ordering::Relaxed) {
-            Ok(_) => true,
-            // Re-entrant from the same thread is fine (wait loops).
-            Err(cur) => cur == me,
-        }
-    }
-
-    #[cfg(not(debug_assertions))]
-    #[inline(always)]
-    fn enter_drain(&self) -> bool {
-        true
-    }
-
-    #[cfg(debug_assertions)]
-    fn exit_drain(&self) {
-        let me = thread_id_i64();
-        // Only clear if we own it (re-entrant polls keep ownership).
-        let _ = self.drainer.compare_exchange(me, -1, Ordering::Release, Ordering::Relaxed);
-    }
 }
 
-#[cfg(debug_assertions)]
+/// Process-local monotonic thread id (>= 1; [`NO_DRAINER`] is reserved).
 fn thread_id_i64() -> i64 {
     use std::cell::Cell;
     use std::sync::atomic::AtomicI64 as A;
     static NEXT: A = A::new(1);
     thread_local! {
-        static ID: Cell<i64> = Cell::new(0);
+        static ID: Cell<i64> = const { Cell::new(0) };
     }
     ID.with(|c| {
         if c.get() == 0 {
@@ -363,19 +525,104 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
-    fn concurrent_drain_detected() {
-        use std::sync::Arc;
-        let ep = Arc::new(Endpoint::new(EpAddr { rank: 0, ep: 0 }, 64));
-        // Simulate another thread holding the drain: set the drainer to a
-        // bogus id and verify poll panics.
-        ep.drainer.store(999_999, Ordering::SeqCst);
-        let ep2 = ep.clone();
-        let res = std::thread::spawn(move || {
-            let _ = ep2.poll();
-        })
-        .join();
-        assert!(res.is_err(), "expected serial-context violation panic");
-        ep.drainer.store(-1, Ordering::SeqCst);
+    fn concurrent_drain_refused_with_typed_error() {
+        let ep = Endpoint::new(EpAddr { rank: 0, ep: 0 }, 64);
+        ep.deliver(pkt(1, 8)).unwrap();
+        let guard = ep.try_acquire_drain().unwrap();
+        // Another thread: acquisition refused (typed, no panic), and a
+        // bare poll observes an empty ring instead of racing the pop.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let err = ep.try_acquire_drain().unwrap_err();
+                assert!(err.holder > 0, "holder id must be real: {err}");
+                assert!(ep.poll().is_none(), "poll under a foreign drain must refuse");
+            })
+            .join()
+            .unwrap();
+        });
+        // The holder still drains normally.
+        assert_eq!(guard.poll().unwrap().env.tag, 1);
+        drop(guard);
+        // Released: any thread may drain again.
+        ep.deliver(pkt(2, 8)).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| assert_eq!(ep.poll().unwrap().env.tag, 2)).join().unwrap();
+        });
+    }
+
+    #[test]
+    fn drain_reentrant_on_holding_thread() {
+        let ep = Endpoint::new(EpAddr { rank: 0, ep: 0 }, 64);
+        ep.deliver(pkt(1, 8)).unwrap();
+        ep.deliver(pkt(2, 8)).unwrap();
+        let outer = ep.try_acquire_drain().unwrap();
+        {
+            // Wait loops re-enter the progress engine (backpressure
+            // retries); the nested guard must not release ownership.
+            let inner = ep.try_acquire_drain().unwrap();
+            assert_eq!(inner.poll().unwrap().env.tag, 1);
+        }
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(ep.try_acquire_drain().is_err(), "outer guard still owns the drain");
+            })
+            .join()
+            .unwrap();
+        });
+        assert_eq!(outer.poll().unwrap().env.tag, 2);
+    }
+
+    #[test]
+    fn stash_preserves_fifo_for_owner() {
+        let ep = Endpoint::new(EpAddr { rank: 0, ep: 0 }, 64);
+        ep.deliver(pkt(1, 8)).unwrap();
+        ep.deliver(pkt(2, 8)).unwrap();
+        {
+            let g = ep.try_acquire_drain().unwrap();
+            let p1 = g.poll().unwrap();
+            let p2 = g.poll().unwrap();
+            g.stash(p1);
+            g.stash(p2);
+        }
+        assert_eq!(ep.stash_len(), 2);
+        // A younger ring packet must not overtake the stashed ones on
+        // the owner's combined poll path.
+        ep.deliver(pkt(3, 8)).unwrap();
+        assert_eq!(ep.poll_owner().unwrap().env.tag, 1);
+        assert_eq!(ep.poll_owner().unwrap().env.tag, 2);
+        assert_eq!(ep.poll_owner().unwrap().env.tag, 3);
+        assert!(ep.poll_owner().is_none());
+        assert_eq!(ep.stash_len(), 0);
+    }
+
+    #[test]
+    fn owner_poll_timestamp_tracks_only_explicit_notes() {
+        let ep = Endpoint::new(EpAddr { rank: 0, ep: 0 }, 64);
+        assert_eq!(ep.last_owner_poll_ns(), 0, "never polled");
+        ep.note_owner_poll(42);
+        assert_eq!(ep.last_owner_poll_ns(), 42);
+        // Draining does not refresh the stamp — the offload's staleness
+        // check depends on that.
+        let _ = ep.poll();
+        assert_eq!(ep.last_owner_poll_ns(), 42);
+    }
+
+    #[test]
+    fn offload_counters_roundtrip() {
+        let stats = EpStats::default();
+        stats.note_offload_poll();
+        stats.note_offload_poll();
+        stats.note_offload_takeover();
+        let snap = stats.snapshot();
+        assert_eq!(snap.offload_polls, 2);
+        assert_eq!(snap.offload_takeovers, 1);
+        let mut total = EpStatsSnapshot::default();
+        total.accumulate(&snap);
+        total.accumulate(&snap);
+        assert_eq!(total.offload_polls, 4);
+        assert_eq!(total.offload_takeovers, 2);
+        stats.reset();
+        assert_eq!(stats.snapshot().offload_polls, 0);
+        assert_eq!(stats.snapshot().offload_takeovers, 0);
     }
 }

@@ -19,7 +19,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{AckBatch, Config, EnqueueMode};
+use crate::config::{AckBatch, Config, EnqueueMode, ProgressOffload};
 use crate::coordinator::driver::{
     enqueue_pipeline, msgrate_live, msgrate_live_thread_mapped, n_to_1_live, MsgrateMode,
 };
@@ -1160,6 +1160,68 @@ impl RmaPassive {
         })?;
         rate.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
     }
+
+    /// Nanoseconds of fake compute the busy target spins per round
+    /// (10 ms — several thousand idle bounds, so a target that only
+    /// serves from its own progress loop is provably unresponsive for
+    /// the whole phase).
+    const BUSY_SPIN_NS: u64 = 10_000_000;
+
+    /// Dedicated-offload idle bound for the busy-target probe: 50 µs,
+    /// well under the compute phase, well over one progress pass.
+    const BUSY_IDLE_BOUND_NS: u64 = 50_000;
+
+    /// Full lock(exclusive)→put→unlock epochs against a **compute-busy**
+    /// target. Each round, both ranks leave a barrier together; rank 1
+    /// immediately spins [`Self::BUSY_SPIN_NS`] of fake compute (its
+    /// progress engine silent the whole time) while rank 0 waits a
+    /// quarter of the spin — so the target is provably mid-compute —
+    /// and then times the epoch. With the progress offload on, the
+    /// grant, the put ack, and the unlock ack are all served by the
+    /// offload; off, everything stalls until the target returns to a
+    /// progress loop (the next barrier). Returns the epoch-latency
+    /// summary plus the fabric-total `offload_polls` /
+    /// `offload_takeovers` counters for the run.
+    fn busy_target_epochs(
+        offload: ProgressOffload,
+        rounds: u64,
+        warm: u64,
+        seed: u64,
+    ) -> Result<(Summary, u64, u64)> {
+        let cfg = Config { progress_offload: offload, ..Default::default() };
+        let world = World::builder().ranks(2).config(cfg).build()?;
+        let samples: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        world.run(|p| {
+            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            let mut payload = vec![0u8; Self::PAYLOAD];
+            Rng::new(seed ^ 0xb05e).fill(&mut payload);
+            for i in 0..(warm + rounds) {
+                p.barrier(p.world_comm())?;
+                if p.rank() == 0 {
+                    // Let the target sink into its compute phase first.
+                    crate::gpu::stream::busy_wait_ns(Self::BUSY_SPIN_NS / 4);
+                    let t0 = Instant::now();
+                    p.win_lock(&win, 1, LockType::Exclusive)?;
+                    p.put(&win, 1, 0, &payload)?;
+                    p.win_unlock(&win, 1)?;
+                    if i >= warm {
+                        samples.lock().unwrap().push(t0.elapsed().as_nanos() as f64);
+                    }
+                } else {
+                    crate::gpu::stream::busy_wait_ns(Self::BUSY_SPIN_NS);
+                }
+            }
+            p.barrier(p.world_comm())?;
+            p.win_free(win)?;
+            Ok(())
+        })?;
+        let totals = world.fabric().stats_totals();
+        Ok((
+            Summary::from_ns(samples.into_inner().unwrap()),
+            totals.offload_polls,
+            totals.offload_takeovers,
+        ))
+    }
 }
 
 impl Scenario for RmaPassive {
@@ -1172,6 +1234,8 @@ impl Scenario for RmaPassive {
             ("payload_bytes".into(), Self::PAYLOAD.to_string()),
             ("streams".into(), "1,2,4,8,16".into()),
             ("modes".into(), "exclusive,shared".into()),
+            ("busy_spin_ns".into(), Self::BUSY_SPIN_NS.to_string()),
+            ("busy_idle_bound_ns".into(), Self::BUSY_IDLE_BOUND_NS.to_string()),
         ]
     }
 
@@ -1214,6 +1278,53 @@ impl Scenario for RmaPassive {
             ));
         }
         metrics.push(Metric::info("shared_over_exclusive_4", shared4 / excl4, "x"));
+        // Busy-target probe (ISSUE 8): the same epoch against a target
+        // spinning 10 ms of fake compute per round, with and without the
+        // dedicated progress offload. Off documents the stall (the grant
+        // waits for the target's next progress loop); on, the offload
+        // must serve it from under the compute — by 5x or the offload is
+        // not doing its one job, so that floor is an in-process hard
+        // failure as well as a gated metric.
+        let busy_rounds = profile.scale(24, 8);
+        let busy_warm = 2;
+        let (stalled, stalled_polls, stalled_takeovers) = Self::busy_target_epochs(
+            ProgressOffload::Off,
+            busy_rounds,
+            busy_warm,
+            profile.seed,
+        )?;
+        let (offloaded, offload_polls, offload_takeovers) = Self::busy_target_epochs(
+            ProgressOffload::Dedicated { idle_bound_ns: Self::BUSY_IDLE_BOUND_NS },
+            busy_rounds,
+            busy_warm,
+            profile.seed,
+        )?;
+        if stalled_polls != 0 || stalled_takeovers != 0 {
+            return Err(MpiErr::Internal(format!(
+                "offload counters moved with the offload off \
+                 ({stalled_polls} polls, {stalled_takeovers} takeovers)"
+            )));
+        }
+        if offload_takeovers == 0 {
+            return Err(MpiErr::Internal(
+                "busy-target probe ran with offload on but the offload never took over \
+                 an endpoint — the ratio would be measuring nothing"
+                    .into(),
+            ));
+        }
+        let ratio = stalled.p50_ns / offloaded.p50_ns.max(1.0);
+        if ratio < 5.0 {
+            return Err(MpiErr::Internal(format!(
+                "progress offload must serve a busy target >= 5x faster than the stalled \
+                 baseline (stalled p50 {:.0}ns / offload p50 {:.0}ns = {ratio:.2}x)",
+                stalled.p50_ns, offloaded.p50_ns
+            )));
+        }
+        metrics.push(Metric::info("busy_stalled_epoch_p50_ns", stalled.p50_ns, "ns"));
+        metrics.push(Metric::lower("busy_offload_epoch_p50_ns", offloaded.p50_ns, "ns"));
+        metrics.push(Metric::higher("offload_over_stalled", ratio, "x"));
+        metrics.push(Metric::info("busy_offload_polls", offload_polls as f64, "packets"));
+        metrics.push(Metric::info("busy_offload_takeovers", offload_takeovers as f64, "takeovers"));
         Ok(ScenarioResult { metrics })
     }
 }
@@ -1369,11 +1480,35 @@ impl RmaFlush {
     /// packets and batch-of-8 acks.
     const ACK_PROBE_OPS: u64 = 64;
 
-    /// Inter-op sleep of the paced probe: comfortably above
+    /// Inter-op gap of the paced probe: comfortably above
     /// [`crate::mpi::rma_track::ADAPTIVE_GAP_NS`] so the target's
     /// batcher classifies the origin as latency-bound and switches to
     /// per-op acks.
     const ACK_PACE_US: u64 = 120;
+
+    /// Below this target the pacer never sleeps: around the finest gap
+    /// `std::thread::sleep` can hold on a loaded runner, where the
+    /// scheduler over-shoots by whole timeslices. The probe's 120 µs
+    /// pace therefore runs as a pure busy-wait.
+    const PACE_SPIN_US: u64 = 200;
+
+    /// Pace one inter-op gap of `target_us`, returning the gap actually
+    /// achieved in nanoseconds. Sleeps only for the portion above
+    /// [`Self::PACE_SPIN_US`] and busy-waits the tail, so the regime the
+    /// ack classifier is probed with is the regime we claim — a bare
+    /// `sleep(120µs)` can return after several milliseconds, which still
+    /// classifies as latency-bound but no longer measures the boundary.
+    fn hybrid_pace_ns(target_us: u64) -> u64 {
+        let t0 = Instant::now();
+        let target = std::time::Duration::from_micros(target_us);
+        if target_us > Self::PACE_SPIN_US {
+            std::thread::sleep(target - std::time::Duration::from_micros(Self::PACE_SPIN_US));
+        }
+        while t0.elapsed() < target {
+            std::hint::spin_loop();
+        }
+        t0.elapsed().as_nanos() as u64
+    }
 
     /// Split-phase vs blocking completion on the latency path: rank 0
     /// completes each put before issuing the next, once as
@@ -1437,12 +1572,13 @@ impl RmaFlush {
     /// batcher switches to per-op acks and the lone staged op ships as
     /// a loose `PUT`. Returns (ops per RMA packet
     /// received at the origin inside the epoch, fabric-total
-    /// aggregated-tx ops, fabric-total ack-mode switches).
-    fn rput_acks(pace_us: u64, seed: u64) -> Result<(f64, u64, u64)> {
+    /// aggregated-tx ops, fabric-total ack-mode switches, mean achieved
+    /// inter-op gap in ns — 0 for the burst case).
+    fn rput_acks(pace_us: u64, seed: u64) -> Result<(f64, u64, u64, f64)> {
         let ops = Self::ACK_PROBE_OPS;
         let cfg = Config { rma_ack_batch: AckBatch::Adaptive, ..Default::default() };
         let world = World::builder().ranks(2).config(cfg).build()?;
-        let out: Mutex<Option<f64>> = Mutex::new(None);
+        let out: Mutex<Option<(f64, f64)>> = Mutex::new(None);
         world.run(|p| {
             let win = p.win_create(vec![0u8; Self::SLOTS * Self::PAYLOAD], p.world_comm())?;
             if p.rank() == 0 {
@@ -1455,6 +1591,7 @@ impl RmaFlush {
                 };
                 p.win_lock(&win, 1, LockType::Exclusive)?;
                 let rx_before = rx_rma(p);
+                let mut gap_ns_total = 0u64;
                 if pace_us == 0 {
                     let mut reqs = Vec::with_capacity(ops as usize);
                     for i in 0..ops {
@@ -1469,12 +1606,13 @@ impl RmaFlush {
                         let off = (i as usize % Self::SLOTS) * Self::PAYLOAD;
                         let mut r = p.rput(&win, 1, off, &payload)?;
                         r.wait(p)?;
-                        std::thread::sleep(std::time::Duration::from_micros(pace_us));
+                        gap_ns_total += Self::hybrid_pace_ns(pace_us);
                     }
                 }
                 let rx = rx_rma(p) - rx_before;
                 p.win_unlock(&win, 1)?;
-                *out.lock().unwrap() = Some(ops as f64 / rx.max(1) as f64);
+                *out.lock().unwrap() =
+                    Some((ops as f64 / rx.max(1) as f64, gap_ns_total as f64 / ops as f64));
                 p.send(&[1u8], 1, 9, p.world_comm())?;
             } else {
                 let mut b = [0u8; 1];
@@ -1483,12 +1621,12 @@ impl RmaFlush {
             p.win_free(win)?;
             Ok(())
         })?;
-        let ratio = out
+        let (ratio, gap_ns) = out
             .into_inner()
             .unwrap()
             .ok_or_else(|| MpiErr::Internal("no ack ratio recorded".into()))?;
         let totals = world.fabric().stats_totals();
-        Ok((ratio, totals.tx_aggregated_ops, totals.ack_mode_switches))
+        Ok((ratio, totals.tx_aggregated_ops, totals.ack_mode_switches, gap_ns))
     }
 }
 
@@ -1575,9 +1713,20 @@ impl Scenario for RmaFlush {
         // packet). Behavioral probes with fixed op counts — shape
         // failures are protocol bugs, so they hard-fail rather than
         // gate on a ratio.
-        let (burst_ratio, burst_agg, _) = Self::rput_acks(0, profile.seed)?;
-        let (paced_ratio, _, paced_switches) =
+        let (burst_ratio, burst_agg, _, _) = Self::rput_acks(0, profile.seed)?;
+        let (paced_ratio, _, paced_switches, paced_gap_ns) =
             Self::rput_acks(Self::ACK_PACE_US, profile.seed)?;
+        // The hybrid pacer never undershoots by construction; an achieved
+        // gap below target means the pacer (or the clock) is broken and
+        // the paced regime was not actually probed.
+        let paced_gap_us = paced_gap_ns / 1_000.0;
+        if paced_gap_us < Self::ACK_PACE_US as f64 {
+            return Err(MpiErr::Internal(format!(
+                "paced probe under-paced: achieved {paced_gap_us:.1}us mean gap, \
+                 target {}us",
+                Self::ACK_PACE_US
+            )));
+        }
         if burst_ratio < 4.0 {
             return Err(MpiErr::Internal(format!(
                 "adaptive batching must coalesce bursts (got {burst_ratio} ops/ack, need >= 4)"
@@ -1597,6 +1746,7 @@ impl Scenario for RmaFlush {
         metrics.push(Metric::info("paced_ops_per_ack", paced_ratio, "op/ack"));
         metrics.push(Metric::info("burst_tx_aggregated_ops", burst_agg as f64, "ops"));
         metrics.push(Metric::info("paced_ack_mode_switches", paced_switches as f64, "switches"));
+        metrics.push(Metric::info("paced_achieved_gap_us", paced_gap_us, "us"));
         Ok(ScenarioResult { metrics })
     }
 }

@@ -19,6 +19,7 @@ pub mod datatype;
 pub mod group;
 pub mod info;
 pub mod matching;
+pub(crate) mod offload;
 pub mod pt2pt;
 pub mod request;
 pub mod status;

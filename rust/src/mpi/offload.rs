@@ -1,0 +1,221 @@
+//! Asynchronous progress offload (ISSUE 8) — "progress for all".
+//!
+//! Every target-driven protocol in this runtime — passive lock grants
+//! (`mpi/win_lock`), deferred-completion ack batches and flush replies
+//! (`mpi/rma_track`), one-way `ACK_REQ` demands — is drained by the
+//! *target's* progress engine. A target rank spinning in compute or
+//! blocked on a GPU therefore stalls every origin for exactly its poll
+//! interval; this module is the fix, after "MPI Progress For All"
+//! (arXiv 2405.13807).
+//!
+//! Two policies ([`crate::config::ProgressOffload`]):
+//!
+//! * **Dedicated** — [`OffloadHandle::spawn`] runs one progress thread
+//!   per world that sweeps every rank's endpoints and drains any whose
+//!   owner has not run a progress pass within `idle_bound_ns`.
+//! * **Steal** — no extra thread; a rank whose own blocking wait
+//!   exhausts its spin budget sweeps its *siblings'* stale endpoints
+//!   ([`steal_pass`], idle bound [`STEAL_IDLE_BOUND_NS`]).
+//!
+//! Both funnel into [`offload_drain_vci`], which enforces the safety
+//! rules that make a cross-thread drain sound:
+//!
+//! 1. **Ownership, never a race**: the drain is taken with
+//!    [`crate::fabric::endpoint::Endpoint::try_acquire_drain`] and backs
+//!    off on [`crate::fabric::endpoint::DrainBusy`]. The owner's `poll`
+//!    does the same, so the MPSC ring keeps exactly one consumer at a
+//!    time with an Acquire/Release edge between handoffs.
+//! 2. **Staleness, read-only**: the offload engages only when the
+//!    owner's [`last_owner_poll_ns`](crate::fabric::endpoint::Endpoint::last_owner_poll_ns)
+//!    stamp is older than the idle bound, and never refreshes the stamp
+//!    itself — a busy owner stays "busy" until it really polls again.
+//! 3. **RMA only**: one-sided packets (`RMA_CTX_BIT`) are handled in
+//!    place via [`crate::mpi::rma::handle_rma_packet`] — all
+//!    target-side window state is mutex- or atomic-protected, and
+//!    responses transmit from the drained VCI so `EpStats` attribution
+//!    is unchanged. Matched (pt2pt) traffic is owner-serial, so it is
+//!    *stashed* for the owner, who re-consumes it ahead of the ring
+//!    (FIFO within the matched protocols holds; only cross-protocol
+//!    order may shift, which one-sided semantics permit).
+//! 4. **No blocking on critical sections**: sessions are opened with
+//!    [`CsSession::try_enter_counted`] — a held global CS means the
+//!    owner is active (nothing to offload), and in Steal mode two ranks
+//!    blocking on each other's CS would deadlock.
+//!
+//! The thread-local offload context covers *nested* progress too: a
+//! response hitting ring backpressure re-enters the progress engine
+//! (`transmit_retry` → `progress_vci`), and the dispatch path consults
+//! [`in_offload_context`] so even those nested drains stash rather than
+//! touch the matching engine.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::config::ProgressOffload;
+use crate::mpi::world::Proc;
+
+/// Idle bound for the work-stealing policy: a sibling endpoint counts as
+/// abandoned once its owner has not polled for 200 µs — several spin
+/// budgets, so an owner in an ordinary wait loop is never preempted.
+pub const STEAL_IDLE_BOUND_NS: u64 = 200_000;
+
+/// Packets per takeover, mirroring the owner progress engine's batch.
+const DRAIN_BATCH: usize = 64;
+
+/// Idle sweeps before the dedicated thread stops yielding and sleeps.
+const IDLE_SWEEPS_BEFORE_SLEEP: u32 = 64;
+
+/// Sleep between sweeps once the world has gone quiet.
+const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
+
+thread_local! {
+    static IN_OFFLOAD: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is the current thread inside an offload drain (including nested
+/// progress re-entered through transmit backpressure)?
+pub(crate) fn in_offload_context() -> bool {
+    IN_OFFLOAD.with(|c| c.get())
+}
+
+/// RAII marker for the offload context (restores the previous value, so
+/// Steal-mode ranks return to owner semantics when the pass ends).
+struct OffloadCtx {
+    prev: bool,
+}
+
+impl OffloadCtx {
+    fn enter() -> Self {
+        let prev = IN_OFFLOAD.with(|c| c.replace(true));
+        OffloadCtx { prev }
+    }
+}
+
+impl Drop for OffloadCtx {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_OFFLOAD.with(|c| c.set(prev));
+    }
+}
+
+/// Drain one endpoint on behalf of a stale owner. Returns the number of
+/// packets drained (0 when the endpoint was empty, fresh, contended, or
+/// its critical section was busy).
+pub(crate) fn offload_drain_vci(p: &Proc, idx: u16, idle_bound_ns: u64) -> usize {
+    let vci = p.vci(idx).clone();
+    let ep = vci.ep();
+    if ep.inbound_len() == 0 {
+        return 0;
+    }
+    let now = crate::mpi::rma::now_ns();
+    if now.saturating_sub(ep.last_owner_poll_ns()) < idle_bound_ns {
+        return 0;
+    }
+    // Never wait on the owner's critical section: busy CS == active owner.
+    let Some(cs) = p.try_session_for_vci(idx) else {
+        return 0;
+    };
+    // Take drain ownership explicitly; a refusal means someone else —
+    // usually the owner — got there first, which is success, not error.
+    let Ok(guard) = ep.try_acquire_drain() else {
+        return 0;
+    };
+    ep.stats().note_offload_takeover();
+    let _ctx = OffloadCtx::enter();
+    let mut drained = 0;
+    for _ in 0..DRAIN_BATCH {
+        let pkt = {
+            let _ep = vci.ep_access(&cs);
+            guard.poll()
+        };
+        let Some(pkt) = pkt else { break };
+        ep.stats().note_offload_poll();
+        // RMA packets are handled here (thread-safe target state, VCI
+        // attribution via `cs`/`vci`); matched traffic is stashed for
+        // the owner inside `dispatch`'s offload-context branch.
+        p.dispatch(&vci, &cs, pkt);
+        drained += 1;
+    }
+    drained
+}
+
+/// One full sweep over every endpoint of every rank in `procs`.
+fn sweep(procs: &[Proc], idle_bound_ns: u64) -> usize {
+    let mut drained = 0;
+    for p in procs {
+        for idx in 0..p.vci_count() {
+            drained += offload_drain_vci(p, idx as u16, idle_bound_ns);
+        }
+    }
+    drained
+}
+
+/// Steal-mode hook, called from blocking wait loops at spin-budget
+/// exhaustion: sweep every *sibling* rank's endpoints once. A no-op
+/// unless the world's policy is [`ProgressOffload::Steal`].
+pub(crate) fn steal_pass(p: &Proc) {
+    if !matches!(p.config().progress_offload, ProgressOffload::Steal) {
+        return;
+    }
+    let Some(peers) = p.world().offload_peers() else {
+        return;
+    };
+    for weak in peers {
+        let Some(shared) = weak.upgrade() else { continue };
+        if Arc::ptr_eq(&shared, &p.shared) {
+            continue;
+        }
+        let peer = Proc { shared };
+        for idx in 0..peer.vci_count() {
+            offload_drain_vci(&peer, idx as u16, STEAL_IDLE_BOUND_NS);
+        }
+    }
+}
+
+/// Handle to a world's dedicated progress thread; signals shutdown and
+/// joins on drop (the `World` owns one when the policy is `Dedicated`).
+pub(crate) struct OffloadHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl OffloadHandle {
+    pub(crate) fn spawn(procs: Vec<Proc>, idle_bound_ns: u64) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("pallas-progress-offload".into())
+            .spawn(move || dedicated_loop(&procs, idle_bound_ns, &flag))
+            .expect("spawn progress-offload thread");
+        OffloadHandle { stop, join: Some(join) }
+    }
+}
+
+impl Drop for OffloadHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn dedicated_loop(procs: &[Proc], idle_bound_ns: u64, stop: &AtomicBool) {
+    let mut idle_sweeps = 0u32;
+    while !stop.load(Ordering::Acquire) {
+        if sweep(procs, idle_bound_ns) > 0 {
+            idle_sweeps = 0;
+        } else {
+            // Back off gently: yield while traffic is plausible, sleep
+            // once the world has gone quiet so an idle offload thread
+            // does not burn a core under the benchmarks it guards.
+            idle_sweeps = idle_sweeps.saturating_add(1);
+            if idle_sweeps < IDLE_SWEEPS_BEFORE_SLEEP {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(IDLE_SLEEP);
+            }
+        }
+    }
+}

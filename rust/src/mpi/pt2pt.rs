@@ -370,6 +370,10 @@ impl Proc {
                     let cs2 = self.session_for_implicit();
                     self.progress_implicit_pool(&cs2);
                 }
+                // Steal-mode offload: a rank that has burned its spin
+                // budget is idle enough to serve siblings' stale
+                // endpoints (no-op unless the policy is `Steal`).
+                crate::mpi::offload::steal_pass(self);
                 cs.yield_cs();
             } else {
                 std::hint::spin_loop();
@@ -424,20 +428,36 @@ impl Proc {
     /// matching protocol for each.
     pub(crate) fn progress_vci(&self, vci: &Arc<Vci>, cs: &CsSession<'_>) {
         const BATCH: usize = 64;
+        let owner_pass = !crate::mpi::offload::in_offload_context();
+        if owner_pass && self.config().progress_offload.enabled() {
+            // Stamp freshness for the offload's staleness check. Only the
+            // owner writes this — staleness must persist while the owner
+            // computes, and an offload takeover must not mask it.
+            vci.ep().note_owner_poll(crate::mpi::rma::now_ns());
+        }
         for _ in 0..BATCH {
             let pkt = {
                 let _ep = vci.ep_access(cs);
-                vci.ep().poll()
+                // The owner consumes the offload's stash ahead of the
+                // ring (pt2pt FIFO); nested offload progress must stay
+                // ring-only or it would rotate the stash out of order.
+                if owner_pass { vci.ep().poll_owner() } else { vci.ep().poll() }
             };
             let Some(pkt) = pkt else { break };
             self.dispatch(vci, cs, pkt);
         }
     }
 
-    fn dispatch(&self, vci: &Arc<Vci>, cs: &CsSession<'_>, pkt: Packet) {
+    pub(crate) fn dispatch(&self, vci: &Arc<Vci>, cs: &CsSession<'_>, pkt: Packet) {
         // RMA traffic bypasses the matching engine (§5.1 one-sided path).
         if pkt.env.ctx_id & crate::mpi::rma::RMA_CTX_BIT != 0 {
             crate::mpi::rma::handle_rma_packet(self, vci, cs, pkt);
+            return;
+        }
+        // Offload context: the matching engine is owner-serial (its
+        // `with_state` contract), so park matched traffic for the owner.
+        if crate::mpi::offload::in_offload_context() {
+            vci.ep().stash_packet(pkt);
             return;
         }
         let Packet { env, kind, reply_ep } = pkt;

@@ -666,6 +666,8 @@ impl Proc {
         vci: &Arc<Vci>,
         cs: &CsSession<'_>,
     ) -> Result<Vec<u8>> {
+        let steal_period = self.config().spin_before_yield.max(1);
+        let mut rounds = 0u32;
         loop {
             if let Some(outcome) =
                 self.rma_results().take_done(vci.idx(), (win.inner.id, token), cs.waits())
@@ -673,6 +675,14 @@ impl Proc {
                 return outcome.map_err(MpiErr::Rma);
             }
             self.progress_vci(vci, cs);
+            rounds += 1;
+            if rounds >= steal_period {
+                rounds = 0;
+                // Blocked on a remote target for a whole spin budget:
+                // in Steal mode, serve siblings' stale endpoints — the
+                // target we are waiting on may be one of them.
+                crate::mpi::offload::steal_pass(self);
+            }
             cs.yield_cs();
         }
     }

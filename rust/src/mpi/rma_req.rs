@@ -248,6 +248,11 @@ impl RmaRequest {
         let Some(tracker) = p.rma_results().tracker(self.src_vci, self.win_id, None) else {
             return Err(self.freed_err());
         };
+        // Same discipline as `rma_await`: after a whole spin budget
+        // blocked on the remote side, a Steal-mode rank serves siblings'
+        // stale endpoints — the busy target holding our ack may be one.
+        let steal_period = p.config().spin_before_yield.max(1);
+        let mut rounds = 0u32;
         match self.kind {
             ReqKind::Get => loop {
                 if let Some(outcome) =
@@ -265,10 +270,17 @@ impl RmaRequest {
                 if p.rma_results().tracker(self.src_vci, self.win_id, None).is_none() {
                     return Err(self.freed_err());
                 }
-                let vci = p.vci(self.src_vci);
-                let cs = p.session_for_vci(self.src_vci);
-                p.progress_vci(vci, &cs);
-                cs.yield_cs();
+                {
+                    let vci = p.vci(self.src_vci);
+                    let cs = p.session_for_vci(self.src_vci);
+                    p.progress_vci(vci, &cs);
+                    cs.yield_cs();
+                }
+                rounds += 1;
+                if rounds >= steal_period {
+                    rounds = 0;
+                    crate::mpi::offload::steal_pass(p);
+                }
             },
             ReqKind::Put | ReqKind::Acc => {
                 let win = self.win.upgrade().map(Window::from_inner);
@@ -309,6 +321,11 @@ impl RmaRequest {
                         let cs = p.session_for_vci(self.src_vci);
                         p.progress_vci(vci, &cs);
                         cs.yield_cs();
+                    }
+                    rounds += 1;
+                    if rounds >= steal_period {
+                        rounds = 0;
+                        crate::mpi::offload::steal_pass(p);
                     }
                     if !poked && start.elapsed().as_micros() > WAIT_POKE_BUDGET_US {
                         poked = true;

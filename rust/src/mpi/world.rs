@@ -8,9 +8,9 @@
 //! behaviour under test is preserved.
 
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
-use crate::config::{Config, CsMode};
+use crate::config::{Config, CsMode, ProgressOffload};
 use crate::error::{MpiErr, Result};
 use crate::fabric::addr::EpAddr;
 use crate::fabric::Fabric;
@@ -28,6 +28,11 @@ pub struct WorldShared {
     /// World-unique context-id allocator (ids < 2^31; the top bit is the
     /// collective-context bit).
     ctx_alloc: AtomicU32,
+    /// Steal-mode progress-offload registry: every rank's `ProcShared`,
+    /// weakly held (set once after build; `Weak` so the registry never
+    /// keeps a rank alive). Empty unless the policy is
+    /// [`ProgressOffload::Steal`].
+    offload_peers: OnceLock<Vec<Weak<ProcShared>>>,
 }
 
 impl WorldShared {
@@ -60,6 +65,11 @@ impl WorldShared {
                 Err(cur) => base = cur,
             }
         }
+    }
+
+    /// The steal-mode peer registry, if this world runs one.
+    pub(crate) fn offload_peers(&self) -> Option<&[Weak<ProcShared>]> {
+        self.offload_peers.get().map(|v| v.as_slice())
     }
 }
 
@@ -106,6 +116,11 @@ pub struct Proc {
 pub struct World {
     shared: Arc<WorldShared>,
     procs: Vec<Proc>,
+    /// The dedicated progress-offload thread, when the policy is
+    /// [`ProgressOffload::Dedicated`]. Dropping the world signals and
+    /// joins it (the handle's own `Drop`), so the thread never outlives
+    /// the ranks it drains.
+    _offload: Option<crate::mpi::offload::OffloadHandle>,
 }
 
 /// Builder for [`World`].
@@ -195,6 +210,7 @@ impl WorldBuilder {
             nranks: self.ranks,
             ctx_alloc: AtomicU32::new(1), // ctx 0 = world comm
             config: self.config,
+            offload_peers: OnceLock::new(),
         });
         let procs: Vec<Proc> = (0..self.ranks)
             .map(|r| {
@@ -230,7 +246,19 @@ impl WorldBuilder {
                 Proc { shared: ps }
             })
             .collect();
-        Ok(World { shared, procs })
+        let offload = match shared.config.progress_offload {
+            ProgressOffload::Off => None,
+            ProgressOffload::Dedicated { idle_bound_ns } => Some(
+                crate::mpi::offload::OffloadHandle::spawn(procs.clone(), idle_bound_ns),
+            ),
+            ProgressOffload::Steal => {
+                let peers: Vec<Weak<ProcShared>> =
+                    procs.iter().map(|p| Arc::downgrade(&p.shared)).collect();
+                shared.offload_peers.set(peers).ok().expect("fresh once-cell");
+                None
+            }
+        };
+        Ok(World { shared, procs, _offload: offload })
     }
 }
 
@@ -311,6 +339,17 @@ impl Proc {
     /// [`crate::fabric::endpoint::EpStats::lock_waits`].
     pub(crate) fn session_for_vci(&self, idx: u16) -> CsSession<'_> {
         CsSession::enter_counted(
+            self.mode_for_vci(idx),
+            &self.shared.global_cs,
+            Some(self.shared.vcis[idx as usize].ep().stats()),
+        )
+    }
+
+    /// Non-blocking [`Proc::session_for_vci`] — `None` when the global
+    /// CS is held (Global mode only). The progress offload's entry
+    /// point; see [`crate::vci::lock::CsSession::try_enter_counted`].
+    pub(crate) fn try_session_for_vci(&self, idx: u16) -> Option<CsSession<'_>> {
+        CsSession::try_enter_counted(
             self.mode_for_vci(idx),
             &self.shared.global_cs,
             Some(self.shared.vcis[idx as usize].ep().stats()),

@@ -84,6 +84,32 @@ impl<'p> CsSession<'p> {
         CsSession { mode, global, guard: std::cell::RefCell::new(guard), waits }
     }
 
+    /// Non-blocking [`CsSession::enter_counted`]: in `Global` mode,
+    /// returns `None` instead of blocking when the process-wide mutex is
+    /// held. The progress offload's entry point — it must never wait on
+    /// a critical section, because a held CS means the owner is active
+    /// (no offload needed) and, in Steal mode, two ranks stealing from
+    /// each other while holding their own global CS would deadlock.
+    pub fn try_enter_counted(
+        mode: CsMode,
+        global: &'p Mutex<()>,
+        waits: Option<&'p EpStats>,
+    ) -> Option<CsSession<'p>> {
+        let guard = if mode == CsMode::Global {
+            match global.try_lock() {
+                Ok(g) => {
+                    count_lock();
+                    Some(g)
+                }
+                Err(std::sync::TryLockError::WouldBlock) => return None,
+                Err(std::sync::TryLockError::Poisoned(_)) => panic!("mutex poisoned"),
+            }
+        } else {
+            None
+        };
+        Some(CsSession { mode, global, guard: std::cell::RefCell::new(guard), waits })
+    }
+
     pub fn mode(&self) -> CsMode {
         self.mode
     }
@@ -221,6 +247,22 @@ mod tests {
             t.join().unwrap();
         });
         assert_eq!(stats.snapshot().lock_waits, 1, "blocked enter must be attributed");
+    }
+
+    #[test]
+    fn try_enter_refuses_held_global_cs() {
+        let m = Mutex::new(());
+        let held = m.lock().unwrap();
+        assert!(
+            CsSession::try_enter_counted(CsMode::Global, &m, None).is_none(),
+            "held global CS must refuse, not block"
+        );
+        // Non-global modes acquire nothing at entry: always succeed.
+        assert!(CsSession::try_enter_counted(CsMode::PerVci, &m, None).is_some());
+        assert!(CsSession::try_enter_counted(CsMode::LockFree, &m, None).is_some());
+        drop(held);
+        let cs = CsSession::try_enter_counted(CsMode::Global, &m, None).unwrap();
+        assert!(cs.holds_global());
     }
 
     #[test]

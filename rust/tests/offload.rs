@@ -1,0 +1,135 @@
+//! Busy-target regression tests for asynchronous progress offload
+//! (ISSUE 8): a target rank spinning in fake compute must not stall an
+//! origin's passive-target epoch when offload is on — and the same
+//! epoch must visibly stall when it is off, which is the bug the
+//! feature exists to fix.
+//!
+//! Each test runs a few lock/rput/unlock epochs against a rank that
+//! busy-waits 10 ms per round without polling, and checks the median
+//! `win_lock` grant and `RmaRequest::wait` latencies against bounds
+//! chosen far apart: offloaded epochs must finish well under half the
+//! spin, stalled grants must cost at least a fifth of it. Medians (not
+//! minima) keep one lucky or unlucky round from deciding the verdict.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use mpix::config::{Config, ProgressOffload};
+use mpix::fabric::endpoint::EpStatsSnapshot;
+use mpix::gpu::stream::busy_wait_ns;
+use mpix::mpi::win_lock::LockType;
+use mpix::mpi::world::World;
+
+/// Per-round fake compute on the target rank. Long enough that a
+/// stalled grant is unmistakable, short enough to keep the test quick.
+const BUSY_SPIN_NS: u64 = 10_000_000;
+/// Offload idle bound: far below the spin so the dedicated thread takes
+/// over almost immediately, far above a single progress pass so an
+/// actively polling owner is never preempted.
+const IDLE_BOUND_NS: u64 = 50_000;
+const ROUNDS: usize = 6;
+const WARMUP: usize = 2;
+const PAYLOAD: usize = 512;
+
+fn median_ns(mut v: Vec<u64>) -> u64 {
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
+/// Run `WARMUP + ROUNDS` busy-target epochs under `policy`. Returns
+/// (median win_lock grant ns, median rput wait ns, endpoint totals).
+fn busy_epochs(policy: ProgressOffload) -> (u64, u64, EpStatsSnapshot) {
+    let cfg = Config { progress_offload: policy, ..Default::default() };
+    let world = World::builder().ranks(2).config(cfg).build().unwrap();
+    let lock_ns: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let wait_ns: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    world
+        .run(|p| {
+            let win = p.win_create(vec![0u8; 4096], p.world_comm())?;
+            let payload = vec![0xa5u8; PAYLOAD];
+            for i in 0..(WARMUP + ROUNDS) {
+                p.barrier(p.world_comm())?;
+                if p.rank() == 0 {
+                    // Head start: let the target get deep into its spin
+                    // before the LOCK_REQ is sent, so its final barrier
+                    // progress pass cannot serve the grant by accident.
+                    busy_wait_ns(BUSY_SPIN_NS / 4);
+                    let t0 = Instant::now();
+                    p.win_lock(&win, 1, LockType::Exclusive)?;
+                    let granted = t0.elapsed();
+                    let mut req = p.rput(&win, 1, 0, &payload)?;
+                    let t1 = Instant::now();
+                    req.wait(p)?;
+                    let waited = t1.elapsed();
+                    p.win_unlock(&win, 1)?;
+                    if i >= WARMUP {
+                        lock_ns.lock().unwrap().push(granted.as_nanos() as u64);
+                        wait_ns.lock().unwrap().push(waited.as_nanos() as u64);
+                    }
+                } else {
+                    // Fake compute: no progress polls for the whole spin.
+                    busy_wait_ns(BUSY_SPIN_NS);
+                }
+            }
+            p.barrier(p.world_comm())?;
+            p.win_free(win)?;
+            Ok(())
+        })
+        .unwrap();
+    let totals = world.fabric().stats_totals();
+    (median_ns(lock_ns.into_inner().unwrap()), median_ns(wait_ns.into_inner().unwrap()), totals)
+}
+
+/// Offload on: the dedicated progress thread serves the busy target's
+/// lock grant, put, and ack traffic, so both latencies stay bounded
+/// well under the 10 ms spin — and the takeover counter proves the
+/// offload (not a lucky owner poll) did the work.
+#[test]
+fn dedicated_offload_bounds_busy_target_epoch() {
+    let (lock_med, wait_med, totals) =
+        busy_epochs(ProgressOffload::Dedicated { idle_bound_ns: IDLE_BOUND_NS });
+    assert!(
+        lock_med < BUSY_SPIN_NS / 2,
+        "offloaded win_lock grant median {lock_med}ns should be well under the {BUSY_SPIN_NS}ns spin"
+    );
+    assert!(
+        wait_med < BUSY_SPIN_NS / 2,
+        "offloaded rput wait median {wait_med}ns should be well under the {BUSY_SPIN_NS}ns spin"
+    );
+    assert!(totals.offload_takeovers > 0, "offload never took over a stale endpoint");
+    assert!(totals.offload_polls > 0, "offload took over but drained nothing");
+}
+
+/// Offload off: this documents the stall the feature fixes. The grant
+/// waits for the target's next owner poll — after its 10 ms spin — so
+/// the median grant costs a macroscopic slice of the spin, and the
+/// offload counters stay exactly zero (the Off path is inert).
+#[test]
+fn no_offload_documents_the_busy_target_stall() {
+    let (lock_med, _wait_med, totals) = busy_epochs(ProgressOffload::Off);
+    assert!(
+        lock_med >= BUSY_SPIN_NS / 5,
+        "without offload the win_lock grant median {lock_med}ns should stall toward the \
+         {BUSY_SPIN_NS}ns spin; a fast grant means the target polled mid-compute and this \
+         test no longer exercises the bug"
+    );
+    assert_eq!(totals.offload_takeovers, 0, "Off mode must never take over a drain");
+    assert_eq!(totals.offload_polls, 0, "Off mode must never record offload polls");
+}
+
+/// Steal mode: no dedicated thread — the *waiting* rank itself, blocked
+/// in `rma_await`/`RmaRequest::wait` for a whole spin budget, drains
+/// the busy sibling's stale endpoint and serves its own grant.
+#[test]
+fn steal_mode_unblocks_waiter_against_busy_sibling() {
+    let (lock_med, wait_med, totals) = busy_epochs(ProgressOffload::Steal);
+    assert!(
+        lock_med < BUSY_SPIN_NS / 2,
+        "stolen win_lock grant median {lock_med}ns should be well under the {BUSY_SPIN_NS}ns spin"
+    );
+    assert!(
+        wait_med < BUSY_SPIN_NS / 2,
+        "rput wait median {wait_med}ns should be well under the {BUSY_SPIN_NS}ns spin"
+    );
+    assert!(totals.offload_takeovers > 0, "steal pass never took over the sibling's endpoint");
+}
