@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! pallas-bench --list
-//! pallas-bench [--smoke] [--scenario a,b,...] [--seed N] [--json PATH]
+//! pallas-bench [--smoke] [--scenario a,b,...] [--seed N] [--ranks N]
+//!              [--json PATH]
 //!              [--baseline PATH [--threshold 0.85]]
 //!              [--propose-baseline PATH [--margin 3]]
 //! ```
@@ -12,6 +13,9 @@
 //!                      trailing-`*` globs (default: all scenarios)
 //! * `--smoke`          seconds-scale CI sizing (default: full profile)
 //! * `--seed`           deterministic RNG seed (default 42)
+//! * `--ranks N`        simulated process count for rank-aware scenarios
+//!                      (default 2; N != 2 reports `_r{N}`-suffixed
+//!                      metrics that baselines skip)
 //! * `--json PATH`      write the machine-readable `pallas-bench/v1`
 //!                      report (the `BENCH_results.json` schema)
 //! * `--baseline PATH`  compare gated metrics against a reference report
@@ -65,7 +69,14 @@ fn run(args: &Args) -> Result<i32> {
     }
 
     let seed = args.get_u64("seed", 42)?;
-    let profile = if args.get_bool("smoke") { Profile::smoke(seed) } else { Profile::full(seed) };
+    let ranks = args.get_u64("ranks", 2)? as usize;
+    if ranks < 2 {
+        return Err(mpix::error::MpiErr::Arg(format!(
+            "--ranks needs at least 2 simulated processes, got {ranks}"
+        )));
+    }
+    let profile = if args.get_bool("smoke") { Profile::smoke(seed) } else { Profile::full(seed) }
+        .with_ranks(ranks);
     let patterns: Vec<String> = match args.get("scenario") {
         None => Vec::new(),
         Some(s) => s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect(),

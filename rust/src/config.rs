@@ -5,6 +5,51 @@
 //! reserved pool (used by `MPIX_Stream_create`). Both sizes are control
 //! variables; the defaults follow the paper's advice (implicit = 1,
 //! explicit sized by expected stream count).
+//!
+//! # Environment variables
+//!
+//! [`Config::from_env`] and [`ConfigBuilder::env_overrides`] are the one
+//! environment surface for runtime knobs: each recognized `PALLAS_*`
+//! variable overrides the matching [`Config`] field, every value flows
+//! through the same `FromStr` impls the programmatic API uses, a malformed
+//! value is a typed [`MpiErr::Arg`] that *names the variable*, and the
+//! result passes [`Config::validate`] before anyone can use it. Unset and
+//! empty variables mean "keep the default".
+//!
+//! | Variable | `Config` field | Format |
+//! |---|---|---|
+//! | `PALLAS_IMPLICIT_POOL` | `implicit_pool` | integer ≥ 1 |
+//! | `PALLAS_EXPLICIT_POOL` | `explicit_pool` | integer |
+//! | `PALLAS_MAX_ENDPOINTS` | `max_endpoints` | integer |
+//! | `PALLAS_CS_MODE` | `cs_mode` | `global` \| `per-vci` \| `stream` |
+//! | `PALLAS_HASH_POLICY` | `hash_policy` | `constant` \| `per-comm` \| `sender-any` |
+//! | `PALLAS_EAGER_THRESHOLD` | `eager_threshold` | bytes |
+//! | `PALLAS_EP_RING_CAPACITY` | `ep_ring_capacity` | power of two ≥ 2 |
+//! | `PALLAS_STREAM_SHARE_ENDPOINTS` | `stream_share_endpoints` | `1`/`0`, `true`/`false`, `on`/`off` |
+//! | `PALLAS_ENQUEUE_MODE` | `enqueue_mode` | `hostfunc` \| `progress-thread` |
+//! | `PALLAS_ENQUEUE_LANES` | `enqueue_lanes` | integer ≥ 1 |
+//! | `PALLAS_HOSTFUNC_SWITCH_NS` | `hostfunc_switch_ns` | nanoseconds |
+//! | `PALLAS_WIRE_LATENCY_NS` | `wire_latency_ns` | nanoseconds |
+//! | `PALLAS_SPIN_BEFORE_YIELD` | `spin_before_yield` | iterations |
+//! | `PALLAS_RMA_ACK_BATCH` | `rma_ack_batch` | `1..=1024` \| `adaptive` |
+//! | `PALLAS_PROGRESS_OFFLOAD` | `progress_offload` | `off` \| `steal` \| `dedicated` \| `dedicated:<ns>` |
+//!
+//! `PALLAS_PROGRESS_OFFLOAD` is additionally read (leniently — malformed
+//! values degrade to `off`, since `Config::default()` cannot fail) to seed
+//! the *default* offload policy; see [`Config::progress_offload`].
+//!
+//! Harness and test knobs, documented here for completeness but read by
+//! their own subsystems rather than by `Config`:
+//!
+//! | Variable | Read by | Effect |
+//! |---|---|---|
+//! | `PALLAS_BENCH_SMOKE` | `harness::profile_from_env` | `1`/`true` = seconds-scale CI sizing |
+//! | `PALLAS_BENCH_SEED` | `harness::profile_from_env` | deterministic bench seed (default 42) |
+//! | `PALLAS_BENCH_RANKS` | `harness::profile_from_env` | simulated rank count (default 2) |
+//! | `PALLAS_BENCH_SHA` | `harness::report::git_sha` | commit id override for reports |
+//! | `PALLAS_PROP_ITERS` | `tests/properties.rs` | property-test iteration count |
+//! | `PALLAS_PROP_REPRO_DIR` | `tests/properties.rs` | where failing cases are dumped |
+//! | `PALLAS_API_BLESS` | `tests/api_snapshot.rs` | `1` = rewrite `api/public_api.txt` |
 
 use crate::error::{MpiErr, Result};
 
@@ -270,16 +315,60 @@ pub struct Config {
     pub progress_offload: ProgressOffload,
 }
 
+/// Parse one environment knob through its type's `FromStr`. `None` when
+/// the variable is unset or blank; a typed [`MpiErr::Arg`] *naming the
+/// variable* when the value is present but malformed. This is the single
+/// parse path every `PALLAS_*` config knob goes through — the env surface
+/// can never accept a value the programmatic API would reject.
+fn env_knob<T>(get: &dyn Fn(&str) -> Option<String>, var: &str) -> Result<Option<T>>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    match get(var) {
+        None => Ok(None),
+        Some(raw) => {
+            let s = raw.trim();
+            if s.is_empty() {
+                return Ok(None);
+            }
+            s.parse::<T>()
+                .map(Some)
+                .map_err(|e| MpiErr::Arg(format!("{var}: invalid value '{s}': {e}")))
+        }
+    }
+}
+
+/// Boolean env knob: accepts `1`/`0`, `true`/`false`, `on`/`off`,
+/// `yes`/`no` (case-insensitive); anything else is a typed error naming
+/// the variable.
+fn env_flag(get: &dyn Fn(&str) -> Option<String>, var: &str) -> Result<Option<bool>> {
+    match get(var) {
+        None => Ok(None),
+        Some(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+            "" => Ok(None),
+            "1" | "true" | "on" | "yes" => Ok(Some(true)),
+            "0" | "false" | "off" | "no" => Ok(Some(false)),
+            other => Err(MpiErr::Arg(format!(
+                "{var}: invalid boolean '{other}' (use 1/0, true/false, on/off)"
+            ))),
+        },
+    }
+}
+
 /// The process-wide default offload policy: `PALLAS_PROGRESS_OFFLOAD`
 /// if set and parseable, else [`ProgressOffload::Off`]. Cached — the
-/// environment is read once.
+/// environment is read once. Goes through the same [`env_knob`] parser
+/// as [`ConfigBuilder::env_overrides`], but leniently: `Config::default()`
+/// cannot fail, so a malformed value degrades to `Off` here, while
+/// [`Config::from_env`] surfaces the same malformation as a typed error.
 fn offload_env_default() -> ProgressOffload {
     static CACHE: std::sync::OnceLock<ProgressOffload> = std::sync::OnceLock::new();
     *CACHE.get_or_init(|| {
-        std::env::var("PALLAS_PROGRESS_OFFLOAD")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(ProgressOffload::Off)
+        match env_knob::<ProgressOffload>(&|v| std::env::var(v).ok(), "PALLAS_PROGRESS_OFFLOAD") {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => ProgressOffload::Off,
+        }
     })
 }
 
@@ -382,6 +471,17 @@ impl Config {
             hash_policy: HashPolicy::PerComm,
             ..Default::default()
         }
+    }
+
+    /// The defaults with every recognized `PALLAS_*` environment override
+    /// applied, validated. This is the one call a binary needs to honour
+    /// the whole knob table in the module docs: equivalent to
+    /// `Config::builder().env_overrides()?.build()`. A malformed variable
+    /// is a typed [`MpiErr::Arg`] naming it; an invalid *combination*
+    /// (e.g. pools exceeding `PALLAS_MAX_ENDPOINTS`) fails
+    /// [`Config::validate`] exactly as the programmatic builder would.
+    pub fn from_env() -> Result<Config> {
+        Config::builder().env_overrides()?.build()
     }
 
     /// Preset for benchmark-harness workloads driving `n` explicit GPU
@@ -487,6 +587,70 @@ impl ConfigBuilder {
     pub fn progress_offload(mut self, policy: ProgressOffload) -> Self {
         self.cfg.progress_offload = policy;
         self
+    }
+
+    /// Apply every recognized `PALLAS_*` environment override (see the
+    /// module-level knob table) on top of the builder's current state.
+    /// Composes with presets and explicit setters — later wins, so
+    /// `builder().env_overrides()?.cs_mode(..)` pins the mode regardless
+    /// of the environment, while `from_config(preset).env_overrides()?`
+    /// lets the environment tweak a preset.
+    pub fn env_overrides(self) -> Result<Self> {
+        self.overrides_from(&|var| std::env::var(var).ok())
+    }
+
+    /// [`ConfigBuilder::env_overrides`] with an injected lookup instead of
+    /// the process environment — the testable core (process-env mutation
+    /// is racy under the parallel test runner) and the hook for embedders
+    /// with their own configuration sources.
+    pub fn overrides_from(mut self, get: &dyn Fn(&str) -> Option<String>) -> Result<Self> {
+        let c = &mut self.cfg;
+        if let Some(v) = env_knob(get, "PALLAS_IMPLICIT_POOL")? {
+            c.implicit_pool = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_EXPLICIT_POOL")? {
+            c.explicit_pool = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_MAX_ENDPOINTS")? {
+            c.max_endpoints = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_CS_MODE")? {
+            c.cs_mode = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_HASH_POLICY")? {
+            c.hash_policy = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_EAGER_THRESHOLD")? {
+            c.eager_threshold = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_EP_RING_CAPACITY")? {
+            c.ep_ring_capacity = v;
+        }
+        if let Some(v) = env_flag(get, "PALLAS_STREAM_SHARE_ENDPOINTS")? {
+            c.stream_share_endpoints = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_ENQUEUE_MODE")? {
+            c.enqueue_mode = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_ENQUEUE_LANES")? {
+            c.enqueue_lanes = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_HOSTFUNC_SWITCH_NS")? {
+            c.hostfunc_switch_ns = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_WIRE_LATENCY_NS")? {
+            c.wire_latency_ns = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_SPIN_BEFORE_YIELD")? {
+            c.spin_before_yield = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_RMA_ACK_BATCH")? {
+            c.rma_ack_batch = v;
+        }
+        if let Some(v) = env_knob(get, "PALLAS_PROGRESS_OFFLOAD")? {
+            c.progress_offload = v;
+        }
+        Ok(self)
     }
 
     /// Validate and return the configuration.
@@ -638,6 +802,155 @@ mod tests {
         };
         zero.validate().unwrap();
         assert!(Config::builder().progress_offload(ProgressOffload::Steal).build().is_ok());
+    }
+
+    /// Injected-lookup env for the override tests: process-env mutation is
+    /// racy under the parallel test runner, so the testable core takes a
+    /// closure.
+    fn fake_env(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |var| pairs.iter().find(|(k, _)| *k == var).map(|(_, v)| v.to_string())
+    }
+
+    #[test]
+    fn env_overrides_apply_every_knob() {
+        let env = fake_env(&[
+            ("PALLAS_IMPLICIT_POOL", "4"),
+            ("PALLAS_EXPLICIT_POOL", "8"),
+            ("PALLAS_MAX_ENDPOINTS", "32"),
+            ("PALLAS_CS_MODE", "stream"),
+            ("PALLAS_HASH_POLICY", "sender-any"),
+            ("PALLAS_EAGER_THRESHOLD", "1024"),
+            ("PALLAS_EP_RING_CAPACITY", "256"),
+            ("PALLAS_STREAM_SHARE_ENDPOINTS", "1"),
+            ("PALLAS_ENQUEUE_MODE", "progress-thread"),
+            ("PALLAS_ENQUEUE_LANES", "2"),
+            ("PALLAS_HOSTFUNC_SWITCH_NS", "500"),
+            ("PALLAS_WIRE_LATENCY_NS", "250"),
+            ("PALLAS_SPIN_BEFORE_YIELD", "16"),
+            ("PALLAS_RMA_ACK_BATCH", "adaptive"),
+            ("PALLAS_PROGRESS_OFFLOAD", "dedicated:5000"),
+        ]);
+        let c = Config::builder().overrides_from(&env).unwrap().build().unwrap();
+        assert_eq!(c.implicit_pool, 4);
+        assert_eq!(c.explicit_pool, 8);
+        assert_eq!(c.max_endpoints, 32);
+        assert_eq!(c.cs_mode, CsMode::LockFree);
+        assert_eq!(c.hash_policy, HashPolicy::SenderAnyRecvZero);
+        assert_eq!(c.eager_threshold, 1024);
+        assert_eq!(c.ep_ring_capacity, 256);
+        assert!(c.stream_share_endpoints);
+        assert_eq!(c.enqueue_mode, EnqueueMode::ProgressThread);
+        assert_eq!(c.enqueue_lanes, 2);
+        assert_eq!(c.hostfunc_switch_ns, 500);
+        assert_eq!(c.wire_latency_ns, 250);
+        assert_eq!(c.spin_before_yield, 16);
+        assert_eq!(c.rma_ack_batch, AckBatch::Adaptive);
+        assert_eq!(c.progress_offload, ProgressOffload::Dedicated { idle_bound_ns: 5000 });
+    }
+
+    #[test]
+    fn env_overrides_unset_and_blank_keep_defaults() {
+        let d = Config::default();
+        let c = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_EAGER_THRESHOLD", "  ")]))
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(c.eager_threshold, d.eager_threshold);
+        assert_eq!(c.cs_mode, d.cs_mode);
+    }
+
+    #[test]
+    fn env_override_errors_name_the_variable() {
+        let err = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_ENQUEUE_LANES", "many")]))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("PALLAS_ENQUEUE_LANES"), "error must name the variable: {msg}");
+        assert!(msg.contains("many"), "error must echo the bad value: {msg}");
+
+        let err = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_CS_MODE", "chaotic")]))
+            .unwrap_err();
+        assert!(format!("{err}").contains("PALLAS_CS_MODE"));
+
+        let err = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_STREAM_SHARE_ENDPOINTS", "maybe")]))
+            .unwrap_err();
+        assert!(format!("{err}").contains("PALLAS_STREAM_SHARE_ENDPOINTS"));
+    }
+
+    #[test]
+    fn env_overrides_still_flow_through_validate() {
+        // The values parse individually but violate a cross-knob
+        // invariant — the same validate() path as the programmatic API.
+        let err = Config::builder()
+            .overrides_from(&fake_env(&[
+                ("PALLAS_IMPLICIT_POOL", "60"),
+                ("PALLAS_EXPLICIT_POOL", "60"),
+            ]))
+            .unwrap()
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, MpiErr::NoEndpoints(_)));
+
+        let err = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_EP_RING_CAPACITY", "1000")]))
+            .unwrap()
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, MpiErr::Arg(_)));
+    }
+
+    #[test]
+    fn env_overrides_compose_with_setters_and_presets() {
+        // Setter after overrides wins.
+        let c = Config::builder()
+            .overrides_from(&fake_env(&[("PALLAS_CS_MODE", "global")]))
+            .unwrap()
+            .cs_mode(CsMode::PerVci)
+            .build()
+            .unwrap();
+        assert_eq!(c.cs_mode, CsMode::PerVci);
+
+        // Overrides tweak a preset without clobbering untouched fields.
+        let c = ConfigBuilder::from_config(Config::bench_streams(16))
+            .overrides_from(&fake_env(&[("PALLAS_SPIN_BEFORE_YIELD", "8")]))
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(c.explicit_pool, 16);
+        assert_eq!(c.spin_before_yield, 8);
+    }
+
+    #[test]
+    fn env_flag_accepts_the_documented_spellings() {
+        for (s, want) in [
+            ("1", true),
+            ("true", true),
+            ("on", true),
+            ("YES", true),
+            ("0", false),
+            ("false", false),
+            ("OFF", false),
+            ("no", false),
+        ] {
+            let got = env_flag(&fake_env(&[("V", s)]), "V").unwrap();
+            assert_eq!(got, Some(want), "spelling {s:?}");
+        }
+        assert_eq!(env_flag(&fake_env(&[]), "V").unwrap(), None);
+    }
+
+    #[test]
+    fn from_env_without_overrides_matches_defaults() {
+        // In the ordinary test environment no PALLAS_* config knobs are
+        // set, so from_env() must agree with Default (whose offload field
+        // already honours PALLAS_PROGRESS_OFFLOAD via the same parser).
+        let c = Config::from_env().unwrap();
+        let d = Config::default();
+        assert_eq!(c.implicit_pool, d.implicit_pool);
+        assert_eq!(c.cs_mode, d.cs_mode);
+        assert_eq!(c.rma_ack_batch, d.rma_ack_batch);
     }
 
     #[test]

@@ -115,6 +115,8 @@ fn into_inner_or_internal<T>(m: Mutex<T>, workload: &str, what: &str) -> Result<
 /// Run the Figure-3 microbenchmark live: `threads` thread pairs exchange
 /// `msgs` messages of `size` bytes each, windowed `window` deep
 /// (MPI_Isend/MPI_Irecv + waitall, as in the paper's figure caption).
+/// The pairwise 2-rank shape every baseline number is recorded at;
+/// [`msgrate_live_ranks`] generalizes the topology.
 pub fn msgrate_live(
     mode: MsgrateMode,
     threads: usize,
@@ -122,8 +124,32 @@ pub fn msgrate_live(
     window: usize,
     size: usize,
 ) -> Result<MsgrateResult> {
+    msgrate_live_ranks(mode, 2, threads, msgs, window, size)
+}
+
+/// [`msgrate_live`] over the rank axis: `ranks` processes (must be
+/// even) paired sender-to-receiver — rank `r < ranks/2` drives its
+/// `threads` sender threads at rank `r + ranks/2`, so the fabric
+/// carries `ranks/2` concurrent pairwise flows instead of one. The
+/// aggregate rate counts every pair's messages; `ns_per_msg` stays
+/// per-pair-thread so the calibration constant is comparable across
+/// rank counts.
+pub fn msgrate_live_ranks(
+    mode: MsgrateMode,
+    ranks: usize,
+    threads: usize,
+    msgs: u64,
+    window: usize,
+    size: usize,
+) -> Result<MsgrateResult> {
+    if ranks < 2 || ranks % 2 != 0 {
+        return Err(MpiErr::Arg(format!(
+            "msgrate pairwise topology needs an even rank count >= 2, got {ranks}"
+        )));
+    }
+    let half = (ranks / 2) as u32;
     let cfg = mode.config(threads);
-    let world = World::builder().ranks(2).config(cfg).build()?;
+    let world = World::builder().ranks(ranks).config(cfg).build()?;
     let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
     let waits_total = AtomicU64::new(0);
 
@@ -146,19 +172,24 @@ pub fn msgrate_live(
             }
         }
         // Setup traffic (dups, stream-comm collectives) is not part of
-        // the measurement: zero the endpoint counters on both ranks.
+        // the measurement: zero the endpoint counters on all ranks.
         reset_ep_stats(p);
         p.barrier(p.world_comm())?;
+
+        let sending = p.rank() < half;
+        let peer = if sending { p.rank() + half } else { p.rank() - half };
 
         // --- timed phase ---
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for (i, c) in comms.iter().enumerate() {
                 let p = p.clone();
-                s.spawn(move || thread_body(&p, c, i as i32, msgs, window, size));
+                s.spawn(move || {
+                    thread_body_pair(&p, c, peer, sending, i as i32, msgs, window, size)
+                });
             }
         });
-        // Local threads done; sync both sides so the clock covers full
+        // Local threads done; sync all ranks so the clock covers full
         // delivery.
         p.barrier(p.world_comm())?;
         let dt = t0.elapsed();
@@ -177,7 +208,7 @@ pub fn msgrate_live(
 
     let elapsed = into_inner_or_internal(elapsed_slot, "msgrate/live", "elapsed slot")?
         .ok_or_else(|| MpiErr::Internal("no timing recorded".into()))?;
-    let total = threads as u64 * msgs;
+    let total = half as u64 * threads as u64 * msgs;
     let rate = total as f64 / elapsed.as_secs_f64();
     Ok(MsgrateResult {
         mode: mode.as_str(),
@@ -329,14 +360,32 @@ pub fn msgrate_live_thread_mapped(
 }
 
 fn thread_body(p: &Proc, c: &Comm, tag: i32, msgs: u64, window: usize, size: usize) {
-    if p.rank() == 0 {
+    let (peer, sending) = if p.rank() == 0 { (1, true) } else { (0, false) };
+    thread_body_pair(p, c, peer, sending, tag, msgs, window, size)
+}
+
+/// One thread's windowed isend/irecv loop against a fixed `peer` —
+/// the [`thread_body`] traffic generalized over the pairwise rank
+/// topology [`msgrate_live_ranks`] builds.
+#[allow(clippy::too_many_arguments)]
+fn thread_body_pair(
+    p: &Proc,
+    c: &Comm,
+    peer: u32,
+    sending: bool,
+    tag: i32,
+    msgs: u64,
+    window: usize,
+    size: usize,
+) {
+    if sending {
         let buf = vec![0u8; size];
         let mut reqs = Vec::with_capacity(window);
         let mut sent = 0u64;
         while sent < msgs {
             let batch = window.min((msgs - sent) as usize);
             for _ in 0..batch {
-                reqs.push(p.isend(&buf, 1, tag, c).expect("isend"));
+                reqs.push(p.isend(&buf, peer, tag, c).expect("isend"));
             }
             for r in reqs.drain(..) {
                 p.wait(r).expect("wait send");
@@ -350,7 +399,7 @@ fn thread_body(p: &Proc, c: &Comm, tag: i32, msgs: u64, window: usize, size: usi
             let batch = window.min((msgs - done) as usize);
             let mut reqs = Vec::with_capacity(batch);
             for b in bufs.iter_mut().take(batch) {
-                reqs.push(p.irecv(b, 0, tag, c).expect("irecv"));
+                reqs.push(p.irecv(b, peer as i32, tag, c).expect("irecv"));
             }
             for r in reqs {
                 p.wait(r).expect("wait recv");
@@ -587,7 +636,7 @@ pub fn enqueue_pipeline(
                 }
                 // synchronize_enqueue also surfaces any failure recorded
                 // on the enqueue path (the ops no longer panic in-thread).
-                p.synchronize_enqueue(&comm)?;
+                p.enqueue_gate(&comm)?.wait(p)?;
                 crate::gpu::stream::busy_wait_ns(sync_cost_ns);
             }
         }
@@ -624,6 +673,19 @@ mod tests {
             let r = msgrate_live(mode, 2, 200, 16, 8).unwrap();
             assert_eq!(r.total_msgs, 400);
             assert!(r.rate > 0.0, "{}: rate must be positive", r.mode);
+        }
+    }
+
+    #[test]
+    fn msgrate_rank_axis_pairs_and_validates() {
+        // 4 ranks = two concurrent sender->receiver pairs: double the
+        // messages of the 2-rank shape at the same thread count.
+        let r = msgrate_live_ranks(MsgrateMode::PerVci, 4, 2, 100, 16, 8).unwrap();
+        assert_eq!(r.total_msgs, 400, "2 pairs x 2 threads x 100 msgs");
+        assert!(r.rate > 0.0);
+        for bad in [0usize, 1, 3, 5] {
+            let e = msgrate_live_ranks(MsgrateMode::PerVci, bad, 1, 10, 4, 8).unwrap_err();
+            assert!(matches!(e, MpiErr::Arg(_)), "ranks={bad} must be refused");
         }
     }
 
@@ -692,7 +754,7 @@ pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
             let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
             let t0 = Instant::now();
             p.send_enqueue(&bytes, 1, 0, &stream_comm)?;
-            p.synchronize_enqueue(&stream_comm)?;
+            p.enqueue_gate(&stream_comm)?.wait(p)?;
             println!("rank 0: sent {n} floats via MPIX_Send_enqueue in {:?}", t0.elapsed());
         } else {
             let d_x = dev.alloc(n * 4);
@@ -711,7 +773,7 @@ pub fn run_saxpy_listing4(n: usize, artifacts_dir: &str) -> Result<()> {
             unsafe { dev.memcpy_d2h_async(&stream, out.as_mut_ptr(), out.len(), d_y)? };
             // One synchronize covers memcpys + MPI + kernel — the point of
             // the enqueue APIs (and surfaces any enqueue-path failure).
-            p.synchronize_enqueue(&stream_comm)?;
+            p.enqueue_gate(&stream_comm)?.wait(p)?;
             let dt = t0.elapsed();
             let expect = A_VAL * X_VAL + Y_VAL;
             let mut max_err = 0f32;

@@ -6,6 +6,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::pad::CachePadded;
+
 /// A monotonically increasing operation counter with a start time.
 pub struct RateCounter {
     count: AtomicU64,
@@ -42,16 +44,22 @@ impl Default for RateCounter {
     }
 }
 
-/// An instantaneous level gauge (e.g. queue depth), lock-free.
+/// An instantaneous level gauge (e.g. queue depth), lock-free. The two
+/// words are cache-line padded: `inc` writes both from producer threads
+/// while `dec`/`get` run on consumers, and gauges sit in arrays (one per
+/// lane), so unpadded neighbours false-share under a thread sweep.
 pub struct Gauge {
-    level: AtomicU64,
+    level: CachePadded<AtomicU64>,
     /// High-water mark observed across the gauge's lifetime.
-    peak: AtomicU64,
+    peak: CachePadded<AtomicU64>,
 }
 
 impl Gauge {
     pub fn new() -> Self {
-        Gauge { level: AtomicU64::new(0), peak: AtomicU64::new(0) }
+        Gauge {
+            level: CachePadded::new(AtomicU64::new(0)),
+            peak: CachePadded::new(AtomicU64::new(0)),
+        }
     }
 
     pub fn inc(&self) {

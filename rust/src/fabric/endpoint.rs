@@ -21,24 +21,33 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use super::addr::EpAddr;
-use super::queue::{MpscQueue, Pop};
+use super::queue::{MpscQueue, Pop, WakeHub};
 use super::wire::{Packet, RMA_CTX_BIT};
+use crate::pad::CachePadded;
 
 /// Counters exported for metrics / tests.
+///
+/// Every counter sits on its own cache line ([`CachePadded`]): these are
+/// the hottest shared words in the runtime — `deliver` bumps three of
+/// them per packet from producer threads while the owner bumps others —
+/// and packing them into two lines made 16-thread hot-window sweeps pay
+/// a false-sharing ping-pong on every message. The wrapper derefs to the
+/// inner `AtomicU64`, so call sites are unchanged.
 #[derive(Debug, Default)]
 pub struct EpStats {
-    pub tx_packets: AtomicU64,
-    pub rx_packets: AtomicU64,
-    pub tx_bytes: AtomicU64,
-    pub rx_bytes: AtomicU64,
-    pub backpressure_events: AtomicU64,
+    pub tx_packets: CachePadded<AtomicU64>,
+    pub rx_packets: CachePadded<AtomicU64>,
+    pub tx_bytes: CachePadded<AtomicU64>,
+    pub rx_bytes: CachePadded<AtomicU64>,
+    pub backpressure_events: CachePadded<AtomicU64>,
     /// Inbound packets whose envelope carries [`RMA_CTX_BIT`] — one-sided
     /// data ops, their responses, and the passive-target lock protocol.
     /// Lets tests and the `rma/*` scenarios attribute window traffic to an
     /// endpoint even when the packets carry no payload (lock grants).
-    pub rx_rma_packets: AtomicU64,
+    pub rx_rma_packets: CachePadded<AtomicU64>,
     /// *Contended* mutex acquisitions attributed to this endpoint's VCI: a
     /// `try_lock` on the communication path failed and the caller had to
     /// block. Distinct from the thread-local lock-ops tally (which counts
@@ -46,23 +55,23 @@ pub struct EpStats {
     /// uncontended locks on sharded state, but it must never *wait* — the
     /// `msgrate/thread-mapped` scenario gates on this reading 0 across the
     /// explicit pool.
-    pub lock_waits: AtomicU64,
+    pub lock_waits: CachePadded<AtomicU64>,
     /// Outbound small puts that shipped inside an aggregated `PUT_AGG`
     /// packet instead of as loose `PUT`s (message aggregation on the
     /// split-phase `rput` path) — attributed to the issuing VCI's
     /// endpoint, so the `rma/flush` gate can assert aggregation engaged.
-    pub tx_aggregated_ops: AtomicU64,
+    pub tx_aggregated_ops: CachePadded<AtomicU64>,
     /// Adaptive ack-policy mode switches decided by this endpoint's
     /// window registrations (target side; 0 under a fixed policy).
-    pub ack_mode_switches: AtomicU64,
+    pub ack_mode_switches: CachePadded<AtomicU64>,
     /// Packets popped from this endpoint by the progress offload (a
     /// drainer other than the owning rank's progress engine). 0 with
     /// `progress_offload = Off`.
-    pub offload_polls: AtomicU64,
+    pub offload_polls: CachePadded<AtomicU64>,
     /// Times the progress offload acquired this endpoint's drain
     /// ownership because the owner's last progress pass was older than
     /// the configured idle bound.
-    pub offload_takeovers: AtomicU64,
+    pub offload_takeovers: CachePadded<AtomicU64>,
 }
 
 /// Point-in-time copy of an endpoint's counters — the form benchmark
@@ -275,6 +284,10 @@ pub struct Endpoint {
     /// path pays one relaxed load — not a mutex — while the stash is
     /// empty (always, when the offload is off).
     stash_occupancy: std::sync::atomic::AtomicUsize,
+    /// Batched waiter wakeups for deep-idle consumers: `deliver` rings it
+    /// only on the ring's empty→non-empty edge, so one drain pass costs
+    /// the producers one notification per route — not one per packet.
+    wake: WakeHub,
 }
 
 impl Endpoint {
@@ -288,6 +301,7 @@ impl Endpoint {
             last_owner_poll_ns: AtomicU64::new(0),
             stash: Mutex::new(VecDeque::new()),
             stash_occupancy: std::sync::atomic::AtomicUsize::new(0),
+            wake: WakeHub::new(),
         }
     }
 
@@ -305,12 +319,21 @@ impl Endpoint {
     pub fn deliver(&self, packet: Packet) -> Result<(), Packet> {
         let bytes = packet.kind.payload_len() as u64;
         let is_rma = packet.env.ctx_id & RMA_CTX_BIT != 0;
+        let was_empty = self.inbound.is_empty_approx();
         match self.inbound.push_bounded(packet, self.ring_capacity) {
             Ok(()) => {
                 self.stats.rx_packets.fetch_add(1, Ordering::Relaxed);
                 self.stats.rx_bytes.fetch_add(bytes, Ordering::Relaxed);
                 if is_rma {
                     self.stats.rx_rma_packets.fetch_add(1, Ordering::Relaxed);
+                }
+                // Edge-triggered: only the packet that makes the ring
+                // non-empty rings the hub. A burst into a backlogged ring
+                // is covered by the consumer's own drain loop (it never
+                // parks while its last poll produced work), so batching
+                // wakeups here cannot lose one.
+                if was_empty {
+                    self.wake.notify();
                 }
                 Ok(())
             }
@@ -408,6 +431,21 @@ impl Endpoint {
     /// Approximate inbound occupancy.
     pub fn inbound_len(&self) -> usize {
         self.inbound.len_approx()
+    }
+
+    /// Current wakeup epoch of this endpoint's inbound ring — the token a
+    /// deep-idle waiter snapshots *before* its final empty check, then
+    /// passes to [`Endpoint::wait_inbound`].
+    pub fn inbound_epoch(&self) -> u64 {
+        self.wake.epoch()
+    }
+
+    /// Park until the inbound ring's wakeup epoch advances past `seen`
+    /// (a delivery hit an empty ring) or `timeout` elapses. Returns true
+    /// if woken by a delivery. Used only by the deep-idle tail of the
+    /// shared wait engine — hot paths never block here.
+    pub fn wait_inbound(&self, seen: u64, timeout: Duration) -> bool {
+        self.wake.wait_past(seen, timeout)
     }
 }
 

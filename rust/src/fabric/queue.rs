@@ -15,7 +15,9 @@
 
 use std::cell::UnsafeCell;
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 struct Node<T> {
     next: AtomicPtr<Node<T>>,
@@ -117,6 +119,78 @@ impl<T> Default for MpscQueue<T> {
     }
 }
 
+/// Batched waiter wakeups for one route (endpoint inbound ring).
+///
+/// Producers call [`WakeHub::notify`] — one atomic increment, and a
+/// condvar broadcast *only when someone is parked*. Consumers snapshot
+/// [`WakeHub::epoch`], re-check their condition, then park in
+/// [`WakeHub::wait_past`]; the epoch makes the pair lost-wakeup-free
+/// without the producer taking the mutex on the hot path. The endpoint
+/// rings it only on the empty→non-empty edge of its inbound ring, so a
+/// whole drain pass costs producers one notification per route rather
+/// than one per packet.
+#[derive(Debug, Default)]
+pub struct WakeHub {
+    /// Bumped on every notify; a waiter that saw epoch `e` wakes once the
+    /// epoch moves past `e`.
+    epoch: AtomicU64,
+    /// Parked-consumer count: producers skip the mutex entirely while
+    /// this is 0 (the common case — waits are deep-idle only).
+    waiters: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WakeHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current wakeup epoch; snapshot *before* the final emptiness check
+    /// that precedes a [`WakeHub::wait_past`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Producer side: advance the epoch and wake parked consumers, if
+    /// any. Wait-free when nobody is parked.
+    pub fn notify(&self) {
+        self.epoch.fetch_add(1, Ordering::Release);
+        if self.waiters.load(Ordering::Acquire) > 0 {
+            // Take the lock so a consumer between its epoch re-check and
+            // its park cannot miss the broadcast.
+            let _g = self.lock.lock().unwrap_or_else(|e| e.into_inner());
+            self.cv.notify_all();
+        }
+    }
+
+    /// Consumer side: park until the epoch moves past `seen` or `timeout`
+    /// elapses. Returns true if the epoch advanced (a notify landed),
+    /// false on timeout. Registers as a waiter *before* re-checking the
+    /// epoch under the lock, so a notify racing the park is never lost.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> bool {
+        self.waiters.fetch_add(1, Ordering::AcqRel);
+        let mut guard = self.lock.lock().unwrap_or_else(|e| e.into_inner());
+        let deadline = std::time::Instant::now() + timeout;
+        let mut woken = self.epoch.load(Ordering::Acquire) != seen;
+        while !woken {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _res) = self
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            guard = g;
+            woken = self.epoch.load(Ordering::Acquire) != seen;
+        }
+        drop(guard);
+        self.waiters.fetch_sub(1, Ordering::AcqRel);
+        woken
+    }
+}
+
 impl<T> Drop for MpscQueue<T> {
     fn drop(&mut self) {
         // Drain remaining nodes, then free the stub.
@@ -209,6 +283,34 @@ mod tests {
         }
         assert!(seen.iter().all(|&c| c == PER));
         assert_eq!(q.pop(), Pop::Empty);
+    }
+
+    #[test]
+    fn wakehub_notify_wakes_parked_waiter() {
+        let hub = Arc::new(WakeHub::new());
+        let seen = hub.epoch();
+        let h2 = hub.clone();
+        let t = thread::spawn(move || h2.wait_past(seen, Duration::from_secs(5)));
+        // Give the waiter time to park, then ring.
+        thread::sleep(Duration::from_millis(20));
+        hub.notify();
+        assert!(t.join().unwrap(), "waiter must be woken by the notify");
+    }
+
+    #[test]
+    fn wakehub_wait_times_out_without_notify() {
+        let hub = WakeHub::new();
+        let seen = hub.epoch();
+        assert!(!hub.wait_past(seen, Duration::from_millis(10)), "no notify: must time out");
+    }
+
+    #[test]
+    fn wakehub_stale_snapshot_returns_immediately() {
+        // A notify between the snapshot and the wait must not be lost.
+        let hub = WakeHub::new();
+        let seen = hub.epoch();
+        hub.notify();
+        assert!(hub.wait_past(seen, Duration::from_secs(5)), "stale epoch must not park");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! binding path), stream-comm alltoall, the GPU
 //! enqueue pipeline and its lane sweep, one-sided RMA latency,
 //! message-rate scaling, passive-target (lock/unlock) contention and
-//! deferred-completion flush pipelining, partitioned pt2pt scaling and
+//! deferred-completion flush pipelining, the service-style traffic tier
+//! (tail latency, NACK/abort rates, the scaling knee), partitioned
+//! pt2pt scaling and
 //! lane-fired triggers, and the design ablations — is a named struct implementing
 //! [`Scenario`], with warmup/measure phases, deterministic seeding and
 //! p50/p99/mean + rate aggregation.
@@ -15,6 +17,8 @@
 //!
 //! * [`scenario`] — the [`Scenario`] trait, sizing [`Profile`]s and the
 //!   registry's scenario implementations;
+//! * [`traffic`] — the service-style traffic tier: contention tiers,
+//!   reservoir-sampled tails, NACK/abort rates, the knee replay;
 //! * [`stats`] — summaries, gate-direction metrics, deterministic RNG;
 //! * [`report`] — the stable `pallas-bench/v1` JSON schema + emitter;
 //! * [`baseline`] — JSON parsing and the threshold regression gate CI
@@ -28,29 +32,35 @@ pub mod baseline;
 pub mod report;
 pub mod scenario;
 pub mod stats;
+pub mod traffic;
 
 use std::time::Instant;
 
 pub use report::{Report, ScenarioRecord, SCHEMA};
 pub use scenario::{Profile, Scenario, ScenarioResult};
 pub use stats::{Direction, Metric, Summary};
+pub use traffic::{ContentionTier, ReservoirSampler, TrafficService};
 
 use crate::coordinator::driver::MsgrateMode;
 use crate::error::{MpiErr, Result};
 
 /// Sizing profile from the environment — the bench shims' knobs:
 /// `PALLAS_BENCH_SMOKE=1` selects the seconds-scale CI sizing,
-/// `PALLAS_BENCH_SEED=N` overrides the deterministic seed (default 42).
+/// `PALLAS_BENCH_SEED=N` overrides the deterministic seed (default 42),
+/// `PALLAS_BENCH_RANKS=N` sets the simulated rank count for rank-aware
+/// scenarios (default 2 — the pairwise baseline topology).
 pub fn profile_from_env() -> Profile {
     let seed =
         std::env::var("PALLAS_BENCH_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(42);
     let smoke =
         matches!(std::env::var("PALLAS_BENCH_SMOKE").ok().as_deref(), Some("1") | Some("true"));
-    if smoke {
-        Profile::smoke(seed)
-    } else {
-        Profile::full(seed)
-    }
+    let ranks = std::env::var("PALLAS_BENCH_RANKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 2)
+        .unwrap_or(2);
+    let p = if smoke { Profile::smoke(seed) } else { Profile::full(seed) };
+    p.with_ranks(ranks)
 }
 
 /// The scenario registry: an ordered, named collection of benchmark
@@ -78,6 +88,7 @@ impl Registry {
                 Box::new(scenario::RmaMsgRate),
                 Box::new(scenario::RmaPassive),
                 Box::new(scenario::RmaFlush),
+                Box::new(traffic::TrafficService),
                 Box::new(scenario::PartitionedScaling),
                 Box::new(scenario::PartitionedEnqueue),
                 Box::new(scenario::AblationLockOps),
@@ -193,6 +204,7 @@ mod tests {
             "rma/msgrate",
             "rma/passive",
             "rma/flush",
+            "traffic/service",
             "partitioned/scaling",
             "partitioned/enqueue",
         ] {

@@ -21,7 +21,8 @@ use std::time::Instant;
 
 use crate::config::{AckBatch, Config, EnqueueMode, ProgressOffload};
 use crate::coordinator::driver::{
-    enqueue_pipeline, msgrate_live, msgrate_live_thread_mapped, n_to_1_live, MsgrateMode,
+    enqueue_pipeline, msgrate_live, msgrate_live_ranks, msgrate_live_thread_mapped, n_to_1_live,
+    MsgrateMode,
 };
 use crate::error::{MpiErr, Result};
 use crate::harness::stats::{Metric, Rng, Summary};
@@ -34,20 +35,31 @@ use crate::vci::lock::take_lock_ops;
 
 /// Sizing profile for a run: `full` regenerates paper-scale numbers,
 /// `smoke` is the seconds-scale CI profile. The seed drives every
-/// scenario's [`Rng`] so two runs exercise identical payloads.
+/// scenario's [`Rng`] so two runs exercise identical payloads. `ranks`
+/// is the simulated process count for rank-aware scenarios (default 2,
+/// the pairwise topology every baseline number is recorded at);
+/// scenarios that consume it emit `_r{N}`-suffixed metrics when it is
+/// not 2, so the baseline-compared names never change meaning.
 #[derive(Debug, Clone, Copy)]
 pub struct Profile {
     pub smoke: bool,
     pub seed: u64,
+    pub ranks: usize,
 }
 
 impl Profile {
     pub fn full(seed: u64) -> Profile {
-        Profile { smoke: false, seed }
+        Profile { smoke: false, seed, ranks: 2 }
     }
 
     pub fn smoke(seed: u64) -> Profile {
-        Profile { smoke: true, seed }
+        Profile { smoke: true, seed, ranks: 2 }
+    }
+
+    /// Override the simulated rank count (the `--ranks` axis).
+    pub fn with_ranks(mut self, ranks: usize) -> Profile {
+        self.ranks = ranks;
+        self
     }
 
     pub fn name(&self) -> &'static str {
@@ -316,6 +328,23 @@ impl Scenario for MsgRate {
         let live = msgrate_live(self.mode, 2, profile.scale(4_000, 1_000), 64, 8)?;
         metrics.push(Metric::info("live_rate_2_streams_msgs_per_sec", live.rate, "msg/s"));
         metrics.push(Metric::info("live_lock_waits_2_streams", live.lock_waits as f64, "waits"));
+        // The rank axis: `--ranks N` (even, != 2) adds a pairwise
+        // multi-process live point under suffixed names — the
+        // rank x thread x stream grid — which baselines skip.
+        if profile.ranks != 2 && profile.ranks % 2 == 0 {
+            let r = profile.ranks;
+            let multi = msgrate_live_ranks(self.mode, r, 2, profile.scale(2_000, 500), 64, 8)?;
+            metrics.push(Metric::info(
+                format!("live_rate_2_streams_msgs_per_sec_r{r}"),
+                multi.rate,
+                "msg/s",
+            ));
+            metrics.push(Metric::info(
+                format!("live_lock_waits_2_streams_r{r}"),
+                multi.lock_waits as f64,
+                "waits",
+            ));
+        }
         Ok(ScenarioResult { metrics })
     }
 }
@@ -445,27 +474,13 @@ pub struct StreamAlltoall;
 impl StreamAlltoall {
     const RANKS: usize = 4;
     const BLOCK: usize = 1024;
-}
 
-impl Scenario for StreamAlltoall {
-    fn name(&self) -> String {
-        "stream/alltoall".into()
-    }
-
-    fn params(&self) -> Vec<(String, String)> {
-        vec![
-            ("ranks".into(), Self::RANKS.to_string()),
-            ("block_bytes".into(), Self::BLOCK.to_string()),
-        ]
-    }
-
-    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
-        let rounds = profile.scale(300, 60);
-        let warm = rounds / 10 + 1;
+    /// One alltoall world at `ranks` ranks; returns the per-round
+    /// latency summary plus (tx bytes per round, backpressure events).
+    fn rounds_at(ranks: usize, rounds: u64, warm: u64, seed: u64) -> Result<(Summary, f64, f64)> {
         let cfg = Config { implicit_pool: 1, explicit_pool: 1, ..Default::default() };
-        let world = World::builder().ranks(Self::RANKS).config(cfg).build()?;
+        let world = World::builder().ranks(ranks).config(cfg).build()?;
         let samples: Mutex<Vec<f64>> = Mutex::new(Vec::new());
-        let seed = profile.seed;
         world.run(|p| {
             let s = p.stream_create(&Info::null())?;
             let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
@@ -492,20 +507,49 @@ impl Scenario for StreamAlltoall {
         })?;
         let totals = world.fabric().stats_totals();
         let summary = Summary::from_ns(samples.into_inner().unwrap());
+        Ok((
+            summary,
+            totals.tx_bytes as f64 / rounds as f64,
+            totals.backpressure_events as f64,
+        ))
+    }
+}
+
+impl Scenario for StreamAlltoall {
+    fn name(&self) -> String {
+        "stream/alltoall".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("ranks".into(), Self::RANKS.to_string()),
+            ("block_bytes".into(), Self::BLOCK.to_string()),
+        ]
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let rounds = profile.scale(300, 60);
+        let warm = rounds / 10 + 1;
+        let (summary, tx_per_round, backpressure) =
+            Self::rounds_at(Self::RANKS, rounds, warm, profile.seed)?;
         let mut metrics = summary.latency_metrics("alltoall");
         if summary.mean_ns > 0.0 {
             metrics.push(Metric::higher("rounds_per_sec", 1e9 / summary.mean_ns, "op/s"));
         }
-        metrics.push(Metric::info(
-            "fabric_tx_bytes_per_round",
-            totals.tx_bytes as f64 / rounds as f64,
-            "bytes",
-        ));
-        metrics.push(Metric::info(
-            "fabric_backpressure_events",
-            totals.backpressure_events as f64,
-            "events",
-        ));
+        metrics.push(Metric::info("fabric_tx_bytes_per_round", tx_per_round, "bytes"));
+        metrics.push(Metric::info("fabric_backpressure_events", backpressure, "events"));
+        // The rank axis: a `--ranks N` run (N != 2 — the 4-rank default
+        // grid stays the baseline) adds an N-rank exchange under
+        // suffixed names, which baselines skip.
+        if profile.ranks != 2 && profile.ranks != Self::RANKS {
+            let r = profile.ranks;
+            let (s, tx, _) = Self::rounds_at(r, profile.scale(150, 30), warm, profile.seed)?;
+            metrics.push(Metric::info(format!("alltoall_p50_ns_r{r}"), s.p50_ns, "ns"));
+            if s.mean_ns > 0.0 {
+                metrics.push(Metric::info(format!("rounds_per_sec_r{r}"), 1e9 / s.mean_ns, "op/s"));
+            }
+            metrics.push(Metric::info(format!("fabric_tx_bytes_per_round_r{r}"), tx, "bytes"));
+        }
         Ok(ScenarioResult { metrics })
     }
 }
@@ -645,7 +689,7 @@ impl EnqueueLanes {
                 let t0 = Instant::now();
                 for i in 0..lat_ops {
                     p.send_enqueue(&i.to_le_bytes(), 1, 0, c)?;
-                    p.synchronize_enqueue(c)?;
+                    p.enqueue_gate(c)?.wait(p)?;
                 }
                 *lat_slot.lock().unwrap() =
                     Some(t0.elapsed().as_nanos() as f64 / lat_ops as f64);
@@ -667,7 +711,7 @@ impl EnqueueLanes {
                     }
                 }
                 for (_, _, c) in &comms {
-                    p.synchronize_enqueue(c)?;
+                    p.enqueue_gate(c)?.wait(p)?;
                 }
                 let total = (msgs * nstreams as u64) as f64;
                 *rate_slot.lock().unwrap() = Some(total / t0.elapsed().as_secs_f64());
@@ -1112,11 +1156,28 @@ impl RmaPassive {
     /// its own payload buffer — nothing is shared between threads except
     /// the lock being measured.
     fn contention(streams: usize, iters: u64, kind: LockType) -> Result<f64> {
-        let world = World::builder().ranks(2).config(Config::default()).build()?;
-        let rate: Mutex<Option<f64>> = Mutex::new(None);
+        Self::contention_ranks(2, streams, iters, kind)
+    }
+
+    /// [`RmaPassive::contention`] over the rank axis: `ranks - 1` origin
+    /// ranks each drive `streams` threads of lock/op/unlock epochs
+    /// against the last rank's window. Returns the aggregate epochs/sec
+    /// summed over every origin rank.
+    fn contention_ranks(ranks: usize, streams: usize, iters: u64, kind: LockType) -> Result<f64> {
+        if ranks < 2 {
+            return Err(MpiErr::Arg(format!(
+                "passive contention needs >= 2 ranks, got {ranks}"
+            )));
+        }
+        let origins = ranks - 1;
+        let target = (ranks - 1) as u32;
+        let regions = origins * streams;
+        let world = World::builder().ranks(ranks).config(Config::default()).build()?;
+        let rate_sum: Mutex<f64> = Mutex::new(0.0);
         world.run(|p| {
-            let win = p.win_create(vec![0u8; 16 * Self::REGION_STRIDE], p.world_comm())?;
-            if p.rank() == 0 {
+            let win = p.win_create(vec![0u8; regions * Self::REGION_STRIDE], p.world_comm())?;
+            if p.rank() != target {
+                let origin_idx = p.rank() as usize;
                 let t0 = Instant::now();
                 let results: Vec<Result<()>> = std::thread::scope(|s| {
                     let handles: Vec<_> = (0..streams)
@@ -1124,17 +1185,17 @@ impl RmaPassive {
                             let p = p.clone();
                             let win = win.clone();
                             s.spawn(move || -> Result<()> {
-                                let slot = t * Self::REGION_STRIDE;
+                                let slot = (origin_idx * streams + t) * Self::REGION_STRIDE;
                                 let mut payload = [0u8; 32];
                                 for i in 0..iters {
                                     payload.fill(i as u8);
-                                    p.win_lock(&win, 1, kind)?;
+                                    p.win_lock(&win, target, kind)?;
                                     if kind == LockType::Exclusive {
-                                        p.put(&win, 1, slot, &payload)?;
+                                        p.put(&win, target, slot, &payload)?;
                                     } else {
-                                        let _ = p.get(&win, 1, slot, 32)?;
+                                        let _ = p.get(&win, target, slot, 32)?;
                                     }
-                                    p.win_unlock(&win, 1)?;
+                                    p.win_unlock(&win, target)?;
                                 }
                                 Ok(())
                             })
@@ -1149,16 +1210,22 @@ impl RmaPassive {
                     r?;
                 }
                 let total = (streams as u64 * iters) as f64;
-                *rate.lock().unwrap() = Some(total / t0.elapsed().as_secs_f64());
-                p.send(&[1u8], 1, 9, p.world_comm())?;
+                *rate_sum.lock().unwrap() += total / t0.elapsed().as_secs_f64();
+                p.send(&[1u8], target, 9, p.world_comm())?;
             } else {
                 let mut b = [0u8; 1];
-                p.recv(&mut b, 0, 9, p.world_comm())?;
+                for r in 0..origins {
+                    p.recv(&mut b, r as i32, 9, p.world_comm())?;
+                }
             }
             p.win_free(win)?;
             Ok(())
         })?;
-        rate.into_inner().unwrap().ok_or_else(|| MpiErr::Internal("no rate recorded".into()))
+        let rate = rate_sum.into_inner().unwrap();
+        if rate <= 0.0 {
+            return Err(MpiErr::Internal("no rate recorded".into()));
+        }
+        Ok(rate)
     }
 
     /// Nanoseconds of fake compute the busy target spins per round
@@ -1278,6 +1345,18 @@ impl Scenario for RmaPassive {
             ));
         }
         metrics.push(Metric::info("shared_over_exclusive_4", shared4 / excl4, "x"));
+        // The rank axis: a `--ranks N` run (N != 2) adds a multi-origin
+        // contention point — N-1 origin ranks x 4 threads against one
+        // target — under suffixed names, which baselines skip.
+        if profile.ranks != 2 {
+            let r = profile.ranks;
+            let excl = Self::contention_ranks(r, 4, iters, LockType::Exclusive)?;
+            metrics.push(Metric::info(
+                format!("rate_exclusive_4_epochs_per_sec_r{r}"),
+                excl,
+                "op/s",
+            ));
+        }
         // Busy-target probe (ISSUE 8): the same epoch against a target
         // spinning 10 ms of fake compute per round, with and without the
         // dedicated progress offload. Off documents the stall (the grant
@@ -1898,7 +1977,7 @@ impl PartitionedEnqueue {
                     for part in 0..Self::PARTS {
                         p.pready_enqueue(&ps, part, &c)?;
                     }
-                    p.synchronize_enqueue(&c)?;
+                    p.enqueue_gate(&c)?.wait(p)?;
                     p.pwait_send(&ps)?;
                 }
                 *lane_ns.lock().unwrap() = Some(t0.elapsed().as_nanos() as f64);

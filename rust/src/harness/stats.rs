@@ -85,6 +85,7 @@ pub struct Summary {
     pub n: usize,
     pub mean_ns: f64,
     pub p50_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
@@ -102,6 +103,7 @@ impl Summary {
             n,
             mean_ns: samples.iter().sum::<f64>() / n as f64,
             p50_ns: pick(50.0),
+            p95_ns: pick(95.0),
             p99_ns: pick(99.0),
             min_ns: samples[0],
             max_ns: samples[n - 1],
@@ -114,6 +116,7 @@ impl Summary {
     pub fn latency_metrics(&self, prefix: &str) -> Vec<Metric> {
         vec![
             Metric::lower(format!("{prefix}_p50_ns"), self.p50_ns, "ns"),
+            Metric::info(format!("{prefix}_p95_ns"), self.p95_ns, "ns"),
             Metric::info(format!("{prefix}_p99_ns"), self.p99_ns, "ns"),
             Metric::info(format!("{prefix}_mean_ns"), self.mean_ns, "ns"),
             Metric::info(format!("{prefix}_min_ns"), self.min_ns, "ns"),
@@ -147,6 +150,8 @@ mod tests {
         assert_eq!(s.min_ns, 1.0);
         assert_eq!(s.max_ns, 5.0);
         assert_eq!(s.p50_ns, 3.0);
+        assert_eq!(s.p95_ns, 5.0);
+        assert!(s.p95_ns <= s.p99_ns + 1e-9);
         assert!((s.mean_ns - 3.0).abs() < 1e-9);
         let empty = Summary::from_ns(vec![]);
         assert_eq!(empty.n, 0);

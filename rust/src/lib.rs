@@ -70,6 +70,7 @@ pub mod fabric;
 pub mod gpu;
 pub mod harness;
 pub mod mpi;
+pub mod pad;
 #[cfg(feature = "xla_compat")]
 pub mod runtime;
 pub mod sim;

@@ -11,6 +11,20 @@
 //! One `MatchState` lives per VCI: traffic on different VCIs is matched
 //! independently — that is precisely what lets stream communicators
 //! proceed fully in parallel.
+//!
+//! Within a VCI the engine is *sharded* by `(source, tag)` the same way
+//! PR 1 sharded the progress engine and PR 6 sharded `WinRegistry` /
+//! `RmaResults`: arrivals and exact-pattern receives hash straight to one
+//! of [`N_MATCH_SHARDS`] short queues, so a service-style workload where
+//! many tags are in flight stops rescanning one long FIFO per packet.
+//! Wildcard posts (`ANY_SOURCE`/`ANY_TAG`) live on a separate wild list
+//! and are the cross-shard slow path. Every entry carries a monotonic
+//! sequence number from a single per-VCI counter; a match compares the
+//! head candidate of the target shard against the head candidate of the
+//! wild list (for posted receives) or scans all shards for the minimum
+//! sequence (for wildcard probes/receives of unexpected traffic), which
+//! preserves the MPI outcome exactly: first-posted-wins globally, and
+//! FIFO per `(source, tag)`.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -154,12 +168,48 @@ pub struct RdvRecv {
     pub req: Arc<ReqInner>,
 }
 
+/// Number of `(source, tag)` shards per VCI. Power of two; small enough
+/// that the wildcard cross-shard scan stays cheap, large enough that a
+/// service workload with many live tags rarely collides.
+pub const N_MATCH_SHARDS: usize = 8;
+
+/// Shard index for an exact `(source, tag)` pair (Fibonacci-style mixing
+/// so adjacent ranks/tags spread instead of clustering in one shard).
+#[inline]
+fn shard_index(src: i32, tag: i32) -> usize {
+    let h = (src as u32 as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((tag as u32 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    (h >> 32) as usize & (N_MATCH_SHARDS - 1)
+}
+
+/// A posted receive stamped with its global arrival sequence.
+struct SeqPosted {
+    seq: u64,
+    recv: PostedRecv,
+}
+
+/// An unexpected message stamped with its global arrival sequence.
+struct SeqUnexpected {
+    seq: u64,
+    msg: UnexpectedMsg,
+}
+
 /// Per-VCI matching state. All mutation happens under the VCI's
 /// critical-section discipline (or the stream serial context).
 #[derive(Default)]
 pub struct MatchState {
-    posted: VecDeque<PostedRecv>,
-    unexpected: VecDeque<UnexpectedMsg>,
+    /// Exact-`(source, tag)` posted receives, sharded by the pair.
+    posted_shards: [VecDeque<SeqPosted>; N_MATCH_SHARDS],
+    /// Posted receives with `ANY_SOURCE` or `ANY_TAG`: the slow path.
+    posted_wild: VecDeque<SeqPosted>,
+    /// Unexpected arrivals, sharded by the envelope's exact `(source,
+    /// tag)` (envelopes are never wildcarded).
+    unexpected_shards: [VecDeque<SeqUnexpected>; N_MATCH_SHARDS],
+    /// One counter orders posted entries across the shards and the wild
+    /// list (and unexpected entries across shards) so cross-list matches
+    /// can compare global arrival order.
+    next_seq: u64,
     rdv_sends: HashMap<u64, RdvSend>,
     /// Keyed by (sender endpoint, sender-local rdv id): rdv ids are only
     /// unique per sender, so the peer address disambiguates.
@@ -172,56 +222,140 @@ impl MatchState {
         Self::default()
     }
 
+    #[inline]
+    fn next_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// First unexpected index in `shard` matching `pattern`, if any.
+    fn first_unexpected_in(shard: &VecDeque<SeqUnexpected>, pattern: &MatchPattern) -> Option<usize> {
+        shard.iter().position(|m| pattern.matches(&m.msg.env))
+    }
+
     /// Receive path: look for the first unexpected message matching
-    /// `pattern` (FIFO). The caller delivers/handles it.
+    /// `pattern` (FIFO in global arrival order). The caller
+    /// delivers/handles it. Exact patterns hit one shard; wildcarded
+    /// patterns take the cross-shard minimum-sequence scan.
     pub fn take_unexpected(&mut self, pattern: &MatchPattern) -> Option<UnexpectedMsg> {
-        let idx = self.unexpected.iter().position(|m| pattern.matches(&m.env))?;
-        self.unexpected.remove(idx)
+        if pattern.src != ANY_SOURCE && pattern.tag != ANY_TAG {
+            let shard = &mut self.unexpected_shards[shard_index(pattern.src, pattern.tag)];
+            let idx = Self::first_unexpected_in(shard, pattern)?;
+            return shard.remove(idx).map(|e| e.msg);
+        }
+        // Wildcard slow path: the earliest match across every shard.
+        let mut best: Option<(usize, usize, u64)> = None;
+        for (s, shard) in self.unexpected_shards.iter().enumerate() {
+            if let Some(idx) = Self::first_unexpected_in(shard, pattern) {
+                let seq = shard[idx].seq;
+                if best.map_or(true, |(_, _, b)| seq < b) {
+                    best = Some((s, idx, seq));
+                }
+            }
+        }
+        let (s, idx, _) = best?;
+        self.unexpected_shards[s].remove(idx).map(|e| e.msg)
     }
 
     /// Receive path: no unexpected match — park the posted receive.
+    /// Wildcard patterns go to the wild list; exact patterns to their
+    /// `(source, tag)` shard.
     pub fn push_posted(&mut self, recv: PostedRecv) {
-        self.posted.push_back(recv);
+        let seq = self.next_seq();
+        let entry = SeqPosted { seq, recv };
+        if entry.recv.pattern.src == ANY_SOURCE || entry.recv.pattern.tag == ANY_TAG {
+            self.posted_wild.push_back(entry);
+        } else {
+            let s = shard_index(entry.recv.pattern.src, entry.recv.pattern.tag);
+            self.posted_shards[s].push_back(entry);
+        }
     }
 
-    /// Incoming path: find the first posted receive matching `env`,
-    /// *claiming* its request. Cancelled entries are purged lazily.
-    pub fn match_posted(&mut self, env: &Envelope) -> Option<PostedRecv> {
+    /// First live (non-cancelled) match for `env` in `list`, purging
+    /// cancelled entries encountered on the way.
+    fn first_live_posted(list: &mut VecDeque<SeqPosted>, env: &Envelope) -> Option<usize> {
         let mut i = 0;
-        while i < self.posted.len() {
-            let entry = &self.posted[i];
-            if entry.req.state() == CANCELLED {
-                self.posted.remove(i);
+        while i < list.len() {
+            let entry = &list[i];
+            if entry.recv.req.state() == CANCELLED {
+                list.remove(i);
                 continue;
             }
-            if entry.pattern.matches(env) {
-                if entry.req.try_claim() {
-                    return self.posted.remove(i);
-                }
-                // Lost the claim to a concurrent cancel; purge and go on.
-                self.posted.remove(i);
-                continue;
+            if entry.recv.pattern.matches(env) {
+                return Some(i);
             }
             i += 1;
         }
         None
     }
 
-    /// Incoming path: no posted match — park as unexpected.
+    /// Incoming path: find the first posted receive matching `env`,
+    /// *claiming* its request. Cancelled entries are purged lazily. Only
+    /// the envelope's `(source, tag)` shard and the wild list can hold a
+    /// match; the earlier-posted of the two candidates wins, which is the
+    /// global first-posted-wins order.
+    pub fn match_posted(&mut self, env: &Envelope) -> Option<PostedRecv> {
+        let s = shard_index(env.src_rank as i32, env.tag);
+        loop {
+            let exact = Self::first_live_posted(&mut self.posted_shards[s], env)
+                .map(|i| (false, i, self.posted_shards[s][i].seq));
+            let wild = Self::first_live_posted(&mut self.posted_wild, env)
+                .map(|i| (true, i, self.posted_wild[i].seq));
+            let (from_wild, idx, _) = match (exact, wild) {
+                (None, None) => return None,
+                (Some(e), None) => e,
+                (None, Some(w)) => w,
+                (Some(e), Some(w)) => {
+                    if e.2 < w.2 {
+                        e
+                    } else {
+                        w
+                    }
+                }
+            };
+            let list = if from_wild { &mut self.posted_wild } else { &mut self.posted_shards[s] };
+            if list[idx].recv.req.try_claim() {
+                return list.remove(idx).map(|e| e.recv);
+            }
+            // Lost the claim to a concurrent cancel; purge and rescan.
+            list.remove(idx);
+        }
+    }
+
+    /// Incoming path: no posted match — park as unexpected in the
+    /// envelope's `(source, tag)` shard.
     pub fn push_unexpected(&mut self, msg: UnexpectedMsg) {
-        self.unexpected.push_back(msg);
+        let seq = self.next_seq();
+        let s = shard_index(msg.env.src_rank as i32, msg.env.tag);
+        self.unexpected_shards[s].push_back(SeqUnexpected { seq, msg });
     }
 
     /// Probe path: report the first matching unexpected message without
-    /// consuming it (`MPI_Iprobe`).
+    /// consuming it (`MPI_Iprobe`). Same shard routing as
+    /// [`MatchState::take_unexpected`].
     pub fn peek_unexpected(&self, pattern: &MatchPattern) -> Option<crate::mpi::status::Status> {
-        self.unexpected.iter().find(|m| pattern.matches(&m.env)).map(|m| {
+        let peek = |m: &UnexpectedMsg| {
             let count = match &m.kind {
                 UnexpectedKind::Eager(d) => d.len(),
                 UnexpectedKind::Rts { size, .. } => *size,
             };
             crate::mpi::status::Status::new(m.env.src_rank, m.env.tag, count, m.env.src_idx)
-        })
+        };
+        if pattern.src != ANY_SOURCE && pattern.tag != ANY_TAG {
+            let shard = &self.unexpected_shards[shard_index(pattern.src, pattern.tag)];
+            return Self::first_unexpected_in(shard, pattern).map(|i| peek(&shard[i].msg));
+        }
+        let mut best: Option<(&SeqUnexpected, u64)> = None;
+        for shard in &self.unexpected_shards {
+            if let Some(idx) = Self::first_unexpected_in(shard, pattern) {
+                let e = &shard[idx];
+                if best.map_or(true, |(_, b)| e.seq < b) {
+                    best = Some((e, e.seq));
+                }
+            }
+        }
+        best.map(|(e, _)| peek(&e.msg))
     }
 
     /// Sender path: park a rendezvous send; returns its id.
@@ -248,18 +382,32 @@ impl MatchState {
     }
 
     pub fn posted_len(&self) -> usize {
-        self.posted.len()
+        self.posted_shards.iter().map(VecDeque::len).sum::<usize>() + self.posted_wild.len()
     }
 
     pub fn unexpected_len(&self) -> usize {
-        self.unexpected.len()
+        self.unexpected_shards.iter().map(VecDeque::len).sum()
+    }
+
+    /// Shard-agreement diagnostic, mirroring
+    /// `Proc::win_registry_shard_counts`: per-shard parked-entry counts
+    /// (posted + unexpected), with the wildcard posted list appended as a
+    /// final extra element. The sum always equals
+    /// `posted_len() + unexpected_len()`.
+    pub fn shard_counts(&self) -> Vec<usize> {
+        let mut counts: Vec<usize> = (0..N_MATCH_SHARDS)
+            .map(|s| self.posted_shards[s].len() + self.unexpected_shards[s].len())
+            .collect();
+        counts.push(self.posted_wild.len());
+        counts
     }
 
     /// True if no operations are parked anywhere — used by
     /// `MPIX_Stream_free` to decide whether deallocation may proceed.
     pub fn is_quiescent(&self) -> bool {
-        self.posted.is_empty()
-            && self.unexpected.is_empty()
+        self.posted_shards.iter().all(VecDeque::is_empty)
+            && self.posted_wild.is_empty()
+            && self.unexpected_shards.iter().all(VecDeque::is_empty)
             && self.rdv_sends.is_empty()
             && self.rdv_recvs.is_empty()
     }
@@ -403,6 +551,101 @@ mod tests {
         assert!(st.is_quiescent());
         // keep `req` alive until the end so cancel-on-drop doesn't matter
         drop(req);
+    }
+
+    #[test]
+    fn wild_posted_before_exact_wins_across_lists() {
+        // A wildcard receive posted BEFORE an exact receive must match
+        // first even though they live on different internal lists.
+        let mut st = MatchState::new();
+        let mut b1 = [0u8; 4];
+        let mut b2 = [0u8; 4];
+        let (wild, r_wild) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b1);
+        let (exact, r_exact) = posted(pat(0, 3, 7), &mut b2);
+        st.push_posted(wild);
+        st.push_posted(exact);
+        let m = st.match_posted(&env(0, 3, 7)).expect("must match");
+        assert!(Arc::ptr_eq(&m.req, r_wild.inner()), "earlier wildcard post must win");
+        m.req.complete_ok(crate::mpi::status::Status::new(3, 7, 0, -1));
+        let m2 = st.match_posted(&env(0, 3, 7)).unwrap();
+        assert!(Arc::ptr_eq(&m2.req, r_exact.inner()));
+        m2.req.complete_ok(crate::mpi::status::Status::new(3, 7, 0, -1));
+    }
+
+    #[test]
+    fn exact_posted_before_wild_wins_across_lists() {
+        let mut st = MatchState::new();
+        let mut b1 = [0u8; 4];
+        let mut b2 = [0u8; 4];
+        let (exact, r_exact) = posted(pat(0, 3, 7), &mut b1);
+        let (wild, r_wild) = posted(pat(0, ANY_SOURCE, ANY_TAG), &mut b2);
+        st.push_posted(exact);
+        st.push_posted(wild);
+        let m = st.match_posted(&env(0, 3, 7)).expect("must match");
+        assert!(Arc::ptr_eq(&m.req, r_exact.inner()), "earlier exact post must win");
+        m.req.complete_ok(crate::mpi::status::Status::new(3, 7, 0, -1));
+        // The wildcard still catches traffic from any other (src, tag).
+        let m2 = st.match_posted(&env(0, 12, 99)).unwrap();
+        assert!(Arc::ptr_eq(&m2.req, r_wild.inner()));
+        m2.req.complete_ok(crate::mpi::status::Status::new(12, 99, 0, -1));
+    }
+
+    #[test]
+    fn wildcard_take_unexpected_is_global_fifo_across_shards() {
+        // Arrivals with distinct (src, tag) pairs land in distinct
+        // shards; a wildcard receive must still drain them in global
+        // arrival order.
+        let mut st = MatchState::new();
+        for (i, (src, tag)) in [(1u32, 5i32), (2, 6), (3, 7), (4, 8)].iter().enumerate() {
+            st.push_unexpected(UnexpectedMsg {
+                env: env(0, *src, *tag),
+                reply_ep: EpAddr { rank: *src, ep: 0 },
+                kind: UnexpectedKind::Eager(vec![i as u8]),
+            });
+        }
+        let p = pat(0, ANY_SOURCE, ANY_TAG);
+        for expect in 0u8..4 {
+            let st_peek = st.peek_unexpected(&p).unwrap();
+            let m = st.take_unexpected(&p).unwrap();
+            assert_eq!(st_peek.source, m.env.src_rank, "peek must agree with take");
+            match m.kind {
+                UnexpectedKind::Eager(d) => assert_eq!(d, vec![expect], "arrival order violated"),
+                _ => panic!(),
+            }
+        }
+        assert!(st.is_quiescent());
+    }
+
+    #[test]
+    fn shard_counts_sum_to_parked_totals() {
+        let mut st = MatchState::new();
+        let mut bufs = [[0u8; 4]; 3];
+        let mut reqs = Vec::new();
+        let mut it = bufs.iter_mut();
+        for (src, tag) in [(1i32, 1i32), (2, 2)] {
+            let (p, r) = posted(pat(0, src, tag), it.next().unwrap());
+            st.push_posted(p);
+            reqs.push(r);
+        }
+        let (pw, rw) = posted(pat(0, ANY_SOURCE, 3), it.next().unwrap());
+        st.push_posted(pw);
+        reqs.push(rw);
+        st.push_unexpected(UnexpectedMsg {
+            env: env(0, 9, 9),
+            reply_ep: EpAddr { rank: 9, ep: 0 },
+            kind: UnexpectedKind::Eager(vec![]),
+        });
+        let counts = st.shard_counts();
+        assert_eq!(counts.len(), N_MATCH_SHARDS + 1, "shards plus the wild list");
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            st.posted_len() + st.unexpected_len(),
+            "shard counts must account for every parked entry"
+        );
+        assert_eq!(counts[N_MATCH_SHARDS], 1, "one wildcard post on the wild list");
+        for r in &reqs {
+            assert!(r.cancel());
+        }
     }
 
     #[test]

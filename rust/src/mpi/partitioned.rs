@@ -615,11 +615,11 @@ mod tests {
                 for part in 0..PARTS {
                     p.pready_enqueue(&ps, part, &c)?;
                 }
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
                 // Double trigger from the lane: recorded per-stream,
                 // surfaced at the next synchronize — never a lane panic.
                 p.pready_enqueue(&ps, 0, &c)?;
-                let err = p.synchronize_enqueue(&c);
+                let err = p.enqueue_gate(&c).unwrap().wait(p);
                 assert!(
                     matches!(err, Err(MpiErr::Request(_))),
                     "double pready must surface as Request error, got {err:?}"

@@ -342,43 +342,10 @@ impl Proc {
     /// unexpected floods on other VCIs — must still drain, or two ranks
     /// blocked in unrelated calls can deadlock. Stream (explicit-pool)
     /// VCIs are *never* poked from here, preserving their serial-context
-    /// lock elision.
+    /// lock elision. The loop itself is [`Proc::drive_until`], the
+    /// engine shared by every blocking wait in the runtime.
     pub fn wait(&self, req: Request) -> Result<Status> {
-        if req.is_complete() {
-            return req.into_result();
-        }
-        let vci = self.vci(req.vci());
-        let cs = self.session_for_vci(req.vci());
-        let spin_budget = self.config().spin_before_yield;
-        let waiting_implicit = (req.vci() as usize) < self.config().implicit_pool;
-        let mut spins = 0u32;
-        while !req.is_complete() {
-            self.progress_vci(vci, &cs);
-            if req.is_complete() {
-                break;
-            }
-            spins += 1;
-            if spins >= spin_budget {
-                spins = 0;
-                if waiting_implicit {
-                    // Same lock domain: reuse the session.
-                    self.progress_implicit_pool(&cs);
-                } else {
-                    // Stream wait: open a separate implicit-pool session
-                    // (the stream session holds no locks, so no
-                    // re-entrancy).
-                    let cs2 = self.session_for_implicit();
-                    self.progress_implicit_pool(&cs2);
-                }
-                // Steal-mode offload: a rank that has burned its spin
-                // budget is idle enough to serve siblings' stale
-                // endpoints (no-op unless the policy is `Steal`).
-                crate::mpi::offload::steal_pass(self);
-                cs.yield_cs();
-            } else {
-                std::hint::spin_loop();
-            }
-        }
+        self.drive_until(req.vci(), None, |_| Ok(req.is_complete()))?;
         req.into_result()
     }
 

@@ -30,7 +30,7 @@
 //! it cannot hang on an ack that will never be routed.
 
 use std::sync::{Arc, Mutex, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{MpiErr, Result};
 use crate::mpi::comm::Comm;
@@ -43,7 +43,7 @@ use crate::mpi::world::Proc;
 /// The demand settles the common parked-ack case in one extra packet;
 /// the flush fallback only exists for ops displaced on their route
 /// (transmit backpressure), so the budget can be generous.
-const WAIT_POKE_BUDGET_US: u128 = 100;
+const WAIT_POKE_BUDGET_US: u64 = 100;
 
 /// What the lane-executed closure of an enqueued rput hands back to the
 /// caller-held outer handle: the inner (stream-routed) request, or the
@@ -243,52 +243,49 @@ impl RmaRequest {
         }
         // The proc-global registry is the authority on window liveness —
         // a Weak that still upgrades may just be another outstanding
-        // handle. Checked every iteration: win_free during the wait must
+        // handle. Checked every probe: win_free during the wait must
         // turn into an error, not an ack that never comes.
         let Some(tracker) = p.rma_results().tracker(self.src_vci, self.win_id, None) else {
             return Err(self.freed_err());
         };
-        // Same discipline as `rma_await`: after a whole spin budget
-        // blocked on the remote side, a Steal-mode rank serves siblings'
-        // stale endpoints — the busy target holding our ack may be one.
-        let steal_period = p.config().spin_before_yield.max(1);
-        let mut rounds = 0u32;
+        // The blocking loop is the shared engine, `Proc::drive_until` —
+        // same spin/implicit-sweep/steal/yield discipline as `Proc::wait`
+        // (the steal pass matters here: the busy target holding our ack
+        // may be a sibling whose stale endpoint a Steal-mode rank can
+        // serve). The probes below stay lock-free w.r.t. the runtime
+        // (tracker mutex + result registry only), as the engine requires.
+        let (src_vci, win_id, token) = (self.src_vci, self.win_id, self.token);
         match self.kind {
-            ReqKind::Get => loop {
-                if let Some(outcome) =
-                    p.rma_results().take_done(self.src_vci, (self.win_id, self.token), None)
-                {
-                    tracker.lock().unwrap().complete_read(self.token);
-                    return match outcome {
-                        Ok(bytes) => {
-                            self.got = Some(bytes);
-                            Ok(())
-                        }
-                        Err(e) => Err(MpiErr::Rma(e)),
-                    };
+            ReqKind::Get => {
+                let mut arrived = None;
+                p.drive_until(src_vci, None, |p| {
+                    if let Some(outcome) =
+                        p.rma_results().take_done(src_vci, (win_id, token), None)
+                    {
+                        tracker.lock().unwrap().complete_read(token);
+                        arrived = Some(outcome);
+                        return Ok(true);
+                    }
+                    if p.rma_results().tracker(src_vci, win_id, None).is_none() {
+                        return Err(self.freed_err());
+                    }
+                    Ok(false)
+                })?;
+                match arrived.expect("drive_until reported done without an outcome") {
+                    Ok(bytes) => {
+                        self.got = Some(bytes);
+                        Ok(())
+                    }
+                    Err(e) => Err(MpiErr::Rma(e)),
                 }
-                if p.rma_results().tracker(self.src_vci, self.win_id, None).is_none() {
-                    return Err(self.freed_err());
-                }
-                {
-                    let vci = p.vci(self.src_vci);
-                    let cs = p.session_for_vci(self.src_vci);
-                    p.progress_vci(vci, &cs);
-                    cs.yield_cs();
-                }
-                rounds += 1;
-                if rounds >= steal_period {
-                    rounds = 0;
-                    crate::mpi::offload::steal_pass(p);
-                }
-            },
+            }
             ReqKind::Put | ReqKind::Acc => {
                 let win = self.win.upgrade().map(Window::from_inner);
                 if let Some(w) = &win {
                     // Ship any staged aggregation buffer holding this op.
                     p.agg_drain_target(w, self.target)?;
                 }
-                if !tracker.lock().unwrap().has_completion(self.token) {
+                if !tracker.lock().unwrap().has_completion(token) {
                     if let Some(w) = &win {
                         // The ack may be coalescing in a partial target
                         // batch — under the fixed policy, or in adaptive
@@ -304,48 +301,44 @@ impl RmaRequest {
                         p.rma_ack_demand(w, self.target)?;
                     }
                 }
-                let start = Instant::now();
-                let mut poked = false;
-                loop {
-                    if let Some(outcome) = tracker.lock().unwrap().take_completion(self.token) {
-                        return match outcome {
-                            Some(e) => Err(MpiErr::Rma(e)),
-                            None => Ok(()),
-                        };
+                let mut settled = None;
+                let mut probe = |p: &Proc| {
+                    if let Some(outcome) = tracker.lock().unwrap().take_completion(token) {
+                        settled = Some(outcome);
+                        return Ok(true);
                     }
-                    if p.rma_results().tracker(self.src_vci, self.win_id, None).is_none() {
+                    if p.rma_results().tracker(src_vci, win_id, None).is_none() {
                         return Err(self.freed_err());
                     }
-                    {
-                        let vci = p.vci(self.src_vci);
-                        let cs = p.session_for_vci(self.src_vci);
-                        p.progress_vci(vci, &cs);
-                        cs.yield_cs();
-                    }
-                    rounds += 1;
-                    if rounds >= steal_period {
-                        rounds = 0;
-                        crate::mpi::offload::steal_pass(p);
-                    }
-                    if !poked && start.elapsed().as_micros() > WAIT_POKE_BUDGET_US {
-                        poked = true;
-                        match &win {
-                            // Fallback when the cheap demand above did
-                            // not settle it (e.g. the op displaced under
-                            // transmit backpressure): one full flush
-                            // round forces everything out. Route FIFO
-                            // puts the ACK_BATCH ahead of the FLUSH_ACK,
-                            // so after this the completion is present.
-                            Some(w) => self.poke(p, w)?,
-                            None => {
-                                return Err(MpiErr::Rma(format!(
-                                    "wait on window {}: all window handles were dropped before the \
-                                     request completed, so its parked ack cannot be flushed",
-                                    self.win_id
-                                )))
-                            }
+                    Ok(false)
+                };
+                // First a bounded wait for the demand to settle things,
+                // then — sending is an MPI call, so it must happen with
+                // the engine's session released — the poke escalation,
+                // then an unbounded wait.
+                let deadline = Instant::now() + Duration::from_micros(WAIT_POKE_BUDGET_US);
+                if !p.drive_until(src_vci, Some(deadline), &mut probe)? {
+                    match &win {
+                        // Fallback when the cheap demand above did
+                        // not settle it (e.g. the op displaced under
+                        // transmit backpressure): one full flush
+                        // round forces everything out. Route FIFO
+                        // puts the ACK_BATCH ahead of the FLUSH_ACK,
+                        // so after this the completion is present.
+                        Some(w) => self.poke(p, w)?,
+                        None => {
+                            return Err(MpiErr::Rma(format!(
+                                "wait on window {}: all window handles were dropped before the \
+                                 request completed, so its parked ack cannot be flushed",
+                                self.win_id
+                            )))
                         }
                     }
+                    p.drive_until(src_vci, None, &mut probe)?;
+                }
+                match settled.expect("drive_until reported done without an outcome") {
+                    Some(e) => Err(MpiErr::Rma(e)),
+                    None => Ok(()),
                 }
             }
             ReqKind::Enqueued { .. } => unreachable!("handled above"),

@@ -7,9 +7,12 @@
 //! work via `synchronize_enqueue`/`waitall_enqueue`, and split-phase RMA
 //! via [`RmaRequest::wait`]. Those names all remain (several are MPI/
 //! MPIX API surface), but they are now views over one trait:
-//! [`Waitable`], with [`Proc::wait_all`] / [`Proc::wait_any`] combining
-//! *mixed* kinds — e.g. a pt2pt receive, an rput handle, and an enqueue
-//! gate in one set.
+//! [`Waitable`], with [`Proc::wait_all`] / [`Proc::wait_any`] /
+//! [`Proc::wait_timeout`] combining *mixed* kinds — e.g. a pt2pt
+//! receive, an rput handle, and an enqueue gate in one set. The enqueue
+//! pair is formally `#[deprecated]`: `synchronize_enqueue` is
+//! `enqueue_gate(comm)?.wait(proc)`, `waitall_enqueue` is
+//! `enqueue_wait_all`.
 //!
 //! Contract: `wait` blocks until the operation completes and surfaces
 //! its error; `test` is a nonblocking poll (one progress pass) that
@@ -22,9 +25,25 @@
 //! synchronizes its GPU stream (the prototype stream has no async query
 //! primitive), documented on the type.
 //!
+//! # The shared wait engine
+//!
+//! Every blocking wait in the runtime ([`Proc::wait`], [`Waitable`]
+//! impls, [`RmaRequest::wait`]) drives the same loop,
+//! [`Proc::drive_until`]: progress the waited VCI, poll a caller
+//! condition, and on each spin-budget exhaustion sweep the implicit
+//! pool, run a steal pass, and yield the critical section. After many
+//! consecutive fruitless sweeps with an empty inbound ring the engine
+//! parks briefly on the endpoint's [`WakeHub`] — producers ring it on
+//! the ring's empty→non-empty edge, so a deep-idle waiter burns no CPU
+//! yet wakes within one notification of traffic arriving. The park is
+//! skipped while the session holds the *global* critical section
+//! (parking there would stall every peer that needs the lock) and is
+//! always bounded, so conditions satisfied out-of-band still complete.
+//!
 //! [`EnqueueGate::test`]: crate::stream::enqueue::EnqueueGate
+//! [`WakeHub`]: crate::fabric::queue::WakeHub
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{MpiErr, Result};
 use crate::mpi::partitioned::{PartitionedRecv, PartitionedSend};
@@ -50,24 +69,12 @@ pub trait Waitable {
 impl Waitable for Request {
     fn wait(&mut self, p: &Proc) -> Result<()> {
         // `Proc::wait` consumes its request, which a `&mut` trait object
-        // cannot; poll via the non-consuming `Proc::test` instead, with
-        // the same periodic cross-VCI poke `Proc::wait` performs so two
-        // ranks blocked on unrelated traffic cannot deadlock.
-        let budget = p.config().spin_before_yield.max(1);
-        let mut spins = 0u32;
-        loop {
-            if p.test(self)?.is_some() {
-                return Ok(());
-            }
-            spins += 1;
-            if spins >= budget {
-                spins = 0;
-                p.poke();
-                std::thread::yield_now();
-            } else {
-                std::hint::spin_loop();
-            }
-        }
+        // cannot; drive the shared engine on the request's VCI with a
+        // lock-free completion probe, then surface the outcome through
+        // the non-consuming `Proc::test`.
+        p.drive_until(self.vci(), None, |_| Ok(self.is_complete()))?;
+        p.test(self)?;
+        Ok(())
     }
 
     fn test(&mut self, p: &Proc) -> Result<bool> {
@@ -118,7 +125,100 @@ impl Waitable for PartitionedRecv {
 /// blocking wait on the first still-pending element.
 const WAIT_ANY_POLL_BUDGET_MS: u128 = 1;
 
+/// Consecutive fruitless spin-budget exhaustions before the engine
+/// considers a wait deep-idle and parks on the endpoint's wake hub.
+const DEEP_IDLE_SWEEPS: u32 = 64;
+
+/// Bound on one deep-idle park. Conditions that complete without
+/// touching the waited VCI's inbound ring (cross-VCI completions, a
+/// `win_free` on another thread) still poll at this period.
+const DEEP_IDLE_PARK: Duration = Duration::from_micros(100);
+
 impl Proc {
+    /// The shared blocking-wait engine (module docs: "The shared wait
+    /// engine"). Drives progress on `vci_idx` until `done` reports
+    /// completion, replicating the classic `Proc::wait` discipline: a
+    /// critical-section session held across the loop, one progress pass
+    /// per iteration, and on each spin-budget exhaustion an
+    /// implicit-pool sweep, a steal-mode offload pass and a CS yield.
+    ///
+    /// `deadline` bounds the wait: past it the engine returns
+    /// `Ok(false)` with the condition unmet. `None` waits forever
+    /// (returns `Ok(true)` or an error).
+    ///
+    /// `done` runs with the session held — it must stay lock-free with
+    /// respect to the runtime (completion flags, tracker mutexes,
+    /// result registries), and must not issue MPI calls or re-enter a
+    /// session, which would self-deadlock in `Global` mode.
+    pub(crate) fn drive_until(
+        &self,
+        vci_idx: u16,
+        deadline: Option<Instant>,
+        mut done: impl FnMut(&Proc) -> Result<bool>,
+    ) -> Result<bool> {
+        if done(self)? {
+            return Ok(true);
+        }
+        let vci = self.vci(vci_idx);
+        let cs = self.session_for_vci(vci_idx);
+        let spin_budget = self.config().spin_before_yield.max(1);
+        let waiting_implicit = (vci_idx as usize) < self.config().implicit_pool;
+        let mut spins = 0u32;
+        let mut idle_sweeps = 0u32;
+        loop {
+            self.progress_vci(vci, &cs);
+            if done(self)? {
+                return Ok(true);
+            }
+            if deadline.map_or(false, |d| Instant::now() >= d) {
+                return Ok(false);
+            }
+            spins += 1;
+            if spins < spin_budget {
+                std::hint::spin_loop();
+                continue;
+            }
+            spins = 0;
+            if waiting_implicit {
+                // Same lock domain: reuse the session.
+                self.progress_implicit_pool(&cs);
+            } else {
+                // Stream wait: open a separate implicit-pool session
+                // (the stream session holds no locks, so no
+                // re-entrancy).
+                let cs2 = self.session_for_implicit();
+                self.progress_implicit_pool(&cs2);
+            }
+            // Steal-mode offload: a rank that has burned its spin
+            // budget is idle enough to serve siblings' stale endpoints
+            // (no-op unless the policy is `Steal`).
+            crate::mpi::offload::steal_pass(self);
+            cs.yield_cs();
+            idle_sweeps += 1;
+            if idle_sweeps >= DEEP_IDLE_SWEEPS {
+                idle_sweeps = 0;
+                let ep = vci.ep();
+                // Park only when (a) the session confers no exclusive
+                // access a peer could be blocked on, and (b) there is
+                // no work already queued for us — ring *and* stash.
+                if !cs.holds_global() && ep.stash_len() == 0 {
+                    // Epoch before the emptiness check: a packet landing
+                    // between the two advances it and voids the park.
+                    let seen = ep.inbound_epoch();
+                    if ep.inbound_len() == 0 {
+                        let park = match deadline {
+                            None => DEEP_IDLE_PARK,
+                            Some(d) => DEEP_IDLE_PARK
+                                .min(d.saturating_duration_since(Instant::now())),
+                        };
+                        if !park.is_zero() {
+                            ep.wait_inbound(seen, park);
+                        }
+                    }
+                }
+            }
+        }
+    }
     /// Wait for **every** waitable in the set — mixed kinds welcome.
     /// All elements are waited even after a failure (no operation is
     /// left half-completed); the *first* error is reported.
@@ -155,6 +255,37 @@ impl Proc {
             if start.elapsed().as_millis() > WAIT_ANY_POLL_BUDGET_MS {
                 reqs[0].wait(self)?;
                 return Ok(0);
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    /// [`Proc::wait_any`] with a bound: poll the set until **some**
+    /// element completes (returning its index) or `timeout` elapses
+    /// (returning `Ok(None)` with every element still pending — nothing
+    /// is consumed, so the caller may retry, abandon, or escalate to a
+    /// blocking wait). Each poll round is a progress pass per element,
+    /// so the wait is live; kinds whose acks park under fixed-size
+    /// batching (an [`RmaRequest`]) may need their own `wait` to force
+    /// the ack out — a timeout here is "not yet", never "stuck forever".
+    /// Errors on an empty set, like `wait_any`.
+    pub fn wait_timeout(
+        &self,
+        reqs: &mut [&mut dyn Waitable],
+        timeout: Duration,
+    ) -> Result<Option<usize>> {
+        if reqs.is_empty() {
+            return Err(MpiErr::Arg("wait_timeout on an empty request set".into()));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            for (i, r) in reqs.iter_mut().enumerate() {
+                if r.test(self)? {
+                    return Ok(Some(i));
+                }
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
             }
             std::hint::spin_loop();
         }
@@ -236,7 +367,44 @@ mod tests {
         let w = World::with_ranks(1).unwrap();
         let p = w.proc(0);
         assert!(matches!(p.wait_any(&mut []), Err(MpiErr::Arg(_))));
+        assert!(matches!(
+            p.wait_timeout(&mut [], std::time::Duration::from_millis(1)),
+            Err(MpiErr::Arg(_))
+        ));
         // wait_all over nothing is trivially complete.
         p.wait_all(&mut []).unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_expires_without_consuming_then_completes() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                let mut buf = [0u8; 2];
+                let mut req = p.irecv(&mut buf, 1, 5, p.world_comm())?;
+                // Nothing sent yet: the bounded wait must report None
+                // and leave the request pending (nothing consumed).
+                let hit = p.wait_timeout(
+                    &mut [&mut req],
+                    std::time::Duration::from_millis(2),
+                )?;
+                assert_eq!(hit, None, "no sender yet: must time out");
+                // Release the sender, then the same request completes.
+                p.send(&[0u8], 1, 6, p.world_comm())?;
+                let hit = p.wait_timeout(
+                    &mut [&mut req],
+                    std::time::Duration::from_secs(10),
+                )?;
+                assert_eq!(hit, Some(0));
+                p.wait_all(&mut [&mut req])?;
+                assert_eq!(buf, [4, 2]);
+            } else {
+                let mut gate = [0u8; 1];
+                p.recv(&mut gate, 0, 6, p.world_comm())?;
+                p.send(&[4u8, 2], 0, 5, p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
     }
 }

@@ -409,6 +409,23 @@ impl Proc {
         self.shared.rma_results.tracker_shard_counts()
     }
 
+    /// Per-shard parked-entry counts of VCI `vci`'s matching engine —
+    /// the `(source, tag)` shards plus the wildcard list as a final
+    /// extra element — mirroring [`Proc::win_registry_shard_counts`].
+    /// Diagnostic invariant: the sum always equals the engine's
+    /// posted + unexpected totals, whatever shard the entries hashed
+    /// to. Panics if `vci` is not a valid index (see the VCI pool
+    /// sizing in [`crate::config::Config`]).
+    pub fn matching_shard_counts(&self, vci: u16) -> Vec<usize> {
+        assert!(
+            (vci as usize) < self.vci_count(),
+            "matching_shard_counts: VCI {vci} out of range ({} VCIs)",
+            self.vci_count()
+        );
+        let cs = self.session_for_vci(vci);
+        self.vci(vci).with_state(&cs, |st| st.shard_counts())
+    }
+
     /// The simulated GPU device attached to this process (created lazily).
     pub fn gpu(&self) -> Arc<GpuDevice> {
         self.shared.gpu.get_or_init(|| Arc::new(GpuDevice::new(self.shared.rank))).clone()

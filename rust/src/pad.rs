@@ -1,0 +1,88 @@
+//! Cache-line padding for hot shared counters.
+//!
+//! The service-traffic harness showed the scaling knee moving with the
+//! *layout* of the per-endpoint statistics: a dozen `AtomicU64`s packed
+//! into two cache lines mean sixteen threads bouncing those lines on
+//! every `fetch_add` even though no two threads share a logical counter
+//! (false sharing). [`CachePadded`] gives each wrapped value its own
+//! 64-byte line — the same trick crossbeam's `CachePadded` plays, local
+//! here because the crate is dependency-free.
+//!
+//! `Deref`/`DerefMut` make the wrapper transparent at call sites:
+//! `stats.rx_packets.fetch_add(1, ...)` compiles unchanged whether the
+//! field is an `AtomicU64` or a `CachePadded<AtomicU64>`.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to a 64-byte cache line so neighbouring
+/// values never share one (false sharing).
+///
+/// 64 bytes is the line size on x86-64 and common AArch64 parts; on the
+/// few 128-byte-line machines two values per line still cuts sharing
+/// 6-fold versus packed `AtomicU64`s.
+#[derive(Default)]
+#[repr(align(64))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    /// Unwrap the padded value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.value.fmt(f)
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn padded_values_do_not_share_cache_lines() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 64);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 64);
+        let pair: [CachePadded<AtomicU64>; 2] = Default::default();
+        let a = &pair[0] as *const _ as usize;
+        let b = &pair[1] as *const _ as usize;
+        assert!(b - a >= 64, "adjacent padded counters must sit on distinct lines");
+    }
+
+    #[test]
+    fn deref_is_transparent() {
+        let c = CachePadded::new(AtomicU64::new(7));
+        c.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 8);
+        assert_eq!(c.into_inner().into_inner(), 8);
+    }
+}

@@ -25,9 +25,14 @@
 //! communicator/stream requirements — parity across all entry points).
 //! Runtime failures of the asynchronous operation are recorded per GPU
 //! stream and surface as [`MpiErr`] from the matching completion point —
-//! [`Proc::wait_enqueue`] / [`Proc::waitall_enqueue`] for i-variants,
-//! [`Proc::synchronize_enqueue`] for blocking variants — never as a panic
-//! on a lane or dispatcher thread.
+//! [`Proc::wait_enqueue`] / [`Proc::enqueue_wait_all`] for i-variants,
+//! [`Proc::enqueue_gate`] + `wait` for blocking variants — never as a
+//! panic on a lane or dispatcher thread.
+//!
+//! The pre-[`Waitable`] completion names survive as thin `#[deprecated]`
+//! aliases: `synchronize_enqueue` (= `enqueue_gate(comm)?.wait(self)`)
+//! and `waitall_enqueue` (= [`Proc::enqueue_wait_all`]). New code goes
+//! through the unified wait surface in [`crate::mpi::waitable`].
 
 use std::sync::{Arc, Mutex};
 
@@ -158,28 +163,28 @@ impl Proc {
         }
     }
 
-    /// `cudaStreamSynchronize` with the enqueue error contract: block
-    /// until everything enqueued on the communicator's GPU stream has
-    /// executed, then surface the first failure recorded for the stream
-    /// (clearing it), if any. Also a *completion point* for deferred
-    /// one-sided ops registered on this stream by
-    /// [`Proc::put_enqueue`](crate::stream::rma): the windows they
-    /// touched are flushed here — enqueue RMA completes at
-    /// `synchronize_enqueue` or an explicit `win_flush`/`win_unlock`,
-    /// whichever comes first.
-    ///
-    /// Documented alias (the pre-[`Waitable`] name, kept as MPIX API
-    /// surface): exactly `self.enqueue_gate(comm)?.wait(self)` — the
-    /// real completion logic lives in [`EnqueueGate`]'s `Waitable`
-    /// implementation.
+    /// Deprecated alias of `self.enqueue_gate(comm)?.wait(self)` — the
+    /// pre-[`Waitable`] name for the communicator's blocking completion
+    /// point, kept as MPIX API surface. The real semantics (GPU-stream
+    /// drain, lane error surfacing, enqueued-window flush) live in
+    /// [`EnqueueGate`]'s `Waitable` implementation; see
+    /// [`Proc::enqueue_gate`].
+    #[deprecated(note = "use `enqueue_gate(comm)?.wait(proc)` — the unified wait surface")]
     pub fn synchronize_enqueue(&self, comm: &Comm) -> Result<()> {
         self.enqueue_gate(comm)?.wait(self)
     }
 
-    /// The communicator's enqueue completion point as a [`Waitable`]:
-    /// waiting the gate is `synchronize_enqueue` (GPU-stream drain, lane
-    /// error surfacing, enqueued-window flush). The gate is reusable —
-    /// each `wait` covers everything enqueued up to that moment.
+    /// The communicator's enqueue completion point as a [`Waitable`] —
+    /// `cudaStreamSynchronize` with the enqueue error contract. Waiting
+    /// the gate blocks until everything enqueued on the communicator's
+    /// GPU stream has executed, then surfaces the first failure recorded
+    /// for the stream (clearing it), if any. Also a *completion point*
+    /// for deferred one-sided ops registered on this stream by
+    /// [`Proc::put_enqueue`](crate::stream::rma): the windows they
+    /// touched are flushed here — enqueue RMA completes at the gate or
+    /// an explicit `win_flush`/`win_unlock`, whichever comes first. The
+    /// gate is reusable — each `wait` covers everything enqueued up to
+    /// that moment.
     pub fn enqueue_gate(&self, comm: &Comm) -> Result<EnqueueGate> {
         // Validate eagerly (same contract as every enqueue entry point):
         // a non-GPU-stream communicator fails here, not at the wait.
@@ -330,19 +335,25 @@ impl Proc {
         )
     }
 
+    /// Deprecated alias of [`Proc::enqueue_wait_all`] — the
+    /// `MPIX_Waitall_enqueue` name from before the unified wait surface.
+    #[deprecated(note = "use `enqueue_wait_all` — the unified wait surface")]
+    pub fn waitall_enqueue(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
+        self.enqueue_wait_all(reqs, comm)
+    }
+
     /// `MPIX_Waitall_enqueue`. All requests must have been issued on the
     /// same local stream — enforced, per the paper. Submits **one** batched
     /// engine op covering every request (a single trigger/gate pair on the
     /// GPU stream), instead of N sequential `wait_enqueue` round-trips.
     ///
-    /// Kept as a documented MPIX-surface alias of the unified waitable
-    /// layer: it is the *stream-ordered* counterpart of
+    /// The *stream-ordered* counterpart of
     /// [`Proc::wait_all`](crate::mpi::waitable) over the same requests —
     /// completion runs **on the GPU stream** (after everything enqueued
     /// before it) through the same per-request completion core the
     /// host-side `Waitable` impl uses, with the same first-error
     /// semantics.
-    pub fn waitall_enqueue(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
+    pub fn enqueue_wait_all(&self, reqs: Vec<EnqueuedRequest>, comm: &Comm) -> Result<()> {
         let gpu = enqueue_target(comm)?;
         let stream = comm.local_stream().unwrap();
         for r in &reqs {
@@ -470,11 +481,11 @@ mod tests {
             let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
             if p.rank() == 0 {
                 p.send_enqueue(b"payload!", 1, 3, &c)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
             } else {
                 let d = dev.alloc(8);
                 p.recv_enqueue_dev(d, 0, 3, &c)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
                 assert_eq!(dev.read_sync(d)?, b"payload!");
                 dev.free(d)?;
             }
@@ -511,15 +522,15 @@ mod tests {
             if p.rank() == 0 {
                 let r1 = p.isend_enqueue(b"aa", 1, 1, &c)?;
                 let r2 = p.isend_enqueue(b"bb", 1, 2, &c)?;
-                p.waitall_enqueue(vec![r1, r2], &c)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_wait_all(vec![r1, r2], &c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
             } else {
                 let d1 = dev.alloc(2);
                 let d2 = dev.alloc(2);
                 let r1 = p.irecv_enqueue_dev(d1, 0, 1, &c)?;
                 let r2 = p.irecv_enqueue_dev(d2, 0, 2, &c)?;
-                p.waitall_enqueue(vec![r1, r2], &c)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_wait_all(vec![r1, r2], &c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
                 assert_eq!(dev.read_sync(d1)?, b"aa");
                 assert_eq!(dev.read_sync(d2)?, b"bb");
             }
@@ -604,7 +615,7 @@ mod tests {
         // Wildcards stay accepted on the receive side.
         let sreq = p.isend(b"wildcard", 0, 5, &c).unwrap();
         p.recv_enqueue_dev(d, ANY_SOURCE, ANY_TAG, &c).unwrap();
-        p.synchronize_enqueue(&c).unwrap();
+        p.enqueue_gate(&c).unwrap().wait(p).unwrap();
         p.wait(sreq).unwrap();
         assert_eq!(p.gpu().read_sync(d).unwrap(), b"wildcard");
 
@@ -625,13 +636,13 @@ mod tests {
             let small = p.gpu().alloc(4);
             let sreq = p.isend(b"eightbyt", 0, 9, &c).unwrap();
             p.recv_enqueue_dev(small, 0, 9, &c).unwrap();
-            let err = p.synchronize_enqueue(&c);
+            let err = p.enqueue_gate(&c).unwrap().wait(p);
             assert!(
                 matches!(err, Err(MpiErr::Truncate { .. })),
                 "{mode:?}: expected Truncate, got {err:?}"
             );
             // The sticky error is cleared once taken.
-            p.synchronize_enqueue(&c).unwrap();
+            p.enqueue_gate(&c).unwrap().wait(p).unwrap();
             p.wait(sreq).unwrap();
             p.gpu().free(small).unwrap();
             drop(c);
@@ -670,7 +681,7 @@ mod tests {
             cv.notify_all();
         }
         // The stream must come back (no hang) and report the teardown.
-        let err = p.synchronize_enqueue(&c);
+        let err = p.enqueue_gate(&c).unwrap().wait(p);
         assert!(matches!(err, Err(MpiErr::Enqueue(_))), "expected Enqueue error, got {err:?}");
 
         drop(c);
@@ -690,7 +701,7 @@ mod tests {
         const OPS: usize = 32;
         for i in 0..OPS {
             p.send_enqueue(&(i as u64).to_le_bytes(), 0, i as i32, &c).unwrap();
-            p.synchronize_enqueue(&c).unwrap();
+            p.enqueue_gate(&c).unwrap().wait(p).unwrap();
             // Let the lane go idle so each op exercises the wakeup path.
             std::thread::sleep(std::time::Duration::from_micros(200));
         }
@@ -751,7 +762,7 @@ mod tests {
                         }
                     }
                     for (_, _, c) in &comms {
-                        p.synchronize_enqueue(c)?;
+                        p.enqueue_gate(c)?.wait(p)?;
                     }
                 } else {
                     let bufs: Vec<Vec<DevicePtr>> = (0..NSTREAMS)
@@ -763,7 +774,7 @@ mod tests {
                         }
                     }
                     for (_, _, c) in &comms {
-                        p.synchronize_enqueue(c)?;
+                        p.enqueue_gate(c)?.wait(p)?;
                     }
                     for row in &bufs {
                         for (m, d) in row.iter().enumerate() {
@@ -796,7 +807,7 @@ mod tests {
     }
 
     #[test]
-    fn waitall_enqueue_rejects_mixed_streams() {
+    fn enqueue_wait_all_rejects_mixed_streams() {
         let w = World::builder()
             .ranks(1)
             .config(Config { explicit_pool: 2, ..Default::default() })
@@ -819,7 +830,7 @@ mod tests {
         // Self-messages on a 1-rank world.
         let r1 = p.isend_enqueue(b"x", 0, 0, &c1).unwrap();
         let r2 = p.isend_enqueue(b"y", 0, 0, &c2).unwrap();
-        let err = p.waitall_enqueue(vec![r1, r2], &c1);
+        let err = p.enqueue_wait_all(vec![r1, r2], &c1);
         assert!(matches!(err, Err(MpiErr::Request(_))), "mixed-stream waitall must fail");
         // Drain the sends so teardown is clean.
         let mut b = [0u8; 1];
@@ -833,6 +844,41 @@ mod tests {
         p.stream_free(s2).unwrap();
         dev.destroy_stream(&g1).unwrap();
         dev.destroy_stream(&g2).unwrap();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wait_aliases_still_forward() {
+        // `synchronize_enqueue` / `waitall_enqueue` are thin aliases of
+        // the unified surface — same behavior, just deprecated names.
+        let w = gpu_world(EnqueueMode::HostFunc);
+        w.run(|p| {
+            let dev = p.gpu();
+            let gs = dev.create_stream();
+            let mut info = Info::new();
+            info.set("type", "cudaStream_t");
+            info.set_hex_u64("value", gs.id());
+            let s = p.stream_create(&info)?;
+            let c = p.stream_comm_create(p.world_comm(), Some(&s))?;
+            if p.rank() == 0 {
+                let r = p.isend_enqueue(b"old", 1, 8, &c)?;
+                p.waitall_enqueue(vec![r], &c)?;
+                p.synchronize_enqueue(&c)?;
+            } else {
+                let d = dev.alloc(3);
+                let r = p.irecv_enqueue_dev(d, 0, 8, &c)?;
+                p.waitall_enqueue(vec![r], &c)?;
+                p.synchronize_enqueue(&c)?;
+                assert_eq!(dev.read_sync(d)?, b"old");
+                dev.free(d)?;
+            }
+            p.barrier(p.world_comm())?;
+            drop(c);
+            p.stream_free(s)?;
+            dev.destroy_stream(&gs)?;
+            Ok(())
+        })
+        .unwrap();
     }
 }
 
@@ -928,7 +974,7 @@ mod coll_tests {
                 dev.write_sync(db, &bytes)?;
                 p.bcast_enqueue_dev(db, 0, &c)?;
                 p.barrier_enqueue(&c)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
                 assert_eq!(u64::from_le_bytes(dev.read_sync(d)?.try_into().unwrap()), 1 + 2 + 3);
                 assert_eq!(u64::from_le_bytes(dev.read_sync(db)?.try_into().unwrap()), 0xAA);
                 dev.free(d)?;

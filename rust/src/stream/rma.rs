@@ -395,13 +395,13 @@ mod tests {
             p.win_fence(&win)?;
             if p.rank() == 0 {
                 p.put_enqueue(&win, 1, 0, b"lane-put")?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
             }
             p.win_fence(&win)?;
             if p.rank() == 0 {
                 let d = dev.alloc(8);
                 p.get_enqueue(&win, 1, 0, d)?;
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
                 assert_eq!(dev.read_sync(d)?, b"lane-put");
                 dev.free(d)?;
             } else {
@@ -480,7 +480,7 @@ mod tests {
                 let mut bad = p.rput_enqueue(&win, 1, 0, b"early")?;
                 assert!(matches!(bad.wait(p), Err(MpiErr::Rma(_))));
                 // The lane is not poisoned: the stream still drains clean.
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
             }
             p.win_fence(&win)?;
             if p.rank() == 0 {
@@ -493,7 +493,7 @@ mod tests {
                 assert_eq!(rd.take_data().as_deref(), Some(&b"lane-rput"[..]));
                 // Everything is already complete: synchronize is a no-op
                 // here, and clears the window's flush registration.
-                p.synchronize_enqueue(&c)?;
+                p.enqueue_gate(&c)?.wait(p)?;
             }
             p.win_fence(&win)?;
             if p.rank() == 1 {
@@ -591,14 +591,14 @@ mod tests {
         p.win_lock(&win, 0, LockType::Exclusive).unwrap();
         let d = dev.alloc(9);
         p.get_enqueue(&win, 0, 0, d).unwrap();
-        p.synchronize_enqueue(&c).unwrap();
+        p.enqueue_gate(&c).unwrap().wait(p).unwrap();
         assert_eq!(dev.read_sync(d).unwrap(), b"lock+lane");
         dev.free(d).unwrap();
         p.win_unlock(&win, 0).unwrap();
         // Without the lock (and with no fence), the lane-issued op fails
         // at the synchronize point with the epoch error.
         p.put_enqueue(&win, 0, 0, b"late").unwrap();
-        let err = p.synchronize_enqueue(&c);
+        let err = p.enqueue_gate(&c).unwrap().wait(p);
         assert!(matches!(err, Err(MpiErr::Rma(_))), "expected epoch error, got {err:?}");
         p.win_free(win).unwrap();
         drop(c);
@@ -607,7 +607,7 @@ mod tests {
     }
 
     #[test]
-    fn put_enqueue_completes_at_synchronize_enqueue() {
+    fn put_enqueue_completes_at_the_enqueue_gate() {
         // The deferred puts issued by the lane are target-visible the
         // moment synchronize_enqueue returns — no fence, no unlock:
         // synchronize is itself a completion point for the windows this
@@ -628,7 +628,7 @@ mod tests {
         for i in 0..5u8 {
             p.put_enqueue(&win, 0, i as usize * 4, &[i + 1; 4]).unwrap();
         }
-        p.synchronize_enqueue(&c).unwrap();
+        p.enqueue_gate(&c).unwrap().wait(p).unwrap();
         // Visible now, with the lock still held.
         let local = p.win_read_local(&win).unwrap();
         for i in 0..5u8 {
@@ -668,7 +668,7 @@ mod tests {
         // Async failure: an epoch violation detected on the lane surfaces
         // at synchronize_enqueue (no fence has opened the epoch yet).
         p.put_enqueue(&win, 0, 0, &[1u8; 4]).unwrap();
-        let err = p.synchronize_enqueue(&c);
+        let err = p.enqueue_gate(&c).unwrap().wait(p);
         assert!(matches!(err, Err(MpiErr::Rma(_))), "expected Rma epoch error, got {err:?}");
         // Enqueue on a plain window (no GPU stream comm) is a Comm error.
         let plain = p.win_create(vec![0u8; 8], p.world_comm()).unwrap();

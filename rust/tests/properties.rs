@@ -252,7 +252,7 @@ fn prop_multiplex_routing_random() {
 use mpix::fabric::addr::EpAddr;
 use mpix::fabric::wire::Envelope;
 use mpix::mpi::matching::{
-    MatchPattern, MatchState, PostedRecv, RecvDest, UnexpectedKind, UnexpectedMsg,
+    MatchPattern, MatchState, PostedRecv, RecvDest, UnexpectedKind, UnexpectedMsg, N_MATCH_SHARDS,
 };
 use mpix::mpi::request::{ReqKind, Request};
 use mpix::prelude::ANY_INDEX;
@@ -264,6 +264,30 @@ use mpix::prelude::ANY_INDEX;
 enum MatchEv {
     Arrive { stream: u8, tag: u8 },
     Post { stream: Option<u8>, tag: Option<u8> },
+}
+
+/// Shard-agreement diagnostic, checked after every schedule event: the
+/// per-shard parked counts (wildcard posted list last) must always sum
+/// to the engine's own parked totals — the matching-engine analog of the
+/// window/tracker registry lockstep checks, over the same surface
+/// `Proc::matching_shard_counts` exports for a live process.
+fn check_shard_agreement(st: &MatchState) -> Result<(), String> {
+    let counts = st.shard_counts();
+    if counts.len() != N_MATCH_SHARDS + 1 {
+        return Err(format!(
+            "shard_counts has {} entries, want {} shards + the wildcard list",
+            counts.len(),
+            N_MATCH_SHARDS
+        ));
+    }
+    let sum: usize = counts.iter().sum();
+    let want = st.posted_len() + st.unexpected_len();
+    if sum != want {
+        return Err(format!(
+            "shard counts {counts:?} sum to {sum}, but {want} entries are parked"
+        ));
+    }
+    Ok(())
 }
 
 /// Drive one schedule through a `MatchState` and verify the §2.1
@@ -380,6 +404,7 @@ fn run_matching_case(nstreams: u8, ntags: u8, schedule: &[MatchEv]) -> Result<()
                 }
             }
         }
+        check_shard_agreement(&st)?;
     }
 
     // Drain: wildcard receives until the unexpected queue is empty, then
@@ -387,6 +412,7 @@ fn run_matching_case(nstreams: u8, ntags: u8, schedule: &[MatchEv]) -> Result<()
     let drain = MatchPattern { ctx_id: 0, src: ANY_SOURCE, tag: ANY_TAG, src_idx: ANY_INDEX, dst_idx: 0 };
     while let Some(msg) = st.take_unexpected(&drain) {
         consume_unexpected(msg, &mut bufs, &mut record)?;
+        check_shard_agreement(&st)?;
     }
     if delivered != arrived {
         return Err(format!("{arrived} messages arrived but {delivered} were delivered"));
@@ -463,6 +489,311 @@ fn prop_matching_fifo_per_source_tag_with_shrinking() {
             let minimal = shrink_matching_case(nstreams, ntags, schedule);
             let path = dump_repro(
                 "matching-fifo",
+                &format!("{nstreams} streams x {ntags} tags\n{msg}\n{minimal:?}\n"),
+            );
+            panic!(
+                "case {case} ({nstreams} streams x {ntags} tags): {msg}\n\
+                 minimal failing schedule ({} events, saved to {path}): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Wildcard races across matching shards — seeded, shrinking
+// ----------------------------------------------------------------------
+
+/// One step of a wildcard-race schedule: fully wild receives race exact
+/// receives for the same `(source, tag)` arrivals. Exact entries live in
+/// their `(source, tag)` shard while wild entries live in the overflow
+/// list, so every match decision must compare global post sequences
+/// across the two lists — and a wild take must pick the minimum arrival
+/// sequence across every unexpected shard.
+#[derive(Clone, Copy, Debug)]
+enum WildEv {
+    Arrive { stream: u8, tag: u8 },
+    PostExact { stream: u8, tag: u8 },
+    PostWild,
+}
+
+/// Drive one schedule through a `MatchState` against a flat
+/// reference model (single globally ordered lists, no shards) and
+/// verify that sharding is invisible: an arrival matches the
+/// first-posted live receive whether it sits in a `(source, tag)` shard
+/// or the wild list; an exact post takes the earliest parked arrival of
+/// its pair; a wild post takes the earliest parked arrival overall;
+/// and the per-shard counts stay in agreement throughout. Returns the
+/// violation as an error string so the caller can shrink the schedule.
+fn run_wild_case(nstreams: u8, ntags: u8, schedule: &[WildEv]) -> Result<(), String> {
+    use mpix::mpi::request::ReqInner;
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    // One parked posted receive in the flat model: `None` = fully wild.
+    // Vec order is global post order.
+    struct ModelPost {
+        exact: Option<(u8, u8)>,
+        req: Arc<ReqInner>,
+    }
+
+    let mut st = MatchState::new();
+    let mut posted_model: Vec<ModelPost> = Vec::new();
+    // Parked unexpected arrivals in global arrival order.
+    let mut un_model: VecDeque<(u8, u8, u64)> = VecDeque::new();
+    let mut bufs: Vec<Box<[u8; 8]>> = Vec::new();
+    let mut pending: Vec<Request> = Vec::new();
+    let mut arrival_seq = 0u64;
+    let reply = EpAddr { rank: 1, ep: 0 };
+
+    let mk_env = |stream: u8, tag: u8| Envelope {
+        ctx_id: 0,
+        src_rank: stream as u32,
+        tag: tag as i32,
+        src_idx: stream as i32,
+        dst_idx: 0,
+    };
+
+    // Consume one unexpected message the model says must be
+    // (stream, tag, arrival seq), delivering into a fresh destination
+    // like a real `irecv` that found its match parked.
+    fn consume_expected(
+        msg: UnexpectedMsg,
+        want: (u8, u8, u64),
+        bufs: &mut Vec<Box<[u8; 8]>>,
+    ) -> Result<(), String> {
+        let UnexpectedMsg { env, kind, .. } = msg;
+        let UnexpectedKind::Eager(data) = kind else {
+            return Err("unexpected rendezvous in an eager-only schedule".into());
+        };
+        let seq = u64::from_le_bytes(
+            data.as_slice().try_into().map_err(|_| "short payload".to_string())?,
+        );
+        if (env.src_idx as u8, env.tag as u8, seq) != want {
+            return Err(format!(
+                "took unexpected (stream {}, tag {}, seq {seq}) but global arrival order \
+                 says (stream {}, tag {}, seq {})",
+                env.src_idx, env.tag, want.0, want.1, want.2
+            ));
+        }
+        bufs.push(Box::new([0u8; 8]));
+        let buf = bufs.last_mut().unwrap();
+        let dest = RecvDest::new(&mut buf[..], Datatype::U8, 8).map_err(|e| e.to_string())?;
+        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+        assert!(req.inner().try_claim());
+        match dest.deliver(&env, &data) {
+            Ok(status) => req.inner().complete_ok(status),
+            Err(e) => return Err(format!("deliver failed: {e}")),
+        }
+        Ok(())
+    }
+
+    for ev in schedule {
+        match *ev {
+            WildEv::Arrive { stream, tag } => {
+                let (stream, tag) = (stream % nstreams, tag % ntags);
+                let env = mk_env(stream, tag);
+                let data = arrival_seq.to_le_bytes().to_vec();
+                // The flat model's winner: the earliest-posted live entry
+                // matching this arrival, exact or wild.
+                let winner = posted_model
+                    .iter()
+                    .position(|m| m.exact.is_none() || m.exact == Some((stream, tag)));
+                match st.match_posted(&env) {
+                    Some(posted) => {
+                        let Some(w) = winner else {
+                            return Err(format!(
+                                "arrival (stream {stream}, tag {tag}) matched a posted \
+                                 receive but no live posted entry matches it"
+                            ));
+                        };
+                        let expect = posted_model.remove(w);
+                        if !Arc::ptr_eq(&posted.req, &expect.req) {
+                            return Err(format!(
+                                "arrival (stream {stream}, tag {tag}) matched the wrong \
+                                 posted receive: the first-posted winner was {:?}",
+                                expect.exact
+                            ));
+                        }
+                        match posted.dest.deliver(&env, &data) {
+                            Ok(status) => posted.req.complete_ok(status),
+                            Err(e) => return Err(format!("deliver failed: {e}")),
+                        }
+                    }
+                    None => {
+                        if let Some(w) = winner {
+                            return Err(format!(
+                                "arrival (stream {stream}, tag {tag}) went unexpected past \
+                                 a live posted match ({:?})",
+                                posted_model[w].exact
+                            ));
+                        }
+                        st.push_unexpected(UnexpectedMsg {
+                            env,
+                            reply_ep: reply,
+                            kind: UnexpectedKind::Eager(data),
+                        });
+                        un_model.push_back((stream, tag, arrival_seq));
+                    }
+                }
+                arrival_seq += 1;
+            }
+            WildEv::PostExact { stream, tag } => {
+                let (stream, tag) = (stream % nstreams, tag % ntags);
+                let pattern = MatchPattern {
+                    ctx_id: 0,
+                    src: stream as i32,
+                    tag: tag as i32,
+                    src_idx: stream as i32,
+                    dst_idx: 0,
+                };
+                let want = un_model.iter().position(|&(s, t, _)| (s, t) == (stream, tag));
+                match st.take_unexpected(&pattern) {
+                    Some(msg) => {
+                        let Some(i) = want else {
+                            return Err(format!(
+                                "exact post (stream {stream}, tag {tag}) took an unexpected \
+                                 message the model does not hold"
+                            ));
+                        };
+                        let expect = un_model.remove(i).unwrap();
+                        consume_expected(msg, expect, &mut bufs)?;
+                    }
+                    None => {
+                        if want.is_some() {
+                            return Err(format!(
+                                "exact post (stream {stream}, tag {tag}) missed a parked \
+                                 unexpected match"
+                            ));
+                        }
+                        bufs.push(Box::new([0u8; 8]));
+                        let buf = bufs.last_mut().unwrap();
+                        let dest = RecvDest::new(&mut buf[..], Datatype::U8, 8)
+                            .map_err(|e| e.to_string())?;
+                        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+                        posted_model.push(ModelPost {
+                            exact: Some((stream, tag)),
+                            req: req.inner().clone(),
+                        });
+                        st.push_posted(PostedRecv { pattern, dest, req: req.inner().clone() });
+                        pending.push(req);
+                    }
+                }
+            }
+            WildEv::PostWild => {
+                let pattern = MatchPattern {
+                    ctx_id: 0,
+                    src: ANY_SOURCE,
+                    tag: ANY_TAG,
+                    src_idx: ANY_INDEX,
+                    dst_idx: 0,
+                };
+                match st.take_unexpected(&pattern) {
+                    Some(msg) => {
+                        // A wild take must pick the globally earliest
+                        // arrival across every unexpected shard.
+                        let Some(expect) = un_model.pop_front() else {
+                            return Err(
+                                "wild post took a message the model does not hold".into()
+                            );
+                        };
+                        consume_expected(msg, expect, &mut bufs)?;
+                    }
+                    None => {
+                        if let Some(&(s, t, q)) = un_model.front() {
+                            return Err(format!(
+                                "wild post missed parked arrival (stream {s}, tag {t}, seq {q})"
+                            ));
+                        }
+                        bufs.push(Box::new([0u8; 8]));
+                        let buf = bufs.last_mut().unwrap();
+                        let dest = RecvDest::new(&mut buf[..], Datatype::U8, 8)
+                            .map_err(|e| e.to_string())?;
+                        let req = Request::pending(ReqKind::Recv, 0, u32::MAX, None);
+                        posted_model.push(ModelPost { exact: None, req: req.inner().clone() });
+                        st.push_posted(PostedRecv { pattern, dest, req: req.inner().clone() });
+                        pending.push(req);
+                    }
+                }
+            }
+        }
+        check_shard_agreement(&st)?;
+    }
+
+    // Drain with wild receives: global arrival order, down to empty.
+    let drain =
+        MatchPattern { ctx_id: 0, src: ANY_SOURCE, tag: ANY_TAG, src_idx: ANY_INDEX, dst_idx: 0 };
+    while let Some(msg) = st.take_unexpected(&drain) {
+        let Some(expect) = un_model.pop_front() else {
+            return Err("drain took a message the model does not hold".into());
+        };
+        consume_expected(msg, expect, &mut bufs)?;
+        check_shard_agreement(&st)?;
+    }
+    if let Some(&(s, t, q)) = un_model.front() {
+        return Err(format!("drain lost arrival (stream {s}, tag {t}, seq {q})"));
+    }
+    // `pending` holds never-matched receives; dropping them exercises the
+    // cancel-on-drop path (must not affect the verdict).
+    drop(pending);
+    Ok(())
+}
+
+/// Delta-debugging shrink, same shape as `shrink_matching_case`.
+fn shrink_wild_case(nstreams: u8, ntags: u8, schedule: Vec<WildEv>) -> Vec<WildEv> {
+    let mut cur = schedule;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            let end = (i + chunk).min(cand.len());
+            cand.drain(i..end);
+            if run_wild_case(nstreams, ntags, &cand).is_err() {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            return cur;
+        }
+        chunk /= 2;
+    }
+}
+
+/// Wildcard receives racing exact receives for the same `(source, tag)`
+/// arrivals across 2–4 streams: sharding must be invisible next to a
+/// flat globally ordered model — first-posted wins across the shard/wild
+/// split, wild takes drain in global arrival order, and the per-shard
+/// counts agree with the parked totals after every event. Failing
+/// schedules shrink to a minimal repro (`PALLAS_PROP_ITERS` scales the
+/// sweep).
+#[test]
+fn prop_matching_wildcard_race_across_shards_with_shrinking() {
+    let mut rng = Rng::new(0x511A_12D5);
+    for case in 0..prop_cases(16) {
+        let nstreams = 2 + rng.below(3) as u8; // 2..=4 sender streams
+        let ntags = 1 + rng.below(3) as u8; // 1..=3 tags
+        let len = 8 + rng.below(56) as usize;
+        let mut schedule = Vec::with_capacity(len);
+        for _ in 0..len {
+            schedule.push(match rng.below(10) {
+                0..=4 => WildEv::Arrive {
+                    stream: rng.below(nstreams as u64) as u8,
+                    tag: rng.below(ntags as u64) as u8,
+                },
+                5..=7 => WildEv::PostExact {
+                    stream: rng.below(nstreams as u64) as u8,
+                    tag: rng.below(ntags as u64) as u8,
+                },
+                _ => WildEv::PostWild,
+            });
+        }
+        if let Err(msg) = run_wild_case(nstreams, ntags, &schedule) {
+            let minimal = shrink_wild_case(nstreams, ntags, schedule);
+            let path = dump_repro(
+                "matching-wildcard-race",
                 &format!("{nstreams} streams x {ntags} tags\n{msg}\n{minimal:?}\n"),
             );
             panic!(
@@ -1758,6 +2089,21 @@ fn prop_stream_lifecycle_under_concurrency() {
                 wc.iter().all(|&c| c == wc[0]) && tc.iter().all(|&c| c == tc[0]),
                 "{repro}: registry shards diverged (windows {wc:?}, trackers {tc:?})"
             );
+            // Matching-engine mirror of the registry checks: with every
+            // send paired to a completed recv and the barrier done, each
+            // VCI's matching shards (wildcard list last) have drained.
+            for vci in 0..=(explicit as u16) {
+                let mc = p.matching_shard_counts(vci);
+                assert_eq!(
+                    mc.len(),
+                    N_MATCH_SHARDS + 1,
+                    "{repro}: VCI {vci} shard-count vector shape"
+                );
+                assert!(
+                    mc.iter().all(|&c| c == 0),
+                    "{repro}: VCI {vci} matching shards not quiescent {mc:?}"
+                );
+            }
             p.win_free(win)?;
             assert!(
                 p.win_registry_shard_counts().iter().all(|&c| c == 0),
