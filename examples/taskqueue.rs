@@ -33,36 +33,44 @@ fn main() -> Result<()> {
 
         if p.rank() == 1 {
             // ---- workers ----
-            std::thread::scope(|scope| {
+            // Workers return Result instead of unwrapping in place: a
+            // kernel or send failure propagates through the scope join
+            // into the example's own Result, rather than panicking the
+            // worker thread (which would poison the whole scope).
+            std::thread::scope(|scope| -> Result<()> {
+                let mut workers = Vec::new();
                 for w in 0..WORKERS {
                     let p = p.clone();
                     let comm = &comm;
                     let exe = exe.clone();
-                    scope.spawn(move || {
+                    workers.push(scope.spawn(move || -> Result<()> {
                         for t in 0..TASKS_PER_WORKER {
                             let task_id = (w * TASKS_PER_WORKER + t) as u32;
                             let alpha = [task_id as f32];
                             let beta = [2.0f32];
                             let x = vec![1.0f32; N];
                             let y = vec![0.5f32; N];
-                            let out = exe
-                                .run_f32(&[
-                                    (&alpha, &[1]),
-                                    (&beta, &[1]),
-                                    (&x, &[N]),
-                                    (&y, &[N]),
-                                ])
-                                .expect("axpby kernel");
+                            let out = exe.run_f32(&[
+                                (&alpha, &[1]),
+                                (&beta, &[1]),
+                                (&x, &[N]),
+                                (&y, &[N]),
+                            ])?;
                             let sum: f32 = out.iter().sum();
                             // result record: [task_id, sum]
                             let mut msg = [0u8; 8];
                             msg[..4].copy_from_slice(&task_id.to_le_bytes());
                             msg[4..].copy_from_slice(&sum.to_le_bytes());
-                            p.stream_send(&msg, 0, 0, comm, w as i32, 0).expect("send result");
+                            p.stream_send(&msg, 0, 0, comm, w as i32, 0)?;
                         }
-                    });
+                        Ok(())
+                    }));
                 }
-            });
+                for (w, h) in workers.into_iter().enumerate() {
+                    h.join().map_err(|_| MpiErr::Internal(format!("worker {w} panicked")))??;
+                }
+                Ok(())
+            })?;
         } else {
             // ---- the single polling thread (rank 0) ----
             let total = WORKERS * TASKS_PER_WORKER;

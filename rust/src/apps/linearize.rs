@@ -1,0 +1,329 @@
+//! Offline linearizability checking for FIFO-queue histories
+//! (Wing & Gong, "Testing and Verifying Concurrent Objects", 1993).
+//!
+//! A *history* is a set of completed client operations, each carrying
+//! its invocation and response timestamps on one process-wide monotonic
+//! clock (the simulated world runs every rank in one process, so a
+//! single `Instant` anchor gives a true global clock — no clock-skew
+//! caveats apply). The history is **linearizable** iff there is a total
+//! order of the operations that (a) respects real time — if op A's
+//! response precedes op B's invocation, A orders before B — and (b) is
+//! a legal sequential FIFO-queue execution: every dequeue observes the
+//! value at the head of the queue produced by the prefix before it (or
+//! `None` on an empty queue).
+//!
+//! The search is the classic Wing–Gong recursion: at each step the
+//! candidates are the remaining operations whose invocation does not
+//! follow every remaining response (minimal-response rule); each legal
+//! candidate is applied to a model queue and the search recurses,
+//! memoizing visited (remaining-set, queue-contents) states so
+//! equivalent interleavings are explored once. On success the witness
+//! linearization (indices into the input history) is returned; failures
+//! distinguish "no legal order exists" from a malformed input or an
+//! exhausted state budget, so a gate never confuses "too hard to check"
+//! with "broken queue".
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+
+/// One sequential queue operation, with its observed outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueOp {
+    /// `enqueue(value)` — always succeeds.
+    Enqueue(u64),
+    /// `dequeue()` that observed `Some(value)`, or `None` on empty.
+    Dequeue(Option<u64>),
+}
+
+/// One completed operation in a recorded history: what it did and when.
+#[derive(Debug, Clone, Copy)]
+pub struct HistoryOp {
+    pub op: QueueOp,
+    /// Invocation time, nanoseconds on the process-wide clock.
+    pub invoke_ns: u64,
+    /// Response time; must be `>= invoke_ns`.
+    pub resp_ns: u64,
+}
+
+/// Why a history failed to validate.
+#[derive(Debug)]
+pub enum LinError {
+    /// `hist[index]` has `resp_ns < invoke_ns` — a recording bug, not a
+    /// queue bug.
+    Malformed { index: usize },
+    /// The search exhausted every real-time-respecting order without
+    /// finding a legal sequential execution: the history is **not
+    /// linearizable**. `states` is how many distinct search states were
+    /// visited before concluding.
+    NotLinearizable { states: u64 },
+    /// The state budget ran out before the search concluded either way.
+    BudgetExceeded { budget: u64 },
+}
+
+impl fmt::Display for LinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinError::Malformed { index } => {
+                write!(f, "history op {index} responds before it is invoked")
+            }
+            LinError::NotLinearizable { states } => write!(
+                f,
+                "history is not linearizable (no legal FIFO order; {states} states searched)"
+            ),
+            LinError::BudgetExceeded { budget } => {
+                write!(f, "linearizability search exceeded its {budget}-state budget")
+            }
+        }
+    }
+}
+
+/// Default search-state budget. Recorded `apps/queue` histories are a
+/// few hundred ops whose total order is already nearly serial (every
+/// client blocks for its response), so real checks visit orders of
+/// magnitude fewer states; the budget exists to turn a pathological
+/// adversarial input into an error instead of a hang.
+pub const DEFAULT_STATE_BUDGET: u64 = 4_000_000;
+
+/// Check a FIFO-queue history for linearizability with the
+/// [`DEFAULT_STATE_BUDGET`]. On success returns the witness
+/// linearization: indices into `hist` in linearized order.
+pub fn check_queue_history(hist: &[HistoryOp]) -> Result<Vec<usize>, LinError> {
+    check_queue_history_with_budget(hist, DEFAULT_STATE_BUDGET)
+}
+
+/// [`check_queue_history`] with an explicit search-state budget.
+pub fn check_queue_history_with_budget(
+    hist: &[HistoryOp],
+    budget: u64,
+) -> Result<Vec<usize>, LinError> {
+    for (index, h) in hist.iter().enumerate() {
+        if h.resp_ns < h.invoke_ns {
+            return Err(LinError::Malformed { index });
+        }
+    }
+    let mut search = Search { hist, visited: HashSet::new(), states: 0, budget };
+    let mut remaining = vec![true; hist.len()];
+    let mut queue = VecDeque::new();
+    let mut witness = Vec::with_capacity(hist.len());
+    if search.dfs(&mut remaining, hist.len(), &mut queue, &mut witness)? {
+        Ok(witness)
+    } else {
+        Err(LinError::NotLinearizable { states: search.states })
+    }
+}
+
+struct Search<'a> {
+    hist: &'a [HistoryOp],
+    /// Memo of dead states: (remaining-set bitmap, queue contents).
+    visited: HashSet<(Vec<u64>, Vec<u64>)>,
+    states: u64,
+    budget: u64,
+}
+
+impl Search<'_> {
+    fn key(&self, remaining: &[bool], queue: &VecDeque<u64>) -> (Vec<u64>, Vec<u64>) {
+        let mut bits = vec![0u64; (remaining.len() + 63) / 64];
+        for (i, &r) in remaining.iter().enumerate() {
+            if r {
+                bits[i / 64] |= 1 << (i % 64);
+            }
+        }
+        (bits, queue.iter().copied().collect())
+    }
+
+    fn dfs(
+        &mut self,
+        remaining: &mut [bool],
+        n_left: usize,
+        queue: &mut VecDeque<u64>,
+        witness: &mut Vec<usize>,
+    ) -> Result<bool, LinError> {
+        if n_left == 0 {
+            return Ok(true);
+        }
+        self.states += 1;
+        if self.states > self.budget {
+            return Err(LinError::BudgetExceeded { budget: self.budget });
+        }
+        let key = self.key(remaining, queue);
+        if self.visited.contains(&key) {
+            return Ok(false);
+        }
+        // Minimal-response rule: a candidate's invocation must not
+        // follow some remaining op's response (that op would be ordered
+        // strictly before it by real time).
+        let min_resp = remaining
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r)
+            .map(|(i, _)| self.hist[i].resp_ns)
+            .min()
+            .expect("n_left > 0");
+        for i in 0..remaining.len() {
+            if !remaining[i] || self.hist[i].invoke_ns > min_resp {
+                continue;
+            }
+            let ok = match self.hist[i].op {
+                QueueOp::Enqueue(v) => {
+                    queue.push_back(v);
+                    remaining[i] = false;
+                    witness.push(i);
+                    let r = self.dfs(remaining, n_left - 1, queue, witness)?;
+                    if !r {
+                        witness.pop();
+                        remaining[i] = true;
+                        queue.pop_back();
+                    }
+                    r
+                }
+                QueueOp::Dequeue(None) => {
+                    if !queue.is_empty() {
+                        false
+                    } else {
+                        remaining[i] = false;
+                        witness.push(i);
+                        let r = self.dfs(remaining, n_left - 1, queue, witness)?;
+                        if !r {
+                            witness.pop();
+                            remaining[i] = true;
+                        }
+                        r
+                    }
+                }
+                QueueOp::Dequeue(Some(v)) => {
+                    if queue.front() != Some(&v) {
+                        false
+                    } else {
+                        queue.pop_front();
+                        remaining[i] = false;
+                        witness.push(i);
+                        let r = self.dfs(remaining, n_left - 1, queue, witness)?;
+                        if !r {
+                            witness.pop();
+                            remaining[i] = true;
+                            queue.push_front(v);
+                        }
+                        r
+                    }
+                }
+            };
+            if ok {
+                return Ok(true);
+            }
+        }
+        self.visited.insert(key);
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(op: QueueOp, invoke_ns: u64, resp_ns: u64) -> HistoryOp {
+        HistoryOp { op, invoke_ns, resp_ns }
+    }
+
+    #[test]
+    fn empty_and_serial_histories_validate() {
+        assert_eq!(check_queue_history(&[]).unwrap(), Vec::<usize>::new());
+        // enq 1, enq 2, deq->1, deq->2, deq->empty — strictly serial.
+        let h = [
+            op(QueueOp::Enqueue(1), 0, 10),
+            op(QueueOp::Enqueue(2), 20, 30),
+            op(QueueOp::Dequeue(Some(1)), 40, 50),
+            op(QueueOp::Dequeue(Some(2)), 60, 70),
+            op(QueueOp::Dequeue(None), 80, 90),
+        ];
+        assert_eq!(check_queue_history(&h).unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn concurrent_enqueues_may_order_either_way() {
+        // Two overlapping enqueues; the dequeues observe them in the
+        // order 2 then 1, which is legal only because the enqueues were
+        // concurrent — the witness must order enq(2) first.
+        let h = [
+            op(QueueOp::Enqueue(1), 0, 100),
+            op(QueueOp::Enqueue(2), 0, 100),
+            op(QueueOp::Dequeue(Some(2)), 200, 210),
+            op(QueueOp::Dequeue(Some(1)), 220, 230),
+        ];
+        let w = check_queue_history(&h).unwrap();
+        assert_eq!(w, vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn real_time_order_is_enforced() {
+        // enq(1) fully precedes enq(2), so a dequeue order of 2 before 1
+        // is a FIFO violation — not linearizable.
+        let h = [
+            op(QueueOp::Enqueue(1), 0, 10),
+            op(QueueOp::Enqueue(2), 20, 30),
+            op(QueueOp::Dequeue(Some(2)), 40, 50),
+            op(QueueOp::Dequeue(Some(1)), 60, 70),
+        ];
+        assert!(matches!(check_queue_history(&h), Err(LinError::NotLinearizable { .. })));
+    }
+
+    #[test]
+    fn dequeue_of_a_never_enqueued_value_fails() {
+        let h = [
+            op(QueueOp::Enqueue(7), 0, 10),
+            op(QueueOp::Dequeue(Some(9)), 20, 30),
+        ];
+        assert!(matches!(check_queue_history(&h), Err(LinError::NotLinearizable { .. })));
+    }
+
+    #[test]
+    fn lost_enqueue_fails() {
+        // A value enqueued before any dequeue starts, yet a later
+        // dequeue reports empty while nothing consumed it.
+        let h = [
+            op(QueueOp::Enqueue(3), 0, 10),
+            op(QueueOp::Dequeue(None), 20, 30),
+        ];
+        assert!(matches!(check_queue_history(&h), Err(LinError::NotLinearizable { .. })));
+    }
+
+    #[test]
+    fn concurrent_empty_dequeue_can_linearize_before_the_enqueue() {
+        // deq->None overlaps enq(1): legal iff the dequeue linearizes
+        // first. The final deq->Some(1) pins the enqueue's effect.
+        let h = [
+            op(QueueOp::Enqueue(1), 0, 100),
+            op(QueueOp::Dequeue(None), 0, 100),
+            op(QueueOp::Dequeue(Some(1)), 200, 210),
+        ];
+        let w = check_queue_history(&h).unwrap();
+        assert_eq!(w, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn malformed_timestamps_are_reported_as_such() {
+        let h = [op(QueueOp::Enqueue(1), 10, 5)];
+        assert!(matches!(check_queue_history(&h), Err(LinError::Malformed { index: 0 })));
+    }
+
+    #[test]
+    fn zero_budget_reports_exhaustion_not_a_verdict() {
+        let h = [op(QueueOp::Enqueue(1), 0, 10)];
+        assert!(matches!(
+            check_queue_history_with_budget(&h, 0),
+            Err(LinError::BudgetExceeded { budget: 0 })
+        ));
+    }
+
+    #[test]
+    fn duplicate_values_are_handled_by_the_model_queue() {
+        // Duplicate payloads are legal (the model queue is value-based,
+        // not identity-based): enq 5, enq 5, deq->5, deq->5.
+        let h = [
+            op(QueueOp::Enqueue(5), 0, 10),
+            op(QueueOp::Enqueue(5), 20, 30),
+            op(QueueOp::Dequeue(Some(5)), 40, 50),
+            op(QueueOp::Dequeue(Some(5)), 60, 70),
+        ];
+        check_queue_history(&h).unwrap();
+    }
+}

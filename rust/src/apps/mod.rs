@@ -1,0 +1,21 @@
+//! The apps tier: real distributed algorithms run as end-to-end
+//! correctness workloads over the runtime, where the microbenchmarks
+//! only measure isolated paths.
+//!
+//! The first (and defining) resident is a **linearizable distributed
+//! FIFO queue** ([`queue`]) — N ranks, each running client threads on
+//! thread-mapped streams plus one queue-server loop draining
+//! invoke/req/ack rounds through wildcard (`ANY_SOURCE` + `ANY_INDEX`)
+//! probes, with vector-clock timestamps totally ordering concurrent
+//! invocations (Lamport's total-order multicast). Every run records a
+//! timed operation history that the offline Wing–Gong checker
+//! ([`linearize`]) then validates; the `apps/queue` scenario hard-fails
+//! on any non-linearizable history, which makes the whole wildcard
+//! matching + multi-VCI progress stack a gated correctness surface, not
+//! just a throughput number.
+
+pub mod linearize;
+pub mod queue;
+
+pub use linearize::{check_queue_history, HistoryOp, LinError, QueueOp};
+pub use queue::{run_queue_workload, QueueWorkload, QueueWorkloadResult};

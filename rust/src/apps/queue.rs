@@ -1,0 +1,633 @@
+//! A linearizable distributed FIFO queue over pallas — the apps tier's
+//! end-to-end workload (Lamport total-order multicast with vector-clock
+//! timestamps, the classic `AsyncQueueAlgorithm` shape).
+//!
+//! # Topology
+//!
+//! Every rank runs one **queue server** thread plus `clients` client
+//! threads, each on its own thread-mapped stream
+//! ([`Proc::stream_for_current_thread`]) so every thread has a
+//! dedicated VCI. One multiplex stream communicator carries the whole
+//! protocol: stream index 0 is the server's, indices `1..=clients` are
+//! the clients'.
+//!
+//! # Protocol
+//!
+//! A client sends `INVOKE` to its **local** server (a self-send on the
+//! fabric) and blocks for the `RESP`. The server stamps each invocation
+//! with its vector clock and multicasts a `REQ` to every peer server;
+//! peers merge the timestamp and multicast an `ACK` stamped with their
+//! own merged clock. All server↔server traffic travels on one
+//! `(source stream 0, tag, route)` channel per rank pair, so it is FIFO
+//! — the property Lamport's stability argument needs.
+//!
+//! Every replica applies pending operations in total-timestamp order
+//! — key `(Σ vclock, origin rank)`, unique because same-origin sums
+//! strictly increase — and only once the head operation holds acks from
+//! every rank other than its origin and the replica itself (the REQ
+//! covers the origin's channel, the replica covers its own). At that
+//! point no future message can carry a smaller key: any later stamp at
+//! any other rank follows that rank's ack, whose merged clock already
+//! dominates the head's timestamp. The origin's server answers the
+//! local client when *it* applies the op; because a response therefore
+//! implies acks from every rank, an operation invoked after another's
+//! response always stamps a strictly larger key — real-time order is
+//! respected, and the recorded history is linearizable **by
+//! construction**. The [`crate::apps::linearize`] checker re-verifies
+//! that claim offline against what actually ran.
+//!
+//! # Why it earns its keep as a gate
+//!
+//! The server loop is a wildcard dispatch — `stream_iprobe(ANY_SOURCE,
+//! …, ANY_INDEX, 0)` sizing an exact receive from the probed
+//! [`Status`](crate::mpi::status::Status) — running under an N-to-N
+//! small-message storm from `ranks × clients` concurrently operating
+//! threads: exactly the interleaved wildcard-matching traffic the
+//! microbenchmark sweeps never generate, and the workload that flushed
+//! out the `Proc::probe` busy-spin and `wait_any` head-starvation bugs
+//! this module rode in with.
+//!
+//! # Termination
+//!
+//! Total op count `T = ranks × clients × ops_per_client` is known
+//! globally; a server exits once it has applied `T` ops. Applying every
+//! op requires having received every `INVOKE`, `REQ` and counted `ACK`
+//! destined to this rank, so exit implies the rank's inbound protocol
+//! traffic is fully drained — no drain round is needed.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::{Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::apps::linearize::{HistoryOp, QueueOp};
+use crate::config::Config;
+use crate::error::{MpiErr, Result};
+use crate::mpi::comm::Comm;
+use crate::mpi::probe::ProbeBackoff;
+use crate::mpi::world::{Proc, World};
+use crate::mpi::ANY_SOURCE;
+use crate::stream::{MpixStream, ANY_INDEX};
+
+/// Tag carrying all server-inbound traffic (`INVOKE` from local
+/// clients, `REQ`/`ACK` between servers) — one tag so each rank pair's
+/// server channel is a single FIFO route.
+const TAG_Q: i32 = 17;
+/// Tag for server → local-client responses (addressed by the client's
+/// stream index, so one tag serves every client).
+const TAG_R: i32 = 18;
+
+const MSG_INVOKE: u8 = 0;
+const MSG_REQ: u8 = 1;
+const MSG_ACK: u8 = 2;
+
+const KIND_ENQ: u8 = 0;
+const KIND_DEQ: u8 = 1;
+
+/// Parameters for one queue-workload run.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueWorkload {
+    /// Simulated rank (replica) count; ≥ 1.
+    pub ranks: usize,
+    /// Client threads per rank, each on its own thread-mapped stream.
+    pub clients: usize,
+    /// Operations each client performs (blocking, one at a time).
+    pub ops_per_client: usize,
+    /// Drives each client's enqueue/dequeue coin flips.
+    pub seed: u64,
+}
+
+/// What a run produced: the recorded operation history (one entry per
+/// completed client op, timestamped on one process-wide clock) plus
+/// wall-clock aggregates.
+#[derive(Debug, Clone)]
+pub struct QueueWorkloadResult {
+    pub history: Vec<HistoryOp>,
+    pub elapsed: Duration,
+    pub total_ops: u64,
+    pub ops_per_sec: f64,
+}
+
+/// Run the distributed queue workload and return the recorded history.
+/// Validation is the caller's step ([`crate::apps::check_queue_history`])
+/// — the scenario hard-fails on a rejected history, tests assert on it.
+pub fn run_queue_workload(wl: &QueueWorkload) -> Result<QueueWorkloadResult> {
+    if wl.ranks == 0 || wl.clients == 0 || wl.ops_per_client == 0 {
+        return Err(MpiErr::Arg(format!(
+            "queue workload needs ranks/clients/ops >= 1, got {wl:?}"
+        )));
+    }
+    let threads = wl.clients + 1; // server + clients
+    let config = Config { explicit_pool: threads, ..Default::default() };
+    let world = World::builder().ranks(wl.ranks).config(config).build()?;
+    let total_ops = (wl.ranks * wl.clients * wl.ops_per_client) as u64;
+
+    // One process hosts every simulated rank, so a single monotonic
+    // anchor is a true global clock for the history timestamps.
+    let anchor = Instant::now();
+    let history: Mutex<Vec<HistoryOp>> = Mutex::new(Vec::with_capacity(total_ops as usize));
+    let elapsed_slot: Mutex<Option<Duration>> = Mutex::new(None);
+    let wl = *wl;
+
+    world.run(|p| {
+        run_rank(p, &wl, total_ops, &anchor, &history, &elapsed_slot)
+    })?;
+
+    let elapsed = elapsed_slot
+        .into_inner()
+        .map_err(|_| MpiErr::Internal("apps/queue: elapsed slot poisoned".into()))?
+        .ok_or_else(|| MpiErr::Internal("apps/queue: no timing recorded".into()))?;
+    let history = history
+        .into_inner()
+        .map_err(|_| MpiErr::Internal("apps/queue: history poisoned".into()))?;
+    if history.len() as u64 != total_ops {
+        return Err(MpiErr::Internal(format!(
+            "apps/queue: recorded {} ops, expected {total_ops}",
+            history.len()
+        )));
+    }
+    Ok(QueueWorkloadResult {
+        history,
+        elapsed,
+        total_ops,
+        ops_per_sec: total_ops as f64 / elapsed.as_secs_f64().max(f64::MIN_POSITIVE),
+    })
+}
+
+/// One rank's closure body: rendezvous thread-mapped streams into a
+/// single multiplex comm (the `msgrate/thread-mapped` discipline:
+/// workers register, the main thread performs the collective in
+/// deterministic order, setup errors still release every barrier), run
+/// the server + client threads, and tear down so thread-exit
+/// reclamation returns every VCI lease.
+fn run_rank(
+    p: &Proc,
+    wl: &QueueWorkload,
+    total_ops: u64,
+    anchor: &Instant,
+    history: &Mutex<Vec<HistoryOp>>,
+    elapsed_slot: &Mutex<Option<Duration>>,
+) -> Result<()> {
+    const W: &str = "apps/queue";
+    let threads = wl.clients + 1;
+    let me = p.rank();
+    // Rendezvous points: threads register streams -> main builds the
+    // comm (collective) -> threads clone their handle -> main drops the
+    // original -> traffic -> every handle dropped before any thread
+    // exits (`done`), so TLS reclamation finds the streams free.
+    let ready = Barrier::new(threads + 1);
+    let go = Barrier::new(threads + 1);
+    let cloned = Barrier::new(threads + 1);
+    let done = Barrier::new(threads + 1);
+    let streams: Vec<Mutex<Option<MpixStream>>> =
+        (0..threads).map(|_| Mutex::new(None)).collect();
+    let comm_slot: Mutex<Option<Comm>> = Mutex::new(None);
+    let t0_cell: Mutex<Option<Instant>> = Mutex::new(None);
+
+    std::thread::scope(|sc| -> Result<()> {
+        let mut handles = Vec::with_capacity(threads);
+        for slot in 0..threads {
+            let p = p.clone();
+            let wl = *wl;
+            let (ready, go, cloned, done) = (&ready, &go, &cloned, &done);
+            let (streams, comm_slot) = (&streams, &comm_slot);
+            handles.push(sc.spawn(move || -> Result<()> {
+                let registered = p.stream_for_current_thread().map(|s| {
+                    if let Ok(mut sl) = streams[slot].lock() {
+                        *sl = Some(s);
+                    }
+                });
+                // Barrier discipline no matter what: the main thread
+                // counts on threads+1 arrivals at every point.
+                ready.wait();
+                go.wait();
+                let comm = comm_slot.lock().ok().and_then(|sl| sl.clone());
+                cloned.wait();
+                // An empty slot means setup failed on the main thread
+                // (which reports the error); skip the traffic.
+                let body = match (&comm, registered) {
+                    (Some(c), Ok(())) => {
+                        if slot == 0 {
+                            server_loop(&p, c, wl.ranks, total_ops)
+                        } else {
+                            client_loop(&p, c, slot, &wl, anchor, history)
+                        }
+                    }
+                    _ => Ok(()),
+                };
+                drop(comm);
+                done.wait();
+                body
+            }));
+        }
+        ready.wait();
+        // Collective creation on the main thread; every rank iterates
+        // identically, so the collectives match. Any failure here must
+        // still reach the barriers — the workers are parked on them.
+        let setup = (|| -> Result<()> {
+            let mut ss = Vec::with_capacity(threads);
+            for (i, slot) in streams.iter().enumerate() {
+                let s = slot
+                    .lock()
+                    .map_err(|_| MpiErr::Internal(format!("{W}: stream slot {i} poisoned")))?
+                    .clone()
+                    .ok_or_else(|| {
+                        MpiErr::Internal(format!("{W}: thread {i} registered no stream"))
+                    })?;
+                ss.push(s);
+            }
+            let c = p.stream_comm_create_multiple(p.world_comm(), &ss)?;
+            *comm_slot
+                .lock()
+                .map_err(|_| MpiErr::Internal(format!("{W}: comm slot poisoned")))? = Some(c);
+            // Drop the main thread's stream handles: only the registry
+            // and the comm keep them alive from here on.
+            for slot in &streams {
+                if let Ok(mut sl) = slot.lock() {
+                    *sl = None;
+                }
+            }
+            drop(ss);
+            p.barrier(p.world_comm())?;
+            if let Ok(mut t0) = t0_cell.lock() {
+                *t0 = Some(Instant::now());
+            }
+            Ok(())
+        })();
+        go.wait();
+        cloned.wait();
+        // Threads hold their clones; release the original so that by
+        // `done` no Comm reference survives and thread-exit reclamation
+        // can free the leases.
+        if let Ok(mut sl) = comm_slot.lock() {
+            *sl = None;
+        }
+        done.wait();
+        let mut first_err = setup;
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h
+                .join()
+                .map_err(|_| MpiErr::Internal(format!("{W}: thread {i} panicked")))
+                .and_then(|r| r);
+            if first_err.is_ok() {
+                first_err = r;
+            }
+        }
+        first_err
+    })?;
+    // All local work done and every peer's (our server applied every
+    // op, which needs their final messages); sync so the clock covers
+    // full global delivery.
+    p.barrier(p.world_comm())?;
+    let t0 = t0_cell
+        .into_inner()
+        .map_err(|_| MpiErr::Internal(format!("{W}: t0 cell poisoned")))?
+        .ok_or_else(|| MpiErr::Internal(format!("{W}: timed phase never started")))?;
+    let dt = t0.elapsed();
+    if me == 0 {
+        if let Ok(mut sl) = elapsed_slot.lock() {
+            *sl = Some(dt);
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Wire encoding (little-endian, type byte first)
+// ----------------------------------------------------------------------
+
+fn rd_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn rd_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// `INVOKE { client, kind, value, cseq }` — 16 bytes.
+fn enc_invoke(client: u16, kind: u8, value: u64, cseq: u32) -> [u8; 16] {
+    let mut m = [0u8; 16];
+    m[0] = MSG_INVOKE;
+    m[1..3].copy_from_slice(&client.to_le_bytes());
+    m[3] = kind;
+    m[4..12].copy_from_slice(&value.to_le_bytes());
+    m[12..16].copy_from_slice(&cseq.to_le_bytes());
+    m
+}
+
+/// `REQ { origin, seq, client, cseq, kind, value, vclock[n] }`.
+fn enc_req(
+    origin: u32,
+    seq: u32,
+    client: u16,
+    cseq: u32,
+    kind: u8,
+    value: u64,
+    vc: &[u64],
+) -> Vec<u8> {
+    let mut m = Vec::with_capacity(24 + 8 * vc.len());
+    m.push(MSG_REQ);
+    m.extend_from_slice(&origin.to_le_bytes());
+    m.extend_from_slice(&seq.to_le_bytes());
+    m.extend_from_slice(&client.to_le_bytes());
+    m.extend_from_slice(&cseq.to_le_bytes());
+    m.push(kind);
+    m.extend_from_slice(&value.to_le_bytes());
+    for &c in vc {
+        m.extend_from_slice(&c.to_le_bytes());
+    }
+    m
+}
+
+/// `ACK { origin, seq, acker, vclock[n] }`.
+fn enc_ack(origin: u32, seq: u32, acker: u32, vc: &[u64]) -> Vec<u8> {
+    let mut m = Vec::with_capacity(13 + 8 * vc.len());
+    m.push(MSG_ACK);
+    m.extend_from_slice(&origin.to_le_bytes());
+    m.extend_from_slice(&seq.to_le_bytes());
+    m.extend_from_slice(&acker.to_le_bytes());
+    for &c in vc {
+        m.extend_from_slice(&c.to_le_bytes());
+    }
+    m
+}
+
+/// `RESP { cseq, kind, has, value }` — 14 bytes, tag [`TAG_R`].
+fn enc_resp(cseq: u32, kind: u8, result: Option<u64>) -> [u8; 14] {
+    let mut m = [0u8; 14];
+    m[0..4].copy_from_slice(&cseq.to_le_bytes());
+    m[4] = kind;
+    if let Some(v) = result {
+        m[5] = 1;
+        m[6..14].copy_from_slice(&v.to_le_bytes());
+    }
+    m
+}
+
+fn decode_vclock(b: &[u8], n: usize, what: &str) -> Result<Vec<u64>> {
+    if b.len() != 8 * n {
+        return Err(MpiErr::Internal(format!(
+            "apps/queue: {what} carries {} clock bytes, expected {}",
+            b.len(),
+            8 * n
+        )));
+    }
+    Ok((0..n).map(|i| rd_u64(&b[8 * i..])).collect())
+}
+
+// ----------------------------------------------------------------------
+// Server
+// ----------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct PendingOp {
+    client: u16,
+    cseq: u32,
+    kind: u8,
+    value: u64,
+}
+
+/// The per-rank replica loop: wildcard probe → exact recv → dispatch,
+/// applying totally-ordered stable ops until all `total_ops` applied.
+fn server_loop(p: &Proc, comm: &Comm, nranks: usize, total_ops: u64) -> Result<()> {
+    let me = p.rank();
+    let mut vc = vec![0u64; nranks];
+    // Total order: key (Σ vclock, origin, seq). (Σ, origin) is already
+    // unique; seq rides in the key so removal needs no search.
+    let mut pending: BTreeMap<(u64, u32, u32), PendingOp> = BTreeMap::new();
+    // Acks may arrive before their REQ (different FIFO channels), so
+    // they buffer independently of `pending`.
+    let mut acks: HashMap<(u32, u32), HashSet<u32>> = HashMap::new();
+    let mut fifo: VecDeque<u64> = VecDeque::new();
+    let mut next_seq = 0u32;
+    let mut applied = 0u64;
+    let mut backoff = ProbeBackoff::new();
+
+    while applied < total_ops {
+        // The dispatch pattern the probe module documents: one thread
+        // probes the wildcard pattern and consumes it, sizing the recv
+        // from the probed status.
+        let st = loop {
+            if let Some(st) = p.stream_iprobe(ANY_SOURCE, TAG_Q, comm, ANY_INDEX, 0)? {
+                break st;
+            }
+            backoff.pause();
+        };
+        backoff.reset();
+        let mut buf = vec![0u8; st.count];
+        p.stream_recv(&mut buf, st.source as i32, TAG_Q, comm, st.src_idx, 0)?;
+        match buf.first().copied() {
+            Some(MSG_INVOKE) if buf.len() == 16 => {
+                let (client, kind) = (rd_u16(&buf[1..]), buf[3]);
+                let (value, cseq) = (rd_u64(&buf[4..]), rd_u32(&buf[12..]));
+                vc[me as usize] += 1;
+                let sum: u64 = vc.iter().sum();
+                let seq = next_seq;
+                next_seq += 1;
+                pending.insert((sum, me, seq), PendingOp { client, cseq, kind, value });
+                let req = enc_req(me, seq, client, cseq, kind, value, &vc);
+                for r in 0..nranks as u32 {
+                    if r != me {
+                        p.stream_send(&req, r, TAG_Q, comm, 0, 0)?;
+                    }
+                }
+            }
+            Some(MSG_REQ) if buf.len() == 24 + 8 * nranks => {
+                let (origin, seq) = (rd_u32(&buf[1..]), rd_u32(&buf[5..]));
+                let (client, cseq) = (rd_u16(&buf[9..]), rd_u32(&buf[11..]));
+                let (kind, value) = (buf[15], rd_u64(&buf[16..]));
+                let ts = decode_vclock(&buf[24..], nranks, "REQ")?;
+                for (c, &t) in vc.iter_mut().zip(&ts) {
+                    *c = (*c).max(t);
+                }
+                vc[me as usize] += 1;
+                let sum: u64 = ts.iter().sum();
+                pending.insert((sum, origin, seq), PendingOp { client, cseq, kind, value });
+                // One clock event for the ack multicast; every copy
+                // carries the same stamp.
+                vc[me as usize] += 1;
+                let ack = enc_ack(origin, seq, me, &vc);
+                for r in 0..nranks as u32 {
+                    if r != me {
+                        p.stream_send(&ack, r, TAG_Q, comm, 0, 0)?;
+                    }
+                }
+            }
+            Some(MSG_ACK) if buf.len() == 13 + 8 * nranks => {
+                let (origin, seq, acker) =
+                    (rd_u32(&buf[1..]), rd_u32(&buf[5..]), rd_u32(&buf[9..]));
+                let ts = decode_vclock(&buf[13..], nranks, "ACK")?;
+                for (c, &t) in vc.iter_mut().zip(&ts) {
+                    *c = (*c).max(t);
+                }
+                vc[me as usize] += 1;
+                acks.entry((origin, seq)).or_default().insert(acker);
+            }
+            t => {
+                return Err(MpiErr::Internal(format!(
+                    "apps/queue server {me}: unrecognized message (type {t:?}, {} bytes) \
+                     from rank {} stream {}",
+                    buf.len(),
+                    st.source,
+                    st.src_idx
+                )))
+            }
+        }
+        // Apply every stable head: min-key pending op acked by all
+        // ranks other than its origin and us.
+        loop {
+            let ((sum, origin, seq), op) = match pending.iter().next() {
+                Some((&key, &op)) => (key, op),
+                None => break,
+            };
+            let needed = (nranks - 1).saturating_sub(usize::from(origin != me));
+            let have = acks.get(&(origin, seq)).map_or(0, |s| s.len());
+            if have < needed {
+                break;
+            }
+            pending.remove(&(sum, origin, seq));
+            acks.remove(&(origin, seq));
+            let result = if op.kind == KIND_ENQ {
+                fifo.push_back(op.value);
+                None
+            } else {
+                fifo.pop_front()
+            };
+            applied += 1;
+            if origin == me {
+                let resp = enc_resp(op.cseq, op.kind, result);
+                p.stream_send(&resp, me, TAG_R, comm, 0, i32::from(op.client) + 1)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Clients
+// ----------------------------------------------------------------------
+
+/// xorshift64* — keep the workload self-contained (no harness dep).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed | 1)
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+}
+
+/// One client thread: blocking enqueue/dequeue round-trips against the
+/// local server, recording invoke/response times per op. `slot` is the
+/// thread's stream index in the multiplex comm (1-based; 0 is the
+/// server).
+fn client_loop(
+    p: &Proc,
+    comm: &Comm,
+    slot: usize,
+    wl: &QueueWorkload,
+    anchor: &Instant,
+    history: &Mutex<Vec<HistoryOp>>,
+) -> Result<()> {
+    let me = p.rank();
+    let client = (slot - 1) as u16;
+    let my_idx = slot as i32;
+    let mut rng = Rng::new(
+        wl.seed ^ ((u64::from(me) + 1) << 24) ^ ((u64::from(client) + 1) << 8),
+    );
+    let mut local: Vec<HistoryOp> = Vec::with_capacity(wl.ops_per_client);
+    for k in 0..wl.ops_per_client {
+        let kind = if rng.next() % 2 == 0 { KIND_ENQ } else { KIND_DEQ };
+        // Globally unique enqueue payloads: (rank, client, op index).
+        let value =
+            (u64::from(me) << 40) | (u64::from(client) << 32) | k as u64;
+        let invoke_ns = anchor.elapsed().as_nanos() as u64;
+        p.stream_send(&enc_invoke(client, kind, value, k as u32), me, TAG_Q, comm, my_idx, 0)?;
+        let mut resp = [0u8; 14];
+        let st = p.stream_recv(&mut resp, me as i32, TAG_R, comm, 0, my_idx)?;
+        let resp_ns = anchor.elapsed().as_nanos() as u64;
+        if st.count != 14 || rd_u32(&resp[0..]) != k as u32 || resp[4] != kind {
+            return Err(MpiErr::Internal(format!(
+                "apps/queue client {me}.{client}: response mismatch on op {k} \
+                 ({} bytes, cseq {}, kind {})",
+                st.count,
+                rd_u32(&resp[0..]),
+                resp[4]
+            )));
+        }
+        let op = if kind == KIND_ENQ {
+            QueueOp::Enqueue(value)
+        } else if resp[5] == 1 {
+            QueueOp::Dequeue(Some(rd_u64(&resp[6..])))
+        } else {
+            QueueOp::Dequeue(None)
+        };
+        local.push(HistoryOp { op, invoke_ns, resp_ns });
+    }
+    history
+        .lock()
+        .map_err(|_| MpiErr::Internal("apps/queue: history lock poisoned".into()))?
+        .extend(local);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::linearize::check_queue_history;
+
+    /// Smoke the whole stack at 2 ranks × 2 clients and validate the
+    /// recorded history offline — the tentpole's correctness loop in
+    /// one unit test.
+    #[test]
+    fn two_rank_history_is_linearizable() {
+        let wl = QueueWorkload { ranks: 2, clients: 2, ops_per_client: 8, seed: 7 };
+        let res = run_queue_workload(&wl).unwrap();
+        assert_eq!(res.total_ops, 32);
+        assert_eq!(res.history.len(), 32);
+        let witness = check_queue_history(&res.history).unwrap();
+        assert_eq!(witness.len(), 32);
+        assert!(res.ops_per_sec > 0.0);
+    }
+
+    /// A single-rank world degenerates to local total order (no REQ/ACK
+    /// traffic) and must still produce a valid history.
+    #[test]
+    fn single_rank_history_is_linearizable() {
+        let wl = QueueWorkload { ranks: 1, clients: 2, ops_per_client: 6, seed: 3 };
+        let res = run_queue_workload(&wl).unwrap();
+        assert_eq!(res.history.len(), 12);
+        check_queue_history(&res.history).unwrap();
+    }
+
+    /// Three ranks: every op costs a REQ broadcast plus an all-to-all
+    /// ack round — the N-to-N wildcard storm the tier exists to stress.
+    #[test]
+    fn three_rank_history_is_linearizable() {
+        let wl = QueueWorkload { ranks: 3, clients: 1, ops_per_client: 5, seed: 11 };
+        let res = run_queue_workload(&wl).unwrap();
+        assert_eq!(res.history.len(), 15);
+        check_queue_history(&res.history).unwrap();
+    }
+
+    #[test]
+    fn degenerate_parameters_are_rejected() {
+        for wl in [
+            QueueWorkload { ranks: 0, clients: 1, ops_per_client: 1, seed: 1 },
+            QueueWorkload { ranks: 1, clients: 0, ops_per_client: 1, seed: 1 },
+            QueueWorkload { ranks: 1, clients: 1, ops_per_client: 0, seed: 1 },
+        ] {
+            assert!(matches!(run_queue_workload(&wl), Err(MpiErr::Arg(_))));
+        }
+    }
+}

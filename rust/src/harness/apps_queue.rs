@@ -1,0 +1,150 @@
+//! The apps-tier scenario: the linearizable distributed queue
+//! ([`crate::apps::queue`]) as a registry-gated workload.
+//!
+//! Unlike the microbenchmark scenarios this one gates **correctness
+//! first**: every grid point's recorded history runs through the
+//! Wing–Gong checker ([`crate::apps::linearize`]) and any
+//! non-linearizable history is a hard in-process failure — a wildcard
+//! matching or wait-fairness regression shows up here as a failed
+//! scenario, not a perf dip. Performance rides along: a
+//! threads-per-rank grid at the profile's `--ranks` axis, reporting
+//! ops/sec per point plus the p50/p99 operation latency at the gate
+//! point, with `queue_ops_per_sec` baseline-gated at the default
+//! 2-rank topology (suffixed `_r{N}` info metrics elsewhere, like
+//! every rank-aware scenario).
+
+use crate::apps::linearize::check_queue_history;
+use crate::apps::queue::{run_queue_workload, QueueWorkload};
+use crate::error::{MpiErr, Result};
+use crate::harness::scenario::{Profile, Scenario, ScenarioResult};
+use crate::harness::stats::{Metric, Summary};
+
+/// `apps/queue` — see the module docs.
+pub struct AppsQueue;
+
+impl AppsQueue {
+    /// Client threads per rank at each grid point; the last is the
+    /// baseline-gated point.
+    const GRID: [usize; 3] = [1, 2, 4];
+    const GATE_THREADS: usize = 4;
+}
+
+impl Scenario for AppsQueue {
+    fn name(&self) -> String {
+        "apps/queue".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        let pts: Vec<String> = Self::GRID.iter().map(|n| n.to_string()).collect();
+        vec![
+            ("workload".into(), "linearizable FIFO queue, 50/50 enq/deq".into()),
+            ("clients_per_rank".into(), pts.join(",")),
+            ("gate_clients".into(), Self::GATE_THREADS.to_string()),
+            ("check".into(), "wing-gong per grid point (hard fail)".into()),
+        ]
+    }
+
+    fn warmup(&self, profile: &Profile) -> Result<()> {
+        let wl = QueueWorkload {
+            ranks: profile.ranks,
+            clients: 1,
+            ops_per_client: profile.scale(20, 4) as usize,
+            seed: profile.seed,
+        };
+        let _ = run_queue_workload(&wl)?;
+        Ok(())
+    }
+
+    fn measure(&self, profile: &Profile) -> Result<ScenarioResult> {
+        let ranks = profile.ranks;
+        // Non-default rank counts report under suffixed names so the
+        // default grid stays baseline-comparable.
+        let sfx = if ranks == 2 { String::new() } else { format!("_r{ranks}") };
+        // Per-client op count; history size (ranks * clients * ops)
+        // stays in checker-friendly territory at every grid point.
+        let ops = profile.scale(100, 12) as usize;
+        let mut metrics = Vec::new();
+        let mut gate: Option<(f64, Vec<f64>)> = None;
+        for &clients in &Self::GRID {
+            let wl = QueueWorkload { ranks, clients, ops_per_client: ops, seed: profile.seed };
+            let res = run_queue_workload(&wl)?;
+            // The correctness gate: a rejected history fails the
+            // scenario in-process, whatever the throughput said.
+            let witness = check_queue_history(&res.history).map_err(|e| {
+                MpiErr::Internal(format!(
+                    "apps/queue: history at ranks={ranks} clients={clients} is invalid: {e}"
+                ))
+            })?;
+            if witness.len() != res.history.len() {
+                return Err(MpiErr::Internal(format!(
+                    "apps/queue: witness covers {} of {} ops",
+                    witness.len(),
+                    res.history.len()
+                )));
+            }
+            metrics.push(Metric::info(
+                format!("ops_per_sec_t{clients}{sfx}"),
+                res.ops_per_sec,
+                "op/s",
+            ));
+            if clients == Self::GATE_THREADS {
+                let lat: Vec<f64> = res
+                    .history
+                    .iter()
+                    .map(|h| h.resp_ns.saturating_sub(h.invoke_ns) as f64)
+                    .collect();
+                gate = Some((res.ops_per_sec, lat));
+            }
+        }
+        let (rate, lat) = gate.expect("grid contains the gate point");
+        // The gated number: end-to-end linearizable ops/sec at the
+        // 4-clients-per-rank point on the default topology.
+        metrics.push(if sfx.is_empty() {
+            Metric::higher("queue_ops_per_sec", rate, "op/s")
+        } else {
+            Metric::info(format!("queue_ops_per_sec{sfx}"), rate, "op/s")
+        });
+        let s = Summary::from_ns(lat);
+        metrics.push(Metric::info(format!("op_p50_ns{sfx}"), s.p50_ns, "ns"));
+        metrics.push(Metric::info(format!("op_p99_ns{sfx}"), s.p99_ns, "ns"));
+        metrics.push(Metric::info(format!("op_mean_ns{sfx}"), s.mean_ns, "ns"));
+        Ok(ScenarioResult { metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The scenario end to end at smoke sizing: grid runs, histories
+    /// validate, the gated metric comes out positive and unsuffixed at
+    /// the default topology.
+    #[test]
+    fn smoke_run_emits_the_gated_metric() {
+        let res = AppsQueue.run(&Profile::smoke(42)).unwrap();
+        let gated: Vec<_> = res
+            .metrics
+            .iter()
+            .filter(|m| m.name == "queue_ops_per_sec")
+            .collect();
+        assert_eq!(gated.len(), 1, "exactly one gated queue_ops_per_sec");
+        assert!(gated[0].value > 0.0);
+        for t in AppsQueue::GRID {
+            assert!(
+                res.metrics.iter().any(|m| m.name == format!("ops_per_sec_t{t}")),
+                "missing grid point t{t}"
+            );
+        }
+        assert!(res.metrics.iter().any(|m| m.name == "op_p50_ns"));
+        assert!(res.metrics.iter().any(|m| m.name == "op_p99_ns"));
+    }
+
+    /// The `--ranks` axis: a 3-rank run must suffix every metric so the
+    /// baseline gate skips it by design.
+    #[test]
+    fn rank_axis_suffixes_metrics() {
+        let res = AppsQueue.measure(&Profile::smoke(42).with_ranks(3)).unwrap();
+        assert!(res.metrics.iter().all(|m| m.name.ends_with("_r3")));
+        assert!(res.metrics.iter().any(|m| m.name == "queue_ops_per_sec_r3"));
+    }
+}

@@ -9,7 +9,8 @@
 //! deferred-completion flush pipelining, the service-style traffic tier
 //! (tail latency, NACK/abort rates, the scaling knee), partitioned
 //! pt2pt scaling and
-//! lane-fired triggers, and the design ablations — is a named struct implementing
+//! lane-fired triggers, the apps tier's linearizable distributed queue
+//! (correctness-gated by the Wing–Gong checker), and the design ablations — is a named struct implementing
 //! [`Scenario`], with warmup/measure phases, deterministic seeding and
 //! p50/p99/mean + rate aggregation.
 //!
@@ -28,6 +29,7 @@
 //! `--smoke`, `--json`, `--baseline`, `--threshold`) and the thin shims
 //! in `benches/`.
 
+pub mod apps_queue;
 pub mod baseline;
 pub mod report;
 pub mod scenario;
@@ -36,6 +38,7 @@ pub mod traffic;
 
 use std::time::Instant;
 
+pub use apps_queue::AppsQueue;
 pub use report::{Report, ScenarioRecord, SCHEMA};
 pub use scenario::{Profile, Scenario, ScenarioResult};
 pub use stats::{Direction, Metric, Summary};
@@ -89,6 +92,7 @@ impl Registry {
                 Box::new(scenario::RmaPassive),
                 Box::new(scenario::RmaFlush),
                 Box::new(traffic::TrafficService),
+                Box::new(apps_queue::AppsQueue),
                 Box::new(scenario::PartitionedScaling),
                 Box::new(scenario::PartitionedEnqueue),
                 Box::new(scenario::AblationLockOps),
@@ -205,6 +209,7 @@ mod tests {
             "rma/passive",
             "rma/flush",
             "traffic/service",
+            "apps/queue",
             "partitioned/scaling",
             "partitioned/enqueue",
         ] {

@@ -62,6 +62,7 @@
 //! }).unwrap();
 //! ```
 
+pub mod apps;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

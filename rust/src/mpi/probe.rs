@@ -1,5 +1,18 @@
 //! `MPI_Probe` / `MPI_Iprobe`: peek at the unexpected queue without
 //! consuming the message.
+//!
+//! # Probe is a hint, not a reservation
+//!
+//! A probe reports that a matching message exists *now*; it does not
+//! reserve it. Two threads probing the same wildcard pattern can both
+//! see one message, and whichever receives first consumes it — the
+//! other's subsequent blocking receive simply waits for the next match
+//! (the classic probe→recv TOCTOU, regression-tested below). Dispatch
+//! loops that size their receive from a probed [`Status`] are safe as
+//! long as a single thread consumes each probed pattern, which is the
+//! queue-server discipline `apps/queue` runs.
+
+use std::time::Duration;
 
 use crate::error::Result;
 use crate::mpi::comm::Comm;
@@ -7,6 +20,57 @@ use crate::mpi::matching::MatchPattern;
 use crate::mpi::status::Status;
 use crate::mpi::world::Proc;
 use crate::fabric::wire::NO_INDEX;
+
+/// Hybrid spin → yield → sleep backoff for blocking poll loops — the
+/// paced-ack probe discipline (`rma/flush`'s pacer): burn cycles only
+/// while a response is plausibly one progress pass away, then hand the
+/// core back in escalating steps.
+///
+/// A fresh backoff spins ([`std::hint::spin_loop`]) for the first
+/// rounds, yields the timeslice for the next batch, then sleeps with
+/// the pause doubling from 1 µs up to a 100 µs cap — the same deep-idle
+/// period the shared wait engine parks at, so a probe loop that has
+/// gone quiet costs no more CPU than a parked `wait`. Call
+/// [`ProbeBackoff::reset`] after useful work so a busy loop stays on
+/// the cheap spinning tier.
+#[derive(Debug, Default)]
+pub struct ProbeBackoff {
+    round: u32,
+}
+
+impl ProbeBackoff {
+    /// Rounds of pure spinning before the first yield.
+    const SPIN_ROUNDS: u32 = 64;
+    /// Rounds of `yield_now` before the loop starts sleeping.
+    const YIELD_ROUNDS: u32 = 64;
+    /// Cap on one backoff sleep, microseconds (matches the wait
+    /// engine's deep-idle park).
+    const SLEEP_CAP_US: u64 = 100;
+
+    pub fn new() -> ProbeBackoff {
+        ProbeBackoff { round: 0 }
+    }
+
+    /// Back to the spinning tier — call after the loop made progress.
+    pub fn reset(&mut self) {
+        self.round = 0;
+    }
+
+    /// One idle pause at the current escalation tier.
+    pub fn pause(&mut self) {
+        let r = self.round;
+        self.round = self.round.saturating_add(1);
+        if r < Self::SPIN_ROUNDS {
+            std::hint::spin_loop();
+        } else if r < Self::SPIN_ROUNDS + Self::YIELD_ROUNDS {
+            std::thread::yield_now();
+        } else {
+            let exp = (r - Self::SPIN_ROUNDS - Self::YIELD_ROUNDS).min(7);
+            let us = (1u64 << exp).min(Self::SLEEP_CAP_US);
+            std::thread::sleep(Duration::from_micros(us));
+        }
+    }
+}
 
 impl Proc {
     /// `MPI_Iprobe`: progress once, then report the first matching
@@ -20,12 +84,18 @@ impl Proc {
     }
 
     /// `MPI_Probe`: block until a matching message is available.
+    ///
+    /// The wait is a [`ProbeBackoff`] loop, not a bare `yield_now` spin:
+    /// a probe parked on a quiet channel escalates to sleeping instead
+    /// of burning a core forever (which also starved the very sender
+    /// thread it was waiting on, on single-core CI hosts).
     pub fn probe(&self, src: i32, tag: i32, comm: &Comm) -> Result<Status> {
+        let mut backoff = ProbeBackoff::new();
         loop {
             if let Some(st) = self.iprobe(src, tag, comm)? {
                 return Ok(st);
             }
-            std::thread::yield_now();
+            backoff.pause();
         }
     }
 
@@ -46,6 +116,28 @@ impl Proc {
         Ok(vci.with_state(&cs, |st| st.peek_unexpected(&route.pattern)))
     }
 
+    /// Blocking [`Proc::stream_iprobe`]: wait until a message matching
+    /// the indexed pattern is available — the queue-server dispatch
+    /// primitive (`ANY_SOURCE` + `ANY_INDEX` probe, then an exact recv
+    /// sized from the returned [`Status`]). Same [`ProbeBackoff`]
+    /// discipline as [`Proc::probe`].
+    pub fn stream_probe(
+        &self,
+        src: i32,
+        tag: i32,
+        comm: &Comm,
+        src_idx: i32,
+        dst_idx: i32,
+    ) -> Result<Status> {
+        let mut backoff = ProbeBackoff::new();
+        loop {
+            if let Some(st) = self.stream_iprobe(src, tag, comm, src_idx, dst_idx)? {
+                return Ok(st);
+            }
+            backoff.pause();
+        }
+    }
+
     /// Internal helper shared with tests: build a probe pattern.
     #[doc(hidden)]
     pub fn probe_pattern(&self, comm: &Comm, src: i32, tag: i32) -> MatchPattern {
@@ -55,6 +147,9 @@ impl Proc {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::{Barrier, Mutex};
+
+    use crate::error::{MpiErr, Result};
     use crate::mpi::world::World;
     use crate::mpi::{ANY_SOURCE, ANY_TAG};
 
@@ -79,6 +174,62 @@ mod tests {
                 assert_eq!(buf, vec![1, 2, 3]);
                 // Now gone.
                 assert!(p.iprobe(ANY_SOURCE, ANY_TAG, p.world_comm())?.is_none());
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    /// The probe→recv TOCTOU race: two threads probe the same wildcard
+    /// pattern and both see the single in-flight message; one consumes
+    /// it. The loser's subsequent blocking recv must not hang on the
+    /// stolen match — it waits for the *next* matching message, which
+    /// the sender releases only after both probes returned. This is
+    /// exactly the dispatch shape a multi-threaded queue server would
+    /// hit if it probed from more than one thread.
+    #[test]
+    fn probe_then_recv_survives_a_stolen_match() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                p.send(&[1u8], 1, 4, p.world_comm())?;
+                // Wait for "both threads probed message 1", then release
+                // the second message the losing recv completes on.
+                let mut gate = [0u8; 1];
+                p.recv(&mut gate, 1, 5, p.world_comm())?;
+                p.send(&[2u8], 1, 4, p.world_comm())?;
+            } else {
+                let probed = Barrier::new(3);
+                let got: Mutex<Vec<u8>> = Mutex::new(Vec::new());
+                std::thread::scope(|sc| -> Result<()> {
+                    let mut handles = Vec::new();
+                    for _ in 0..2 {
+                        let p = p.clone();
+                        let (probed, got) = (&probed, &got);
+                        handles.push(sc.spawn(move || -> Result<()> {
+                            let st = p.probe(ANY_SOURCE, 4, p.world_comm())?;
+                            assert_eq!(st.count, 1, "both probes see message 1");
+                            probed.wait();
+                            let mut b = [0u8; 1];
+                            p.recv(&mut b, ANY_SOURCE, 4, p.world_comm())?;
+                            got.lock().unwrap().push(b[0]);
+                            Ok(())
+                        }));
+                    }
+                    probed.wait();
+                    // Both threads hold a probe hit on the same message;
+                    // at most one recv can claim it. Releasing message 2
+                    // un-hangs whichever thread lost the race.
+                    p.send(&[0u8], 0, 5, p.world_comm())?;
+                    for (i, h) in handles.into_iter().enumerate() {
+                        h.join()
+                            .map_err(|_| MpiErr::Internal(format!("prober {i} panicked")))??;
+                    }
+                    Ok(())
+                })?;
+                let mut seen = got.into_inner().unwrap();
+                seen.sort();
+                assert_eq!(seen, vec![1, 2], "each message consumed exactly once");
             }
             Ok(())
         })

@@ -212,6 +212,32 @@ impl RmaRequest {
         }
     }
 
+    /// One-way escalation for multi-element polls
+    /// ([`crate::mpi::waitable::Waitable::demand_progress`]): ship any
+    /// staged aggregation buffer holding this op and demand the parked
+    /// ack batch with an `ACK_REQ` — the same nudge a blocking
+    /// [`RmaRequest::wait`] fires on entry, without the blocking part.
+    /// No-op for reads (the `DATA` reply needs no demand), enqueued ops
+    /// (the lane owns issue timing) and settled handles; harmless to
+    /// repeat (a target acking per-op finds an empty batch and emits
+    /// nothing).
+    pub(crate) fn demand_ack(&mut self, p: &Proc) -> Result<()> {
+        if !matches!(self.state, ReqState::Pending) {
+            return Ok(());
+        }
+        match self.kind {
+            ReqKind::Put | ReqKind::Acc => {
+                if let Some(inner) = self.win.upgrade() {
+                    let w = Window::from_inner(inner);
+                    p.agg_drain_target(&w, self.target)?;
+                    p.rma_ack_demand(&w, self.target)?;
+                }
+                Ok(())
+            }
+            ReqKind::Get | ReqKind::Enqueued { .. } => Ok(()),
+        }
+    }
+
     fn freed_err(&self) -> MpiErr {
         MpiErr::Rma(format!(
             "wait on a request for window {}, which has been freed",

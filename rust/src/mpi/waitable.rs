@@ -58,6 +58,17 @@ pub trait Waitable {
     fn wait(&mut self, p: &Proc) -> Result<()>;
     /// Nonblocking poll: `Ok(true)` once `wait` would not block.
     fn test(&mut self, p: &Proc) -> Result<bool>;
+    /// Escalation nudge for multi-element polls ([`Proc::wait_any`] /
+    /// [`Proc::wait_timeout`]): kinds whose completion can park
+    /// indefinitely under a pure nonblocking poll (an [`RmaRequest`]
+    /// whose ack coalesces in a partial target batch) send whatever
+    /// one-way demand their own blocking `wait` would, so the set poll
+    /// stays live without ever blocking on a single element. Must be
+    /// cheap and idempotent. Default: no-op.
+    fn demand_progress(&mut self, p: &Proc) -> Result<()> {
+        let _ = p;
+        Ok(())
+    }
 }
 
 /// Point-to-point requests. `wait` here discards the [`Status`]
@@ -93,6 +104,10 @@ impl Waitable for RmaRequest {
     fn test(&mut self, p: &Proc) -> Result<bool> {
         RmaRequest::test(self, p)
     }
+
+    fn demand_progress(&mut self, p: &Proc) -> Result<()> {
+        self.demand_ack(p)
+    }
 }
 
 /// Partitioned sends: `wait` is [`Proc::pwait_send`] (completes every
@@ -121,9 +136,15 @@ impl Waitable for PartitionedRecv {
     }
 }
 
-/// How long `wait_any` polls nonblockingly before falling back to a
-/// blocking wait on the first still-pending element.
+/// How long `wait_any` polls nonblockingly before firing the set's
+/// [`Waitable::demand_progress`] escalation (and re-firing it at
+/// [`WAIT_ANY_REDEMAND`] intervals while nothing completes).
 const WAIT_ANY_POLL_BUDGET_MS: u128 = 1;
+
+/// Re-fire interval for the demand escalation: covers a demand lost to
+/// transmit backpressure without spamming one-way packets every poll
+/// round.
+const WAIT_ANY_REDEMAND: Duration = Duration::from_millis(10);
 
 /// Consecutive fruitless spin-budget exhaustions before the engine
 /// considers a wait deep-idle and parks on the endpoint's wake hub.
@@ -236,27 +257,56 @@ impl Proc {
     }
 
     /// Wait until **some** waitable in the set completes and return its
-    /// index. Polls `test` for a bounded interval, then blocks on the
-    /// first still-pending element — kinds whose acks can park
-    /// indefinitely under a nonblocking poll (an [`RmaRequest`] under
-    /// fixed-size ack batching) complete through that element's own
-    /// `wait`, so this never spins forever. Errors on an empty set.
+    /// index.
+    ///
+    /// The poll rotates its start index every pass, so a hot head
+    /// request cannot starve the tail of a long set, and — crucially —
+    /// the wait never blocks on any *single* element (the old fallback
+    /// of `reqs[0].wait()` after the poll budget turned "element 0
+    /// happens to be last" into a hang when element 0 could only
+    /// complete after something later in the set did). Kinds whose acks
+    /// can park indefinitely under a nonblocking poll (an
+    /// [`RmaRequest`] under fixed-size ack batching) stay live through
+    /// the [`Waitable::demand_progress`] escalation, fired once the
+    /// poll budget expires and periodically thereafter. Between
+    /// fruitless passes the loop backs off spin → yield → sleep
+    /// ([`ProbeBackoff`]) rather than burning a core. Errors on an
+    /// empty set.
+    ///
+    /// [`ProbeBackoff`]: crate::mpi::probe::ProbeBackoff
     pub fn wait_any(&self, reqs: &mut [&mut dyn Waitable]) -> Result<usize> {
         if reqs.is_empty() {
             return Err(MpiErr::Arg("wait_any on an empty request set".into()));
         }
+        let n = reqs.len();
         let start = Instant::now();
+        let mut next_demand: Option<Instant> = None;
+        let mut backoff = crate::mpi::probe::ProbeBackoff::new();
+        let mut rot = 0usize;
         loop {
-            for (i, r) in reqs.iter_mut().enumerate() {
-                if r.test(self)? {
+            for k in 0..n {
+                let i = (rot + k) % n;
+                if reqs[i].test(self)? {
                     return Ok(i);
                 }
             }
-            if start.elapsed().as_millis() > WAIT_ANY_POLL_BUDGET_MS {
-                reqs[0].wait(self)?;
-                return Ok(0);
+            rot = (rot + 1) % n;
+            match next_demand {
+                None if start.elapsed().as_millis() > WAIT_ANY_POLL_BUDGET_MS => {
+                    for r in reqs.iter_mut() {
+                        r.demand_progress(self)?;
+                    }
+                    next_demand = Some(Instant::now() + WAIT_ANY_REDEMAND);
+                }
+                Some(d) if Instant::now() >= d => {
+                    for r in reqs.iter_mut() {
+                        r.demand_progress(self)?;
+                    }
+                    next_demand = Some(Instant::now() + WAIT_ANY_REDEMAND);
+                }
+                _ => {}
             }
-            std::hint::spin_loop();
+            backoff.pause();
         }
     }
 
@@ -265,9 +315,10 @@ impl Proc {
     /// (returning `Ok(None)` with every element still pending — nothing
     /// is consumed, so the caller may retry, abandon, or escalate to a
     /// blocking wait). Each poll round is a progress pass per element,
-    /// so the wait is live; kinds whose acks park under fixed-size
-    /// batching (an [`RmaRequest`]) may need their own `wait` to force
-    /// the ack out — a timeout here is "not yet", never "stuck forever".
+    /// so the wait is live; the start index rotates across passes (same
+    /// fairness fix as `wait_any`) and parked acks are nudged through
+    /// [`Waitable::demand_progress`] once the initial poll budget
+    /// expires — a timeout here is "not yet", never "stuck forever".
     /// Errors on an empty set, like `wait_any`.
     pub fn wait_timeout(
         &self,
@@ -277,17 +328,39 @@ impl Proc {
         if reqs.is_empty() {
             return Err(MpiErr::Arg("wait_timeout on an empty request set".into()));
         }
-        let deadline = Instant::now() + timeout;
+        let n = reqs.len();
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let mut next_demand: Option<Instant> = None;
+        let mut backoff = crate::mpi::probe::ProbeBackoff::new();
+        let mut rot = 0usize;
         loop {
-            for (i, r) in reqs.iter_mut().enumerate() {
-                if r.test(self)? {
+            for k in 0..n {
+                let i = (rot + k) % n;
+                if reqs[i].test(self)? {
                     return Ok(Some(i));
                 }
             }
+            rot = (rot + 1) % n;
             if Instant::now() >= deadline {
                 return Ok(None);
             }
-            std::hint::spin_loop();
+            match next_demand {
+                None if start.elapsed().as_millis() > WAIT_ANY_POLL_BUDGET_MS => {
+                    for r in reqs.iter_mut() {
+                        r.demand_progress(self)?;
+                    }
+                    next_demand = Some(Instant::now() + WAIT_ANY_REDEMAND);
+                }
+                Some(d) if Instant::now() >= d => {
+                    for r in reqs.iter_mut() {
+                        r.demand_progress(self)?;
+                    }
+                    next_demand = Some(Instant::now() + WAIT_ANY_REDEMAND);
+                }
+                _ => {}
+            }
+            backoff.pause();
         }
     }
 }
@@ -356,6 +429,74 @@ mod tests {
                 let mut ack = [0u8; 1];
                 p.recv(&mut ack, 0, 3, p.world_comm())?;
                 p.send(&[9u8, 9, 9], 0, 2, p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    /// Regression: a never-ready request at index 0 must not hang the
+    /// wait. The old escalation blocked on `reqs[0].wait()` once the
+    /// 1 ms poll budget expired, and here index 0 can only complete
+    /// *after* index 1 has (the tag-2 send is gated on the tag-3
+    /// release, which rank 0 issues after `wait_any` returns) — so the
+    /// old code deadlocked. The sender delays past the poll budget so
+    /// the test actually reaches the escalation path.
+    #[test]
+    fn wait_any_is_fair_to_a_never_ready_head() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                let mut never = [0u8; 1];
+                let mut late = [0u8; 3];
+                let mut r_never = p.irecv(&mut never, 1, 2, p.world_comm())?;
+                let mut r_late = p.irecv(&mut late, 1, 1, p.world_comm())?;
+                let idx = p.wait_any(&mut [&mut r_never, &mut r_late])?;
+                assert_eq!(idx, 1, "only the tag-1 receive can have completed");
+                assert_eq!(late, [5, 5, 5]);
+                // Release the tag-2 send and resolve the head request so
+                // teardown is clean.
+                p.send(&[0u8], 1, 3, p.world_comm())?;
+                p.wait_all(&mut [&mut r_never])?;
+                assert_eq!(never, [9]);
+            } else {
+                // Outlast the poll budget: the waiter must already be in
+                // its escalated (post-budget) regime when this arrives.
+                std::thread::sleep(Duration::from_millis(20));
+                p.send(&[5u8, 5, 5], 0, 1, p.world_comm())?;
+                let mut gate = [0u8; 1];
+                p.recv(&mut gate, 0, 3, p.world_comm())?;
+                p.send(&[9u8], 0, 2, p.world_comm())?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    /// The same head-starvation shape through the bounded wait: the
+    /// tail element completes while index 0 never does, and the rotated
+    /// poll must report it well inside the (generous) timeout.
+    #[test]
+    fn wait_timeout_completes_the_tail_behind_a_never_ready_head() {
+        let w = World::with_ranks(2).unwrap();
+        w.run(|p| {
+            if p.rank() == 0 {
+                let mut never = [0u8; 1];
+                let mut late = [0u8; 2];
+                let mut r_never = p.irecv(&mut never, 1, 2, p.world_comm())?;
+                let mut r_late = p.irecv(&mut late, 1, 1, p.world_comm())?;
+                let hit =
+                    p.wait_timeout(&mut [&mut r_never, &mut r_late], Duration::from_secs(10))?;
+                assert_eq!(hit, Some(1));
+                assert_eq!(late, [4, 2]);
+                p.send(&[0u8], 1, 3, p.world_comm())?;
+                p.wait_all(&mut [&mut r_never])?;
+            } else {
+                std::thread::sleep(Duration::from_millis(20));
+                p.send(&[4u8, 2], 0, 1, p.world_comm())?;
+                let mut gate = [0u8; 1];
+                p.recv(&mut gate, 0, 3, p.world_comm())?;
+                p.send(&[7u8], 0, 2, p.world_comm())?;
             }
             Ok(())
         })
